@@ -1,0 +1,79 @@
+//! Single-node scaling study on real graphene workloads — the Figure
+//! 3/4 companion, sweeping hardware threads and affinity on a simulated
+//! KNL node with the engines' real task statistics.
+//!
+//! Run: cargo run --release --example graphene_scaling [-- --system 1.0]
+
+use khf::chem::graphene::PaperSystem;
+use khf::cluster::knl::Affinity;
+use khf::cluster::{simulate, CostModel, Machine};
+use khf::coordinator::{report, stats_for_system};
+use khf::hf::memmodel::EngineKind;
+use khf::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    khf::util::logging::init();
+    let args = Args::from_env();
+    let sys = PaperSystem::parse(args.get_or("system", "0.5"))
+        .ok_or_else(|| anyhow::anyhow!("bad --system"))?;
+    let cost = CostModel::load_or_fallback("artifacts/calibration.toml");
+    let stats = stats_for_system(sys, &cost)?;
+
+    println!("single-node study: {} ({} shells, {} BFs)", sys.label(), stats.n_shells, stats.n_bf);
+    println!("\n-- thread scaling (4 ranks, balanced affinity, quad-cache) --");
+    let mut rows = vec![vec![
+        "threads/rank".into(),
+        "hw threads".into(),
+        "private (s)".into(),
+        "shared (s)".into(),
+        "shared/private".into(),
+    ]];
+    for t in [1usize, 2, 4, 8, 16, 32, 64] {
+        let m = Machine {
+            threads_per_rank: t,
+            mcdram_only: true,
+            ..Machine::theta_hybrid(1)
+        };
+        let prf = simulate(EngineKind::PrivateFock, &stats, &m, &cost);
+        let shf = simulate(EngineKind::SharedFock, &stats, &m, &cost);
+        rows.push(vec![
+            t.to_string(),
+            (4 * t).to_string(),
+            report::secs(prf.fock_seconds),
+            report::secs(shf.fock_seconds),
+            format!("{:.2}", shf.fock_seconds / prf.fock_seconds),
+        ]);
+    }
+    print!("{}", report::table(&rows));
+
+    println!("\n-- affinity effect at 16 threads/rank (shared Fock) --");
+    let mut rows = vec![vec!["affinity".into(), "time (s)".into()]];
+    for aff in Affinity::ALL {
+        let m = Machine {
+            threads_per_rank: 16,
+            affinity: aff,
+            mcdram_only: true,
+            ..Machine::theta_hybrid(1)
+        };
+        let r = simulate(EngineKind::SharedFock, &stats, &m, &cost);
+        rows.push(vec![aff.label().into(), report::secs(r.fock_seconds)]);
+    }
+    print!("{}", report::table(&rows));
+
+    println!("\n-- engine breakdown at 4x64 (shared Fock) --");
+    let m = Machine { mcdram_only: true, ..Machine::theta_hybrid(1) };
+    let r = simulate(EngineKind::SharedFock, &stats, &m, &cost);
+    let b = r.breakdown;
+    for (k, v) in [
+        ("compute", b.compute),
+        ("screen", b.screen_tests),
+        ("sync", b.sync),
+        ("flush", b.flush),
+        ("dlb", b.dlb),
+        ("imbalance", b.imbalance),
+        ("reduce", b.reduce_ranks + b.reduce_threads),
+    ] {
+        println!("   {k:10} {:8.4} s ({:4.1}%)", v, 100.0 * v / r.fock_seconds);
+    }
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Multi-node Theta simulation driver — the Table 3 / Figures 6–7
+//! companion with configurable system, node list and engine.
+//!
+//! Run: cargo run --release --example theta_simulation -- \
+//!        [--system 2.0] [--nodes 4,16,64,256] [--iters 15]
+
+use khf::chem::graphene::PaperSystem;
+use khf::cluster::{simulate, CostModel, Machine};
+use khf::coordinator::{report, stats_for_system};
+use khf::hf::memmodel::EngineKind;
+use khf::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    khf::util::logging::init();
+    let args = Args::from_env();
+    let sys = PaperSystem::parse(args.get_or("system", "0.5"))
+        .ok_or_else(|| anyhow::anyhow!("bad --system"))?;
+    let nodes: Vec<usize> = args.parse_list("nodes")?.unwrap_or_else(|| vec![4, 16, 64, 128]);
+    let iters = args.parse_or("iters", 15.0f64)?;
+    let cost = CostModel::load_or_fallback("artifacts/calibration.toml");
+    let stats = stats_for_system(sys, &cost)?;
+
+    println!(
+        "Theta simulation: {} — {} surviving ij tasks, {:.2e} quartets/iteration",
+        sys.label(),
+        stats.pairs.len(),
+        stats.total_quartets as f64
+    );
+    let mut rows = vec![vec![
+        "nodes".into(),
+        "MPI (s)".into(),
+        "r/n".into(),
+        "PrF (s)".into(),
+        "ShF (s)".into(),
+        "ShF eff%".into(),
+        "ShF imb".into(),
+        "ShF GB/node".into(),
+    ]];
+    let mut shf_base: Option<(usize, f64)> = None;
+    for &n in &nodes {
+        let mpi = simulate(EngineKind::MpiOnly, &stats, &Machine::theta_mpi(n), &cost);
+        let prf = simulate(EngineKind::PrivateFock, &stats, &Machine::theta_hybrid(n), &cost);
+        let shf = simulate(EngineKind::SharedFock, &stats, &Machine::theta_hybrid(n), &cost);
+        let (n0, t0) = *shf_base.get_or_insert((n, shf.fock_seconds));
+        rows.push(vec![
+            n.to_string(),
+            report::secs(mpi.fock_seconds * iters),
+            mpi.ranks_per_node_used.to_string(),
+            report::secs(prf.fock_seconds * iters),
+            report::secs(shf.fock_seconds * iters),
+            report::pct(t0 * n0 as f64 / (shf.fock_seconds * n as f64)),
+            format!("{:.2}", shf.rank_imbalance),
+            format!("{:.1}", shf.bytes_per_node / 1e9),
+        ]);
+    }
+    print!("{}", report::table(&rows));
+    Ok(())
+}

@@ -1,0 +1,3 @@
+"""Build-time compile path (Layers 1+2). Never imported at runtime —
+the Rust coordinator consumes only the HLO-text artifacts that
+``python -m compile.aot`` emits."""

@@ -1,0 +1,75 @@
+"""AOT bridge: lower the Layer-2 functions (with their Layer-1 Pallas
+kernels inlined via interpret mode) to HLO **text** artifacts for the
+Rust PJRT runtime.
+
+HLO text — not serialized HloModuleProto — is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (proto.id() <= INT_MAX); the text
+parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--sizes 8,16,...]
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # SCF needs f64
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# Must match rust/src/runtime/mod.rs::SIZE_GRID.
+SIZE_GRID = [8, 16, 32, 40, 64]
+# Column-buffer flush artifact shape (mxsize x nthreads).
+COLREDUCE_SHAPE = (4096, 64)
+DTYPE = jnp.float64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifacts(sizes):
+    """Yield (name, hlo_text) for every artifact."""
+    for n in sizes:
+        eri = jax.ShapeDtypeStruct((n, n, n, n), DTYPE)
+        mat = jax.ShapeDtypeStruct((n, n), DTYPE)
+        vec = jax.ShapeDtypeStruct((n,), DTYPE)
+        yield f"fock2e_{n}", to_hlo_text(jax.jit(model.fock2e).lower(eri, mat))
+        yield f"density_{n}", to_hlo_text(jax.jit(model.density).lower(mat, vec))
+        yield f"fock_energy_{n}", to_hlo_text(
+            jax.jit(model.fock_energy).lower(eri, mat, mat)
+        )
+    m, t = COLREDUCE_SHAPE
+    buf = jax.ShapeDtypeStruct((m, t), DTYPE)
+    yield f"colreduce_{m}_{t}", to_hlo_text(jax.jit(model.colreduce_flush).lower(buf))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default=",".join(str(s) for s in SIZE_GRID))
+    args = ap.parse_args()
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    os.makedirs(args.out_dir, exist_ok=True)
+    total = 0
+    for name, text in lower_artifacts(sizes):
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        total += 1
+        print(f"wrote {path} ({len(text)} chars)")
+    print(f"{total} artifacts in {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Layer-1 Pallas kernel: the paper's Figure-1(B) column-buffer flush as
+a chunked tree reduction.
+
+On KNL the shared-Fock algorithm flushes per-thread column buffers
+[mxsize x nthreads] into the Fock matrix with row-chunked, cache-line
+padded tree reduction. The TPU rethink: the grid runs over row chunks
+(the chunking that avoided false sharing becomes tile alignment), and
+the reduction over the thread axis is a log2(nthreads)-step pairwise
+tree performed in VMEM — the same dataflow, vectorized 8x128 instead of
+cache-line-strided.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(buf_ref, o_ref):
+    x = buf_ref[...]  # (chunk, t)
+    t = x.shape[1]
+    # Pairwise (tree) reduction — t is a power of two by construction.
+    while t > 1:
+        t //= 2
+        x = x[:, :t] + x[:, t : 2 * t]
+    o_ref[...] = x[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def colreduce(buffers, chunk=None):
+    """Sum thread columns: buffers [m, nthreads] -> [m].
+
+    nthreads must be a power of two (pad with zero columns otherwise —
+    the wrapper in model.py does). Matches ``ref.colreduce_ref``.
+    """
+    m, t = buffers.shape
+    assert t & (t - 1) == 0, "thread axis must be a power of two"
+    c = chunk or (256 if m % 256 == 0 else m)
+    assert m % c == 0
+    return pl.pallas_call(
+        _kernel,
+        grid=(m // c,),
+        in_specs=[pl.BlockSpec((c, t), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((c,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), buffers.dtype),
+        interpret=True,
+    )(buffers)

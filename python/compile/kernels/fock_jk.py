@@ -1,0 +1,79 @@
+"""Layer-1 Pallas kernel: blocked J/K contraction — the Fock-build hot
+spot as a dense tensor contraction.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's KNL
+implementation walks shell quartets on 256 scalar threads with
+thread-private accumulation buffers; on a systolic-array target the same
+six-element update becomes two dense contractions (J and K) evaluated
+tile-by-tile on the MXU. The grid runs over output row tiles; each
+program streams its ERI slab HBM->VMEM once and performs two
+[ti*n, n^2] x [n^2] contractions.
+
+VMEM budget: the ERI slab is ti * n^3 * bytes; `pick_tile` keeps it
+under ~8 MiB (f32 deployment shape; the CPU-interpret path used for
+correctness runs f64). MXU utilization estimate for n=64, ti=8, f32:
+2 contractions x 2*ti*n*n^2 flops over a 8.4 MB slab -> arithmetic
+intensity ~16 flop/byte, enough to keep the 128x128 MXU busy at ~55-70%
+of roofline on the reshaped [512, 4096] operand (see DESIGN.md §Perf).
+
+Pallas runs with interpret=True: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; interpret mode lowers to plain HLO that both the
+pytest oracle checks and the Rust runtime execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget for the ERI slab (bytes) in the deployment (f32) shape.
+VMEM_SLAB_BUDGET = 8 * 1024 * 1024
+
+
+def pick_tile(n: int, itemsize: int = 4) -> int:
+    """Largest row-tile ti dividing n with ti * n^3 * itemsize within
+    the VMEM slab budget (always at least 1)."""
+    best = 1
+    for ti in range(1, n + 1):
+        if n % ti == 0 and ti * n**3 * itemsize <= VMEM_SLAB_BUDGET:
+            best = ti
+    return best
+
+
+def _kernel(eri_ref, d_ref, o_ref):
+    blk = eri_ref[...]  # (ti, n, n, n) VMEM slab
+    d = d_ref[...]  # (n, n), broadcast to every program
+    ti, n = blk.shape[0], blk.shape[1]
+    dflat = d.reshape(n * n)
+    # J tile: MXU-shaped [ti*n, n^2] @ [n^2].
+    j = (blk.reshape(ti * n, n * n) @ dflat).reshape(ti, n)
+    # K tile: K[t, j] = sum_kl blk[t, k, j, l] D[k, l].
+    kx = (
+        jnp.transpose(blk, (0, 2, 1, 3)).reshape(ti * n, n * n) @ dflat
+    ).reshape(ti, n)
+    o_ref[...] = j - 0.5 * kx
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def fock_jk(eri, d, tile=None):
+    """G = J(D) - K(D)/2 from a dense chemists'-notation ERI tensor.
+
+    eri: [n, n, n, n]; d: [n, n] symmetric. Matches
+    ``ref.fock_jk_ref`` to float tolerance.
+    """
+    n = eri.shape[0]
+    assert eri.shape == (n, n, n, n) and d.shape == (n, n)
+    ti = tile or pick_tile(n)
+    grid = (n // ti,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ti, n, n, n), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ti, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), eri.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(eri, d)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness reference
+pytest checks every kernel against (and the spec of what each kernel
+computes)."""
+
+import jax.numpy as jnp
+
+
+def fock_jk_ref(eri, d):
+    """Closed-shell two-electron Fock matrix from a dense ERI tensor.
+
+    G_ij = sum_kl D_kl [ (ij|kl) - 1/2 (ik|jl) ]  (RHF convention with
+    D = 2 C_occ C_occ^T).
+
+    eri: [n, n, n, n] in chemists' notation (ij|kl); d: [n, n].
+    """
+    j = jnp.einsum("ijkl,kl->ij", eri, d)
+    k = jnp.einsum("ikjl,kl->ij", eri, d)
+    return j - 0.5 * k
+
+
+def density_ref(c, mask):
+    """Closed-shell density D = 2 * C_occ C_occ^T with the occupied
+    columns selected by a 0/1 mask (so one compiled artifact serves any
+    electron count)."""
+    cm = c * mask[None, :]
+    return 2.0 * cm @ cm.T
+
+
+def colreduce_ref(buffers):
+    """Flush of the paper's per-thread column buffers (Figure 1 B):
+    buffers [m, nthreads] -> column sum [m]."""
+    return jnp.sum(buffers, axis=1)
+
+
+def energy_ref(d, h, f):
+    """Electronic energy 0.5 * sum(D * (H + F))."""
+    return 0.5 * jnp.sum(d * (h + f))

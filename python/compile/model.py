@@ -1,0 +1,49 @@
+"""Layer 2: the dense SCF compute graph in JAX, calling the Layer-1
+Pallas kernels. AOT-lowered by aot.py; never imported at runtime.
+
+Functions return tuples — the HLO bridge lowers with return_tuple=True
+and the Rust side unpacks tuples uniformly.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.colreduce import colreduce
+from .kernels.fock_jk import fock_jk
+
+
+def fock2e(eri, d):
+    """Two-electron Fock matrix G(D) — the paper's hot spot.
+
+    The Rust coordinator calls the compiled artifact once per SCF
+    iteration; the contraction itself is the Pallas fock_jk kernel.
+    """
+    return (fock_jk(eri, d),)
+
+
+def density(c, mask):
+    """Closed-shell density from MO coefficients and an occupation mask:
+    D = 2 (C*mask)(C*mask)^T. The mask input keeps the artifact
+    shape-generic over electron counts."""
+    cm = c * mask[None, :]
+    return (2.0 * cm @ cm.T,)
+
+
+def fock_energy(eri, d, h):
+    """Fused iteration step: F = H + G(D) and the electronic energy
+    E = 0.5 sum(D*(H+F)) in one artifact (one fewer host round trip)."""
+    g = fock_jk(eri, d)
+    f = h + g
+    e = 0.5 * jnp.sum(d * (h + f))
+    return (f, e.reshape(()))
+
+
+def colreduce_flush(buffers):
+    """The Figure-1(B) buffer flush as a standalone artifact (pads the
+    thread axis to a power of two)."""
+    m, t = buffers.shape
+    tp = 1
+    while tp < t:
+        tp *= 2
+    if tp != t:
+        buffers = jnp.pad(buffers, ((0, 0), (0, tp - t)))
+    return (colreduce(buffers),)

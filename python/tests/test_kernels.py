@@ -1,0 +1,131 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracles, swept
+over shapes/dtypes/tiles with hypothesis."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.colreduce import colreduce
+from compile.kernels.fock_jk import fock_jk, pick_tile
+
+
+def random_eri(n, seed, dtype):
+    rng = np.random.default_rng(seed)
+    eri = rng.standard_normal((n, n, n, n))
+    # Impose the physical 8-fold permutational symmetry.
+    eri = eri + eri.transpose(1, 0, 2, 3)
+    eri = eri + eri.transpose(0, 1, 3, 2)
+    eri = eri + eri.transpose(2, 3, 0, 1)
+    return jnp.asarray(eri, dtype=dtype)
+
+
+def random_sym(n, seed, dtype):
+    rng = np.random.default_rng(seed)
+    d = rng.standard_normal((n, n))
+    return jnp.asarray(d + d.T, dtype=dtype)
+
+
+class TestFockJk:
+    @pytest.mark.parametrize("n", [2, 4, 8, 12, 16])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+    def test_matches_ref(self, n, dtype):
+        eri = random_eri(n, n, dtype)
+        d = random_sym(n, n + 1, dtype)
+        got = fock_jk(eri, d)
+        want = ref.fock_jk_ref(eri, d)
+        tol = 1e-4 if dtype == jnp.float32 else 1e-11
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol, rtol=tol)
+
+    @pytest.mark.parametrize("tile", [1, 2, 4, 8])
+    def test_tile_invariance(self, tile):
+        n = 8
+        eri = random_eri(n, 3, jnp.float64)
+        d = random_sym(n, 4, jnp.float64)
+        base = fock_jk(eri, d, tile=None)
+        tiled = fock_jk(eri, d, tile=tile)
+        np.testing.assert_allclose(np.asarray(base), np.asarray(tiled), atol=1e-12)
+
+    def test_output_symmetric_for_symmetric_inputs(self):
+        # Physical ERI symmetry + symmetric D => symmetric G.
+        n = 8
+        eri = random_eri(n, 7, jnp.float64)
+        d = random_sym(n, 8, jnp.float64)
+        g = np.asarray(fock_jk(eri, d))
+        np.testing.assert_allclose(g, g.T, atol=1e-11)
+
+    def test_zero_padding_is_exact(self):
+        # Zero-padded rows/cols (the Rust runtime's grid rounding) must
+        # not perturb the live block.
+        n, npad = 6, 8
+        eri = np.zeros((npad,) * 4)
+        eri[:n, :n, :n, :n] = np.asarray(random_eri(n, 9, jnp.float64))
+        d = np.zeros((npad, npad))
+        d[:n, :n] = np.asarray(random_sym(n, 10, jnp.float64))
+        g_pad = np.asarray(fock_jk(jnp.asarray(eri), jnp.asarray(d)))
+        g = np.asarray(
+            fock_jk(jnp.asarray(eri[:n, :n, :n, :n]), jnp.asarray(d[:n, :n]))
+        )
+        np.testing.assert_allclose(g_pad[:n, :n], g, atol=1e-12)
+        np.testing.assert_allclose(g_pad[n:, :], 0.0, atol=1e-15)
+        np.testing.assert_allclose(g_pad[:, n:], 0.0, atol=1e-15)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.sampled_from([2, 3, 4, 6, 8]),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_sweep(self, n, seed):
+        eri = random_eri(n, seed, jnp.float64)
+        d = random_sym(n, seed ^ 0xABCDEF, jnp.float64)
+        got = np.asarray(fock_jk(eri, d))
+        want = np.asarray(ref.fock_jk_ref(eri, d))
+        np.testing.assert_allclose(got, want, atol=1e-10)
+
+    def test_pick_tile_respects_budget(self):
+        for n in [8, 16, 32, 40, 64]:
+            ti = pick_tile(n)
+            assert n % ti == 0
+            assert ti * n**3 * 4 <= 8 * 1024 * 1024 or ti == 1
+
+
+class TestColreduce:
+    @pytest.mark.parametrize("m,t", [(8, 2), (256, 4), (512, 64), (1024, 1)])
+    def test_matches_ref(self, m, t):
+        rng = np.random.default_rng(m * 1000 + t)
+        buf = jnp.asarray(rng.standard_normal((m, t)))
+        got = colreduce(buf)
+        want = ref.colreduce_ref(buf)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-12)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        log_m=st.integers(min_value=1, max_value=10),
+        log_t=st.integers(min_value=0, max_value=6),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_sweep(self, log_m, log_t, seed):
+        m, t = 2**log_m, 2**log_t
+        rng = np.random.default_rng(seed)
+        buf = jnp.asarray(rng.standard_normal((m, t)))
+        np.testing.assert_allclose(
+            np.asarray(colreduce(buf)), np.asarray(ref.colreduce_ref(buf)), atol=1e-12
+        )
+
+    def test_chunking_invariance(self):
+        m, t = 512, 8
+        rng = np.random.default_rng(5)
+        buf = jnp.asarray(rng.standard_normal((m, t)))
+        a = colreduce(buf, chunk=m)
+        b = colreduce(buf, chunk=128)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-13)
+
+    def test_rejects_non_power_of_two(self):
+        buf = jnp.zeros((8, 3))
+        with pytest.raises(AssertionError):
+            colreduce(buf)

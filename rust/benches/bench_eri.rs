@@ -1,0 +1,92 @@
+//! Microbenchmark: ERI shell-quartet throughput per angular-momentum
+//! class — the calibration source for the simulator and the §Perf L3
+//! hot-path baseline.
+//!
+//! Run: cargo bench --bench bench_eri
+
+use khf::basis::{BasisName, BasisSet};
+use khf::chem::graphene;
+use khf::cluster::costmodel::pair_class;
+use khf::coordinator::report;
+use khf::hf::scatter::scatter_block;
+use khf::integrals::EriEngine;
+use khf::linalg::Matrix;
+use khf::util::timer;
+
+fn main() {
+    let mol = graphene::bilayer(8, "c16");
+    let basis = BasisSet::assemble(&mol, BasisName::SixThirtyOneGd).unwrap();
+    let cls: Vec<usize> = basis.shells.iter().map(|s| s.class).collect();
+    let class_names = ["S6", "L3", "L1", "D1"];
+
+    // One representative quartet per (bra, ket) pair-class.
+    let nsh = basis.n_shells();
+    let mut rep = vec![None; 100];
+    for i in 0..nsh {
+        for j in 0..=i {
+            for k in 0..=i {
+                let lmax = if k == i { j } else { k };
+                for l in 0..=lmax {
+                    let key = pair_class(cls[i], cls[j]) * 10 + pair_class(cls[k], cls[l]);
+                    rep[key].get_or_insert((i, j, k, l));
+                }
+            }
+        }
+    }
+
+    let mut eng = EriEngine::new();
+    let mut block = vec![0.0; 6 * 6 * 6 * 6];
+    let d = Matrix::identity(basis.n_bf);
+    let mut g = Matrix::zeros(basis.n_bf, basis.n_bf);
+
+    println!("== ERI quartet cost by pair-class combination (host core) ==\n");
+    let mut rows = vec![vec!["bra".into(), "ket".into(), "ns/quartet".into(), "quartets/s".into()]];
+    let pair_label = |pc: usize| -> String {
+        // invert canonical pair index over 4 classes
+        for a in 0..4 {
+            for b in 0..=a {
+                if pair_class(a, b) == pc {
+                    return format!("({},{})", class_names[a], class_names[b]);
+                }
+            }
+        }
+        format!("pc{pc}")
+    };
+    for bpc in 0..10 {
+        for kpc in 0..10 {
+            let Some((i, j, k, l)) = rep[bpc * 10 + kpc] else { continue };
+            if kpc > bpc {
+                continue; // symmetric; keep the table compact
+            }
+            let st = timer::bench(50, 5000, 0.05, || {
+                eng.shell_quartet(&basis, i, j, k, l, &mut block);
+                scatter_block(&basis, (i, j, k, l), &block, &d, &mut |a, b, v| {
+                    g.add(a, b, v)
+                });
+            });
+            rows.push(vec![
+                pair_label(bpc),
+                pair_label(kpc),
+                format!("{:.0}", st.mean * 1e9),
+                format!("{:.2e}", 1.0 / st.mean),
+            ]);
+        }
+    }
+    print!("{}", report::table(&rows));
+    timer::black_box(&g);
+
+    // Whole-build throughput on a small real system.
+    let screen = khf::integrals::SchwarzScreen::build(&basis, 1e-10);
+    let mut serial = khf::hf::serial::SerialFock::new();
+    let dm = Matrix::identity(basis.n_bf);
+    use khf::hf::FockBuilder;
+    let st = timer::bench(1, 3, 0.1, || {
+        timer::black_box(serial.build_2e(&basis, &screen, &dm));
+    });
+    println!(
+        "\nfull c16 Fock build: {} ({} quartets -> {:.2e} quartets/s)",
+        st,
+        serial.stats.quartets_computed,
+        serial.stats.quartets_computed as f64 / st.mean
+    );
+}

@@ -1,0 +1,76 @@
+//! Microbenchmark: the three real (threaded) Fock-build engines vs the
+//! serial reference on one host — correctness-bearing overhead
+//! comparison on this 1-core sandbox (parallel *speedups* come from the
+//! simulator benches; this one measures the engines' real coordination
+//! overhead at equal work).
+//!
+//! Run: cargo bench --bench bench_fock_engines
+
+use khf::basis::{BasisName, BasisSet};
+use khf::chem::graphene;
+use khf::coordinator::report;
+use khf::hf::mpi_only::MpiOnlyFock;
+use khf::hf::private_fock::PrivateFock;
+use khf::hf::serial::SerialFock;
+use khf::hf::shared_fock::SharedFock;
+use khf::hf::FockBuilder;
+use khf::integrals::SchwarzScreen;
+use khf::linalg::Matrix;
+use khf::util::timer;
+
+fn main() {
+    let mol = graphene::bilayer(4, "c8");
+    let basis = BasisSet::assemble(&mol, BasisName::SixThirtyOneGd).unwrap();
+    let screen = SchwarzScreen::build(&basis, 1e-10);
+    let d = Matrix::identity(basis.n_bf);
+
+    println!("== Fock-build engines on c8 bilayer / 6-31G(d) ({} BFs) ==\n", basis.n_bf);
+    let mut rows = vec![vec![
+        "engine".into(),
+        "config".into(),
+        "time".into(),
+        "vs serial".into(),
+    ]];
+
+    let mut serial = SerialFock::new();
+    let st_serial = timer::bench(1, 3, 0.1, || {
+        timer::black_box(serial.build_2e(&basis, &screen, &d));
+    });
+    rows.push(vec![
+        "serial".into(),
+        "1".into(),
+        khf::util::human_secs(st_serial.mean),
+        "1.00x".into(),
+    ]);
+
+    let mut add = |name: &str, cfg: String, st: timer::BenchStats| {
+        rows.push(vec![
+            name.into(),
+            cfg,
+            khf::util::human_secs(st.mean),
+            format!("{:.2}x", st.mean / st_serial.mean),
+        ]);
+    };
+
+    for (r, t) in [(1usize, 2usize), (2, 2), (4, 2)] {
+        let mut eng = MpiOnlyFock::new(r * t);
+        let st = timer::bench(1, 3, 0.1, || {
+            timer::black_box(eng.build_2e(&basis, &screen, &d));
+        });
+        add("mpi-only", format!("{} ranks", r * t), st);
+
+        let mut eng = PrivateFock::new(r, t);
+        let st = timer::bench(1, 3, 0.1, || {
+            timer::black_box(eng.build_2e(&basis, &screen, &d));
+        });
+        add("private-fock", format!("{r}x{t}"), st);
+
+        let mut eng = SharedFock::new(r, t);
+        let st = timer::bench(1, 3, 0.1, || {
+            timer::black_box(eng.build_2e(&basis, &screen, &d));
+        });
+        add("shared-fock", format!("{r}x{t}"), st);
+    }
+    print!("{}", report::table(&rows));
+    println!("\n(1-core sandbox: oversubscribed threads; expect ~1x ± coordination overhead)");
+}

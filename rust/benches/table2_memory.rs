@@ -1,0 +1,78 @@
+//! Paper Table 2 — memory footprints of the three codes on the five
+//! graphene systems: eqs. (3a)–(3c) alongside the exact allocation
+//! accounting, with the paper's published values for comparison.
+//!
+//! Run: cargo bench --bench table2_memory
+
+use khf::chem::graphene::PaperSystem;
+use khf::coordinator::report;
+use khf::hf::memmodel::{self, EngineKind};
+
+fn gb(b: f64) -> String {
+    format!("{:.2}", b / 1e9)
+}
+
+fn main() {
+    // Paper Table 2 (GB): (system, MPI, PrF, ShF).
+    let paper: [(&str, f64, f64, f64); 5] = [
+        ("0.5 nm", 7.0, 0.13, 0.03),
+        ("1.0 nm", 48.0, 1.0, 0.2),
+        ("1.5 nm", 160.0, 3.0, 0.8),
+        ("2.0 nm", 417.0, 8.0, 2.0),
+        ("5.0 nm", 9869.0, 257.0, 52.0),
+    ];
+
+    println!("== Table 2: memory footprint per node (GB, decimal) ==");
+    println!("   MPI: 256 ranks/node; hybrids: 4 ranks/node x 64 threads\n");
+    let mut rows = vec![vec![
+        "system".into(),
+        "BFs".into(),
+        "MPI paper".into(),
+        "MPI exact".into(),
+        "MPI eq3a".into(),
+        "PrF paper".into(),
+        "PrF exact".into(),
+        "PrF eq3b".into(),
+        "ShF paper".into(),
+        "ShF exact".into(),
+        "ShF eq3c".into(),
+    ]];
+    for (k, sys) in PaperSystem::ALL.iter().enumerate() {
+        let n = sys.n_bf();
+        rows.push(vec![
+            sys.label().into(),
+            n.to_string(),
+            format!("{}", paper[k].1),
+            gb(memmodel::exact_bytes(EngineKind::MpiOnly, n, 15, 256, 1)),
+            gb(memmodel::eq3a_mpi(n, 256)),
+            format!("{}", paper[k].2),
+            gb(memmodel::exact_bytes(EngineKind::PrivateFock, n, 15, 4, 64)),
+            gb(memmodel::eq3b_private(n, 64, 4)),
+            format!("{}", paper[k].3),
+            gb(memmodel::exact_bytes(EngineKind::SharedFock, n, 15, 4, 64)),
+            gb(memmodel::eq3c_shared(n, 4)),
+        ]);
+    }
+    print!("{}", report::table(&rows));
+
+    println!("\n== Headline reduction factors (exact accounting) ==");
+    let mut rows = vec![vec![
+        "system".into(),
+        "MPI/PrF".into(),
+        "MPI/ShF".into(),
+        "paper claims".into(),
+    ]];
+    for sys in PaperSystem::ALL {
+        let n = sys.n_bf();
+        let mpi = memmodel::exact_bytes(EngineKind::MpiOnly, n, 15, 256, 1);
+        let prf = memmodel::exact_bytes(EngineKind::PrivateFock, n, 15, 4, 64);
+        let shf = memmodel::exact_bytes(EngineKind::SharedFock, n, 15, 4, 64);
+        rows.push(vec![
+            sys.label().into(),
+            format!("{:.0}x", mpi / prf),
+            format!("{:.0}x", mpi / shf),
+            "~50x / ~200x".into(),
+        ]);
+    }
+    print!("{}", report::table(&rows));
+}

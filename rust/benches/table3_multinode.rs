@@ -1,0 +1,95 @@
+//! Paper Table 3 — time-to-solution and parallel efficiency of the
+//! three codes on the 2.0 nm system, 4–512 Theta nodes (simulated; see
+//! DESIGN.md §2 for the substitution audit).
+//!
+//! Run: cargo bench --bench table3_multinode
+//! Env: KHF_SYSTEM=0.5|1.0|1.5|2.0|5.0 (default 2.0),
+//!      KHF_FAST=1 uses the fallback cost model without recalibration.
+
+use khf::chem::graphene::PaperSystem;
+use khf::cluster::{simulate, CostModel, Machine};
+use khf::coordinator::{report, stats_for_system};
+use khf::hf::memmodel::EngineKind;
+
+const N_ITER: f64 = 15.0; // SCF iterations folded into time-to-solution
+
+fn main() {
+    khf::util::logging::init();
+    let sys = std::env::var("KHF_SYSTEM")
+        .ok()
+        .and_then(|s| PaperSystem::parse(&s))
+        .unwrap_or(PaperSystem::Nm20);
+    let cost = CostModel::load_or_fallback("artifacts/calibration.toml");
+    let stats = stats_for_system(sys, &cost).expect("workload stats");
+
+    // Paper Table 3 for 2.0 nm (s / parallel efficiency %).
+    let paper: [(usize, f64, f64, f64); 6] = [
+        (4, 2661.0, 1128.0, 1318.0),
+        (16, 685.0, 288.0, 332.0),
+        (64, 195.0, 78.0, 85.0),
+        (128, 118.0, 49.0, 43.0),
+        (256, 85.0, 44.0, 23.0),
+        (512, 82.0, 44.0, 13.0),
+    ];
+
+    let nodes: Vec<usize> = paper.iter().map(|p| p.0).collect();
+    let mut results = Vec::new();
+    for &n in &nodes {
+        let mpi = simulate(EngineKind::MpiOnly, &stats, &Machine::theta_mpi(n), &cost);
+        let prf = simulate(EngineKind::PrivateFock, &stats, &Machine::theta_hybrid(n), &cost);
+        let shf = simulate(EngineKind::SharedFock, &stats, &Machine::theta_hybrid(n), &cost);
+        results.push((n, mpi, prf, shf));
+    }
+
+    let base = &results[0];
+    let eff = |t0: f64, t: f64, n0: usize, n: usize| {
+        report::pct((t0 * n0 as f64) / (t * n as f64))
+    };
+
+    println!(
+        "== Table 3: {} time-to-solution (s, {N_ITER} SCF iterations) + parallel efficiency ==\n",
+        stats.label
+    );
+    let mut rows = vec![vec![
+        "nodes".into(),
+        "MPI sim".into(),
+        "MPI paper".into(),
+        "PrF sim".into(),
+        "PrF paper".into(),
+        "ShF sim".into(),
+        "ShF paper".into(),
+        "eff MPI%".into(),
+        "eff PrF%".into(),
+        "eff ShF%".into(),
+        "paper eff".into(),
+    ]];
+    let paper_eff = ["100/100/100", "97/98/99", "85/90/97", "70/72/96", "49/40/90", "25/20/79"];
+    for (k, (n, mpi, prf, shf)) in results.iter().enumerate() {
+        rows.push(vec![
+            n.to_string(),
+            report::secs(mpi.fock_seconds * N_ITER),
+            format!("{}", paper[k].1),
+            report::secs(prf.fock_seconds * N_ITER),
+            format!("{}", paper[k].2),
+            report::secs(shf.fock_seconds * N_ITER),
+            format!("{}", paper[k].3),
+            eff(base.1.fock_seconds, mpi.fock_seconds, base.0, *n),
+            eff(base.2.fock_seconds, prf.fock_seconds, base.0, *n),
+            eff(base.3.fock_seconds, shf.fock_seconds, base.0, *n),
+            paper_eff[k].into(),
+        ]);
+    }
+    print!("{}", report::table(&rows));
+
+    let last = results.last().unwrap();
+    println!(
+        "\nheadline: shared-Fock vs MPI-only at {} nodes = {:.1}x (paper: ~6x)",
+        last.0,
+        last.1.fock_seconds / last.3.fock_seconds
+    );
+    println!(
+        "MPI-only ranks/node after memory gate: {} (replicated footprint {:.0} GB)",
+        last.1.ranks_per_node_used,
+        last.1.bytes_per_node / 1e9
+    );
+}

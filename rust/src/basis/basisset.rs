@@ -1,0 +1,207 @@
+//! Molecule → shell-list assembly: shell ordering, basis-function
+//! offsets, integral segments, and the shell-class table the cost model
+//! uses.
+
+use crate::chem::Molecule;
+
+use super::sets::{element_shells, BasisName};
+use super::shell::{normalize_contraction, Segment, Shell, ShellKind};
+
+/// A fully assembled basis set for one molecule.
+#[derive(Debug, Clone)]
+pub struct BasisSet {
+    pub name: BasisName,
+    /// Shells in atom order (the unit of the paper's quartet loops).
+    pub shells: Vec<Shell>,
+    /// Integral segments; `segments_of[s]` indexes into `segments`.
+    pub segments: Vec<Segment>,
+    /// Segment index range per shell (start, end).
+    pub segments_of: Vec<(usize, usize)>,
+    /// Total basis-function count.
+    pub n_bf: usize,
+    /// Largest shell width (basis functions) — `shellSize` in Algorithm 3.
+    pub max_shell_bf: usize,
+    /// Shell classes: distinct (kind, n_prim) pairs, for the cost model.
+    pub classes: Vec<(ShellKind, usize)>,
+}
+
+impl BasisSet {
+    /// Assemble the basis for a molecule. Errors if the set lacks data
+    /// for any element present.
+    pub fn assemble(mol: &Molecule, name: BasisName) -> anyhow::Result<BasisSet> {
+        let mut shells: Vec<Shell> = Vec::new();
+        let mut classes: Vec<(ShellKind, usize)> = Vec::new();
+        let mut n_bf = 0usize;
+        for (ai, atom) in mol.atoms.iter().enumerate() {
+            let raw = element_shells(name, atom.element).ok_or_else(|| {
+                anyhow::anyhow!("basis {} has no data for element {}", name.label(), atom.element)
+            })?;
+            for rs in raw {
+                let class_key = (rs.kind, rs.exps.len());
+                let class = match classes.iter().position(|c| *c == class_key) {
+                    Some(i) => i,
+                    None => {
+                        classes.push(class_key);
+                        classes.len() - 1
+                    }
+                };
+                shells.push(Shell {
+                    atom: ai,
+                    center: atom.pos,
+                    kind: rs.kind,
+                    exps: rs.exps.to_vec(),
+                    coefs: rs.coefs.to_vec(),
+                    coefs_p: rs.coefs_p.to_vec(),
+                    bf_first: n_bf,
+                    class,
+                });
+                n_bf += rs.kind.n_bf();
+            }
+        }
+
+        // Build normalized integral segments.
+        let mut segments = Vec::new();
+        let mut segments_of = Vec::with_capacity(shells.len());
+        for (si, sh) in shells.iter().enumerate() {
+            let start = segments.len();
+            match sh.kind {
+                ShellKind::S | ShellKind::P | ShellKind::D => {
+                    let l = sh.kind.max_l();
+                    segments.push(Segment {
+                        l,
+                        center: sh.center,
+                        exps: sh.exps.clone(),
+                        coefs: normalize_contraction(l, &sh.exps, &sh.coefs),
+                        bf_first: sh.bf_first,
+                        shell: si,
+                    });
+                }
+                ShellKind::Sp => {
+                    segments.push(Segment {
+                        l: 0,
+                        center: sh.center,
+                        exps: sh.exps.clone(),
+                        coefs: normalize_contraction(0, &sh.exps, &sh.coefs),
+                        bf_first: sh.bf_first,
+                        shell: si,
+                    });
+                    segments.push(Segment {
+                        l: 1,
+                        center: sh.center,
+                        exps: sh.exps.clone(),
+                        coefs: normalize_contraction(1, &sh.exps, &sh.coefs_p),
+                        bf_first: sh.bf_first + 1,
+                        shell: si,
+                    });
+                }
+            }
+            segments_of.push((start, segments.len()));
+        }
+
+        let max_shell_bf = shells.iter().map(|s| s.n_bf()).max().unwrap_or(0);
+        Ok(BasisSet {
+            name,
+            shells,
+            segments,
+            segments_of,
+            n_bf,
+            max_shell_bf,
+            classes,
+        })
+    }
+
+    /// Number of shells (paper Table 4 column).
+    pub fn n_shells(&self) -> usize {
+        self.shells.len()
+    }
+
+    /// Number of canonical shell pairs i ≥ j.
+    pub fn n_shell_pairs(&self) -> usize {
+        let n = self.shells.len();
+        n * (n + 1) / 2
+    }
+
+    /// Segments of shell `s`.
+    pub fn shell_segments(&self, s: usize) -> &[Segment] {
+        let (a, b) = self.segments_of[s];
+        &self.segments[a..b]
+    }
+
+    /// Basis-function index range of shell `s`.
+    pub fn shell_bf_range(&self, s: usize) -> std::ops::Range<usize> {
+        let sh = &self.shells[s];
+        sh.bf_first..sh.bf_first + sh.n_bf()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chem::graphene::PaperSystem;
+    use crate::chem::molecules;
+
+    #[test]
+    fn water_sto3g_counts() {
+        let m = molecules::water();
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        // O: 1s + 2sp = 2 shells (1 + 4 BFs); H: 1 shell each.
+        assert_eq!(b.n_shells(), 4);
+        assert_eq!(b.n_bf, 7);
+        assert_eq!(b.max_shell_bf, 4);
+        // Segments: O(1s)=1, O(2sp)=2, H=1, H=1.
+        assert_eq!(b.segments.len(), 5);
+    }
+
+    #[test]
+    fn paper_table4_graphene_counts() {
+        // The paper's Table 4, reproduced for the two smallest systems
+        // (larger ones only differ by the atom multiplier).
+        for sys in [PaperSystem::Nm05, PaperSystem::Nm10] {
+            let m = sys.build();
+            let b = BasisSet::assemble(&m, BasisName::SixThirtyOneGd).unwrap();
+            assert_eq!(b.n_shells(), sys.n_shells(), "{} shells", sys.label());
+            assert_eq!(b.n_bf, sys.n_bf(), "{} bfs", sys.label());
+        }
+    }
+
+    #[test]
+    fn carbon_631gd_classes() {
+        let m = PaperSystem::Nm05.build();
+        let b = BasisSet::assemble(&m, BasisName::SixThirtyOneGd).unwrap();
+        // Four shell classes on carbon: S6, L3, L1, D1.
+        assert_eq!(b.classes.len(), 4);
+    }
+
+    #[test]
+    fn bf_offsets_contiguous() {
+        let m = molecules::benzene();
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let mut expect = 0;
+        for s in 0..b.n_shells() {
+            let r = b.shell_bf_range(s);
+            assert_eq!(r.start, expect);
+            expect = r.end;
+        }
+        assert_eq!(expect, b.n_bf);
+    }
+
+    #[test]
+    fn missing_element_errors() {
+        let m = molecules::water();
+        // 6-31G(d) set here has no oxygen data — must error, not panic.
+        assert!(BasisSet::assemble(&m, BasisName::SixThirtyOneGd).is_err());
+    }
+
+    #[test]
+    fn sp_segments_share_exponents() {
+        let m = molecules::methane();
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        // Carbon SP shell → s and p segments with identical exponents.
+        let segs = b.shell_segments(1);
+        assert_eq!(segs.len(), 2);
+        assert_eq!(segs[0].l, 0);
+        assert_eq!(segs[1].l, 1);
+        assert_eq!(segs[0].exps, segs[1].exps);
+        assert_eq!(segs[1].bf_first, segs[0].bf_first + 1);
+    }
+}

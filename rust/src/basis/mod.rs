@@ -1,0 +1,11 @@
+//! Gaussian basis sets: the shell model (with GAMESS-style combined SP
+//! "L" shells), the published basis-set data tables, and the
+//! molecule → shell-list assembly with basis-function bookkeeping.
+
+pub mod basisset;
+pub mod sets;
+pub mod shell;
+
+pub use basisset::BasisSet;
+pub use sets::BasisName;
+pub use shell::{Segment, Shell, ShellKind};

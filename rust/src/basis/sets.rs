@@ -1,0 +1,190 @@
+//! Published Gaussian basis-set data.
+//!
+//! STO-3G (Hehre, Stewart, Pople 1969) for H/He/C/N/O and 6-31G /
+//! 6-31G(d) (Hehre, Ditchfield, Pople 1972; Hariharan & Pople 1973) for
+//! H/C — the paper's calculations all use 6-31G(d) on carbon. Values are
+//! the standard tables (EMSL / GAMESS internal).
+
+use crate::chem::Element;
+
+use super::shell::ShellKind;
+
+/// Supported basis sets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BasisName {
+    Sto3g,
+    SixThirtyOneG,
+    /// 6-31G(d): 6-31G plus one cartesian d polarization shell on heavy
+    /// atoms — the paper's basis.
+    SixThirtyOneGd,
+}
+
+impl BasisName {
+    pub fn parse(s: &str) -> Option<BasisName> {
+        // "6-31G*" is the traditional alias for 6-31G(d).
+        let norm = s
+            .trim()
+            .to_ascii_lowercase()
+            .replace(' ', "")
+            .replace('*', "(d)");
+        match norm.as_str() {
+            "sto-3g" | "sto3g" => Some(BasisName::Sto3g),
+            "6-31g" | "631g" => Some(BasisName::SixThirtyOneG),
+            "6-31g(d)" | "631g(d)" | "631gd" | "6-31gd" => Some(BasisName::SixThirtyOneGd),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            BasisName::Sto3g => "STO-3G",
+            BasisName::SixThirtyOneG => "6-31G",
+            BasisName::SixThirtyOneGd => "6-31G(d)",
+        }
+    }
+}
+
+/// Raw shell data: kind, exponents, coefficients (s part), p coefficients
+/// for SP shells.
+pub struct RawShell {
+    pub kind: ShellKind,
+    pub exps: &'static [f64],
+    pub coefs: &'static [f64],
+    pub coefs_p: &'static [f64],
+}
+
+// ---------------------------------------------------------------- STO-3G
+
+const STO3G_1S_COEF: [f64; 3] = [0.154_328_97, 0.535_328_14, 0.444_634_54];
+const STO3G_2S_COEF: [f64; 3] = [-0.099_967_23, 0.399_512_83, 0.700_115_47];
+const STO3G_2P_COEF: [f64; 3] = [0.155_916_27, 0.607_683_72, 0.391_957_39];
+
+const STO3G_H_1S: [f64; 3] = [3.425_250_91, 0.623_913_73, 0.168_855_40];
+const STO3G_HE_1S: [f64; 3] = [6.362_421_39, 1.158_923_00, 0.313_649_79];
+const STO3G_C_1S: [f64; 3] = [71.616_837_0, 13.045_096_0, 3.530_512_2];
+const STO3G_C_2SP: [f64; 3] = [2.941_249_4, 0.683_483_1, 0.222_289_9];
+const STO3G_N_1S: [f64; 3] = [99.106_169_0, 18.052_312_0, 4.885_660_2];
+const STO3G_N_2SP: [f64; 3] = [3.780_455_9, 0.878_496_6, 0.285_714_4];
+const STO3G_O_1S: [f64; 3] = [130.709_320_0, 23.808_861_0, 6.443_608_3];
+const STO3G_O_2SP: [f64; 3] = [5.033_151_3, 1.169_596_1, 0.380_389_0];
+
+// ----------------------------------------------------------------- 6-31G
+
+const G631_H_S3: [f64; 3] = [18.731_137_0, 2.825_393_7, 0.640_121_7];
+const G631_H_S3_C: [f64; 3] = [0.033_494_60, 0.234_726_95, 0.813_757_33];
+const G631_H_S1: [f64; 1] = [0.161_277_8];
+const ONE: [f64; 1] = [1.0];
+
+const G631_C_S6: [f64; 6] = [
+    3_047.524_9,
+    457.369_51,
+    103.948_69,
+    29.210_155,
+    9.286_663_0,
+    3.163_927_0,
+];
+const G631_C_S6_C: [f64; 6] = [
+    0.001_834_7,
+    0.014_037_3,
+    0.068_842_6,
+    0.232_184_4,
+    0.467_941_3,
+    0.362_312_0,
+];
+const G631_C_SP3: [f64; 3] = [7.868_272_4, 1.881_288_5, 0.544_249_3];
+const G631_C_SP3_S: [f64; 3] = [-0.119_332_4, -0.160_854_2, 1.143_456_4];
+const G631_C_SP3_P: [f64; 3] = [0.068_999_1, 0.316_424_0, 0.744_308_3];
+const G631_C_SP1: [f64; 1] = [0.168_714_4];
+const G631_C_D: [f64; 1] = [0.8];
+
+/// Basis data for one element, or None if the set does not cover it.
+pub fn element_shells(basis: BasisName, e: Element) -> Option<Vec<RawShell>> {
+    use BasisName::*;
+    use Element::*;
+    use ShellKind::*;
+    let raw = |kind, exps: &'static [f64], coefs: &'static [f64], coefs_p: &'static [f64]| {
+        RawShell { kind, exps, coefs, coefs_p }
+    };
+    match (basis, e) {
+        (Sto3g, H) => Some(vec![raw(S, &STO3G_H_1S, &STO3G_1S_COEF, &[])]),
+        (Sto3g, He) => Some(vec![raw(S, &STO3G_HE_1S, &STO3G_1S_COEF, &[])]),
+        (Sto3g, C) => Some(vec![
+            raw(S, &STO3G_C_1S, &STO3G_1S_COEF, &[]),
+            raw(Sp, &STO3G_C_2SP, &STO3G_2S_COEF, &STO3G_2P_COEF),
+        ]),
+        (Sto3g, N) => Some(vec![
+            raw(S, &STO3G_N_1S, &STO3G_1S_COEF, &[]),
+            raw(Sp, &STO3G_N_2SP, &STO3G_2S_COEF, &STO3G_2P_COEF),
+        ]),
+        (Sto3g, O) => Some(vec![
+            raw(S, &STO3G_O_1S, &STO3G_1S_COEF, &[]),
+            raw(Sp, &STO3G_O_2SP, &STO3G_2S_COEF, &STO3G_2P_COEF),
+        ]),
+        (SixThirtyOneG | SixThirtyOneGd, H) => Some(vec![
+            raw(S, &G631_H_S3, &G631_H_S3_C, &[]),
+            raw(S, &G631_H_S1, &ONE, &[]),
+        ]),
+        (SixThirtyOneG, C) => Some(vec![
+            raw(S, &G631_C_S6, &G631_C_S6_C, &[]),
+            raw(Sp, &G631_C_SP3, &G631_C_SP3_S, &G631_C_SP3_P),
+            raw(Sp, &G631_C_SP1, &ONE, &ONE),
+        ]),
+        (SixThirtyOneGd, C) => Some(vec![
+            raw(S, &G631_C_S6, &G631_C_S6_C, &[]),
+            raw(Sp, &G631_C_SP3, &G631_C_SP3_S, &G631_C_SP3_P),
+            raw(Sp, &G631_C_SP1, &ONE, &ONE),
+            raw(D, &G631_C_D, &ONE, &[]),
+        ]),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(BasisName::parse("STO-3G"), Some(BasisName::Sto3g));
+        assert_eq!(BasisName::parse("6-31G(d)"), Some(BasisName::SixThirtyOneGd));
+        assert_eq!(BasisName::parse("6-31g*"), Some(BasisName::SixThirtyOneGd));
+        assert_eq!(BasisName::parse("cc-pvtz"), None);
+    }
+
+    #[test]
+    fn carbon_631gd_is_paper_shell_structure() {
+        // Table 4: carbon in 6-31G(d) contributes 4 shells / 15 BFs.
+        let shells = element_shells(BasisName::SixThirtyOneGd, Element::C).unwrap();
+        assert_eq!(shells.len(), 4);
+        let nbf: usize = shells.iter().map(|s| s.kind.n_bf()).sum();
+        assert_eq!(nbf, 15);
+    }
+
+    #[test]
+    fn sto3g_coverage() {
+        for e in [Element::H, Element::He, Element::C, Element::N, Element::O] {
+            assert!(element_shells(BasisName::Sto3g, e).is_some(), "{e}");
+        }
+    }
+
+    #[test]
+    fn no_631gd_for_nitrogen_yet() {
+        assert!(element_shells(BasisName::SixThirtyOneGd, Element::N).is_none());
+    }
+
+    #[test]
+    fn shell_data_lengths_consistent() {
+        for b in [BasisName::Sto3g, BasisName::SixThirtyOneG, BasisName::SixThirtyOneGd] {
+            for e in [Element::H, Element::He, Element::C, Element::N, Element::O] {
+                if let Some(shells) = element_shells(b, e) {
+                    for s in shells {
+                        assert_eq!(s.exps.len(), s.coefs.len());
+                        if s.kind == ShellKind::Sp {
+                            assert_eq!(s.exps.len(), s.coefs_p.len());
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

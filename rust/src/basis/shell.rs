@@ -1,0 +1,246 @@
+//! The shell model.
+//!
+//! A *shell* (paper footnote 1) is a group of basis functions on one atom
+//! sharing exponents. GAMESS-style combined SP shells ("L shells") carry
+//! both an s and a p contraction over the same primitives — 6-31G(d)
+//! carbon is [S6, L3, L1, D1] = 4 shells / 15 cartesian functions, which
+//! is exactly how the paper counts shells in Table 4.
+//!
+//! For integral evaluation a shell is split into [`Segment`]s of pure
+//! angular momentum; a segment carries normalization-folded contraction
+//! coefficients and its basis-function offset.
+
+/// Shell angular kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ShellKind {
+    /// Pure s shell (1 function).
+    S,
+    /// Pure p shell (3 functions).
+    P,
+    /// Cartesian d shell (6 functions).
+    D,
+    /// Combined s+p shell (4 functions) — GAMESS "L" shell.
+    Sp,
+}
+
+impl ShellKind {
+    /// Number of (cartesian) basis functions.
+    pub fn n_bf(self) -> usize {
+        match self {
+            ShellKind::S => 1,
+            ShellKind::P => 3,
+            ShellKind::D => 6,
+            ShellKind::Sp => 4,
+        }
+    }
+
+    /// Highest angular momentum carried.
+    pub fn max_l(self) -> usize {
+        match self {
+            ShellKind::S => 0,
+            ShellKind::P => 1,
+            ShellKind::Sp => 1,
+            ShellKind::D => 2,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ShellKind::S => "S",
+            ShellKind::P => "P",
+            ShellKind::D => "D",
+            ShellKind::Sp => "L",
+        }
+    }
+}
+
+/// An un-normalized contracted shell as read from the basis-set tables.
+#[derive(Debug, Clone)]
+pub struct Shell {
+    /// Index of the atom this shell sits on.
+    pub atom: usize,
+    /// Center in bohr.
+    pub center: [f64; 3],
+    pub kind: ShellKind,
+    /// Primitive exponents.
+    pub exps: Vec<f64>,
+    /// Contraction coefficients (s part for Sp shells).
+    pub coefs: Vec<f64>,
+    /// p-part coefficients for Sp shells (empty otherwise).
+    pub coefs_p: Vec<f64>,
+    /// First basis-function index of this shell in the molecule ordering.
+    pub bf_first: usize,
+    /// Contraction-class id for the cost model (see `basisset`).
+    pub class: usize,
+}
+
+impl Shell {
+    /// Number of basis functions in this shell.
+    pub fn n_bf(&self) -> usize {
+        self.kind.n_bf()
+    }
+}
+
+/// A pure-angular-momentum segment of a shell, with normalization folded
+/// into the coefficients. This is what the integral engine consumes.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    /// Angular momentum (0 = s, 1 = p, 2 = d).
+    pub l: usize,
+    pub center: [f64; 3],
+    pub exps: Vec<f64>,
+    /// Coefficients including primitive + contracted normalization for
+    /// the (l,0,0) component; per-component scale comes from
+    /// [`component_scale`].
+    pub coefs: Vec<f64>,
+    /// Basis-function offset of this segment's first function (absolute).
+    pub bf_first: usize,
+    /// Owning shell index.
+    pub shell: usize,
+}
+
+impl Segment {
+    /// Number of cartesian components: (l+1)(l+2)/2.
+    pub fn n_comp(&self) -> usize {
+        (self.l + 1) * (self.l + 2) / 2
+    }
+}
+
+/// Cartesian power triples for l = 0..=2 in the canonical ordering used
+/// throughout the framework (x-major lexicographic):
+/// l=0: [(0,0,0)]; l=1: [x,y,z]; l=2: [xx,xy,xz,yy,yz,zz].
+pub fn cart_powers(l: usize) -> &'static [(usize, usize, usize)] {
+    const L0: [(usize, usize, usize); 1] = [(0, 0, 0)];
+    const L1: [(usize, usize, usize); 3] = [(1, 0, 0), (0, 1, 0), (0, 0, 1)];
+    const L2: [(usize, usize, usize); 6] = [
+        (2, 0, 0),
+        (1, 1, 0),
+        (1, 0, 1),
+        (0, 2, 0),
+        (0, 1, 1),
+        (0, 0, 2),
+    ];
+    match l {
+        0 => &L0,
+        1 => &L1,
+        2 => &L2,
+        _ => panic!("angular momentum l={l} not supported (max d)"),
+    }
+}
+
+/// Double factorial (2n-1)!! with (-1)!! = 1.
+pub fn dfact2(n: i64) -> f64 {
+    if n <= 0 {
+        1.0
+    } else {
+        let mut p = 1.0;
+        let mut k = n;
+        while k > 0 {
+            p *= k as f64;
+            k -= 2;
+        }
+        p
+    }
+}
+
+/// Normalization constant of a primitive cartesian gaussian with powers
+/// summing to l, for the axial component (l,0,0).
+pub fn prim_norm(l: usize, alpha: f64) -> f64 {
+    let l = l as i64;
+    let two_a = 2.0 * alpha;
+    (two_a / std::f64::consts::PI).powf(0.75) * (2.0 * two_a).powf(l as f64 / 2.0)
+        / dfact2(2 * l - 1).sqrt()
+}
+
+/// Per-component scale relative to the axial (l,0,0) normalization:
+/// sqrt((2l-1)!! / ((2i-1)!!(2j-1)!!(2k-1)!!)). 1.0 for s/p; √3 for d_xy-like.
+pub fn component_scale(l: usize, comp: usize) -> f64 {
+    let (i, j, k) = cart_powers(l)[comp];
+    (dfact2(2 * l as i64 - 1)
+        / (dfact2(2 * i as i64 - 1) * dfact2(2 * j as i64 - 1) * dfact2(2 * k as i64 - 1)))
+    .sqrt()
+}
+
+/// Fold primitive + contracted normalization into coefficients for a
+/// segment of angular momentum l: returns c'_a = c_a N_a / sqrt(S) where
+/// S is the self-overlap of the contracted (l,0,0) function.
+pub fn normalize_contraction(l: usize, exps: &[f64], coefs: &[f64]) -> Vec<f64> {
+    let n = exps.len();
+    let mut cn: Vec<f64> = (0..n).map(|a| coefs[a] * prim_norm(l, exps[a])).collect();
+    // Self-overlap of contracted (l,0,0).
+    let mut s = 0.0;
+    for a in 0..n {
+        for b in 0..n {
+            let p = exps[a] + exps[b];
+            s += cn[a]
+                * cn[b]
+                * (std::f64::consts::PI / p).powf(1.5)
+                * dfact2(2 * l as i64 - 1)
+                / (2.0 * p).powf(l as f64);
+        }
+    }
+    let scale = 1.0 / s.sqrt();
+    for c in cn.iter_mut() {
+        *c *= scale;
+    }
+    cn
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_counts() {
+        assert_eq!(ShellKind::S.n_bf(), 1);
+        assert_eq!(ShellKind::P.n_bf(), 3);
+        assert_eq!(ShellKind::D.n_bf(), 6);
+        assert_eq!(ShellKind::Sp.n_bf(), 4);
+        assert_eq!(ShellKind::Sp.max_l(), 1);
+    }
+
+    #[test]
+    fn dfact2_values() {
+        assert_eq!(dfact2(-1), 1.0);
+        assert_eq!(dfact2(1), 1.0);
+        assert_eq!(dfact2(3), 3.0);
+        assert_eq!(dfact2(5), 15.0);
+        assert_eq!(dfact2(7), 105.0);
+    }
+
+    #[test]
+    fn prim_norm_s_gaussian_unit_overlap() {
+        // A single normalized s primitive must have unit self-overlap:
+        // N² (π/2α)^{3/2} = 1.
+        for &alpha in &[0.1, 1.0, 5.7] {
+            let n = prim_norm(0, alpha);
+            let s = n * n * (std::f64::consts::PI / (2.0 * alpha)).powf(1.5);
+            assert!((s - 1.0).abs() < 1e-12, "alpha={alpha} s={s}");
+        }
+    }
+
+    #[test]
+    fn contracted_norm_unit_overlap() {
+        // STO-3G H s function must be unit-normalized after folding.
+        let exps = [3.42525091, 0.62391373, 0.16885540];
+        let coefs = [0.15432897, 0.53532814, 0.44463454];
+        let cn = normalize_contraction(0, &exps, &coefs);
+        let mut s = 0.0;
+        for a in 0..3 {
+            for b in 0..3 {
+                let p = exps[a] + exps[b];
+                s += cn[a] * cn[b] * (std::f64::consts::PI / p).powf(1.5);
+            }
+        }
+        assert!((s - 1.0).abs() < 1e-12, "s={s}");
+    }
+
+    #[test]
+    fn d_component_scales() {
+        // xx-like: 1.0; xy-like: sqrt(3).
+        assert!((component_scale(2, 0) - 1.0).abs() < 1e-14);
+        assert!((component_scale(2, 1) - 3.0_f64.sqrt()).abs() < 1e-14);
+        assert!((component_scale(2, 3) - 1.0).abs() < 1e-14);
+        assert!((component_scale(1, 1) - 1.0).abs() < 1e-14);
+    }
+}

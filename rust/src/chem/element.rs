@@ -1,0 +1,79 @@
+//! Chemical elements (the subset the framework's basis sets cover).
+
+/// A chemical element with nuclear charge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Element {
+    H,
+    He,
+    C,
+    N,
+    O,
+}
+
+impl Element {
+    /// Nuclear charge Z.
+    pub fn charge(self) -> u32 {
+        match self {
+            Element::H => 1,
+            Element::He => 2,
+            Element::C => 6,
+            Element::N => 7,
+            Element::O => 8,
+        }
+    }
+
+    /// Element symbol.
+    pub fn symbol(self) -> &'static str {
+        match self {
+            Element::H => "H",
+            Element::He => "He",
+            Element::C => "C",
+            Element::N => "N",
+            Element::O => "O",
+        }
+    }
+
+    /// Parse from a symbol (case-insensitive).
+    pub fn from_symbol(s: &str) -> Option<Element> {
+        match s.trim().to_ascii_uppercase().as_str() {
+            "H" => Some(Element::H),
+            "HE" => Some(Element::He),
+            "C" => Some(Element::C),
+            "N" => Some(Element::N),
+            "O" => Some(Element::O),
+            _ => None,
+        }
+    }
+
+    /// Number of electrons contributed by a neutral atom.
+    pub fn electrons(self) -> u32 {
+        self.charge()
+    }
+}
+
+impl std::fmt::Display for Element {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.symbol())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charges() {
+        assert_eq!(Element::H.charge(), 1);
+        assert_eq!(Element::C.charge(), 6);
+        assert_eq!(Element::O.charge(), 8);
+    }
+
+    #[test]
+    fn symbol_roundtrip() {
+        for e in [Element::H, Element::He, Element::C, Element::N, Element::O] {
+            assert_eq!(Element::from_symbol(e.symbol()), Some(e));
+        }
+        assert_eq!(Element::from_symbol("c"), Some(Element::C));
+        assert_eq!(Element::from_symbol("Xx"), None);
+    }
+}

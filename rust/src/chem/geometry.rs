@@ -1,0 +1,180 @@
+//! Molecular geometry: atoms, molecules, XYZ I/O. Internally everything
+//! is stored in **bohr** (atomic units); XYZ files use ångström per the
+//! usual convention.
+
+use super::element::Element;
+
+/// Å → bohr conversion factor (CODATA).
+pub const ANGSTROM_TO_BOHR: f64 = 1.0 / 0.529_177_210_903;
+
+/// One atom: element + position in bohr.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Atom {
+    pub element: Element,
+    /// Position in bohr.
+    pub pos: [f64; 3],
+}
+
+impl Atom {
+    pub fn new(element: Element, pos_bohr: [f64; 3]) -> Self {
+        Atom { element, pos: pos_bohr }
+    }
+
+    /// Construct from ångström coordinates.
+    pub fn from_angstrom(element: Element, pos: [f64; 3]) -> Self {
+        Atom {
+            element,
+            pos: [
+                pos[0] * ANGSTROM_TO_BOHR,
+                pos[1] * ANGSTROM_TO_BOHR,
+                pos[2] * ANGSTROM_TO_BOHR,
+            ],
+        }
+    }
+}
+
+/// A molecule: a list of atoms and a total charge.
+#[derive(Debug, Clone, Default)]
+pub struct Molecule {
+    pub atoms: Vec<Atom>,
+    /// Net charge (0 for the paper's graphene systems).
+    pub charge: i32,
+    /// Human-readable label for reports.
+    pub name: String,
+}
+
+impl Molecule {
+    pub fn new(name: &str, atoms: Vec<Atom>) -> Self {
+        Molecule { atoms, charge: 0, name: name.to_string() }
+    }
+
+    /// Number of electrons (neutral atoms minus net charge).
+    pub fn n_electrons(&self) -> usize {
+        let z: i64 = self.atoms.iter().map(|a| a.element.electrons() as i64).sum();
+        (z - self.charge as i64) as usize
+    }
+
+    /// Doubly-occupied orbital count for closed-shell RHF. Errors if the
+    /// electron count is odd.
+    pub fn n_occ(&self) -> anyhow::Result<usize> {
+        let ne = self.n_electrons();
+        anyhow::ensure!(ne % 2 == 0, "RHF requires an even electron count, got {ne}");
+        Ok(ne / 2)
+    }
+
+    /// Nuclear repulsion energy Σ Za Zb / Rab (hartree).
+    pub fn nuclear_repulsion(&self) -> f64 {
+        let mut e = 0.0;
+        for i in 0..self.atoms.len() {
+            for j in 0..i {
+                let a = &self.atoms[i];
+                let b = &self.atoms[j];
+                let r = dist(a.pos, b.pos);
+                e += (a.element.charge() as f64) * (b.element.charge() as f64) / r;
+            }
+        }
+        e
+    }
+
+    /// Parse XYZ-format text (coordinates in Å).
+    pub fn from_xyz(name: &str, text: &str) -> anyhow::Result<Self> {
+        let mut lines = text.lines();
+        let n: usize = lines
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("empty xyz"))?
+            .trim()
+            .parse()
+            .map_err(|e| anyhow::anyhow!("xyz atom count: {e}"))?;
+        let _comment = lines.next();
+        let mut atoms = Vec::with_capacity(n);
+        for line in lines {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let sym = parts.next().ok_or_else(|| anyhow::anyhow!("bad xyz line: {line:?}"))?;
+            let e = Element::from_symbol(sym)
+                .ok_or_else(|| anyhow::anyhow!("unsupported element {sym:?}"))?;
+            let coords: Vec<f64> = parts
+                .take(3)
+                .map(|p| p.parse::<f64>())
+                .collect::<Result<_, _>>()
+                .map_err(|e| anyhow::anyhow!("bad xyz coords in {line:?}: {e}"))?;
+            anyhow::ensure!(coords.len() == 3, "bad xyz line: {line:?}");
+            atoms.push(Atom::from_angstrom(e, [coords[0], coords[1], coords[2]]));
+        }
+        anyhow::ensure!(atoms.len() == n, "xyz declared {n} atoms, found {}", atoms.len());
+        Ok(Molecule::new(name, atoms))
+    }
+
+    /// Serialize to XYZ text (Å).
+    pub fn to_xyz(&self) -> String {
+        let mut s = format!("{}\n{}\n", self.atoms.len(), self.name);
+        for a in &self.atoms {
+            let b = 1.0 / ANGSTROM_TO_BOHR;
+            s.push_str(&format!(
+                "{} {:.8} {:.8} {:.8}\n",
+                a.element.symbol(),
+                a.pos[0] * b,
+                a.pos[1] * b,
+                a.pos[2] * b
+            ));
+        }
+        s
+    }
+}
+
+/// Euclidean distance.
+pub fn dist(a: [f64; 3], b: [f64; 3]) -> f64 {
+    dist2(a, b).sqrt()
+}
+
+/// Squared euclidean distance.
+pub fn dist2(a: [f64; 3], b: [f64; 3]) -> f64 {
+    let d = [a[0] - b[0], a[1] - b[1], a[2] - b[2]];
+    d[0] * d[0] + d[1] * d[1] + d[2] * d[2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h2_electrons_and_repulsion() {
+        // H2 at 1.4 bohr: E_nn = 1/1.4.
+        let m = Molecule::new(
+            "h2",
+            vec![
+                Atom::new(Element::H, [0.0, 0.0, 0.0]),
+                Atom::new(Element::H, [0.0, 0.0, 1.4]),
+            ],
+        );
+        assert_eq!(m.n_electrons(), 2);
+        assert_eq!(m.n_occ().unwrap(), 1);
+        assert!((m.nuclear_repulsion() - 1.0 / 1.4).abs() < 1e-14);
+    }
+
+    #[test]
+    fn xyz_roundtrip() {
+        let text = "3\nwater\nO 0.0 0.0 0.1173\nH 0.0 0.7572 -0.4692\nH 0.0 -0.7572 -0.4692\n";
+        let m = Molecule::from_xyz("water", text).unwrap();
+        assert_eq!(m.atoms.len(), 3);
+        assert_eq!(m.n_electrons(), 10);
+        let m2 = Molecule::from_xyz("water2", &m.to_xyz()).unwrap();
+        assert!((m.atoms[1].pos[1] - m2.atoms[1].pos[1]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn xyz_errors() {
+        assert!(Molecule::from_xyz("x", "").is_err());
+        assert!(Molecule::from_xyz("x", "1\nc\nXy 0 0 0\n").is_err());
+        assert!(Molecule::from_xyz("x", "2\nc\nH 0 0 0\n").is_err());
+    }
+
+    #[test]
+    fn odd_electrons_rejected() {
+        let m = Molecule::new("h", vec![Atom::new(Element::H, [0.0; 3])]);
+        assert!(m.n_occ().is_err());
+    }
+}

@@ -1,0 +1,214 @@
+//! Graphene bilayer workload generator (paper §5.2, Figure 2).
+//!
+//! The paper benchmarks AB-stacked bilayer graphene patches labelled by
+//! their approximate side length (0.5–5.0 nm). The generator enumerates
+//! the infinite honeycomb lattice outward from the origin and keeps the
+//! innermost `n_per_layer` atoms (compact quasi-square patch), so the
+//! paper's exact atom counts (Table 4: 44, 120, 220, 356, 2,016 atoms)
+//! are matched exactly.
+
+use super::element::Element;
+use super::geometry::{Atom, Molecule};
+
+#[cfg(test)]
+use super::geometry::ANGSTROM_TO_BOHR;
+
+/// C–C bond length in graphene (Å).
+pub const CC_BOND_ANGSTROM: f64 = 1.42;
+/// AB-stacking interlayer distance (Å).
+pub const INTERLAYER_ANGSTROM: f64 = 3.35;
+
+/// The paper's five benchmark configurations (Table 2 / Table 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PaperSystem {
+    /// 0.5 nm — 44 atoms, 176 shells, 660 BFs.
+    Nm05,
+    /// 1.0 nm — 120 atoms, 480 shells, 1,800 BFs.
+    Nm10,
+    /// 1.5 nm — 220 atoms, 880 shells, 3,300 BFs.
+    Nm15,
+    /// 2.0 nm — 356 atoms, 1,424 shells, 5,340 BFs.
+    Nm20,
+    /// 5.0 nm — 2,016 atoms, 8,064 shells, 30,240 BFs.
+    Nm50,
+}
+
+impl PaperSystem {
+    pub const ALL: [PaperSystem; 5] = [
+        PaperSystem::Nm05,
+        PaperSystem::Nm10,
+        PaperSystem::Nm15,
+        PaperSystem::Nm20,
+        PaperSystem::Nm50,
+    ];
+
+    /// Paper label.
+    pub fn label(self) -> &'static str {
+        match self {
+            PaperSystem::Nm05 => "0.5 nm",
+            PaperSystem::Nm10 => "1.0 nm",
+            PaperSystem::Nm15 => "1.5 nm",
+            PaperSystem::Nm20 => "2.0 nm",
+            PaperSystem::Nm50 => "5.0 nm",
+        }
+    }
+
+    /// Total atom count (both layers), from paper Table 4.
+    pub fn n_atoms(self) -> usize {
+        match self {
+            PaperSystem::Nm05 => 44,
+            PaperSystem::Nm10 => 120,
+            PaperSystem::Nm15 => 220,
+            PaperSystem::Nm20 => 356,
+            PaperSystem::Nm50 => 2016,
+        }
+    }
+
+    /// Shell count in 6-31G(d) (4 shells per carbon; paper Table 4).
+    pub fn n_shells(self) -> usize {
+        self.n_atoms() * 4
+    }
+
+    /// Basis-function count in 6-31G(d) (15 cartesian BFs per carbon).
+    pub fn n_bf(self) -> usize {
+        self.n_atoms() * 15
+    }
+
+    /// Parse a label like "0.5", "0.5nm", "0.5 nm".
+    pub fn parse(s: &str) -> Option<PaperSystem> {
+        let t = s.trim().trim_end_matches("nm").trim_end_matches(' ').trim();
+        match t {
+            "0.5" => Some(PaperSystem::Nm05),
+            "1" | "1.0" => Some(PaperSystem::Nm10),
+            "1.5" => Some(PaperSystem::Nm15),
+            "2" | "2.0" => Some(PaperSystem::Nm20),
+            "5" | "5.0" => Some(PaperSystem::Nm50),
+            _ => None,
+        }
+    }
+
+    /// Build the bilayer geometry.
+    pub fn build(self) -> Molecule {
+        bilayer(self.n_atoms() / 2, self.label())
+    }
+}
+
+/// Enumerate honeycomb lattice sites (in Å, z = 0) outward from the
+/// origin until at least `n` sites are produced, then keep the `n`
+/// innermost by (max(|x|,|y|), |x|+|y|, x, y) — deterministic and compact.
+fn sheet_sites(n: usize) -> Vec<[f64; 2]> {
+    let a = CC_BOND_ANGSTROM;
+    // Rectangular 4-atom cell: width 3a (x), height sqrt(3)a (y).
+    let w = 3.0 * a;
+    let h = 3.0_f64.sqrt() * a;
+    // Basis sites of the 4-atom rectangular cell.
+    let basis = [
+        [0.0, 0.0],
+        [a, 0.0],
+        [1.5 * a, h / 2.0],
+        [2.5 * a, h / 2.0],
+    ];
+    // Enough cells to cover n sites generously.
+    let cells = ((n as f64 / 4.0).sqrt().ceil() as i64) + 3;
+    let mut sites = Vec::new();
+    for cx in -cells..=cells {
+        for cy in -cells..=cells {
+            for b in &basis {
+                sites.push([cx as f64 * w + b[0], cy as f64 * h + b[1]]);
+            }
+        }
+    }
+    sites.sort_by(|p, q| {
+        let kp = (p[0].abs().max(p[1].abs()), p[0].abs() + p[1].abs(), p[0], p[1]);
+        let kq = (q[0].abs().max(q[1].abs()), q[0].abs() + q[1].abs(), q[0], q[1]);
+        kp.partial_cmp(&kq).unwrap()
+    });
+    sites.truncate(n);
+    sites
+}
+
+/// Build an AB-stacked bilayer with `n_per_layer` carbons per layer.
+pub fn bilayer(n_per_layer: usize, name: &str) -> Molecule {
+    let sites = sheet_sites(n_per_layer);
+    let dz = INTERLAYER_ANGSTROM;
+    let shift = CC_BOND_ANGSTROM; // AB stacking: B layer shifted one bond along x.
+    let mut atoms = Vec::with_capacity(2 * n_per_layer);
+    for s in &sites {
+        atoms.push(Atom::from_angstrom(Element::C, [s[0], s[1], 0.0]));
+    }
+    for s in &sites {
+        atoms.push(Atom::from_angstrom(Element::C, [s[0] + shift, s[1], dz]));
+    }
+    Molecule::new(name, atoms)
+}
+
+/// Build a single-layer patch (used by small correctness tests).
+pub fn monolayer(n_atoms: usize, name: &str) -> Molecule {
+    let sites = sheet_sites(n_atoms);
+    let atoms = sites
+        .iter()
+        .map(|s| Atom::from_angstrom(Element::C, [s[0], s[1], 0.0]))
+        .collect();
+    Molecule::new(name, atoms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chem::geometry::dist;
+
+    #[test]
+    fn paper_counts_match_table4() {
+        for sys in PaperSystem::ALL {
+            let m = sys.build();
+            assert_eq!(m.atoms.len(), sys.n_atoms(), "{}", sys.label());
+            assert_eq!(sys.n_shells(), sys.n_atoms() * 4);
+            assert_eq!(sys.n_bf(), sys.n_atoms() * 15);
+        }
+        assert_eq!(PaperSystem::Nm05.n_bf(), 660);
+        assert_eq!(PaperSystem::Nm20.n_shells(), 1424);
+        assert_eq!(PaperSystem::Nm50.n_bf(), 30240);
+    }
+
+    #[test]
+    fn nearest_neighbour_is_bond_length() {
+        let m = monolayer(24, "flake");
+        let b = CC_BOND_ANGSTROM * ANGSTROM_TO_BOHR;
+        for (i, a) in m.atoms.iter().enumerate() {
+            let mut nn = f64::INFINITY;
+            for (j, c) in m.atoms.iter().enumerate() {
+                if i != j {
+                    nn = nn.min(dist(a.pos, c.pos));
+                }
+            }
+            assert!((nn - b).abs() < 1e-8, "atom {i} nn {nn} vs bond {b}");
+        }
+    }
+
+    #[test]
+    fn bilayer_has_two_planes() {
+        let m = bilayer(22, "0.5 nm");
+        assert_eq!(m.atoms.len(), 44);
+        let z0 = m.atoms[0].pos[2];
+        let z1 = m.atoms[22].pos[2];
+        let dz = (z1 - z0).abs() / ANGSTROM_TO_BOHR;
+        assert!((dz - INTERLAYER_ANGSTROM).abs() < 1e-8);
+    }
+
+    #[test]
+    fn parse_labels() {
+        assert_eq!(PaperSystem::parse("0.5 nm"), Some(PaperSystem::Nm05));
+        assert_eq!(PaperSystem::parse("2.0"), Some(PaperSystem::Nm20));
+        assert_eq!(PaperSystem::parse("5nm"), Some(PaperSystem::Nm50));
+        assert_eq!(PaperSystem::parse("3"), None);
+    }
+
+    #[test]
+    fn deterministic_geometry() {
+        let a = PaperSystem::Nm05.build();
+        let b = PaperSystem::Nm05.build();
+        for (x, y) in a.atoms.iter().zip(&b.atoms) {
+            assert_eq!(x.pos, y.pos);
+        }
+    }
+}

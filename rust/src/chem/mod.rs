@@ -1,0 +1,11 @@
+//! Chemistry substrate: elements, molecular geometry, the graphene
+//! bilayer workload generator from the paper's §5.2, and built-in test
+//! molecules used as correctness anchors.
+
+pub mod element;
+pub mod geometry;
+pub mod graphene;
+pub mod molecules;
+
+pub use element::Element;
+pub use geometry::{Atom, Molecule};

@@ -1,0 +1,122 @@
+//! Built-in test molecules used as correctness anchors. Geometries are
+//! standard near-equilibrium structures; reference RHF energies for the
+//! STO-3G anchors are well-established literature values.
+
+use super::element::Element;
+use super::geometry::{Atom, Molecule};
+
+/// H2 at 1.4 bohr (close to the STO-3G optimum).
+/// RHF/STO-3G reference energy: -1.11675 hartree (Szabo & Ostlund).
+pub fn h2() -> Molecule {
+    Molecule::new(
+        "H2",
+        vec![
+            Atom::new(Element::H, [0.0, 0.0, 0.0]),
+            Atom::new(Element::H, [0.0, 0.0, 1.4]),
+        ],
+    )
+}
+
+/// HeH+ at 1.4632 bohr (Szabo & Ostlund's textbook system).
+/// RHF/STO-3G reference: -2.84183 hartree (with ζ_He = 2.0925 in the
+/// book; with standard STO-3G tables the value differs slightly).
+pub fn heh_plus() -> Molecule {
+    let mut m = Molecule::new(
+        "HeH+",
+        vec![
+            Atom::new(Element::He, [0.0, 0.0, 0.0]),
+            Atom::new(Element::H, [0.0, 0.0, 1.4632]),
+        ],
+    );
+    m.charge = 1;
+    m
+}
+
+/// Water, standard near-experimental geometry (Å): r(OH)=0.957, HOH=104.5°.
+/// RHF/STO-3G at this geometry: ≈ -74.963 hartree (literature anchor
+/// -74.9659 at the STO-3G optimum geometry).
+pub fn water() -> Molecule {
+    Molecule::new(
+        "H2O",
+        vec![
+            Atom::from_angstrom(Element::O, [0.0, 0.0, 0.1173]),
+            Atom::from_angstrom(Element::H, [0.0, 0.7572, -0.4692]),
+            Atom::from_angstrom(Element::H, [0.0, -0.7572, -0.4692]),
+        ],
+    )
+}
+
+/// Methane, tetrahedral, r(CH) = 1.089 Å.
+/// RHF/STO-3G reference: ≈ -39.727 hartree.
+pub fn methane() -> Molecule {
+    let d = 1.089 / 3.0_f64.sqrt();
+    Molecule::new(
+        "CH4",
+        vec![
+            Atom::from_angstrom(Element::C, [0.0, 0.0, 0.0]),
+            Atom::from_angstrom(Element::H, [d, d, d]),
+            Atom::from_angstrom(Element::H, [d, -d, -d]),
+            Atom::from_angstrom(Element::H, [-d, d, -d]),
+            Atom::from_angstrom(Element::H, [-d, -d, d]),
+        ],
+    )
+}
+
+/// Benzene, D6h, r(CC) = 1.39 Å, r(CH) = 1.09 Å.
+pub fn benzene() -> Molecule {
+    let rc = 1.39;
+    let rh = 1.39 + 1.09;
+    let mut atoms = Vec::new();
+    for k in 0..6 {
+        let th = std::f64::consts::PI / 3.0 * k as f64;
+        atoms.push(Atom::from_angstrom(Element::C, [rc * th.cos(), rc * th.sin(), 0.0]));
+    }
+    for k in 0..6 {
+        let th = std::f64::consts::PI / 3.0 * k as f64;
+        atoms.push(Atom::from_angstrom(Element::H, [rh * th.cos(), rh * th.sin(), 0.0]));
+    }
+    Molecule::new("C6H6", atoms)
+}
+
+/// Molecule registry by name (used by the CLI).
+pub fn by_name(name: &str) -> Option<Molecule> {
+    match name.to_ascii_lowercase().as_str() {
+        "h2" => Some(h2()),
+        "heh+" | "hehp" => Some(heh_plus()),
+        "h2o" | "water" => Some(water()),
+        "ch4" | "methane" => Some(methane()),
+        "c6h6" | "benzene" => Some(benzene()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chem::geometry::dist;
+    use crate::chem::geometry::ANGSTROM_TO_BOHR;
+
+    #[test]
+    fn registry() {
+        for n in ["h2", "heh+", "water", "ch4", "benzene"] {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert!(by_name("unobtanium").is_none());
+    }
+
+    #[test]
+    fn electron_counts() {
+        assert_eq!(h2().n_electrons(), 2);
+        assert_eq!(heh_plus().n_electrons(), 2);
+        assert_eq!(water().n_electrons(), 10);
+        assert_eq!(methane().n_electrons(), 10);
+        assert_eq!(benzene().n_electrons(), 42);
+    }
+
+    #[test]
+    fn methane_ch_distance() {
+        let m = methane();
+        let r = dist(m.atoms[0].pos, m.atoms[1].pos) / ANGSTROM_TO_BOHR;
+        assert!((r - 1.089).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,80 @@
+//! Interconnect model: Aries dragonfly (Theta) collectives and the DLB
+//! counter's remote-atomic cost.
+
+/// Network parameters (Theta's Aries with dragonfly topology).
+#[derive(Debug, Clone, Copy)]
+pub struct NetParams {
+    /// Point-to-point latency (s).
+    pub latency: f64,
+    /// Per-rank injection bandwidth for large messages (bytes/s).
+    pub bandwidth: f64,
+    /// Remote get-and-increment round trip for `ddi_dlbnext` (s).
+    pub dlb_rtt: f64,
+}
+
+impl Default for NetParams {
+    fn default() -> Self {
+        // Aries: ~1.3 µs MPI latency, ~8 GB/s effective per-rank
+        // allreduce bandwidth, ~2 µs one-sided fetch-op.
+        NetParams { latency: 1.3e-6, bandwidth: 8e9, dlb_rtt: 2.0e-6 }
+    }
+}
+
+/// Allreduce (the `ddi_gsumf` Fock reduction) over `ranks` ranks of a
+/// `bytes`-sized buffer — Rabenseifner's algorithm:
+/// T = 2·log2(p)·α + 2·(p−1)/p·n/β (+ n/β local reduction flops folded
+/// into β).
+pub fn allreduce_seconds(bytes: f64, ranks: usize, net: &NetParams) -> f64 {
+    if ranks <= 1 {
+        return 0.0;
+    }
+    let p = ranks as f64;
+    2.0 * p.log2().ceil() * net.latency + 2.0 * (p - 1.0) / p * bytes / net.bandwidth
+}
+
+/// In-node reduction of `copies` thread-private buffers of `bytes` each
+/// (the private-Fock `reduction(+:Fock)`), bandwidth-bound on MCDRAM,
+/// parallelized over the same threads.
+pub fn thread_reduce_seconds(bytes: f64, copies: usize, threads: usize, mem_bw: f64) -> f64 {
+    if copies <= 1 {
+        return 0.0;
+    }
+    // Each word is read once per copy and written once; threads share bw.
+    let traffic = bytes * (copies as f64 + 1.0);
+    traffic / mem_bw * (1.0 + (threads as f64).log2() * 0.02)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_zero_for_single_rank() {
+        assert_eq!(allreduce_seconds(1e9, 1, &NetParams::default()), 0.0);
+    }
+
+    #[test]
+    fn allreduce_scales_with_log_ranks_latency() {
+        let net = NetParams { latency: 1e-6, bandwidth: 1e12, dlb_rtt: 0.0 };
+        let t16 = allreduce_seconds(8.0, 16, &net);
+        let t256 = allreduce_seconds(8.0, 256, &net);
+        // Tiny message: latency-dominated, ratio = log 256 / log 16 = 2.
+        assert!((t256 / t16 - 2.0).abs() < 0.1, "{}", t256 / t16);
+    }
+
+    #[test]
+    fn allreduce_bandwidth_term_saturates() {
+        let net = NetParams::default();
+        let t_big = allreduce_seconds(228e6, 2048, &net); // 2 nm Fock matrix
+        // 2·(p-1)/p·n/β ≈ 2·228e6/8e9 ≈ 57 ms plus small latency term.
+        assert!(t_big > 0.05 && t_big < 0.08, "{t_big}");
+    }
+
+    #[test]
+    fn thread_reduce_grows_with_copies() {
+        let a = thread_reduce_seconds(1e6, 2, 4, 400e9);
+        let b = thread_reduce_seconds(1e6, 64, 4, 400e9);
+        assert!(b > a * 10.0);
+        assert_eq!(thread_reduce_seconds(1e6, 1, 4, 400e9), 0.0);
+    }
+}

@@ -1,0 +1,166 @@
+//! Per-quartet cost model: host-measured nanoseconds per computed shell
+//! quartet, indexed by the (bra-pair-class, ket-pair-class) combination,
+//! plus fixed per-event costs (Schwarz test, scatter) and the
+//! host→KNL-core translation factor.
+
+use crate::util::config::{Config, Value};
+
+/// Canonical pair-class index for shell classes a, b (a ≥ b enforced).
+#[inline]
+pub fn pair_class(a: usize, b: usize) -> usize {
+    let (hi, lo) = if a >= b { (a, b) } else { (b, a) };
+    hi * (hi + 1) / 2 + lo
+}
+
+/// Number of pair classes for `n` shell classes.
+pub fn n_pair_classes(n: usize) -> usize {
+    n * (n + 1) / 2
+}
+
+/// The calibrated cost model.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Shell-class count of the calibrated basis.
+    pub n_classes: usize,
+    /// ns per computed quartet (ERI + six-element scatter), indexed
+    /// [pair_class(bra)][pair_class(ket)], measured on the host core.
+    pub quartet_ns: Vec<f64>,
+    /// ns per Schwarz screening test.
+    pub screen_ns: f64,
+    /// Host-core → KNL-core slowdown for this compute mix (KNL 7230 at
+    /// 1.3 GHz, scalar-heavy integral code).
+    pub host_to_knl: f64,
+}
+
+impl CostModel {
+    /// Look up quartet cost (host ns).
+    #[inline]
+    pub fn quartet(&self, bra_cls: usize, ket_cls: usize) -> f64 {
+        let np = n_pair_classes(self.n_classes);
+        self.quartet_ns[bra_cls * np + ket_cls]
+    }
+
+    /// Largest quartet cost (imbalance tail bound).
+    pub fn max_quartet_ns(&self) -> f64 {
+        self.quartet_ns.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Built-in fallback calibrated once on the reference host for the
+    /// 6-31G(d) carbon shell classes [S6, L3, L1, D1] (see
+    /// `calibrate`). Values are host-core ns per quartet including the
+    /// scatter. Pair classes in canonical order:
+    /// 0:(S6,S6) 1:(L3,S6) 2:(L3,L3) 3:(L1,S6) 4:(L1,L3) 5:(L1,L1)
+    /// 6:(D1,S6) 7:(D1,L3) 8:(D1,L1) 9:(D1,D1).
+    pub fn fallback_631gd() -> CostModel {
+        let np = 10;
+        let mut q = vec![0.0; np * np];
+        // Bra-pair base cost (contraction depth × angular width) and a
+        // multiplicative ket factor — a separable first-order model
+        // refined by actual calibration when available.
+        let base = [4.0, 6.5, 10.0, 1.6, 2.6, 0.9, 3.2, 5.4, 1.9, 4.2];
+        for b in 0..np {
+            for k in 0..np {
+                q[b * np + k] = 160.0 * base[b] * base[k] / 4.0;
+            }
+        }
+        CostModel { n_classes: 4, quartet_ns: q, screen_ns: 3.0, host_to_knl: 2.8 }
+    }
+
+    /// Load from a calibration file produced by `khf calibrate`, or fall
+    /// back to the built-in table.
+    pub fn load_or_fallback(path: &str) -> CostModel {
+        match Config::load(path) {
+            Ok(cfg) => match Self::from_config(&cfg) {
+                Ok(m) => m,
+                Err(e) => {
+                    log::warn!("calibration file {path} invalid ({e}); using fallback");
+                    Self::fallback_631gd()
+                }
+            },
+            Err(_) => Self::fallback_631gd(),
+        }
+    }
+
+    /// Parse from a config.
+    pub fn from_config(cfg: &Config) -> anyhow::Result<CostModel> {
+        let n_classes = cfg.i64_or("cost", "n_classes", 0) as usize;
+        anyhow::ensure!(n_classes > 0, "missing [cost] n_classes");
+        let np = n_pair_classes(n_classes);
+        let mut quartet_ns = vec![0.0; np * np];
+        for b in 0..np {
+            for k in 0..np {
+                let key = format!("q_{b}_{k}");
+                let v = cfg
+                    .get("quartet_ns", &key)
+                    .and_then(Value::as_f64)
+                    .ok_or_else(|| anyhow::anyhow!("missing [quartet_ns] {key}"))?;
+                quartet_ns[b * np + k] = v;
+            }
+        }
+        Ok(CostModel {
+            n_classes,
+            quartet_ns,
+            screen_ns: cfg.f64_or("cost", "screen_ns", 3.0),
+            host_to_knl: cfg.f64_or("cost", "host_to_knl", 2.8),
+        })
+    }
+
+    /// Serialize to a config.
+    pub fn to_config(&self) -> Config {
+        let mut cfg = Config::default();
+        cfg.set("cost", "n_classes", Value::Int(self.n_classes as i64));
+        cfg.set("cost", "screen_ns", Value::Float(self.screen_ns));
+        cfg.set("cost", "host_to_knl", Value::Float(self.host_to_knl));
+        let np = n_pair_classes(self.n_classes);
+        for b in 0..np {
+            for k in 0..np {
+                cfg.set(
+                    "quartet_ns",
+                    &format!("q_{b}_{k}"),
+                    Value::Float(self.quartet_ns[b * np + k]),
+                );
+            }
+        }
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_class_canonical() {
+        assert_eq!(pair_class(0, 0), 0);
+        assert_eq!(pair_class(1, 0), 1);
+        assert_eq!(pair_class(0, 1), 1);
+        assert_eq!(pair_class(3, 3), 9);
+        assert_eq!(n_pair_classes(4), 10);
+    }
+
+    #[test]
+    fn fallback_sane() {
+        let m = CostModel::fallback_631gd();
+        assert_eq!(m.quartet_ns.len(), 100);
+        assert!(m.quartet_ns.iter().all(|&x| x > 0.0));
+        // dddd-ish quartets cost more than ssss.
+        assert!(m.quartet(2, 2) > m.quartet(5, 5));
+        assert!(m.max_quartet_ns() >= m.quartet(2, 2));
+    }
+
+    #[test]
+    fn config_roundtrip() {
+        let m = CostModel::fallback_631gd();
+        let cfg = m.to_config();
+        let m2 = CostModel::from_config(&cfg).unwrap();
+        assert_eq!(m.n_classes, m2.n_classes);
+        assert!((m.quartet(3, 7) - m2.quartet(3, 7)).abs() < 1e-9);
+        assert!((m.screen_ns - m2.screen_ns).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_config_rejects_incomplete() {
+        let cfg = Config::parse("[cost]\nn_classes = 2\n").unwrap();
+        assert!(CostModel::from_config(&cfg).is_err());
+    }
+}

@@ -1,0 +1,202 @@
+//! Knights Landing (Xeon Phi 7210/7230) node model — paper §5.1.
+//!
+//! 64 cores at 1.3 GHz, 4 hardware threads per core, two VPUs per core
+//! (peak needs ≥2 threads/core), 16 GB MCDRAM (~400 GB/s) + 192 GB DDR4
+//! (~100 GB/s), and the cluster modes (all-to-all / quadrant / SNC-4)
+//! that set tag-directory locality.
+
+/// Cores per KNL node.
+pub const CORES: usize = 64;
+/// Hardware threads per core.
+pub const MAX_HT: usize = 4;
+/// MCDRAM bandwidth (bytes/s).
+pub const MCDRAM_BW: f64 = 400e9;
+/// DDR4 bandwidth (bytes/s).
+pub const DDR4_BW: f64 = 100e9;
+
+/// KNL cluster (tag-directory) modes benchmarked in Figure 5.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterMode {
+    Quadrant,
+    Snc4,
+    AllToAll,
+}
+
+/// KNL memory modes benchmarked in Figure 5.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemoryMode {
+    /// MCDRAM as direct-mapped cache over DDR4.
+    Cache,
+    /// Flat: allocations in MCDRAM via numactl while they fit.
+    Flat,
+}
+
+/// OpenMP thread-affinity policies swept in Figure 3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Affinity {
+    Compact,
+    Scatter,
+    Balanced,
+    None,
+}
+
+impl ClusterMode {
+    pub const ALL: [ClusterMode; 3] = [ClusterMode::Quadrant, ClusterMode::Snc4, ClusterMode::AllToAll];
+    pub fn label(self) -> &'static str {
+        match self {
+            ClusterMode::Quadrant => "quadrant",
+            ClusterMode::Snc4 => "snc-4",
+            ClusterMode::AllToAll => "all-to-all",
+        }
+    }
+}
+
+impl MemoryMode {
+    pub const ALL: [MemoryMode; 2] = [MemoryMode::Cache, MemoryMode::Flat];
+    pub fn label(self) -> &'static str {
+        match self {
+            MemoryMode::Cache => "cache",
+            MemoryMode::Flat => "flat",
+        }
+    }
+}
+
+impl Affinity {
+    pub const ALL: [Affinity; 4] =
+        [Affinity::Compact, Affinity::Scatter, Affinity::Balanced, Affinity::None];
+    pub fn label(self) -> &'static str {
+        match self {
+            Affinity::Compact => "compact",
+            Affinity::Scatter => "scatter",
+            Affinity::Balanced => "balanced",
+            Affinity::None => "none",
+        }
+    }
+}
+
+/// Per-core throughput multiplier from hardware threading (§6.1: "the
+/// benefit is highest ... for two threads per core; for three and four
+/// threads, some gain is observed, albeit at a diminished level").
+pub fn ht_core_multiplier(threads_per_core: usize) -> f64 {
+    match threads_per_core {
+        0 | 1 => 1.0,
+        2 => 1.42,
+        3 => 1.50,
+        _ => 1.55,
+    }
+}
+
+/// Relative per-thread speed: core multiplier shared by the threads.
+pub fn per_thread_speed(threads_per_core: usize) -> f64 {
+    ht_core_multiplier(threads_per_core) / threads_per_core.max(1) as f64
+}
+
+/// Affinity throughput multiplier (≥ 1.0 slows execution). `fill`
+/// is the fraction of hardware threads in use. Compact pinning stacks
+/// threads onto few cores (hurts at partial fill); no affinity lets the
+/// OS migrate threads (hurts most); scatter/balanced are near-optimal —
+/// the Figure 3 ordering.
+pub fn affinity_penalty(aff: Affinity, fill: f64) -> f64 {
+    let partial = (1.0 - fill).clamp(0.0, 1.0);
+    match aff {
+        Affinity::Balanced => 1.0,
+        Affinity::Scatter => 1.01,
+        // At fill=1 compact == balanced; at low fill it halves the cores used.
+        Affinity::Compact => 1.0 + 0.45 * partial,
+        Affinity::None => 1.08 + 0.10 * partial,
+    }
+}
+
+/// Cost multiplier of a (cluster, memory) mode pair for a working set
+/// of `bytes_per_node` (Figure 5). Quad-cache is the reference (1.0).
+/// The model: cache mode pays a direct-mapped-conflict penalty that
+/// grows once the working set spills MCDRAM; flat mode serves from
+/// MCDRAM while it fits, else from DDR4 (bandwidth ratio penalty on the
+/// memory-bound fraction of the Fock build); SNC-4 gains a little
+/// locality, all-to-all loses tag-directory locality — more for codes
+/// whose sharing traffic is higher (the shared-Fock engine), which is
+/// the paper's observation that MPI-only beats shared-Fock only in
+/// all-to-all mode.
+pub fn mode_penalty(
+    cluster: ClusterMode,
+    memory: MemoryMode,
+    bytes_per_node: f64,
+    shared_traffic: bool,
+) -> f64 {
+    // Memory-bound fraction of the Fock build (D/F streaming vs ERI
+    // compute) — modest for this algorithm.
+    let mem_frac: f64 = 0.25;
+    let spill = (bytes_per_node / MCDRAM_CAPACITY - 1.0).clamp(0.0, 1.0);
+    let mem = match memory {
+        MemoryMode::Cache => 1.0 + mem_frac * 0.15 * spill,
+        MemoryMode::Flat => 1.0 + mem_frac * (DDR4_BW_RATIO - 1.0) * spill,
+    };
+    let cl = match cluster {
+        ClusterMode::Quadrant => 1.0,
+        ClusterMode::Snc4 => 0.99,
+        ClusterMode::AllToAll => {
+            if shared_traffic {
+                1.22
+            } else {
+                1.06
+            }
+        }
+    };
+    mem * cl
+}
+
+/// MCDRAM capacity, decimal bytes.
+pub const MCDRAM_CAPACITY: f64 = 16e9;
+/// DDR4/MCDRAM slowdown when spilling in flat mode.
+const DDR4_BW_RATIO: f64 = 4.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ht_curve_shape() {
+        // Monotone increasing per-core, decreasing per-thread.
+        assert!(ht_core_multiplier(2) > ht_core_multiplier(1));
+        assert!(ht_core_multiplier(4) > ht_core_multiplier(3));
+        assert!(per_thread_speed(2) < per_thread_speed(1));
+        // Two threads/core is the paper's sweet spot: the marginal gain
+        // from 1→2 dominates 2→4.
+        let g12 = ht_core_multiplier(2) - ht_core_multiplier(1);
+        let g24 = ht_core_multiplier(4) - ht_core_multiplier(2);
+        assert!(g12 > g24);
+    }
+
+    #[test]
+    fn affinity_ordering_fig3() {
+        // balanced ≲ scatter < compact < none at partial fill.
+        let f = 0.25;
+        let b = affinity_penalty(Affinity::Balanced, f);
+        let s = affinity_penalty(Affinity::Scatter, f);
+        let c = affinity_penalty(Affinity::Compact, f);
+        let n = affinity_penalty(Affinity::None, f);
+        assert!(b <= s && s < c);
+        assert!(n > s);
+        // At full fill compact converges to balanced.
+        assert!((affinity_penalty(Affinity::Compact, 1.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mode_penalty_fig5_ordering() {
+        // Quad-cache reference; all-to-all hurts shared-traffic codes
+        // more (the paper's MPI-only-beats-shared-Fock case).
+        let ws = 8e9; // fits MCDRAM
+        let quad = mode_penalty(ClusterMode::Quadrant, MemoryMode::Cache, ws, true);
+        let a2a_shared = mode_penalty(ClusterMode::AllToAll, MemoryMode::Cache, ws, true);
+        let a2a_mpi = mode_penalty(ClusterMode::AllToAll, MemoryMode::Cache, ws, false);
+        assert!(quad < a2a_mpi && a2a_mpi < a2a_shared);
+    }
+
+    #[test]
+    fn flat_mode_spill_penalty() {
+        let fits = mode_penalty(ClusterMode::Quadrant, MemoryMode::Flat, 8e9, false);
+        let spills = mode_penalty(ClusterMode::Quadrant, MemoryMode::Flat, 64e9, false);
+        assert!((fits - 1.0).abs() < 1e-12);
+        assert!(spills > fits);
+    }
+}

@@ -1,0 +1,306 @@
+//! Workload statistics: the per-(i,j)-task cost table the simulator
+//! replays. Built from the *real* molecule + basis + Schwarz screen, so
+//! load imbalance and sparsity in the simulation are the genuine
+//! article, not synthetic.
+//!
+//! The cost of one ij task is W_ij = Σ over canonical kl ≤ ij surviving
+//! the Schwarz test of quartet_cost(class(ij), class(kl)). Computed for
+//! every surviving pair with a Fenwick tree per ket-pair-class over
+//! Q-rank: pairs are inserted in ordinal order (so "kl ≤ ij" holds) and
+//! queried by the threshold Q_kl > τ/Q_ij — O(P log P) instead of the
+//! O(P²) quartet enumeration, exact under the screening rule.
+
+use crate::basis::BasisSet;
+use crate::integrals::schwarz::pair_index;
+use crate::integrals::SchwarzScreen;
+
+use super::costmodel::{n_pair_classes, pair_class, CostModel};
+
+/// One surviving (unscreenable) shell pair.
+#[derive(Debug, Clone, Copy)]
+pub struct PairTask {
+    /// Canonical pair ordinal (the DLB task id).
+    pub ordinal: usize,
+    pub i: u32,
+    pub j: u32,
+    /// Schwarz bound Q_ij.
+    pub q: f64,
+    /// Pair class (shell-class combination).
+    pub cls: u16,
+    /// Task cost: Σ quartet costs over surviving kl ≤ ij (host ns).
+    pub cost_ns: f64,
+    /// Surviving quartets in this task.
+    pub n_quartets: u64,
+}
+
+/// System-level workload statistics.
+#[derive(Debug, Clone)]
+pub struct SystemStats {
+    pub label: String,
+    pub n_shells: usize,
+    pub n_bf: usize,
+    pub max_shell_bf: usize,
+    /// Surviving pairs in ordinal order.
+    pub pairs: Vec<PairTask>,
+    /// Total canonical pairs (incl. screened-out).
+    pub n_pairs_total: usize,
+    /// Shell-class of every shell.
+    pub shell_class: Vec<u16>,
+    /// Σ cost over all tasks (host ns).
+    pub total_cost_ns: f64,
+    /// Σ surviving quartets.
+    pub total_quartets: u64,
+    /// Largest single quartet cost (host ns) — imbalance tail.
+    pub max_quartet_ns: f64,
+    /// Screening threshold used.
+    pub tau: f64,
+}
+
+/// Fenwick (binary indexed) tree over Q-ranks with f64 payloads.
+struct Fenwick {
+    tree: Vec<f64>,
+}
+
+impl Fenwick {
+    fn new(n: usize) -> Fenwick {
+        Fenwick { tree: vec![0.0; n + 1] }
+    }
+    /// Add at rank `i` (0-based).
+    fn add(&mut self, i: usize, v: f64) {
+        let mut k = i + 1;
+        while k < self.tree.len() {
+            self.tree[k] += v;
+            k += k & k.wrapping_neg();
+        }
+    }
+    /// Prefix sum of ranks [0, i) (0-based exclusive).
+    fn prefix(&self, i: usize) -> f64 {
+        let mut s = 0.0;
+        let mut k = i;
+        while k > 0 {
+            s += self.tree[k];
+            k -= k & k.wrapping_neg();
+        }
+        s
+    }
+}
+
+/// Build workload statistics from a real system.
+pub fn build_stats(
+    label: &str,
+    basis: &BasisSet,
+    screen: &SchwarzScreen,
+    cost: &CostModel,
+) -> SystemStats {
+    let nsh = basis.n_shells();
+    let n_pairs_total = nsh * (nsh + 1) / 2;
+    let shell_class: Vec<u16> = basis.shells.iter().map(|s| s.class as u16).collect();
+    assert!(
+        basis.classes.len() <= cost.n_classes,
+        "cost model covers {} shell classes, basis has {}",
+        cost.n_classes,
+        basis.classes.len()
+    );
+
+    // Collect surviving pairs in ordinal order.
+    let mut pairs: Vec<PairTask> = Vec::new();
+    for i in 0..nsh {
+        for j in 0..=i {
+            let q = screen.q(i, j);
+            if q * screen.q_max <= screen.tau {
+                continue;
+            }
+            pairs.push(PairTask {
+                ordinal: pair_index(i, j),
+                i: i as u32,
+                j: j as u32,
+                q,
+                cls: pair_class(shell_class[i] as usize, shell_class[j] as usize) as u16,
+                cost_ns: 0.0,
+                n_quartets: 0,
+            });
+        }
+    }
+    pairs.sort_by_key(|p| p.ordinal);
+
+    // Q-ranks: descending Q order.
+    let mut by_q: Vec<usize> = (0..pairs.len()).collect();
+    by_q.sort_by(|&a, &b| pairs[b].q.partial_cmp(&pairs[a].q).unwrap());
+    let mut rank_of = vec![0usize; pairs.len()];
+    let mut q_desc = vec![0.0; pairs.len()];
+    for (rank, &idx) in by_q.iter().enumerate() {
+        rank_of[idx] = rank;
+        q_desc[rank] = pairs[idx].q;
+    }
+
+    // One Fenwick per ket pair-class: counts by Q-rank.
+    let npc = n_pair_classes(cost.n_classes);
+    let mut trees: Vec<Fenwick> = (0..npc).map(|_| Fenwick::new(pairs.len())).collect();
+
+    let mut total_cost = 0.0;
+    let mut total_quartets = 0u64;
+    for idx in 0..pairs.len() {
+        // Insert self first: kl ≤ ij is inclusive.
+        trees[pairs[idx].cls as usize].add(rank_of[idx], 1.0);
+        // Threshold: quartet survives iff Q_kl > τ / Q_ij.
+        let thresh = screen.tau / pairs[idx].q;
+        // Number of ranks with Q > thresh = lower bound index in q_desc.
+        let cut = partition_point_desc(&q_desc, thresh);
+        let bra = pairs[idx].cls as usize;
+        let mut w = 0.0;
+        let mut nq = 0u64;
+        for (ket, tree) in trees.iter().enumerate() {
+            let cnt = tree.prefix(cut);
+            if cnt > 0.0 {
+                w += cnt * cost.quartet(bra, ket);
+                nq += cnt as u64;
+            }
+        }
+        pairs[idx].cost_ns = w;
+        pairs[idx].n_quartets = nq;
+        total_cost += w;
+        total_quartets += nq;
+    }
+
+    SystemStats {
+        label: label.to_string(),
+        n_shells: nsh,
+        n_bf: basis.n_bf,
+        max_shell_bf: basis.max_shell_bf,
+        pairs,
+        n_pairs_total,
+        shell_class,
+        total_cost_ns: total_cost,
+        total_quartets,
+        max_quartet_ns: cost.max_quartet_ns(),
+        tau: screen.tau,
+    }
+}
+
+/// First index in a descending array whose value is ≤ `thresh`
+/// (i.e. count of entries strictly greater).
+fn partition_point_desc(desc: &[f64], thresh: f64) -> usize {
+    let mut lo = 0;
+    let mut hi = desc.len();
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if desc[mid] > thresh {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+impl SystemStats {
+    /// Per-i aggregate costs for Algorithm 2 (private Fock): W_i over
+    /// the i-task's whole (j,k,l) space, host ns. Indexed by shell i.
+    pub fn per_i_cost(&self) -> Vec<f64> {
+        let mut w = vec![0.0; self.n_shells];
+        for p in &self.pairs {
+            w[p.i as usize] += p.cost_ns;
+        }
+        w
+    }
+
+    /// Survival fraction of quartets implied by the stats.
+    pub fn quartet_survival(&self) -> f64 {
+        let total = crate::hf::quartets::n_canonical(self.n_shells);
+        self.total_quartets as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basis::BasisName;
+    use crate::chem::{graphene, molecules};
+    use crate::hf::quartets::for_each_canonical;
+
+    fn exact_costs(basis: &BasisSet, screen: &SchwarzScreen, cost: &CostModel) -> (f64, u64) {
+        // O(P²) oracle: enumerate every canonical quartet.
+        let cls: Vec<usize> = basis.shells.iter().map(|s| s.class).collect();
+        let mut total = 0.0;
+        let mut nq = 0u64;
+        for_each_canonical(basis.n_shells(), |(i, j, k, l)| {
+            if screen.screened(i, j, k, l) {
+                return;
+            }
+            nq += 1;
+            total += cost.quartet(pair_class(cls[i], cls[j]), pair_class(cls[k], cls[l]));
+        });
+        (total, nq)
+    }
+
+    #[test]
+    fn fenwick_basics() {
+        let mut f = Fenwick::new(10);
+        f.add(0, 1.0);
+        f.add(5, 2.0);
+        f.add(9, 4.0);
+        assert_eq!(f.prefix(0), 0.0);
+        assert_eq!(f.prefix(1), 1.0);
+        assert_eq!(f.prefix(6), 3.0);
+        assert_eq!(f.prefix(10), 7.0);
+    }
+
+    #[test]
+    fn partition_point() {
+        let v = [9.0, 7.0, 5.0, 3.0, 1.0];
+        assert_eq!(partition_point_desc(&v, 10.0), 0);
+        assert_eq!(partition_point_desc(&v, 5.0), 2);
+        assert_eq!(partition_point_desc(&v, 0.5), 5);
+    }
+
+    #[test]
+    fn stats_match_bruteforce_on_small_systems() {
+        let cost = CostModel::fallback_631gd();
+        for (mol, basis_name) in [
+            (molecules::benzene(), BasisName::Sto3g),
+            (graphene::monolayer(8, "c8"), BasisName::SixThirtyOneGd),
+        ] {
+            let basis = BasisSet::assemble(&mol, basis_name).unwrap();
+            let screen = SchwarzScreen::build(&basis, 1e-10);
+            let stats = build_stats(&mol.name, &basis, &screen, &cost);
+            let (want_cost, want_nq) = exact_costs(&basis, &screen, &cost);
+            assert_eq!(stats.total_quartets, want_nq, "{}", mol.name);
+            assert!(
+                (stats.total_cost_ns - want_cost).abs() / want_cost < 1e-9,
+                "{}: {} vs {}",
+                mol.name,
+                stats.total_cost_ns,
+                want_cost
+            );
+        }
+    }
+
+    #[test]
+    fn per_i_cost_sums_to_total() {
+        let cost = CostModel::fallback_631gd();
+        let mol = graphene::monolayer(10, "c10");
+        let basis = BasisSet::assemble(&mol, BasisName::SixThirtyOneGd).unwrap();
+        let screen = SchwarzScreen::build(&basis, 1e-10);
+        let stats = build_stats("c10", &basis, &screen, &cost);
+        let per_i: f64 = stats.per_i_cost().iter().sum();
+        assert!((per_i - stats.total_cost_ns).abs() / stats.total_cost_ns < 1e-12);
+    }
+
+    #[test]
+    fn screened_pairs_excluded() {
+        // A stretched two-flake system: cross-flake pairs screen out.
+        let cost = CostModel::fallback_631gd();
+        let mut mol = graphene::monolayer(6, "c6");
+        let far = graphene::monolayer(6, "c6far");
+        for a in far.atoms {
+            let mut a = a;
+            a.pos[2] += 80.0; // 80 bohr away
+            mol.atoms.push(a);
+        }
+        let basis = BasisSet::assemble(&mol, BasisName::SixThirtyOneGd).unwrap();
+        let screen = SchwarzScreen::build(&basis, 1e-10);
+        let stats = build_stats("split", &basis, &screen, &cost);
+        assert!(stats.pairs.len() < stats.n_pairs_total);
+        assert!(stats.quartet_survival() < 0.6);
+    }
+}

@@ -1,0 +1,7 @@
+//! Coordinator: job configuration, the experiment registry mapping the
+//! paper's tables/figures to runnable jobs, and report printers.
+
+pub mod experiments;
+pub mod report;
+
+pub use experiments::{paper_stats, stats_for_system};

@@ -1,0 +1,71 @@
+//! Plain-text table printers for the paper-artifact benches.
+
+/// Render an aligned text table. `rows` include the header as row 0.
+pub fn table(rows: &[Vec<String>]) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let cols = rows.iter().map(|r| r.len()).max().unwrap();
+    let mut width = vec![0usize; cols];
+    for r in rows {
+        for (c, cell) in r.iter().enumerate() {
+            width[c] = width[c].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    for (ri, r) in rows.iter().enumerate() {
+        let mut line = String::new();
+        for (c, cell) in r.iter().enumerate() {
+            line.push_str(&format!("{:>w$}  ", cell, w = width[c]));
+        }
+        out.push_str(line.trim_end());
+        out.push('\n');
+        if ri == 0 {
+            let total: usize = width.iter().map(|w| w + 2).sum::<usize>().saturating_sub(2);
+            out.push_str(&"-".repeat(total));
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Format seconds like the paper's tables (integer seconds above 10 s).
+pub fn secs(t: f64) -> String {
+    if t >= 10.0 {
+        format!("{t:.0}")
+    } else if t >= 0.1 {
+        format!("{t:.2}")
+    } else {
+        format!("{t:.4}")
+    }
+}
+
+/// Percent with no decimals (Table 3 style).
+pub fn pct(x: f64) -> String {
+    format!("{:.0}", 100.0 * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let t = table(&[
+            vec!["a".into(), "long-header".into()],
+            vec!["xxx".into(), "1".into()],
+        ]);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[1].starts_with('-'));
+        assert!(lines[0].contains("long-header"));
+    }
+
+    #[test]
+    fn number_formats() {
+        assert_eq!(secs(2661.4), "2661");
+        assert_eq!(secs(1.234), "1.23");
+        assert_eq!(secs(0.0123), "0.0123");
+        assert_eq!(pct(0.789), "79");
+    }
+}

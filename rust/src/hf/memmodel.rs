@@ -1,0 +1,167 @@
+//! Memory-footprint model — paper eqs. (3a)–(3c) plus an exact
+//! accounting of what this framework's engines actually allocate
+//! (Table 2 reports both).
+
+/// Bytes per f64.
+const W: f64 = 8.0;
+
+/// Which Fock-build engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    MpiOnly,
+    PrivateFock,
+    SharedFock,
+}
+
+impl EngineKind {
+    pub const ALL: [EngineKind; 3] = [EngineKind::MpiOnly, EngineKind::PrivateFock, EngineKind::SharedFock];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            EngineKind::MpiOnly => "MPI-only",
+            EngineKind::PrivateFock => "Private Fock",
+            EngineKind::SharedFock => "Shared Fock",
+        }
+    }
+}
+
+/// Paper eq. (3a): MPI-only asymptotic footprint per node, in **bytes**.
+/// M = 5/2 · N_BF² · N_MPI_per_node (words).
+pub fn eq3a_mpi(n_bf: usize, ranks_per_node: usize) -> f64 {
+    2.5 * (n_bf as f64).powi(2) * ranks_per_node as f64 * W
+}
+
+/// Paper eq. (3b): private-Fock footprint per node, bytes.
+/// M = (2 + N_threads) · N_BF² · N_MPI_per_node.
+pub fn eq3b_private(n_bf: usize, threads_per_rank: usize, ranks_per_node: usize) -> f64 {
+    (2.0 + threads_per_rank as f64) * (n_bf as f64).powi(2) * ranks_per_node as f64 * W
+}
+
+/// Paper eq. (3c): shared-Fock footprint per node, bytes.
+/// M = 7/2 · N_BF² · N_MPI_per_node.
+pub fn eq3c_shared(n_bf: usize, ranks_per_node: usize) -> f64 {
+    3.5 * (n_bf as f64).powi(2) * ranks_per_node as f64 * W
+}
+
+/// Exact accounting of this framework's engines, bytes per node.
+///
+/// Every rank owns the full SCF working set (D, F/G, S, H, X, C, F′ —
+/// seven N² matrices; GAMESS replicates the same set, which is how the
+/// paper's Table 2 additionally quotes "approximately 208 GB/node" for
+/// the 5 nm shared-Fock run at 4 ranks/node — 7·N²·8·4 ≈ 205 GB).
+/// The hybrid engines share all read-only matrices across threads and
+/// differ only in Fock storage:
+/// * MPI-only: whole set replicated per rank (1 rank = 1 core).
+/// * Private Fock: 6 shared matrices + one G replica per thread.
+/// * Shared Fock: 7 shared matrices + two padded column buffers
+///   (N_BF · maxShellBF · threads each).
+pub fn exact_bytes(
+    engine: EngineKind,
+    n_bf: usize,
+    max_shell_bf: usize,
+    ranks_per_node: usize,
+    threads_per_rank: usize,
+) -> f64 {
+    let n2 = (n_bf as f64).powi(2);
+    let per_rank = match engine {
+        EngineKind::MpiOnly => 7.0 * n2,
+        EngineKind::PrivateFock => 6.0 * n2 + threads_per_rank as f64 * n2,
+        EngineKind::SharedFock => {
+            let mxsize = (n_bf * max_shell_bf) as f64;
+            7.0 * n2 + 2.0 * mxsize * threads_per_rank as f64
+        }
+    };
+    per_rank * ranks_per_node as f64 * W
+}
+
+/// KNL MCDRAM capacity (bytes, decimal as marketed) — the single-node
+/// feasibility gate behind Figure 4's "MPI-only restricted to 128
+/// hardware threads" (eq. 3a at 256 ranks on the 1.0 nm system is
+/// 16.6 GB > 16 GB; at 128 ranks it fits).
+pub const MCDRAM_BYTES: f64 = 16e9;
+
+/// KNL DDR4 capacity per node (bytes).
+pub const DDR4_BYTES: f64 = 192e9;
+
+/// Total per-node capacity with MCDRAM used as addressable memory
+/// (flat/hybrid): 192 GB DDR4 + 16 GB MCDRAM. This is the multi-node
+/// feasibility gate — the paper's 5 nm shared-Fock run occupies
+/// "approximately 208 GB per node" (§6.2), i.e. the whole of it.
+pub const NODE_BYTES: f64 = DDR4_BYTES + MCDRAM_BYTES;
+
+/// Can the configuration run at all? (paper: the stock code cannot use
+/// all 256 hardware threads on the larger systems).
+pub fn feasible(bytes_per_node: f64, use_mcdram_only: bool) -> bool {
+    bytes_per_node <= if use_mcdram_only { MCDRAM_BYTES } else { NODE_BYTES }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chem::graphene::PaperSystem;
+
+    #[test]
+    fn eq3_ordering_matches_paper() {
+        // At the paper's comparison point (256 MPI ranks vs 4 ranks × 64
+        // threads) the ordering must be MPI ≫ private ≫ shared.
+        let n = 1800;
+        let mpi = eq3a_mpi(n, 256);
+        let prf = eq3b_private(n, 64, 4);
+        let shf = eq3c_shared(n, 4);
+        assert!(mpi > prf && prf > shf, "{mpi} {prf} {shf}");
+    }
+
+    #[test]
+    fn exact_reproduces_5nm_208gb_quote() {
+        // Paper §6.2: 5 nm, shared Fock, 4 ranks/node → ≈208 GB/node.
+        let sys = PaperSystem::Nm50;
+        let b = exact_bytes(EngineKind::SharedFock, sys.n_bf(), 15, 4, 64);
+        let gb = b / 1e9;
+        assert!((gb - 208.0).abs() < 15.0, "{gb} GB");
+    }
+
+    #[test]
+    fn exact_reproduces_table2_mpi_column() {
+        // Table 2 MPI column (256 ranks): 0.5 nm ≈ 7 GB, 1.0 nm ≈ 48 GB,
+        // 2.0 nm ≈ 417 GB. Our 7-matrix accounting lands within ~10%.
+        for (sys, want_gb) in [
+            (PaperSystem::Nm05, 7.0),
+            (PaperSystem::Nm10, 48.0),
+            (PaperSystem::Nm20, 417.0),
+        ] {
+            let b = exact_bytes(EngineKind::MpiOnly, sys.n_bf(), 15, 256, 1);
+            let gb = b / 1e9;
+            assert!(
+                (gb - want_gb).abs() / want_gb < 0.15,
+                "{}: {gb} GB vs paper {want_gb}",
+                sys.label()
+            );
+        }
+    }
+
+    #[test]
+    fn memory_reduction_factors() {
+        // Headline: ~50x (private) and ~200x (shared) smaller than
+        // MPI-only. Compare 256 replicated ranks against 4 ranks of the
+        // hybrid engines with 64 threads (= 256 hw threads both ways).
+        for sys in [PaperSystem::Nm10, PaperSystem::Nm20] {
+            let mpi = exact_bytes(EngineKind::MpiOnly, sys.n_bf(), 15, 256, 1);
+            let prf = exact_bytes(EngineKind::PrivateFock, sys.n_bf(), 15, 4, 64);
+            let shf = exact_bytes(EngineKind::SharedFock, sys.n_bf(), 15, 4, 64);
+            let r_prf = mpi / prf;
+            let r_shf = mpi / shf;
+            assert!(r_prf > 5.0, "{}: private reduction {r_prf}", sys.label());
+            assert!(r_shf > 50.0, "{}: shared reduction {r_shf}", sys.label());
+            assert!(r_shf > r_prf);
+        }
+    }
+
+    #[test]
+    fn fig4_feasibility_gate() {
+        // 1.0 nm in MCDRAM: eq3a at 128 ranks fits in 16 GB, at 256 it
+        // does not — the paper's "restricted to 128 hardware threads".
+        let n = PaperSystem::Nm10.n_bf();
+        assert!(feasible(eq3a_mpi(n, 128), true));
+        assert!(!feasible(eq3a_mpi(n, 256), true));
+    }
+}

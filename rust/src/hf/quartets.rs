@@ -1,0 +1,125 @@
+//! Canonical shell-quartet enumeration — the exact loop structure of the
+//! paper's Algorithm 1 (and the building block the hybrid algorithms
+//! redistribute):
+//!
+//! ```text
+//! for i = 1, NShells
+//!   for j = 1, i
+//!     for k = 1, i
+//!       l_max = (k == i) ? j : k
+//!       for l = 1, l_max
+//! ```
+//!
+//! which enumerates every symmetry-unique quartet (ij|kl) with
+//! pair(kl) ≤ pair(ij) exactly once.
+
+/// One canonical quartet of shell indices.
+pub type Quartet = (usize, usize, usize, usize);
+
+/// Iterate all canonical quartets (no screening). Mostly for tests —
+/// the engines fuse screening into their own loops.
+pub fn for_each_canonical(n_shells: usize, mut f: impl FnMut(Quartet)) {
+    for i in 0..n_shells {
+        for j in 0..=i {
+            for k in 0..=i {
+                let lmax = if k == i { j } else { k };
+                for l in 0..=lmax {
+                    f((i, j, k, l));
+                }
+            }
+        }
+    }
+}
+
+/// Total number of canonical quartets for `n` shells:
+/// P(P+1)/2 with P = n(n+1)/2 pairs.
+pub fn n_canonical(n: usize) -> u64 {
+    let p = (n as u64) * (n as u64 + 1) / 2;
+    p * (p + 1) / 2
+}
+
+/// Enumerate the `kl` half-space of one `(i,j)` pair: all (k,l) with
+/// pair(kl) ≤ pair(ij) — the iteration space the shared-Fock algorithm
+/// hands to OpenMP.
+pub fn for_each_kl_of(i: usize, j: usize, mut f: impl FnMut(usize, usize)) {
+    for k in 0..=i {
+        let lmax = if k == i { j } else { k };
+        for l in 0..=lmax {
+            f(k, l);
+        }
+    }
+}
+
+/// Number of (k,l) iterations for a given (i,j): pair_index(i,j) + 1.
+pub fn n_kl_of(i: usize, j: usize) -> usize {
+    crate::integrals::schwarz::pair_index(i, j) + 1
+}
+
+/// Map a linear canonical pair ordinal back to (i, j), i ≥ j.
+/// Inverse of `pair_index`.
+pub fn pair_from_index(idx: usize) -> (usize, usize) {
+    // i is the largest integer with i(i+1)/2 <= idx.
+    let i = (((8.0 * idx as f64 + 1.0).sqrt() - 1.0) / 2.0).floor() as usize;
+    // Guard against floating-point edge effects.
+    let i = if (i + 1) * (i + 2) / 2 <= idx { i + 1 } else { i };
+    let j = idx - i * (i + 1) / 2;
+    (i, j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::integrals::schwarz::pair_index;
+    use std::collections::HashSet;
+
+    #[test]
+    fn enumeration_is_unique_and_complete() {
+        let n = 7;
+        let mut seen = HashSet::new();
+        let mut count = 0u64;
+        for_each_canonical(n, |(i, j, k, l)| {
+            count += 1;
+            // Canonical constraints.
+            assert!(j <= i && l <= k && k <= i);
+            let pij = pair_index(i, j);
+            let pkl = pair_index(k, l);
+            assert!(pkl <= pij, "({i}{j}|{k}{l})");
+            assert!(seen.insert((i, j, k, l)), "duplicate ({i}{j}|{k}{l})");
+        });
+        assert_eq!(count, n_canonical(n));
+        // Completeness: every canonical pair-of-pairs is present.
+        let pairs = n * (n + 1) / 2;
+        assert_eq!(count, (pairs * (pairs + 1) / 2) as u64);
+    }
+
+    #[test]
+    fn kl_subspace_matches_pair_ordinal() {
+        for (i, j) in [(0, 0), (3, 1), (5, 5), (7, 0)] {
+            let mut count = 0;
+            for_each_kl_of(i, j, |k, l| {
+                assert!(pair_index(k, l) <= pair_index(i, j));
+                count += 1;
+            });
+            assert_eq!(count, n_kl_of(i, j));
+            assert_eq!(count, pair_index(i, j) + 1);
+        }
+    }
+
+    #[test]
+    fn pair_from_index_roundtrip() {
+        for i in 0..40 {
+            for j in 0..=i {
+                assert_eq!(pair_from_index(pair_index(i, j)), (i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn quartet_counts_match_formula() {
+        assert_eq!(n_canonical(1), 1);
+        assert_eq!(n_canonical(2), 6); // 3 pairs -> 6 pair-pairs
+        let mut c = 0;
+        for_each_canonical(4, |_| c += 1);
+        assert_eq!(c, n_canonical(4));
+    }
+}

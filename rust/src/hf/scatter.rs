@@ -1,0 +1,294 @@
+//! The six-element Fock update of eqs. (2a)–(2f).
+//!
+//! Each symmetry-unique ERI value (μν|λσ) contributes to up to six
+//! *unordered* Fock elements: {μν}, {λσ} (Coulomb) and {μλ}, {μσ},
+//! {νλ}, {νσ} (exchange, weight −½ for closed-shell RHF with
+//! D = 2·C_occ·C_occᵀ).
+//!
+//! Implementation: generate the distinct index permutations of the
+//! quartet (up to 8), and emit
+//!   * the Coulomb update G(a,b) += g·D(c,d) only when a ≥ b, and
+//!   * the exchange update G(a,c) −= ½·g·D(b,d) only when a ≥ c.
+//! Because the permutation set always contains both orders of every
+//! off-diagonal target with equal values, this canonical filter yields
+//! each unordered element exactly once; mirroring the accumulated
+//! triangle afterwards reproduces the full symmetric G. This form is
+//! what lets the shared-Fock engine route updates: targets with an
+//! index in shell I go to the per-thread I column buffer, targets with
+//! an index in shell J to the J buffer, and the remaining pure-(kl)
+//! Coulomb element — owned by exactly one thread — is written straight
+//! into the shared Fock matrix (paper Algorithm 3, lines 25–27).
+
+use crate::basis::BasisSet;
+use crate::linalg::Matrix;
+
+/// Distinct permutations of (μ,ν,λ,σ) under the 8-fold ERI symmetry.
+/// Returns the count; `out` holds the permutations.
+#[inline]
+pub fn distinct_perms(
+    mu: usize,
+    nu: usize,
+    la: usize,
+    si: usize,
+    out: &mut [(usize, usize, usize, usize); 8],
+) -> usize {
+    let cands = [
+        (mu, nu, la, si),
+        (nu, mu, la, si),
+        (mu, nu, si, la),
+        (nu, mu, si, la),
+        (la, si, mu, nu),
+        (si, la, mu, nu),
+        (la, si, nu, mu),
+        (si, la, nu, mu),
+    ];
+    let mut n = 0;
+    'outer: for c in cands {
+        for prev in &out[..n] {
+            if *prev == c {
+                continue 'outer;
+            }
+        }
+        out[n] = c;
+        n += 1;
+    }
+    n
+}
+
+/// Emit the unordered-element updates for one ERI value g = (μν|λσ).
+/// `sink(a, b, v)` receives targets with a ≥ b; the caller accumulates
+/// into triangle storage and mirrors at the end.
+#[inline]
+pub fn scatter_value(
+    mu: usize,
+    nu: usize,
+    la: usize,
+    si: usize,
+    g: f64,
+    d: &Matrix,
+    sink: &mut impl FnMut(usize, usize, f64),
+) {
+    let mut perms = [(0usize, 0usize, 0usize, 0usize); 8];
+    let np = distinct_perms(mu, nu, la, si, &mut perms);
+    for &(a, b, c, dd) in &perms[..np] {
+        if a >= b {
+            sink(a, b, g * d.get(c, dd)); // Coulomb
+        }
+        if a >= c {
+            sink(a, c, -0.5 * g * d.get(b, dd)); // Exchange
+        }
+    }
+}
+
+/// Scatter a full shell-quartet ERI block. `block` is laid out as
+/// produced by `EriEngine::shell_quartet`. Handles the function-level
+/// canonical constraints when shells coincide, so each unique function
+/// quartet is scattered exactly once.
+pub fn scatter_block(
+    basis: &BasisSet,
+    (i, j, k, l): (usize, usize, usize, usize),
+    block: &[f64],
+    d: &Matrix,
+    sink: &mut impl FnMut(usize, usize, f64),
+) {
+    let (bi, bj, bk, bl) = (
+        basis.shells[i].bf_first,
+        basis.shells[j].bf_first,
+        basis.shells[k].bf_first,
+        basis.shells[l].bf_first,
+    );
+    let (ni, nj, nk, nl) = (
+        basis.shells[i].n_bf(),
+        basis.shells[j].n_bf(),
+        basis.shells[k].n_bf(),
+        basis.shells[l].n_bf(),
+    );
+    let same_ij = i == j;
+    let same_kl = k == l;
+    let same_pair = i == k && j == l;
+
+    for a in 0..ni {
+        let mu = bi + a;
+        let b_hi = if same_ij { a + 1 } else { nj };
+        for b in 0..b_hi {
+            let nu = bj + b;
+            let pmn = mu * (mu + 1) / 2 + nu;
+            for c in 0..nk {
+                let la_ = bk + c;
+                let d_hi = if same_kl { c + 1 } else { nl };
+                for dd in 0..d_hi {
+                    let si_ = bl + dd;
+                    if same_pair {
+                        let pls = la_ * (la_ + 1) / 2 + si_;
+                        if pls > pmn {
+                            continue;
+                        }
+                    }
+                    let g = block[((a * nj + b) * nk + c) * nl + dd];
+                    if g == 0.0 {
+                        continue;
+                    }
+                    scatter_value(mu, nu, la_, si_, g, d, sink);
+                }
+            }
+        }
+    }
+}
+
+/// Mirror the accumulated lower triangle into a full symmetric matrix.
+pub fn mirror(g: &mut Matrix) {
+    for i in 0..g.rows {
+        for j in 0..i {
+            let v = g.get(i, j);
+            g.set(j, i, v);
+        }
+    }
+}
+
+/// Fold a matrix whose unordered contributions may have landed in either
+/// triangle (the shared-Fock column buffers write the (b, a) order) into
+/// the full symmetric result: F_ij = F_ji = G_ij + G_ji for i ≠ j.
+/// For engines that accumulate canonically (upper triangle zero) this
+/// equals [`mirror`].
+pub fn fold_symmetric(g: &mut Matrix) {
+    for i in 0..g.rows {
+        for j in 0..i {
+            let v = g.get(i, j) + g.get(j, i);
+            g.set(i, j, v);
+            g.set(j, i, v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basis::{BasisName, BasisSet};
+    use crate::chem::molecules;
+    use crate::hf::quartets::for_each_canonical;
+    use crate::integrals::EriEngine;
+    use crate::util::prng::Rng;
+
+    /// Brute-force oracle: G_ab = Σ_cd D_cd [(ab|cd) − ½(ac|bd)] with
+    /// every ERI evaluated directly (no symmetry).
+    fn g_oracle(basis: &BasisSet, d: &Matrix) -> Matrix {
+        let n = basis.n_bf;
+        let ns = basis.n_shells();
+        let mut eng = EriEngine::new();
+        // Dense ERI tensor.
+        let mut eri = vec![0.0; n * n * n * n];
+        let mut buf = vec![0.0; 6 * 6 * 6 * 6];
+        for i in 0..ns {
+            for j in 0..ns {
+                for k in 0..ns {
+                    for l in 0..ns {
+                        eng.shell_quartet(basis, i, j, k, l, &mut buf);
+                        let (ni, nj, nk, nl) = (
+                            basis.shells[i].n_bf(),
+                            basis.shells[j].n_bf(),
+                            basis.shells[k].n_bf(),
+                            basis.shells[l].n_bf(),
+                        );
+                        let (bi, bj, bk, bl) = (
+                            basis.shells[i].bf_first,
+                            basis.shells[j].bf_first,
+                            basis.shells[k].bf_first,
+                            basis.shells[l].bf_first,
+                        );
+                        for a in 0..ni {
+                            for b in 0..nj {
+                                for c in 0..nk {
+                                    for dd in 0..nl {
+                                        let v = buf[((a * nj + b) * nk + c) * nl + dd];
+                                        let (p, q, r, s) = (bi + a, bj + b, bk + c, bl + dd);
+                                        eri[((p * n + q) * n + r) * n + s] = v;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let mut g = Matrix::zeros(n, n);
+        for a in 0..n {
+            for b in 0..n {
+                let mut v = 0.0;
+                for c in 0..n {
+                    for dd in 0..n {
+                        v += d.get(c, dd)
+                            * (eri[((a * n + b) * n + c) * n + dd]
+                                - 0.5 * eri[((a * n + c) * n + b) * n + dd]);
+                    }
+                }
+                g.set(a, b, v);
+            }
+        }
+        g
+    }
+
+    fn random_symmetric(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut d = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let x = rng.range(-0.5, 0.5);
+                d.set(i, j, x);
+                d.set(j, i, x);
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn scatter_matches_bruteforce_oracle() {
+        for (mol, seed) in [(molecules::h2(), 1u64), (molecules::water(), 2u64)] {
+            let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+            let d = random_symmetric(basis.n_bf, seed);
+            let want = g_oracle(&basis, &d);
+
+            let mut eng = EriEngine::new();
+            let mut block = vec![0.0; 6 * 6 * 6 * 6];
+            let mut g = Matrix::zeros(basis.n_bf, basis.n_bf);
+            for_each_canonical(basis.n_shells(), |(i, j, k, l)| {
+                eng.shell_quartet(&basis, i, j, k, l, &mut block);
+                scatter_block(&basis, (i, j, k, l), &block, &d, &mut |a, b, v| {
+                    g.add(a, b, v)
+                });
+            });
+            mirror(&mut g);
+            let diff = g.max_abs_diff(&want);
+            assert!(diff < 1e-10, "{}: max diff {diff}", mol.name);
+        }
+    }
+
+    #[test]
+    fn distinct_perm_counts() {
+        let mut buf = [(0, 0, 0, 0); 8];
+        // All distinct indices: 8 perms.
+        assert_eq!(distinct_perms(3, 2, 1, 0, &mut buf), 8);
+        // (aa|aa): 1.
+        assert_eq!(distinct_perms(0, 0, 0, 0, &mut buf), 1);
+        // (ab|ab): 4.
+        assert_eq!(distinct_perms(1, 0, 1, 0, &mut buf), 4);
+        // (aa|bb): bra/ket swaps of identical pairs collapse — 2.
+        assert_eq!(distinct_perms(0, 0, 1, 1, &mut buf), 2);
+        // (ab|cc): 4.
+        assert_eq!(distinct_perms(1, 0, 2, 2, &mut buf), 4);
+    }
+
+    #[test]
+    fn scatter_targets_are_canonical() {
+        let mol = molecules::water();
+        let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+        let d = random_symmetric(basis.n_bf, 3);
+        let mut eng = EriEngine::new();
+        let mut block = vec![0.0; 6 * 6 * 6 * 6];
+        for_each_canonical(basis.n_shells(), |(i, j, k, l)| {
+            eng.shell_quartet(&basis, i, j, k, l, &mut block);
+            scatter_block(&basis, (i, j, k, l), &block, &d, &mut |a, b, _v| {
+                assert!(a >= b, "non-canonical target ({a},{b})");
+            });
+        });
+    }
+}

@@ -1,0 +1,106 @@
+//! Serial reference Fock builder — the correctness oracle for the
+//! parallel engines and the single-thread baseline for calibration.
+
+use crate::basis::BasisSet;
+use crate::integrals::{EriEngine, SchwarzScreen};
+use crate::linalg::Matrix;
+
+use super::quartets::for_each_canonical;
+use super::scatter::{mirror, scatter_block};
+use super::{BuildStats, FockBuilder};
+
+/// Single-threaded direct-SCF Fock builder.
+#[derive(Default)]
+pub struct SerialFock {
+    eng: EriEngine,
+    pub stats: BuildStats,
+}
+
+impl SerialFock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl FockBuilder for SerialFock {
+    fn build_2e(&mut self, basis: &BasisSet, screen: &SchwarzScreen, d: &Matrix) -> Matrix {
+        let t0 = std::time::Instant::now();
+        let n = basis.n_bf;
+        let mut g = Matrix::zeros(n, n);
+        let mut block = vec![0.0; 6 * 6 * 6 * 6];
+        let mut computed = 0u64;
+        let mut screened = 0u64;
+        for_each_canonical(basis.n_shells(), |(i, j, k, l)| {
+            if screen.screened(i, j, k, l) {
+                screened += 1;
+                return;
+            }
+            computed += 1;
+            self.eng.shell_quartet(basis, i, j, k, l, &mut block);
+            scatter_block(basis, (i, j, k, l), &block, d, &mut |a, b, v| g.add(a, b, v));
+        });
+        mirror(&mut g);
+        self.stats = BuildStats {
+            quartets_computed: computed,
+            quartets_screened: screened,
+            seconds: t0.elapsed().as_secs_f64(),
+        };
+        g
+    }
+
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basis::BasisName;
+    use crate::chem::molecules;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn g_is_symmetric() {
+        let mol = molecules::water();
+        let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+        let screen = SchwarzScreen::build(&basis, SchwarzScreen::DEFAULT_TAU);
+        let mut rng = Rng::new(7);
+        let n = basis.n_bf;
+        let mut d = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let x = rng.range(-0.5, 0.5);
+                d.set(i, j, x);
+                d.set(j, i, x);
+            }
+        }
+        let g = SerialFock::new().build_2e(&basis, &screen, &d);
+        assert!(g.is_symmetric(1e-12));
+    }
+
+    #[test]
+    fn screening_changes_little() {
+        // With a loose tau the Fock matrix must match the unscreened one
+        // to ~tau-level accuracy.
+        let mol = molecules::methane();
+        let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+        let n = basis.n_bf;
+        let mut d = Matrix::identity(n);
+        d.scale(0.3);
+        let exact_screen = SchwarzScreen::build(&basis, 0.0);
+        let loose_screen = SchwarzScreen::build(&basis, 1e-8);
+        let mut e1 = SerialFock::new();
+        let g_exact = e1.build_2e(&basis, &exact_screen, &d);
+        let computed_exact = e1.stats.quartets_computed;
+        let mut e2 = SerialFock::new();
+        let g_screened = e2.build_2e(&basis, &loose_screen, &d);
+        assert!(g_exact.max_abs_diff(&g_screened) < 1e-7);
+        // CH4 is compact; screening barely triggers at 1e-8. Just check
+        // accounting is consistent.
+        assert_eq!(
+            e2.stats.quartets_computed + e2.stats.quartets_screened,
+            computed_exact + e1.stats.quartets_screened
+        );
+    }
+}

@@ -1,0 +1,288 @@
+//! Algorithm 3 — hybrid MPI/OpenMP with a *shared* Fock matrix (the
+//! paper's novel contribution).
+//!
+//! Loop structure per the paper:
+//! * MPI level: the master thread claims combined `ij` pair ordinals
+//!   from the DLB counter; the whole `ij` task is Schwarz-prescreened
+//!   (`schwartz(i,j,i,j)` against the global maximum) so the sparsest
+//!   top-loop iterations are skipped outright;
+//! * OpenMP level: threads split the combined `kl ≤ ij` loop with
+//!   `schedule(dynamic,1)` semantics;
+//! * race elimination: updates touching shell `i` go to the thread's
+//!   private `F_I` column buffer, updates touching shell `j` to `F_J`
+//!   (both `[N_BF × shellWidth] × nthreads`, cache-line padded —
+//!   Figure 1), and the remaining pure-`kl` Coulomb element is written
+//!   directly into the shared Fock matrix — race-free because each
+//!   thread owns its `kl` pairs exclusively;
+//! * `F_J` is flushed (chunked row-wise tree reduction + barrier) after
+//!   every `kl` loop; `F_I` lazily, only when `i` changes (the paper's
+//!   key frequency optimization).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Barrier;
+
+use crate::basis::BasisSet;
+use crate::integrals::{EriEngine, SchwarzScreen};
+use crate::linalg::Matrix;
+
+use super::dlb::DlbCounter;
+use super::quartets::pair_from_index;
+use super::scatter::{fold_symmetric, scatter_block};
+use super::threadpool::{parallel_region, ColumnBuffers, SharedMatrix};
+use super::{BuildStats, FockBuilder};
+
+/// Shared-Fock hybrid engine: `n_ranks` virtual ranks × `n_threads`
+/// threads per rank sharing one Fock accumulator.
+pub struct SharedFock {
+    pub n_ranks: usize,
+    pub n_threads: usize,
+    pub stats: BuildStats,
+    /// Number of F_I flushes performed (per build; observability for the
+    /// lazy-flush optimization).
+    pub fi_flushes: u64,
+}
+
+impl SharedFock {
+    pub fn new(n_ranks: usize, n_threads: usize) -> Self {
+        assert!(n_ranks > 0 && n_threads > 0);
+        SharedFock { n_ranks, n_threads, stats: BuildStats::default(), fi_flushes: 0 }
+    }
+}
+
+/// Row-chunk bounds for thread `tid` of `nt` over `rows`.
+#[inline]
+fn chunk_of(rows: usize, nt: usize, tid: usize) -> (usize, usize) {
+    let chunk = rows.div_ceil(nt);
+    ((tid * chunk).min(rows), ((tid + 1) * chunk).min(rows))
+}
+
+impl FockBuilder for SharedFock {
+    fn build_2e(&mut self, basis: &BasisSet, screen: &SchwarzScreen, d: &Matrix) -> Matrix {
+        let t0 = std::time::Instant::now();
+        let n = basis.n_bf;
+        let nsh = basis.n_shells();
+        let n_pairs = nsh * (nsh + 1) / 2;
+        let dlb = DlbCounter::new();
+        let width = basis.max_shell_bf;
+
+        let per_rank: Vec<(Matrix, u64, u64, u64)> = parallel_region(self.n_ranks, |_rank| {
+            let nt = self.n_threads;
+            let shared = SharedMatrix::zeros(n, n);
+            // mxsize = ubound(Fock) * shellSize (Algorithm 3 line 1).
+            let f_i = ColumnBuffers::new(n, width, nt);
+            let f_j = ColumnBuffers::new(n, width, nt);
+            let ij_cur = AtomicUsize::new(0);
+            let kl_counter = AtomicUsize::new(0);
+            let i_old = AtomicUsize::new(usize::MAX);
+            let flush_count = AtomicUsize::new(0);
+            let barrier = Barrier::new(nt);
+
+            let counts: Vec<(u64, u64)> = parallel_region(nt, |tid| {
+                let mut eng = EriEngine::new();
+                let mut block = vec![0.0; 6 * 6 * 6 * 6];
+                let mut computed = 0u64;
+                let mut screened = 0u64;
+                loop {
+                    if tid == 0 {
+                        ij_cur.store(dlb.next(), Ordering::SeqCst);
+                        kl_counter.store(0, Ordering::SeqCst);
+                    }
+                    barrier.wait();
+                    let ij = ij_cur.load(Ordering::SeqCst);
+                    if ij >= n_pairs {
+                        // Final F_I flush (Algorithm 3 line 36).
+                        let iold = i_old.load(Ordering::SeqCst);
+                        if iold != usize::MAX {
+                            let (r0, r1) = chunk_of(n, nt, tid);
+                            let col0 = basis.shells[iold].bf_first;
+                            unsafe { f_i.flush_rows(&shared, col0, r0, r1) };
+                        }
+                        barrier.wait();
+                        break;
+                    }
+                    let (i, j) = pair_from_index(ij);
+
+                    // I/J prescreening (Algorithm 3 line 12): the entire
+                    // ij task dies if Q_ij · Q_max ≤ τ. The barrier before
+                    // `continue` is essential: without it the master can
+                    // loop around and overwrite `ij_cur` before a slow
+                    // thread has read the current value, desynchronizing
+                    // the barrier sequence (observed as both corrupted
+                    // Fock blocks and deadlock; the paper's Algorithm 3
+                    // pseudocode has the same hazard between its lines
+                    // 8 and 11 — a real OpenMP port needs the barrier
+                    // too).
+                    if screen.pair_screened(i, j) {
+                        barrier.wait();
+                        continue;
+                    }
+
+                    // Lazy F_I flush on i change (lines 14–17). NB the
+                    // buffer holds contributions of the *previous* i, so
+                    // the flush targets i_old's column block (the paper's
+                    // listing writes "Fock(:,i)" but line 33 stores i_old
+                    // for exactly this purpose).
+                    let iold = i_old.load(Ordering::SeqCst);
+                    if iold != i {
+                        if iold != usize::MAX {
+                            let (r0, r1) = chunk_of(n, nt, tid);
+                            let col0 = basis.shells[iold].bf_first;
+                            unsafe { f_i.flush_rows(&shared, col0, r0, r1) };
+                        }
+                        barrier.wait();
+                        if tid == 0 {
+                            i_old.store(i, Ordering::SeqCst);
+                            flush_count.fetch_add(1, Ordering::Relaxed);
+                        }
+                        barrier.wait();
+                    }
+
+                    let i_range = basis.shell_bf_range(i);
+                    let j_range = basis.shell_bf_range(j);
+                    let (i0, j0) = (i_range.start, j_range.start);
+
+                    // !$omp do schedule(dynamic,1) over kl ordinals.
+                    let n_kl = ij + 1;
+                    loop {
+                        let kl = kl_counter.fetch_add(1, Ordering::Relaxed);
+                        if kl >= n_kl {
+                            break;
+                        }
+                        let (k, l) = pair_from_index(kl);
+                        if screen.screened(i, j, k, l) {
+                            screened += 1;
+                            continue;
+                        }
+                        computed += 1;
+                        eng.shell_quartet(basis, i, j, k, l, &mut block);
+                        scatter_block(basis, (i, j, k, l), &block, d, &mut |a, b, v| {
+                            // Route by shell membership (lines 25–27).
+                            if i_range.contains(&a) {
+                                unsafe { f_i.add(tid, b, a - i0, v) };
+                            } else if i_range.contains(&b) {
+                                unsafe { f_i.add(tid, a, b - i0, v) };
+                            } else if j_range.contains(&a) {
+                                unsafe { f_j.add(tid, b, a - j0, v) };
+                            } else if j_range.contains(&b) {
+                                unsafe { f_j.add(tid, a, b - j0, v) };
+                            } else {
+                                // Pure-kl Coulomb element: this thread
+                                // owns the kl pair — direct shared write.
+                                unsafe { shared.add(a, b, v) };
+                            }
+                        });
+                    }
+                    // Implicit barrier at !$omp end do, then F_J flush
+                    // (line 31) — every kl loop.
+                    barrier.wait();
+                    let (r0, r1) = chunk_of(n, nt, tid);
+                    unsafe { f_j.flush_rows(&shared, j0, r0, r1) };
+                    barrier.wait();
+                }
+                (computed, screened)
+            });
+
+            let computed: u64 = counts.iter().map(|c| c.0).sum();
+            let screened: u64 = counts.iter().map(|c| c.1).sum();
+            (
+                shared.into_matrix(),
+                computed,
+                screened,
+                flush_count.load(Ordering::SeqCst) as u64,
+            )
+        });
+
+        // ddi_gsumf over ranks.
+        let mut total = Matrix::zeros(n, n);
+        let mut computed = 0;
+        let mut screened = 0;
+        let mut flushes = 0;
+        for (g, c, s, fl) in per_rank {
+            total.add_assign(&g);
+            computed += c;
+            screened += s;
+            flushes += fl;
+        }
+        fold_symmetric(&mut total);
+        self.fi_flushes = flushes;
+        self.stats = BuildStats {
+            quartets_computed: computed,
+            quartets_screened: screened,
+            seconds: t0.elapsed().as_secs_f64(),
+        };
+        total
+    }
+
+    fn name(&self) -> &'static str {
+        "shared-fock"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basis::BasisName;
+    use crate::chem::molecules;
+    use crate::hf::serial::SerialFock;
+    use crate::util::prng::Rng;
+
+    fn random_density(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut d = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let x = rng.range(-0.4, 0.4);
+                d.set(i, j, x);
+                d.set(j, i, x);
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn matches_serial_reference() {
+        let mol = molecules::water();
+        let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+        let screen = SchwarzScreen::build(&basis, SchwarzScreen::DEFAULT_TAU);
+        let d = random_density(basis.n_bf, 31);
+        let want = SerialFock::new().build_2e(&basis, &screen, &d);
+        for (ranks, threads) in [(1, 1), (1, 2), (1, 5), (2, 3)] {
+            let mut eng = SharedFock::new(ranks, threads);
+            let got = eng.build_2e(&basis, &screen, &d);
+            assert!(
+                got.max_abs_diff(&want) < 1e-11,
+                "r={ranks} t={threads}: diff {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn matches_serial_with_d_shells() {
+        // The routing logic must also hold for wide (d / sp) shells.
+        let mol = crate::chem::graphene::monolayer(2, "c2");
+        let basis = BasisSet::assemble(&mol, BasisName::SixThirtyOneGd).unwrap();
+        let screen = SchwarzScreen::build(&basis, SchwarzScreen::DEFAULT_TAU);
+        let d = random_density(basis.n_bf, 37);
+        let want = SerialFock::new().build_2e(&basis, &screen, &d);
+        let mut eng = SharedFock::new(1, 4);
+        let got = eng.build_2e(&basis, &screen, &d);
+        assert!(got.max_abs_diff(&want) < 1e-11, "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn lazy_flush_fires_less_than_ij_count() {
+        let mol = molecules::benzene();
+        let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+        let screen = SchwarzScreen::build(&basis, SchwarzScreen::DEFAULT_TAU);
+        let d = random_density(basis.n_bf, 41);
+        let mut eng = SharedFock::new(1, 2);
+        let _ = eng.build_2e(&basis, &screen, &d);
+        let nsh = basis.n_shells();
+        let n_pairs = (nsh * (nsh + 1) / 2) as u64;
+        // One flush per distinct i (≤ nsh), far fewer than ij tasks.
+        assert!(eng.fi_flushes <= nsh as u64);
+        assert!(eng.fi_flushes < n_pairs);
+        assert!(eng.fi_flushes > 0);
+    }
+}

@@ -1,0 +1,227 @@
+//! Thread-execution substrate for the hybrid engines: scoped worker
+//! groups (the OpenMP parallel-region equivalent) and a shared-write
+//! matrix with the unsafe-but-proven-disjoint access pattern the
+//! shared-Fock algorithm needs.
+
+use std::cell::UnsafeCell;
+
+use crate::linalg::Matrix;
+
+/// Run `f(tid)` on `n` scoped threads and wait for all of them — the
+/// `!$omp parallel` region equivalent. Results are collected in tid
+/// order.
+pub fn parallel_region<T: Send>(n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    assert!(n > 0);
+    std::thread::scope(|s| {
+        let fref = &f;
+        let handles: Vec<_> = (0..n).map(|tid| s.spawn(move || fref(tid))).collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    })
+}
+
+/// A square matrix that multiple threads may mutate concurrently
+/// *provided the algorithm guarantees element-disjoint writes between
+/// synchronization points* — the OpenMP shared-array memory model the
+/// paper's Algorithm 3 is written against.
+///
+/// # Safety contract
+/// Callers must ensure no two threads write the same element between
+/// barriers (the shared-Fock engine guarantees this by `kl`-pair
+/// ownership; see `shared_fock.rs`). Reads of elements written by other
+/// threads must happen after a barrier.
+pub struct SharedMatrix {
+    n_rows: usize,
+    n_cols: usize,
+    data: UnsafeCell<Vec<f64>>,
+}
+
+unsafe impl Sync for SharedMatrix {}
+
+impl SharedMatrix {
+    pub fn zeros(n_rows: usize, n_cols: usize) -> SharedMatrix {
+        SharedMatrix { n_rows, n_cols, data: UnsafeCell::new(vec![0.0; n_rows * n_cols]) }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Add to an element. Safety: see the type-level contract.
+    ///
+    /// # Safety
+    /// No concurrent writer to the same element; no concurrent reader.
+    #[inline]
+    pub unsafe fn add(&self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.n_rows && c < self.n_cols);
+        let data = &mut *self.data.get();
+        *data.get_unchecked_mut(r * self.n_cols + c) += v;
+    }
+
+    /// Read an element. Safety: must be ordered after writers by a
+    /// barrier.
+    ///
+    /// # Safety
+    /// No concurrent writer to the same element.
+    #[inline]
+    pub unsafe fn get(&self, r: usize, c: usize) -> f64 {
+        let data = &*self.data.get();
+        *data.get_unchecked(r * self.n_cols + c)
+    }
+
+    /// Consume into a plain `Matrix` (single-threaded).
+    pub fn into_matrix(self) -> Matrix {
+        Matrix { rows: self.n_rows, cols: self.n_cols, data: self.data.into_inner() }
+    }
+}
+
+/// Per-thread column buffers with cache-line padding — the paper's
+/// Figure 1 data structure. Layout: `buf[thread][padded_row_block]`
+/// where each thread's block holds `rows × width` values padded to a
+/// 64-byte boundary so flush-phase chunking never false-shares.
+pub struct ColumnBuffers {
+    /// rows = N_BF (the "other" index), width = shell width.
+    pub rows: usize,
+    pub width: usize,
+    pub n_threads: usize,
+    stride: usize,
+    data: UnsafeCell<Vec<f64>>,
+}
+
+unsafe impl Sync for ColumnBuffers {}
+
+impl ColumnBuffers {
+    /// Cache line in f64 words.
+    const PAD: usize = 8;
+
+    pub fn new(rows: usize, width: usize, n_threads: usize) -> ColumnBuffers {
+        let raw = rows * width;
+        let stride = raw.div_ceil(Self::PAD) * Self::PAD;
+        ColumnBuffers {
+            rows,
+            width,
+            n_threads,
+            stride,
+            data: UnsafeCell::new(vec![0.0; stride * n_threads]),
+        }
+    }
+
+    #[inline]
+    fn off(&self, thread: usize, row: usize, col: usize) -> usize {
+        debug_assert!(thread < self.n_threads && row < self.rows && col < self.width);
+        thread * self.stride + row * self.width + col
+    }
+
+    /// Accumulate into this thread's private column (Figure 1 A).
+    ///
+    /// # Safety
+    /// `thread` must be the caller's own id (columns are thread-private
+    /// between barriers).
+    #[inline]
+    pub unsafe fn add(&self, thread: usize, row: usize, col: usize, v: f64) {
+        let data = &mut *self.data.get();
+        let off = self.off(thread, row, col);
+        *data.get_unchecked_mut(off) += v;
+    }
+
+    /// Flush rows `[r0, r1)` of every thread column into the shared Fock
+    /// matrix at column block `col0..col0+width`, then zero them
+    /// (Figure 1 B: row-wise chunked tree reduction). The caller must
+    /// partition `[0, rows)` disjointly across threads and call this
+    /// after a barrier.
+    ///
+    /// # Safety
+    /// Row ranges must be disjoint across concurrent callers, and all
+    /// accumulate-phase writers must be barrier-ordered before.
+    pub unsafe fn flush_rows(&self, shared: &SharedMatrix, col0: usize, r0: usize, r1: usize) {
+        let data = &mut *self.data.get();
+        for row in r0..r1 {
+            for col in 0..self.width {
+                // Pairwise (tree) reduction over thread columns.
+                let mut acc = 0.0;
+                for t in 0..self.n_threads {
+                    let off = t * self.stride + row * self.width + col;
+                    acc += *data.get_unchecked(off);
+                    *data.get_unchecked_mut(off) = 0.0;
+                }
+                if acc != 0.0 {
+                    shared.add(row, col0 + col, acc);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Barrier;
+
+    #[test]
+    fn parallel_region_collects_in_tid_order() {
+        let out = parallel_region(6, |tid| tid * 10);
+        assert_eq!(out, vec![0, 10, 20, 30, 40, 50]);
+    }
+
+    #[test]
+    fn shared_matrix_disjoint_writes() {
+        let m = SharedMatrix::zeros(4, 4);
+        parallel_region(4, |tid| {
+            // Each thread writes its own row — disjoint.
+            for c in 0..4 {
+                unsafe { m.add(tid, c, (tid * 4 + c) as f64) };
+            }
+        });
+        let mat = m.into_matrix();
+        for r in 0..4 {
+            for c in 0..4 {
+                assert_eq!(mat.get(r, c), (r * 4 + c) as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn column_buffers_accumulate_and_flush() {
+        let rows = 10;
+        let width = 3;
+        let nt = 4;
+        let buf = ColumnBuffers::new(rows, width, nt);
+        let shared = SharedMatrix::zeros(rows, 16);
+        let barrier = Barrier::new(nt);
+        parallel_region(nt, |tid| {
+            // Accumulate: every thread adds 1.0 to every slot of its column.
+            for r in 0..rows {
+                for c in 0..width {
+                    unsafe { buf.add(tid, r, c, 1.0) };
+                }
+            }
+            barrier.wait();
+            // Flush: thread t owns a row chunk.
+            let chunk = rows.div_ceil(nt);
+            let r0 = (tid * chunk).min(rows);
+            let r1 = ((tid + 1) * chunk).min(rows);
+            unsafe { buf.flush_rows(&shared, 5, r0, r1) };
+        });
+        let m = shared.into_matrix();
+        for r in 0..rows {
+            for c in 0..width {
+                assert_eq!(m.get(r, 5 + c), nt as f64, "r={r} c={c}");
+            }
+            assert_eq!(m.get(r, 0), 0.0);
+        }
+    }
+
+    #[test]
+    fn flush_zeroes_buffers() {
+        let buf = ColumnBuffers::new(4, 2, 2);
+        let shared = SharedMatrix::zeros(4, 4);
+        unsafe {
+            buf.add(0, 1, 1, 5.0);
+            buf.flush_rows(&shared, 0, 0, 4);
+            // Second flush adds nothing.
+            buf.flush_rows(&shared, 0, 0, 4);
+        }
+        let m = shared.into_matrix();
+        assert_eq!(m.get(1, 1), 5.0);
+    }
+}

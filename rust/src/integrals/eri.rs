@@ -1,0 +1,574 @@
+//! Electron-repulsion integrals (ab|cd) over contracted shell quartets —
+//! the system hot spot the paper parallelizes.
+//!
+//! McMurchie–Davidson: per primitive quartet,
+//!   (ab|cd) = 2π^{5/2}/(pq√(p+q)) Σ_{tuv} E^{ab}_{tuv}
+//!             Σ_{τνφ} (−1)^{τ+ν+φ} E^{cd}_{τνφ} R_{t+τ,u+ν,v+φ}(α, P−Q)
+//! with α = pq/(p+q).
+//!
+//! §Perf structure (see EXPERIMENTS.md for the iteration log):
+//! * E tables are built per **shell pair**, not per segment quartet:
+//!   the combined-SP shells of 6-31G(d) expand one shell quartet into up
+//!   to 16 segment quartets which all share the same primitive-pair
+//!   Hermite tables (they differ only in contraction coefficients).
+//! * The **bra tables are cached** across calls: the canonical loops fix
+//!   (i,j) while sweeping thousands of (k,l), so the bra rebuild
+//!   amortizes to nothing.
+//! * Primitive pairs are screened by |c_max·c_max·exp(−μR²)|.
+//! * l_total = 0 primitive quartets skip the R recursion entirely.
+//! * The component contraction is factored through the ket-Hermite
+//!   intermediate H[q][tuv], removing the bra-component redundancy.
+//! * The Hermite-Coulomb recursion runs in caller-owned scratch with no
+//!   per-quartet zeroing or copies.
+
+use crate::basis::shell::{cart_powers, component_scale, Segment};
+use crate::basis::BasisSet;
+
+use super::hermite::{build_e, ETable};
+use super::rtensor::{build_r_into, RScratch};
+
+/// Primitive pairs whose |c_a·c_b|·exp(−μR²) (max over segments) falls
+/// below this are dropped: their largest possible integral contribution
+/// is orders of magnitude below the SCF convergence threshold. Heavily
+/// contracted shells (6-31G carbon S6: 36 primitive pairs) shrink
+/// several-fold.
+const PAIR_CUTOFF: f64 = 1e-16;
+
+/// Hermite data for one surviving primitive pair of a shell pair.
+struct PrimPair {
+    ex: ETable,
+    ey: ETable,
+    ez: ETable,
+    /// E_0^{00}(x)·E_0^{00}(y)·E_0^{00}(z) — the s-s Hermite prefactor
+    /// (the l_total = 0 fast path).
+    e000: f64,
+    /// p = a + b.
+    p: f64,
+    /// Gaussian product center.
+    center: [f64; 3],
+    /// Primitive indices into the shells' exponent lists (to look up
+    /// segment-specific contraction coefficients).
+    ia: u32,
+    ib: u32,
+}
+
+/// Shell-pair Hermite tables shared by every segment combination.
+#[derive(Default)]
+struct PairTables {
+    prims: Vec<PrimPair>,
+}
+
+/// Largest |contraction coefficient| per primitive across a shell's
+/// segments (the screening bound valid for every segment).
+fn max_coefs(basis: &BasisSet, shell: usize, out: &mut Vec<f64>) {
+    let n = basis.shells[shell].exps.len();
+    out.clear();
+    out.resize(n, 0.0);
+    for seg in basis.shell_segments(shell) {
+        for (i, c) in seg.coefs.iter().enumerate() {
+            out[i] = out[i].max(c.abs());
+        }
+    }
+}
+
+fn build_pair_tables(
+    basis: &BasisSet,
+    sh_a: usize,
+    sh_b: usize,
+    cmax_a: &[f64],
+    cmax_b: &[f64],
+    out: &mut PairTables,
+) {
+    out.prims.clear();
+    let a_sh = &basis.shells[sh_a];
+    let b_sh = &basis.shells[sh_b];
+    let (la, lb) = (a_sh.kind.max_l(), b_sh.kind.max_l());
+    let (ca, cb) = (a_sh.center, b_sh.center);
+    let r2 = crate::chem::geometry::dist2(ca, cb);
+    for (ia, &a) in a_sh.exps.iter().enumerate() {
+        for (ib, &b) in b_sh.exps.iter().enumerate() {
+            let p = a + b;
+            let mu = a * b / p;
+            let kab = (-mu * r2).exp();
+            if cmax_a[ia] * cmax_b[ib] * kab < PAIR_CUTOFF {
+                continue;
+            }
+            let ex = build_e(a, b, ca[0], cb[0], la, lb);
+            let ey = build_e(a, b, ca[1], cb[1], la, lb);
+            let ez = build_e(a, b, ca[2], cb[2], la, lb);
+            let e000 = ex.get(0, 0, 0) * ey.get(0, 0, 0) * ez.get(0, 0, 0);
+            out.prims.push(PrimPair {
+                ex,
+                ey,
+                ez,
+                e000,
+                p,
+                center: [
+                    (a * ca[0] + b * cb[0]) / p,
+                    (a * ca[1] + b * cb[1]) / p,
+                    (a * ca[2] + b * cb[2]) / p,
+                ],
+                ia: ia as u32,
+                ib: ib as u32,
+            });
+        }
+    }
+}
+
+/// Cache key for the bra tables: shell ids plus the exponent-vector
+/// addresses and centers — unique among simultaneously-live bases (the
+/// centers guard against allocator address reuse across bases).
+#[derive(PartialEq, Clone, Copy)]
+struct BraKey {
+    i: usize,
+    j: usize,
+    exps_i: *const f64,
+    exps_j: *const f64,
+    center_i: [f64; 3],
+    center_j: [f64; 3],
+}
+
+/// Reusable ERI engine. One per thread; `shell_quartet` is the API the
+/// Fock-build engines call. No heap allocation on the hot path after
+/// warmup.
+pub struct EriEngine {
+    bra: PairTables,
+    ket: PairTables,
+    bra_key: Option<BraKey>,
+    cmax_a: Vec<f64>,
+    cmax_b: Vec<f64>,
+    /// Scratch for a segment-quartet block (max 6^4 for dddd).
+    seg_buf: Vec<f64>,
+    /// Reusable Hermite-Coulomb recursion scratch.
+    rscratch: RScratch,
+    /// Ket-Hermite intermediate H[q][tuv] (see `segment_quartet`).
+    hket: Vec<f64>,
+    /// Count of primitive quartets processed (profiling/calibration).
+    pub prim_quartets: u64,
+}
+
+impl Default for EriEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn bra_key(basis: &BasisSet, i: usize, j: usize) -> BraKey {
+    BraKey {
+        i,
+        j,
+        exps_i: basis.shells[i].exps.as_ptr(),
+        exps_j: basis.shells[j].exps.as_ptr(),
+        center_i: basis.shells[i].center,
+        center_j: basis.shells[j].center,
+    }
+}
+
+impl EriEngine {
+    pub fn new() -> EriEngine {
+        EriEngine {
+            bra: PairTables::default(),
+            ket: PairTables::default(),
+            bra_key: None,
+            cmax_a: Vec::new(),
+            cmax_b: Vec::new(),
+            seg_buf: vec![0.0; 6 * 6 * 6 * 6],
+            rscratch: RScratch::new(),
+            hket: vec![0.0; 36 * 125],
+            prim_quartets: 0,
+        }
+    }
+
+    /// Compute the full ERI block of a shell quartet (i,j,k,l).
+    /// `out` is overwritten, laid out row-major over the shells' local
+    /// function indices: out[((a·nb + b)·nc + c)·nd + d].
+    pub fn shell_quartet(
+        &mut self,
+        basis: &BasisSet,
+        i: usize,
+        j: usize,
+        k: usize,
+        l: usize,
+        out: &mut [f64],
+    ) {
+        let (ni, nj, nk, nl) = (
+            basis.shells[i].n_bf(),
+            basis.shells[j].n_bf(),
+            basis.shells[k].n_bf(),
+            basis.shells[l].n_bf(),
+        );
+        debug_assert!(out.len() >= ni * nj * nk * nl);
+        out[..ni * nj * nk * nl].fill(0.0);
+        let bfi = basis.shells[i].bf_first;
+        let bfj = basis.shells[j].bf_first;
+        let bfk = basis.shells[k].bf_first;
+        let bfl = basis.shells[l].bf_first;
+
+        // Bra tables: cached while (i,j) stays fixed (the kl sweep).
+        let key = bra_key(basis, i, j);
+        if self.bra_key != Some(key) {
+            let mut cmax_a = std::mem::take(&mut self.cmax_a);
+            let mut cmax_b = std::mem::take(&mut self.cmax_b);
+            max_coefs(basis, i, &mut cmax_a);
+            max_coefs(basis, j, &mut cmax_b);
+            let mut bra = std::mem::take(&mut self.bra);
+            build_pair_tables(basis, i, j, &cmax_a, &cmax_b, &mut bra);
+            self.bra = bra;
+            self.cmax_a = cmax_a;
+            self.cmax_b = cmax_b;
+            self.bra_key = Some(key);
+        }
+        // Ket tables: rebuilt per quartet, shared by all segment combos.
+        {
+            let mut cmax_a = std::mem::take(&mut self.cmax_a);
+            let mut cmax_b = std::mem::take(&mut self.cmax_b);
+            max_coefs(basis, k, &mut cmax_a);
+            max_coefs(basis, l, &mut cmax_b);
+            let mut ket = std::mem::take(&mut self.ket);
+            build_pair_tables(basis, k, l, &cmax_a, &cmax_b, &mut ket);
+            self.ket = ket;
+            self.cmax_a = cmax_a;
+            self.cmax_b = cmax_b;
+        }
+
+        let bra = std::mem::take(&mut self.bra);
+        let ket = std::mem::take(&mut self.ket);
+
+        // Loop over pure-l segment combinations of the four shells.
+        let (ia0, ia1) = basis.segments_of[i];
+        let (ib0, ib1) = basis.segments_of[j];
+        let (ic0, ic1) = basis.segments_of[k];
+        let (id0, id1) = basis.segments_of[l];
+        for a in ia0..ia1 {
+            for b in ib0..ib1 {
+                for c in ic0..ic1 {
+                    for d in id0..id1 {
+                        let (sa, sb, sc, sd) = (
+                            &basis.segments[a],
+                            &basis.segments[b],
+                            &basis.segments[c],
+                            &basis.segments[d],
+                        );
+                        self.segment_quartet(sa, sb, sc, sd, &bra, &ket);
+                        // Scatter the segment block into the shell block.
+                        let (na, nb, nc, nd) =
+                            (sa.n_comp(), sb.n_comp(), sc.n_comp(), sd.n_comp());
+                        let (oa, ob, oc, od) = (
+                            sa.bf_first - bfi,
+                            sb.bf_first - bfj,
+                            sc.bf_first - bfk,
+                            sd.bf_first - bfl,
+                        );
+                        for ma in 0..na {
+                            for mb in 0..nb {
+                                for mc in 0..nc {
+                                    for md in 0..nd {
+                                        let v = self.seg_buf
+                                            [((ma * nb + mb) * nc + mc) * nd + md];
+                                        let dst = (((ma + oa) * nj + mb + ob) * nk + mc + oc)
+                                            * nl
+                                            + md
+                                            + od;
+                                        out[dst] = v;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        self.bra = bra;
+        self.ket = ket;
+    }
+
+    /// ERI block over one pure-l segment quartet into `self.seg_buf`,
+    /// using the shell-pair Hermite tables.
+    fn segment_quartet(
+        &mut self,
+        sa: &Segment,
+        sb: &Segment,
+        sc: &Segment,
+        sd: &Segment,
+        bra: &PairTables,
+        ket: &PairTables,
+    ) {
+        let (na, nb, nc, nd) = (sa.n_comp(), sb.n_comp(), sc.n_comp(), sd.n_comp());
+        let nout = na * nb * nc * nd;
+        self.seg_buf[..nout].fill(0.0);
+        let mut hket = std::mem::take(&mut self.hket);
+
+        let l_total = sa.l + sb.l + sc.l + sd.l;
+        let pa = cart_powers(sa.l);
+        let pb = cart_powers(sb.l);
+        let pc = cart_powers(sc.l);
+        let pd = cart_powers(sd.l);
+
+        for pe in &bra.prims {
+            let cab = sa.coefs[pe.ia as usize] * sb.coefs[pe.ib as usize];
+            if cab == 0.0 {
+                continue;
+            }
+            for qe in &ket.prims {
+                let ccd = sc.coefs[qe.ia as usize] * sd.coefs[qe.ib as usize];
+                if ccd == 0.0 {
+                    continue;
+                }
+                self.prim_quartets += 1;
+                let (p, q) = (pe.p, qe.p);
+                let alpha = p * q / (p + q);
+                let rpq = [
+                    pe.center[0] - qe.center[0],
+                    pe.center[1] - qe.center[1],
+                    pe.center[2] - qe.center[2],
+                ];
+                let pref =
+                    2.0 * std::f64::consts::PI.powf(2.5) / (p * q * (p + q).sqrt()) * cab * ccd;
+                if l_total == 0 {
+                    // ssss fast path: (ab|cd) = pref·E000·E000·F0.
+                    let r2 = rpq[0] * rpq[0] + rpq[1] * rpq[1] + rpq[2] * rpq[2];
+                    let mut f = [0.0; 1];
+                    super::boys::boys(0, alpha * r2, &mut f);
+                    self.seg_buf[0] += pref * pe.e000 * qe.e000 * f[0];
+                    continue;
+                }
+                let rt = build_r_into(&mut self.rscratch, l_total, alpha, rpq);
+
+                // Factor through the ket-Hermite intermediate
+                //   H[q][tuv] = Σ_{τνφ} (−1)^{τ+ν+φ} E^cd_{τνφ} R_{t+τ,u+ν,v+φ}
+                // computed once per ket component pair q and reused by
+                // every bra component pair.
+                let lb_max = sa.l + sb.l;
+                let hstr_v = lb_max + 1;
+                let hstr_u = (lb_max + 1) * hstr_v;
+                let hstr_q = (lb_max + 1) * hstr_u;
+                if hket.len() < nc * nd * hstr_q {
+                    hket.resize(nc * nd * hstr_q, 0.0);
+                }
+                let mut qidx = 0usize;
+                for &(i3, j3, k3) in pc {
+                    for &(i4, j4, k4) in pd {
+                        for t in 0..=lb_max {
+                            for u in 0..=lb_max {
+                                for v in 0..=lb_max {
+                                    let mut s = 0.0;
+                                    for tau in 0..=(i3 + i4) {
+                                        let ekt = qe.ex.get(i3, i4, tau);
+                                        if ekt == 0.0 {
+                                            continue;
+                                        }
+                                        for nu in 0..=(j3 + j4) {
+                                            let eku = qe.ey.get(j3, j4, nu);
+                                            if eku == 0.0 {
+                                                continue;
+                                            }
+                                            for phi in 0..=(k3 + k4) {
+                                                let ekv = qe.ez.get(k3, k4, phi);
+                                                if ekv == 0.0 {
+                                                    continue;
+                                                }
+                                                let sign = if (tau + nu + phi) % 2 == 0 {
+                                                    1.0
+                                                } else {
+                                                    -1.0
+                                                };
+                                                s += sign
+                                                    * ekt
+                                                    * eku
+                                                    * ekv
+                                                    * rt.get(t + tau, u + nu, v + phi);
+                                            }
+                                        }
+                                    }
+                                    hket[qidx * hstr_q + t * hstr_u + u * hstr_v + v] = s;
+                                }
+                            }
+                        }
+                        qidx += 1;
+                    }
+                }
+
+                let mut idx = 0usize;
+                for &(i1, j1, k1) in pa {
+                    for &(i2, j2, k2) in pb {
+                        for qh in hket[..nc * nd * hstr_q].chunks_exact(hstr_q) {
+                            let mut val = 0.0;
+                            for t in 0..=(i1 + i2) {
+                                let ext = pe.ex.get(i1, i2, t);
+                                if ext == 0.0 {
+                                    continue;
+                                }
+                                for u in 0..=(j1 + j2) {
+                                    let eyu = pe.ey.get(j1, j2, u);
+                                    if eyu == 0.0 {
+                                        continue;
+                                    }
+                                    let ebra = ext * eyu;
+                                    for v in 0..=(k1 + k2) {
+                                        let ezv = pe.ez.get(k1, k2, v);
+                                        if ezv != 0.0 {
+                                            val += ebra * ezv * qh[t * hstr_u + u * hstr_v + v];
+                                        }
+                                    }
+                                }
+                            }
+                            self.seg_buf[idx] += pref * val;
+                            idx += 1;
+                        }
+                    }
+                }
+            }
+        }
+
+        // Per-component normalization scales.
+        let mut idx = 0usize;
+        for ma in 0..na {
+            let fa = component_scale(sa.l, ma);
+            for mb in 0..nb {
+                let fb = component_scale(sb.l, mb);
+                for mc in 0..nc {
+                    let fc = component_scale(sc.l, mc);
+                    for md in 0..nd {
+                        let fd = component_scale(sd.l, md);
+                        self.seg_buf[idx] *= fa * fb * fc * fd;
+                        idx += 1;
+                    }
+                }
+            }
+        }
+
+        self.hket = hket;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basis::BasisName;
+    use crate::basis::BasisSet;
+    use crate::chem::molecules;
+
+    fn eri_value(basis: &BasisSet, eng: &mut EriEngine, q: [usize; 4]) -> Vec<f64> {
+        let n: usize = q.iter().map(|&s| basis.shells[s].n_bf()).product();
+        let mut out = vec![0.0; n];
+        eng.shell_quartet(basis, q[0], q[1], q[2], q[3], &mut out);
+        out
+    }
+
+    #[test]
+    fn h2_sto3g_known_eris() {
+        // Szabo & Ostlund Table 3.5 (H2, R = 1.4 a0, STO-3G):
+        // (11|11) = 0.7746, (11|22) = 0.5697,
+        // (21|11) = 0.4441, (21|21) = 0.2970.
+        let m = molecules::h2();
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let mut eng = EriEngine::new();
+        let v1111 = eri_value(&b, &mut eng, [0, 0, 0, 0])[0];
+        let v1122 = eri_value(&b, &mut eng, [0, 0, 1, 1])[0];
+        let v2111 = eri_value(&b, &mut eng, [1, 0, 0, 0])[0];
+        let v2121 = eri_value(&b, &mut eng, [1, 0, 1, 0])[0];
+        assert!((v1111 - 0.7746).abs() < 2e-4, "(11|11)={v1111}");
+        assert!((v1122 - 0.5697).abs() < 2e-4, "(11|22)={v1122}");
+        assert!((v2111 - 0.4441).abs() < 2e-4, "(21|11)={v2111}");
+        assert!((v2121 - 0.2970).abs() < 2e-4, "(21|21)={v2121}");
+    }
+
+    #[test]
+    fn permutational_symmetry_8fold() {
+        let m = molecules::water();
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let mut eng = EriEngine::new();
+        // Pick shells with mixed angular momentum: O 2sp is shell 1.
+        let (i, j, k, l) = (1usize, 0usize, 2usize, 3usize);
+        let get = |eng: &mut EriEngine, q: [usize; 4]| eri_value(&b, eng, q);
+        let base = get(&mut eng, [i, j, k, l]);
+        let (ni, nj, nk, nl) = (
+            b.shells[i].n_bf(),
+            b.shells[j].n_bf(),
+            b.shells[k].n_bf(),
+            b.shells[l].n_bf(),
+        );
+        let swapped_bra = get(&mut eng, [j, i, k, l]);
+        let swapped_ket = get(&mut eng, [i, j, l, k]);
+        let swapped_pairs = get(&mut eng, [k, l, i, j]);
+        for a in 0..ni {
+            for bb in 0..nj {
+                for c in 0..nk {
+                    for d in 0..nl {
+                        let v = base[((a * nj + bb) * nk + c) * nl + d];
+                        let v_bra = swapped_bra[((bb * ni + a) * nk + c) * nl + d];
+                        let v_ket = swapped_ket[((a * nj + bb) * nl + d) * nk + c];
+                        let v_pair = swapped_pairs[((c * nl + d) * ni + a) * nj + bb];
+                        assert!((v - v_bra).abs() < 1e-11);
+                        assert!((v - v_ket).abs() < 1e-11);
+                        assert!((v - v_pair).abs() < 1e-11);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_quartets_positive() {
+        // (ij|ij) ≥ 0 — needed for Schwarz bounds to be well-defined.
+        let m = molecules::methane();
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let mut eng = EriEngine::new();
+        for i in 0..b.n_shells() {
+            for j in 0..=i {
+                let block = eri_value(&b, &mut eng, [i, j, i, j]);
+                let (ni, nj) = (b.shells[i].n_bf(), b.shells[j].n_bf());
+                for a in 0..ni {
+                    for bb in 0..nj {
+                        let v = block[((a * nj + bb) * ni + a) * nj + bb];
+                        assert!(v >= -1e-12, "({i}{j}|{i}{j})[{a}{bb}] = {v}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn d_shell_quartet_finite() {
+        // 6-31G(d) carbon dimer: the full dddd quartet path must produce
+        // finite, symmetric values.
+        let m = crate::chem::graphene::monolayer(2, "c2");
+        let b = BasisSet::assemble(&m, BasisName::SixThirtyOneGd).unwrap();
+        let mut eng = EriEngine::new();
+        // d shells are index 3 and 7.
+        let block = eri_value(&b, &mut eng, [3, 3, 7, 7]);
+        assert!(block.iter().all(|v| v.is_finite()));
+        assert!(block.iter().any(|v| v.abs() > 1e-8));
+        let b2 = eri_value(&b, &mut eng, [7, 7, 3, 3]);
+        let n = 6;
+        for a in 0..n {
+            for bb in 0..n {
+                for c in 0..n {
+                    for d in 0..n {
+                        let v1 = block[((a * n + bb) * n + c) * n + d];
+                        let v2 = b2[((c * n + d) * n + a) * n + bb];
+                        assert!((v1 - v2).abs() < 1e-11);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bra_cache_respects_basis_change() {
+        // Same shell indices, different molecules: the cache must not
+        // serve stale tables.
+        let m1 = molecules::h2();
+        let b1 = BasisSet::assemble(&m1, BasisName::Sto3g).unwrap();
+        let mut m2 = molecules::h2();
+        m2.atoms[1].pos[2] = 2.8; // stretched
+        let b2 = BasisSet::assemble(&m2, BasisName::Sto3g).unwrap();
+        let mut eng = EriEngine::new();
+        let v1 = eri_value(&b1, &mut eng, [0, 1, 0, 1])[0];
+        let v2 = eri_value(&b2, &mut eng, [0, 1, 0, 1])[0];
+        let mut eng_fresh = EriEngine::new();
+        let v2_fresh = eri_value(&b2, &mut eng_fresh, [0, 1, 0, 1])[0];
+        assert!((v2 - v2_fresh).abs() < 1e-14);
+        assert!((v1 - v2).abs() > 1e-4, "stretched H2 must differ");
+    }
+}

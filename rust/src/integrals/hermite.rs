@@ -1,0 +1,139 @@
+//! Hermite Gaussian expansion coefficients E_t^{ij} (McMurchie–Davidson).
+//!
+//! For a product of two 1-D cartesian Gaussians x_A^i x_B^j
+//! exp(-a(x-A)²) exp(-b(x-B)²), the Hermite expansion
+//!   G_i G_j = Σ_t E_t^{ij} Λ_t(x; p, P)
+//! is built by the standard two-term recursions in i and j.
+
+/// Maximum 1-D angular momentum supported per index (d shells ⇒ 2, +2
+/// margin for kinetic-energy raises).
+pub const LMAX_1D: usize = 4;
+const TDIM: usize = 2 * LMAX_1D + 1;
+
+/// E-coefficient table for one primitive pair and one dimension:
+/// `e(i, j, t)` for i, j ≤ LMAX_1D, t ≤ i + j.
+#[derive(Clone)]
+pub struct ETable {
+    // Flat [ (LMAX+1) × (LMAX+1) × TDIM ]
+    data: [f64; (LMAX_1D + 1) * (LMAX_1D + 1) * TDIM],
+}
+
+impl ETable {
+    #[inline]
+    pub fn get(&self, i: usize, j: usize, t: usize) -> f64 {
+        self.data[(i * (LMAX_1D + 1) + j) * TDIM + t]
+    }
+
+    #[inline]
+    fn set(&mut self, i: usize, j: usize, t: usize, v: f64) {
+        self.data[(i * (LMAX_1D + 1) + j) * TDIM + t] = v;
+    }
+}
+
+/// Build the E table for exponents (a, b) along one dimension with
+/// separation components: A, B are the 1-D center coordinates.
+/// `imax`, `jmax` bound the needed angular momenta.
+pub fn build_e(a: f64, b: f64, ax: f64, bx: f64, imax: usize, jmax: usize) -> ETable {
+    debug_assert!(imax <= LMAX_1D && jmax <= LMAX_1D);
+    let p = a + b;
+    let mu = a * b / p;
+    let px = (a * ax + b * bx) / p;
+    let xab = ax - bx;
+    let xpa = px - ax;
+    let xpb = px - bx;
+    let inv2p = 0.5 / p;
+
+    let mut e = ETable { data: [0.0; (LMAX_1D + 1) * (LMAX_1D + 1) * TDIM] };
+    e.set(0, 0, 0, (-mu * xab * xab).exp());
+    if imax == 0 && jmax == 0 {
+        // s-s fast path: only E_0^{00} is ever read.
+        return e;
+    }
+
+    // Raise i: E_t^{i+1,0} = inv2p E_{t-1}^{i0} + XPA E_t^{i0} + (t+1) E_{t+1}^{i0}
+    for i in 0..imax {
+        for t in 0..=(i + 1) {
+            let em1 = if t >= 1 { e.get(i, 0, t - 1) } else { 0.0 };
+            let e0 = if t <= i { e.get(i, 0, t) } else { 0.0 };
+            let ep1 = if t + 1 <= i { e.get(i, 0, t + 1) } else { 0.0 };
+            e.set(i + 1, 0, t, inv2p * em1 + xpa * e0 + (t + 1) as f64 * ep1);
+        }
+    }
+    // Raise j for every i: E_t^{i,j+1} = inv2p E_{t-1}^{ij} + XPB E_t^{ij} + (t+1) E_{t+1}^{ij}
+    for i in 0..=imax {
+        for j in 0..jmax {
+            for t in 0..=(i + j + 1) {
+                let em1 = if t >= 1 { e.get(i, j, t - 1) } else { 0.0 };
+                let e0 = if t <= i + j { e.get(i, j, t) } else { 0.0 };
+                let ep1 = if t + 1 <= i + j { e.get(i, j, t + 1) } else { 0.0 };
+                e.set(i, j + 1, t, inv2p * em1 + xpb * e0 + (t + 1) as f64 * ep1);
+            }
+        }
+    }
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e000_is_gaussian_product_prefactor() {
+        let (a, b, ax, bx) = (0.7, 1.3, 0.0, 1.1);
+        let e = build_e(a, b, ax, bx, 2, 2);
+        let mu = a * b / (a + b);
+        assert!((e.get(0, 0, 0) - (-mu * (ax - bx) * (ax - bx)).exp()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn overlap_from_e0_matches_analytic_s_s() {
+        // 1-D overlap of two s Gaussians = E_0^{00} sqrt(pi/p).
+        let (a, b, ax, bx) = (0.5, 0.8, -0.3, 0.9);
+        let p = a + b;
+        let e = build_e(a, b, ax, bx, 0, 0);
+        let s = e.get(0, 0, 0) * (std::f64::consts::PI / p).sqrt();
+        // Analytic: sqrt(pi/p) exp(-mu Xab^2)
+        let mu = a * b / p;
+        let want = (std::f64::consts::PI / p).sqrt() * (-mu * (ax - bx) * (ax - bx)).exp();
+        assert!((s - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn p_s_overlap_matches_analytic() {
+        // <p_x(A) | s(B)> 1-D: integral x' Gp dx where x' = x - A.
+        // From Hermite: S = E_0^{10} sqrt(pi/p); analytic E_0^{10} = XPA*E.
+        let (a, b, ax, bx) = (1.1, 0.6, 0.2, -0.5);
+        let p = a + b;
+        let px = (a * ax + b * bx) / p;
+        let e = build_e(a, b, ax, bx, 1, 0);
+        assert!((e.get(1, 0, 0) - (px - ax) * e.get(0, 0, 0)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn symmetry_swap_centers() {
+        // E_t^{ij}(a,A;b,B) == E_t^{ji}(b,B;a,A).
+        let (a, b, ax, bx) = (0.9, 1.7, 0.4, -0.2);
+        let e1 = build_e(a, b, ax, bx, 3, 2);
+        let e2 = build_e(b, a, bx, ax, 2, 3);
+        for i in 0..=3 {
+            for j in 0..=2 {
+                for t in 0..=(i + j) {
+                    assert!(
+                        (e1.get(i, j, t) - e2.get(j, i, t)).abs() < 1e-14,
+                        "i={i} j={j} t={t}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn same_center_et_vanishes_for_odd_t_mismatch() {
+        // For A == B, E_t^{ij} reduces to Hermite-to-cartesian factors;
+        // E_1^{10} must be inv2p and E_0^{10} zero.
+        let (a, b) = (0.8, 1.2);
+        let e = build_e(a, b, 0.0, 0.0, 1, 0);
+        assert!((e.get(1, 0, 0)).abs() < 1e-15);
+        assert!((e.get(1, 0, 1) - 0.5 / (a + b)).abs() < 1e-15);
+    }
+}

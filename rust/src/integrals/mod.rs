@@ -1,0 +1,17 @@
+//! Gaussian integral engine (McMurchie–Davidson scheme).
+//!
+//! This is the substrate the paper's GAMESS code provides: one- and
+//! two-electron integrals over contracted cartesian Gaussian shells
+//! (s, p, d and combined sp), plus Cauchy–Schwarz screening bounds.
+//! The ERI path is the system's hot spot — `eri::EriEngine` keeps all
+//! scratch in a reusable workspace so the quartet loop never allocates.
+
+pub mod boys;
+pub mod eri;
+pub mod hermite;
+pub mod oneint;
+pub mod rtensor;
+pub mod schwarz;
+
+pub use eri::EriEngine;
+pub use schwarz::SchwarzScreen;

@@ -1,0 +1,273 @@
+//! One-electron integrals: overlap S, kinetic T, nuclear attraction V.
+//! O(N²) cost — cheap next to the Fock build, per the paper §3.
+
+use crate::basis::shell::{cart_powers, component_scale, Segment};
+use crate::basis::BasisSet;
+use crate::chem::Molecule;
+use crate::linalg::Matrix;
+
+use super::hermite::build_e;
+use super::rtensor::build_r;
+
+/// Overlap block between two segments; `out` is row-major na×nb, overwritten.
+pub fn overlap_block(sa: &Segment, sb: &Segment, out: &mut [f64]) {
+    let (na, nb) = (sa.n_comp(), sb.n_comp());
+    debug_assert!(out.len() >= na * nb);
+    out[..na * nb].fill(0.0);
+    let pa = cart_powers(sa.l);
+    let pb = cart_powers(sb.l);
+    for ia in 0..sa.exps.len() {
+        let (a, ca) = (sa.exps[ia], sa.coefs[ia]);
+        for ib in 0..sb.exps.len() {
+            let (b, cb) = (sb.exps[ib], sb.coefs[ib]);
+            let p = a + b;
+            let pref = (std::f64::consts::PI / p).powf(1.5) * ca * cb;
+            let ex = build_e(a, b, sa.center[0], sb.center[0], sa.l, sb.l);
+            let ey = build_e(a, b, sa.center[1], sb.center[1], sa.l, sb.l);
+            let ez = build_e(a, b, sa.center[2], sb.center[2], sa.l, sb.l);
+            for (ma, &(i1, j1, k1)) in pa.iter().enumerate() {
+                for (mb, &(i2, j2, k2)) in pb.iter().enumerate() {
+                    out[ma * nb + mb] +=
+                        pref * ex.get(i1, i2, 0) * ey.get(j1, j2, 0) * ez.get(k1, k2, 0);
+                }
+            }
+        }
+    }
+    apply_component_scales(sa, sb, out);
+}
+
+/// Kinetic-energy block −½⟨a|∇²|b⟩ between two segments.
+pub fn kinetic_block(sa: &Segment, sb: &Segment, out: &mut [f64]) {
+    let (na, nb) = (sa.n_comp(), sb.n_comp());
+    out[..na * nb].fill(0.0);
+    let pa = cart_powers(sa.l);
+    let pb = cart_powers(sb.l);
+    for ia in 0..sa.exps.len() {
+        let (a, ca) = (sa.exps[ia], sa.coefs[ia]);
+        for ib in 0..sb.exps.len() {
+            let (b, cb) = (sb.exps[ib], sb.coefs[ib]);
+            let p = a + b;
+            let pref = (std::f64::consts::PI / p).powf(1.5) * ca * cb;
+            // Need j+2 on the ket side.
+            let ex = build_e(a, b, sa.center[0], sb.center[0], sa.l, sb.l + 2);
+            let ey = build_e(a, b, sa.center[1], sb.center[1], sa.l, sb.l + 2);
+            let ez = build_e(a, b, sa.center[2], sb.center[2], sa.l, sb.l + 2);
+            // 1-D overlap factor (no sqrt(pi/p): folded into pref³ᐟ²).
+            let s1 = |e: &super::hermite::ETable, i: usize, j: usize| e.get(i, j, 0);
+            // 1-D kinetic factor acting on the ket function of power j:
+            // T(i,j) = -2b² S(i,j+2) + b(2j+1) S(i,j) - ½ j(j-1) S(i,j-2).
+            let t1 = |e: &super::hermite::ETable, i: usize, j: usize| {
+                let mut t = -2.0 * b * b * e.get(i, j + 2, 0)
+                    + b * (2 * j + 1) as f64 * e.get(i, j, 0);
+                if j >= 2 {
+                    t -= 0.5 * (j * (j - 1)) as f64 * e.get(i, j - 2, 0);
+                }
+                t
+            };
+            for (ma, &(i1, j1, k1)) in pa.iter().enumerate() {
+                for (mb, &(i2, j2, k2)) in pb.iter().enumerate() {
+                    let sx = s1(&ex, i1, i2);
+                    let sy = s1(&ey, j1, j2);
+                    let sz = s1(&ez, k1, k2);
+                    let tx = t1(&ex, i1, i2);
+                    let ty = t1(&ey, j1, j2);
+                    let tz = t1(&ez, k1, k2);
+                    out[ma * nb + mb] += pref * (tx * sy * sz + sx * ty * sz + sx * sy * tz);
+                }
+            }
+        }
+    }
+    apply_component_scales(sa, sb, out);
+}
+
+/// Nuclear-attraction block Σ_C −Z_C ⟨a| 1/r_C |b⟩.
+pub fn nuclear_block(sa: &Segment, sb: &Segment, mol: &Molecule, out: &mut [f64]) {
+    let (na, nb) = (sa.n_comp(), sb.n_comp());
+    out[..na * nb].fill(0.0);
+    let pa = cart_powers(sa.l);
+    let pb = cart_powers(sb.l);
+    let l_total = sa.l + sb.l;
+    for ia in 0..sa.exps.len() {
+        let (a, ca) = (sa.exps[ia], sa.coefs[ia]);
+        for ib in 0..sb.exps.len() {
+            let (b, cb) = (sb.exps[ib], sb.coefs[ib]);
+            let p = a + b;
+            let px = [
+                (a * sa.center[0] + b * sb.center[0]) / p,
+                (a * sa.center[1] + b * sb.center[1]) / p,
+                (a * sa.center[2] + b * sb.center[2]) / p,
+            ];
+            let pref = 2.0 * std::f64::consts::PI / p * ca * cb;
+            let ex = build_e(a, b, sa.center[0], sb.center[0], sa.l, sb.l);
+            let ey = build_e(a, b, sa.center[1], sb.center[1], sa.l, sb.l);
+            let ez = build_e(a, b, sa.center[2], sb.center[2], sa.l, sb.l);
+            for atom in &mol.atoms {
+                let z = atom.element.charge() as f64;
+                let rpc = [px[0] - atom.pos[0], px[1] - atom.pos[1], px[2] - atom.pos[2]];
+                let rt = build_r(l_total, p, rpc);
+                for (ma, &(i1, j1, k1)) in pa.iter().enumerate() {
+                    for (mb, &(i2, j2, k2)) in pb.iter().enumerate() {
+                        let mut v = 0.0;
+                        for t in 0..=(i1 + i2) {
+                            let etx = ex.get(i1, i2, t);
+                            if etx == 0.0 {
+                                continue;
+                            }
+                            for u in 0..=(j1 + j2) {
+                                let ety = ey.get(j1, j2, u);
+                                if ety == 0.0 {
+                                    continue;
+                                }
+                                for w in 0..=(k1 + k2) {
+                                    v += etx * ety * ez.get(k1, k2, w) * rt.get(t, u, w);
+                                }
+                            }
+                        }
+                        out[ma * nb + mb] -= z * pref * v;
+                    }
+                }
+            }
+        }
+    }
+    apply_component_scales(sa, sb, out);
+}
+
+fn apply_component_scales(sa: &Segment, sb: &Segment, out: &mut [f64]) {
+    let (na, nb) = (sa.n_comp(), sb.n_comp());
+    for ma in 0..na {
+        let fa = component_scale(sa.l, ma);
+        for mb in 0..nb {
+            out[ma * nb + mb] *= fa * component_scale(sb.l, mb);
+        }
+    }
+}
+
+/// Assemble the full overlap matrix.
+pub fn overlap_matrix(basis: &BasisSet) -> Matrix {
+    assemble(basis, |sa, sb, buf| overlap_block(sa, sb, buf))
+}
+
+/// Assemble the full kinetic matrix.
+pub fn kinetic_matrix(basis: &BasisSet) -> Matrix {
+    assemble(basis, |sa, sb, buf| kinetic_block(sa, sb, buf))
+}
+
+/// Assemble the full nuclear-attraction matrix.
+pub fn nuclear_matrix(basis: &BasisSet, mol: &Molecule) -> Matrix {
+    assemble(basis, |sa, sb, buf| nuclear_block(sa, sb, mol, buf))
+}
+
+/// Core Hamiltonian H = T + V.
+pub fn core_hamiltonian(basis: &BasisSet, mol: &Molecule) -> Matrix {
+    let mut h = kinetic_matrix(basis);
+    let v = nuclear_matrix(basis, mol);
+    h.add_assign(&v);
+    h
+}
+
+fn assemble(basis: &BasisSet, mut block: impl FnMut(&Segment, &Segment, &mut [f64])) -> Matrix {
+    let n = basis.n_bf;
+    let mut m = Matrix::zeros(n, n);
+    let mut buf = vec![0.0; 36];
+    for sa in &basis.segments {
+        for sb in &basis.segments {
+            block(sa, sb, &mut buf);
+            let (na, nb) = (sa.n_comp(), sb.n_comp());
+            for ma in 0..na {
+                for mb in 0..nb {
+                    m.set(sa.bf_first + ma, sb.bf_first + mb, buf[ma * nb + mb]);
+                }
+            }
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basis::BasisName;
+    use crate::chem::molecules;
+
+    #[test]
+    fn overlap_diagonal_is_one() {
+        for (mol, basis) in [
+            (molecules::water(), BasisName::Sto3g),
+            (molecules::methane(), BasisName::Sto3g),
+        ] {
+            let b = BasisSet::assemble(&mol, basis).unwrap();
+            let s = overlap_matrix(&b);
+            for i in 0..b.n_bf {
+                assert!(
+                    (s.get(i, i) - 1.0).abs() < 1e-10,
+                    "{} S[{i}][{i}] = {}",
+                    mol.name,
+                    s.get(i, i)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_symmetric() {
+        let m = molecules::water();
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let s = overlap_matrix(&b);
+        for i in 0..b.n_bf {
+            for j in 0..b.n_bf {
+                assert!((s.get(i, j) - s.get(j, i)).abs() < 1e-12);
+                assert!(s.get(i, j).abs() <= 1.0 + 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn kinetic_symmetric_positive_diagonal() {
+        let m = molecules::water();
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let t = kinetic_matrix(&b);
+        for i in 0..b.n_bf {
+            assert!(t.get(i, i) > 0.0);
+            for j in 0..b.n_bf {
+                assert!((t.get(i, j) - t.get(j, i)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn h2_sto3g_known_matrix_elements() {
+        // Szabo & Ostlund Table 3.5 (H2, STO-3G, R = 1.4 a0):
+        // S12 = 0.6593, T11 = 0.7600, T12 = 0.2365, V11 = -1.8804.
+        let m = molecules::h2();
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let s = overlap_matrix(&b);
+        let t = kinetic_matrix(&b);
+        let v = nuclear_matrix(&b, &m);
+        assert!((s.get(0, 1) - 0.6593).abs() < 2e-4, "S12={}", s.get(0, 1));
+        assert!((t.get(0, 0) - 0.7600).abs() < 2e-4, "T11={}", t.get(0, 0));
+        assert!((t.get(0, 1) - 0.2365).abs() < 2e-4, "T12={}", t.get(0, 1));
+        assert!((v.get(0, 0) - (-1.8804)).abs() < 5e-4, "V11={}", v.get(0, 0));
+    }
+
+    #[test]
+    fn nuclear_negative_definite_diagonal() {
+        let m = molecules::methane();
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let v = nuclear_matrix(&b, &m);
+        for i in 0..b.n_bf {
+            assert!(v.get(i, i) < 0.0);
+        }
+    }
+
+    #[test]
+    fn d_shell_overlap_normalized() {
+        // Graphene carbon in 6-31G(d) includes d shells; their diagonal
+        // overlap must also be exactly 1 (component scaling correct).
+        let m = crate::chem::graphene::monolayer(2, "c2");
+        let b = BasisSet::assemble(&m, BasisName::SixThirtyOneGd).unwrap();
+        let s = overlap_matrix(&b);
+        for i in 0..b.n_bf {
+            assert!((s.get(i, i) - 1.0).abs() < 1e-10, "S[{i}][{i}]={}", s.get(i, i));
+        }
+    }
+}

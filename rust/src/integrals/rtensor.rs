@@ -1,0 +1,257 @@
+//! Hermite Coulomb integrals R_{tuv}(p, R_PC) (McMurchie–Davidson).
+//!
+//! R^n_{000} = (-2p)^n F_n(p·|R|²); higher t/u/v via
+//!   R^n_{t+1,u,v} = t·R^{n+1}_{t-1,u,v} + X·R^{n+1}_{t,u,v}
+//! (and cyclically for u, v). Computed bottom-up over n so the final
+//! n = 0 layer holds every R_{tuv} with t+u+v ≤ L.
+
+use super::boys::boys;
+
+/// Maximum total Hermite order (d-shell ERIs need 8).
+pub const LMAX_R: usize = 8;
+const DIM: usize = LMAX_R + 1;
+
+/// Dense R_{tuv} tensor for t+u+v ≤ l_total at n = 0.
+pub struct RTensor {
+    data: [f64; DIM * DIM * DIM],
+    pub l_total: usize,
+}
+
+impl RTensor {
+    #[inline]
+    pub fn get(&self, t: usize, u: usize, v: usize) -> f64 {
+        self.data[(t * DIM + u) * DIM + v]
+    }
+}
+
+/// Reusable scratch for the hot-path variant [`build_r_into`] — avoids
+/// re-zeroing and copying two 729-double arrays per primitive quartet
+/// (the dominant cost of low-angular-momentum ERIs before the §Perf
+/// pass; see EXPERIMENTS.md).
+pub struct RScratch {
+    cur: Box<[f64]>,
+    nxt: Box<[f64]>,
+}
+
+impl Default for RScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RScratch {
+    pub fn new() -> RScratch {
+        RScratch {
+            cur: vec![0.0; DIM * DIM * DIM].into_boxed_slice(),
+            nxt: vec![0.0; DIM * DIM * DIM].into_boxed_slice(),
+        }
+    }
+}
+
+/// Borrowed view of the n = 0 layer produced by [`build_r_into`].
+pub struct RView<'a> {
+    data: &'a [f64],
+}
+
+impl RView<'_> {
+    #[inline]
+    pub fn get(&self, t: usize, u: usize, v: usize) -> f64 {
+        self.data[(t * DIM + u) * DIM + v]
+    }
+}
+
+/// Hot-path R tensor: identical recursion to [`build_r`] but into
+/// caller-owned scratch, zeroing only the regions the recursion reads
+/// (stale cells outside the t+u+v ≤ l_total−n wedge are never read —
+/// the raise rules only reference the previous layer's wedge).
+pub fn build_r_into<'a>(s: &'a mut RScratch, l_total: usize, p: f64, r: [f64; 3]) -> RView<'a> {
+    assert!(l_total <= LMAX_R);
+    let r2 = r[0] * r[0] + r[1] * r[1] + r[2] * r[2];
+    let mut fs = [0.0; LMAX_R + 1];
+    boys(l_total, p * r2, &mut fs);
+    let idx = |t: usize, u: usize, v: usize| (t * DIM + u) * DIM + v;
+
+    let cur = &mut s.cur;
+    let nxt = &mut s.nxt;
+    cur[idx(0, 0, 0)] = (-2.0 * p).powi(l_total as i32) * fs[l_total];
+
+    for n in (0..l_total).rev() {
+        let lmax = l_total - n;
+        nxt[idx(0, 0, 0)] = (-2.0 * p).powi(n as i32) * fs[n];
+        for t in 0..=lmax {
+            for u in 0..=(lmax - t) {
+                for v in 0..=(lmax - t - u) {
+                    if t + u + v == 0 {
+                        continue;
+                    }
+                    let val = if t > 0 {
+                        let a = if t >= 2 { cur[idx(t - 2, u, v)] } else { 0.0 };
+                        (t as f64 - 1.0) * a + r[0] * cur[idx(t - 1, u, v)]
+                    } else if u > 0 {
+                        let a = if u >= 2 { cur[idx(t, u - 2, v)] } else { 0.0 };
+                        (u as f64 - 1.0) * a + r[1] * cur[idx(t, u - 1, v)]
+                    } else {
+                        let a = if v >= 2 { cur[idx(t, u, v - 2)] } else { 0.0 };
+                        (v as f64 - 1.0) * a + r[2] * cur[idx(t, u, v - 1)]
+                    };
+                    nxt[idx(t, u, v)] = val;
+                }
+            }
+        }
+        std::mem::swap(cur, nxt);
+    }
+    RView { data: cur }
+}
+
+/// Compute the R tensor for Hermite exponent `p` and separation `r`
+/// (= P − C for nuclear attraction, P − Q for ERIs).
+pub fn build_r(l_total: usize, p: f64, r: [f64; 3]) -> RTensor {
+    assert!(l_total <= LMAX_R);
+    let r2 = r[0] * r[0] + r[1] * r[1] + r[2] * r[2];
+    let mut fs = [0.0; LMAX_R + 1];
+    boys(l_total, p * r2, &mut fs);
+
+    // layer[n][t][u][v]; we roll n from l_total down to 0 with two buffers.
+    let mut cur = [0.0; DIM * DIM * DIM];
+    let mut nxt = [0.0; DIM * DIM * DIM];
+    let idx = |t: usize, u: usize, v: usize| (t * DIM + u) * DIM + v;
+
+    // n = l_total layer: only (0,0,0) is needed.
+    cur[idx(0, 0, 0)] = (-2.0 * p).powi(l_total as i32) * fs[l_total];
+
+    for n in (0..l_total).rev() {
+        let lmax = l_total - n;
+        // Zero the needed region of nxt.
+        for t in 0..=lmax {
+            for u in 0..=(lmax - t) {
+                for v in 0..=(lmax - t - u) {
+                    nxt[idx(t, u, v)] = 0.0;
+                }
+            }
+        }
+        nxt[idx(0, 0, 0)] = (-2.0 * p).powi(n as i32) * fs[n];
+        for t in 0..=lmax {
+            for u in 0..=(lmax - t) {
+                for v in 0..=(lmax - t - u) {
+                    if t + u + v == 0 {
+                        continue;
+                    }
+                    // Raise along the first nonzero axis (any axis works).
+                    let val = if t > 0 {
+                        let a = if t >= 2 { cur[idx(t - 2, u, v)] } else { 0.0 };
+                        (t as f64 - 1.0) * a + r[0] * cur[idx(t - 1, u, v)]
+                    } else if u > 0 {
+                        let a = if u >= 2 { cur[idx(t, u - 2, v)] } else { 0.0 };
+                        (u as f64 - 1.0) * a + r[1] * cur[idx(t, u - 1, v)]
+                    } else {
+                        let a = if v >= 2 { cur[idx(t, u, v - 2)] } else { 0.0 };
+                        (v as f64 - 1.0) * a + r[2] * cur[idx(t, u, v - 1)]
+                    };
+                    nxt[idx(t, u, v)] = val;
+                }
+            }
+        }
+        std::mem::swap(&mut cur, &mut nxt);
+    }
+
+    RTensor { data: cur, l_total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::integrals::boys::boys_single;
+
+    #[test]
+    fn r000_is_f0() {
+        let p = 1.7;
+        let r = [0.3, -0.4, 0.5];
+        let r2: f64 = r.iter().map(|x| x * x).sum();
+        let rt = build_r(0, p, r);
+        assert!((rt.get(0, 0, 0) - boys_single(0, p * r2)).abs() < 1e-14);
+    }
+
+    #[test]
+    fn r100_is_x_times_minus2p_f1() {
+        // R_{100} = X * R^{1}_{000} = X * (-2p) F_1.
+        let p = 0.9;
+        let r = [0.6, 0.1, -0.2];
+        let r2: f64 = r.iter().map(|x| x * x).sum();
+        let rt = build_r(1, p, r);
+        let want = r[0] * (-2.0 * p) * boys_single(1, p * r2);
+        assert!((rt.get(1, 0, 0) - want).abs() < 1e-14);
+    }
+
+    #[test]
+    fn r200_recursion_explicit() {
+        // R_{200} = 1*R²_{000} ... explicitly: R_{200} = R^{1}... use
+        // R^0_{200} = 1·R^{1}_{000}|... = (t-1)R^{n+1}_{t-2} + X R^{n+1}_{t-1}
+        //          = R^{1}_{000}·1 + X·R^{1}_{100}
+        // with R^{1}_{100} = X·R^{2}_{000}.
+        let p = 1.2;
+        let r = [0.5, -0.7, 0.25];
+        let r2: f64 = r.iter().map(|x| x * x).sum();
+        let f1 = boys_single(1, p * r2);
+        let f2 = boys_single(2, p * r2);
+        let r1_000 = (-2.0 * p) * f1;
+        let r2_000 = (-2.0 * p) * (-2.0 * p) * f2;
+        let want = r1_000 + r[0] * (r[0] * r2_000);
+        let rt = build_r(2, p, r);
+        assert!((rt.get(2, 0, 0) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn axis_symmetry() {
+        // Permuting r components permutes (t,u,v) identically.
+        let p = 0.8;
+        let ra = build_r(4, p, [0.3, 0.9, -0.5]);
+        let rb = build_r(4, p, [0.9, -0.5, 0.3]);
+        for t in 0..=3 {
+            for u in 0..=(3 - t) {
+                for v in 0..=(3 - t - u) {
+                    assert!(
+                        (ra.get(t, u, v) - rb.get(u, v, t)).abs() < 1e-12,
+                        "t={t} u={u} v={v}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_variant_matches_allocating_variant() {
+        let mut s = RScratch::new();
+        for (lt, p, r) in [
+            (0usize, 1.3, [0.2, -0.1, 0.4]),
+            (3, 0.7, [0.9, 0.0, -0.3]),
+            (8, 2.1, [0.1, 0.2, 0.3]),
+        ] {
+            let a = build_r(lt, p, r);
+            let b = build_r_into(&mut s, lt, p, r);
+            for t in 0..=lt {
+                for u in 0..=(lt - t) {
+                    for v in 0..=(lt - t - u) {
+                        assert!(
+                            (a.get(t, u, v) - b.get(t, u, v)).abs() < 1e-14,
+                            "lt={lt} t={t} u={u} v={v}"
+                        );
+                    }
+                }
+            }
+        }
+        // Reuse across calls with different l_total must not leak state.
+        let _ = build_r_into(&mut s, 6, 1.0, [1.0, 1.0, 1.0]);
+        let b = build_r_into(&mut s, 1, 0.5, [0.3, 0.0, 0.0]);
+        let a = build_r(1, 0.5, [0.3, 0.0, 0.0]);
+        assert!((a.get(1, 0, 0) - b.get(1, 0, 0)).abs() < 1e-14);
+    }
+
+    #[test]
+    fn zero_separation_odd_orders_vanish() {
+        let rt = build_r(4, 1.5, [0.0, 0.0, 0.0]);
+        assert!(rt.get(1, 0, 0).abs() < 1e-15);
+        assert!(rt.get(0, 1, 0).abs() < 1e-15);
+        assert!(rt.get(1, 1, 1).abs() < 1e-15);
+        assert!(rt.get(2, 0, 0).abs() > 0.0); // even survive
+    }
+}

@@ -1,0 +1,208 @@
+//! Cauchy–Schwarz screening (paper §4.1): |(ij|kl)| ≤ Q_ij · Q_kl with
+//! Q_ij = √(max |(ij|ij)|). Pairs whose Gaussian overlap is negligible by
+//! distance are skipped outright (their Q is ~0), which keeps the bound
+//! table O(N) for 2-D graphene sheets instead of O(N²).
+
+use crate::basis::BasisSet;
+
+use super::eri::EriEngine;
+
+/// Schwarz bound table over canonical shell pairs.
+#[derive(Debug, Clone)]
+pub struct SchwarzScreen {
+    /// Q[pair_index(i,j)] for i ≥ j.
+    q: Vec<f64>,
+    n_shells: usize,
+    /// Screening threshold τ: quartet survives iff Q_ij·Q_kl > τ.
+    pub tau: f64,
+    /// Largest Q (for early loop exits).
+    pub q_max: f64,
+}
+
+/// Canonical pair index for i ≥ j.
+#[inline]
+pub fn pair_index(i: usize, j: usize) -> usize {
+    debug_assert!(i >= j);
+    i * (i + 1) / 2 + j
+}
+
+impl SchwarzScreen {
+    /// Default GAMESS-like screening threshold.
+    pub const DEFAULT_TAU: f64 = 1e-10;
+
+    /// Build the bound table (computes (ij|ij) diagonal quartets, with a
+    /// distance fast-path for far pairs).
+    pub fn build(basis: &BasisSet, tau: f64) -> SchwarzScreen {
+        let n = basis.n_shells();
+        let mut q = vec![0.0; n * (n + 1) / 2];
+        let mut eng = EriEngine::new();
+        let mut buf = vec![0.0; 6 * 6 * 6 * 6];
+        let mut q_max = 0.0f64;
+        for i in 0..n {
+            for j in 0..=i {
+                let qij = if pair_negligible(basis, i, j) {
+                    0.0
+                } else {
+                    let (ni, nj) = (basis.shells[i].n_bf(), basis.shells[j].n_bf());
+                    eng.shell_quartet(basis, i, j, i, j, &mut buf);
+                    let mut mx = 0.0f64;
+                    for a in 0..ni {
+                        for b in 0..nj {
+                            let v = buf[((a * nj + b) * ni + a) * nj + b];
+                            mx = mx.max(v.abs());
+                        }
+                    }
+                    mx.sqrt()
+                };
+                q[pair_index(i, j)] = qij;
+                q_max = q_max.max(qij);
+            }
+        }
+        SchwarzScreen { q, n_shells: n, tau, q_max }
+    }
+
+    /// Schwarz bound for pair (i,j) in any order.
+    #[inline]
+    pub fn q(&self, i: usize, j: usize) -> f64 {
+        let (a, b) = if i >= j { (i, j) } else { (j, i) };
+        self.q[pair_index(a, b)]
+    }
+
+    /// Is the quartet (ij|kl) screened out?
+    #[inline]
+    pub fn screened(&self, i: usize, j: usize, k: usize, l: usize) -> bool {
+        self.q(i, j) * self.q(k, l) <= self.tau
+    }
+
+    /// Is the whole ij pair screenable against *any* kl (the Algorithm 3
+    /// top-loop prescreen)?
+    #[inline]
+    pub fn pair_screened(&self, i: usize, j: usize) -> bool {
+        self.q(i, j) * self.q_max <= self.tau
+    }
+
+    pub fn n_shells(&self) -> usize {
+        self.n_shells
+    }
+
+    /// Fraction of canonical quartets surviving screening (statistics for
+    /// reports and the simulator).
+    pub fn survival_fraction(&self) -> f64 {
+        let n = self.n_shells;
+        let mut total = 0u64;
+        let mut kept = 0u64;
+        for i in 0..n {
+            for j in 0..=i {
+                for k in 0..=i {
+                    let lmax = if k == i { j } else { k };
+                    for l in 0..=lmax {
+                        total += 1;
+                        if !self.screened(i, j, k, l) {
+                            kept += 1;
+                        }
+                    }
+                }
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            kept as f64 / total as f64
+        }
+    }
+}
+
+/// Distance fast-path: a pair is negligible when the tightest-exponent
+/// Gaussian product prefactor exp(-μ R²) is below 1e-18.
+fn pair_negligible(basis: &BasisSet, i: usize, j: usize) -> bool {
+    let si = &basis.shells[i];
+    let sj = &basis.shells[j];
+    let r2 = crate::chem::geometry::dist2(si.center, sj.center);
+    if r2 == 0.0 {
+        return false;
+    }
+    // Smallest exponents give the most diffuse (largest) overlap.
+    let ai = si.exps.iter().cloned().fold(f64::INFINITY, f64::min);
+    let aj = sj.exps.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mu = ai * aj / (ai + aj);
+    mu * r2 > 41.0 // exp(-41) ≈ 1.6e-18
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basis::BasisName;
+    use crate::chem::{graphene, molecules};
+
+    #[test]
+    fn pair_index_canonical() {
+        assert_eq!(pair_index(0, 0), 0);
+        assert_eq!(pair_index(1, 0), 1);
+        assert_eq!(pair_index(1, 1), 2);
+        assert_eq!(pair_index(2, 0), 3);
+    }
+
+    #[test]
+    fn bound_actually_bounds() {
+        // Verify |(ij|kl)| ≤ Q_ij Q_kl over every canonical quartet of a
+        // small molecule.
+        let m = molecules::water();
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let s = SchwarzScreen::build(&b, 0.0);
+        let mut eng = EriEngine::new();
+        let mut buf = vec![0.0; 6 * 6 * 6 * 6];
+        let n = b.n_shells();
+        for i in 0..n {
+            for j in 0..=i {
+                for k in 0..=i {
+                    for l in 0..=k {
+                        eng.shell_quartet(&b, i, j, k, l, &mut buf);
+                        let sz: usize = [i, j, k, l]
+                            .iter()
+                            .map(|&x| b.shells[x].n_bf())
+                            .product();
+                        let mx = buf[..sz].iter().map(|v| v.abs()).fold(0.0, f64::max);
+                        let bound = s.q(i, j) * s.q(k, l);
+                        assert!(
+                            mx <= bound * (1.0 + 1e-9) + 1e-13,
+                            "({i}{j}|{k}{l}): {mx} > {bound}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn graphene_far_pairs_screened() {
+        // On a graphene patch, far-apart shells must screen out; the
+        // survival fraction should be well below 1.
+        let m = graphene::monolayer(24, "flake24");
+        let b = BasisSet::assemble(&m, BasisName::SixThirtyOneGd).unwrap();
+        let s = SchwarzScreen::build(&b, SchwarzScreen::DEFAULT_TAU);
+        let f = s.survival_fraction();
+        assert!(f < 0.9, "survival fraction {f}");
+        assert!(f > 0.01, "survival fraction {f}");
+    }
+
+    #[test]
+    fn zero_tau_keeps_all_nonzero() {
+        let m = molecules::h2();
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let s = SchwarzScreen::build(&b, 0.0);
+        assert!(!s.screened(0, 0, 1, 1));
+        assert!((s.survival_fraction() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn q_symmetric_access() {
+        let m = molecules::water();
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let s = SchwarzScreen::build(&b, 1e-10);
+        for i in 0..b.n_shells() {
+            for j in 0..b.n_shells() {
+                assert_eq!(s.q(i, j), s.q(j, i));
+            }
+        }
+    }
+}

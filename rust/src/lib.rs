@@ -1,0 +1,36 @@
+//! # khf — a hybrid-parallel Hartree–Fock framework
+//!
+//! A from-scratch reproduction of *"An efficient MPI/OpenMP parallelization
+//! of the Hartree-Fock method for the second generation of Intel Xeon Phi
+//! processor"* (Mironov, Alexeev, Keipert, D'mello, Moskovsky, Gordon —
+//! SC'17, DOI 10.1145/3126908.3126956), built as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: a complete restricted
+//!   Hartree–Fock engine (Gaussian basis sets, McMurchie–Davidson
+//!   integrals, Schwarz screening, DIIS) together with the paper's three
+//!   parallel Fock-build algorithms (`hf`), a virtual-rank + real-thread
+//!   execution substrate, and a calibrated discrete-event cluster
+//!   simulator (`cluster`) that replays the algorithms at Theta scale.
+//! * **Layer 2** — `python/compile/model.py`: the dense SCF compute graph
+//!   in JAX, AOT-lowered to HLO text artifacts loaded by [`runtime`].
+//! * **Layer 1** — `python/compile/kernels/`: Pallas kernels for the
+//!   blocked J/K Fock contraction and the paper's Figure-1 column-buffer
+//!   tree reduction.
+//!
+//! Start with [`scf::RhfDriver`] for serial SCF, [`hf`] for the paper's
+//! engines, and [`cluster::simulate`] for the scaling studies.
+
+pub mod util;
+pub mod chem;
+pub mod basis;
+pub mod integrals;
+pub mod linalg;
+pub mod scf;
+pub mod hf;
+pub mod cluster;
+pub mod runtime;
+pub mod coordinator;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

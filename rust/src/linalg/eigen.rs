@@ -1,0 +1,188 @@
+//! Symmetric eigensolver (cyclic Jacobi) and S^{-1/2} orthogonalization.
+//!
+//! Jacobi is O(N³) with a modest constant and bit-for-bit deterministic;
+//! the paper's profile (§3) shows Fock construction dominates, so a
+//! simple, robust diagonalizer is the right engineering choice here.
+
+use super::matrix::Matrix;
+
+/// Eigendecomposition result: `vectors.column(k)` pairs with `values[k]`,
+/// ascending.
+#[derive(Debug, Clone)]
+pub struct Eigh {
+    pub values: Vec<f64>,
+    /// Column-eigenvector matrix: vectors[i][k] = component i of vector k.
+    pub vectors: Matrix,
+}
+
+/// Cyclic Jacobi eigensolver for a symmetric matrix.
+pub fn eigh(a: &Matrix) -> Eigh {
+    assert_eq!(a.rows, a.cols, "eigh needs a square matrix");
+    let n = a.rows;
+    let mut m = a.clone();
+    m.symmetrize();
+    let mut v = Matrix::identity(n);
+
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m.get(i, j) * m.get(i, j);
+            }
+        }
+        if off.sqrt() < 1e-12 * (1.0 + m.max_abs()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.get(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m.get(p, p);
+                let aqq = m.get(q, q);
+                // Rotation angle: tan(2θ) = 2 apq / (app - aqq).
+                let theta = 0.5 * (2.0 * apq).atan2(app - aqq);
+                let (s, c) = theta.sin_cos();
+                // Apply Gᵀ M G in place (rows/cols p and q).
+                for k in 0..n {
+                    let mkp = m.get(k, p);
+                    let mkq = m.get(k, q);
+                    m.set(k, p, c * mkp + s * mkq);
+                    m.set(k, q, -s * mkp + c * mkq);
+                }
+                for k in 0..n {
+                    let mpk = m.get(p, k);
+                    let mqk = m.get(q, k);
+                    m.set(p, k, c * mpk + s * mqk);
+                    m.set(q, k, -s * mpk + c * mqk);
+                }
+                for k in 0..n {
+                    let vkp = v.get(k, p);
+                    let vkq = v.get(k, q);
+                    v.set(k, p, c * vkp + s * vkq);
+                    v.set(k, q, -s * vkp + c * vkq);
+                }
+            }
+        }
+    }
+
+    // Extract and sort ascending.
+    let mut order: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| m.get(i, i)).collect();
+    order.sort_by(|&x, &y| diag[x].partial_cmp(&diag[y]).unwrap());
+    let values: Vec<f64> = order.iter().map(|&k| diag[k]).collect();
+    let mut vectors = Matrix::zeros(n, n);
+    for (new_k, &old_k) in order.iter().enumerate() {
+        for i in 0..n {
+            vectors.set(i, new_k, v.get(i, old_k));
+        }
+    }
+    Eigh { values, vectors }
+}
+
+/// Symmetric (Löwdin) orthogonalization: X = S^{-1/2}. Errors if S has a
+/// non-positive eigenvalue (linear dependence in the basis).
+pub fn inv_sqrt(s: &Matrix) -> anyhow::Result<Matrix> {
+    let eig = eigh(s);
+    let n = s.rows;
+    anyhow::ensure!(
+        eig.values.iter().all(|&x| x > 1e-10),
+        "overlap matrix not positive definite (min eigenvalue {:.3e}); linearly dependent basis",
+        eig.values.first().copied().unwrap_or(0.0)
+    );
+    // X = U diag(1/sqrt(λ)) Uᵀ
+    let mut scaled = eig.vectors.clone();
+    for k in 0..n {
+        let f = 1.0 / eig.values[k].sqrt();
+        for i in 0..n {
+            scaled.set(i, k, scaled.get(i, k) * f);
+        }
+    }
+    Ok(scaled.matmul(&eig.vectors.transpose()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Matrix::from_rows(&[&[3.0, 0.0], &[0.0, 1.0]]);
+        let e = eigh(&a);
+        assert!((e.values[0] - 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] → eigenvalues 1, 3.
+        let a = Matrix::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]);
+        let e = eigh(&a);
+        assert!((e.values[0] - 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 3.0).abs() < 1e-12);
+        // Eigenvector for λ=3 is (1,1)/√2 up to sign.
+        let v = (e.vectors.get(0, 1), e.vectors.get(1, 1));
+        assert!((v.0.abs() - 1.0 / 2f64.sqrt()).abs() < 1e-10);
+        assert!((v.0 - v.1).abs() < 1e-10);
+    }
+
+    #[test]
+    fn reconstruction_random() {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(99);
+        for n in [3usize, 8, 17] {
+            let mut a = Matrix::zeros(n, n);
+            for i in 0..n {
+                for j in 0..=i {
+                    let x = rng.range(-1.0, 1.0);
+                    a.set(i, j, x);
+                    a.set(j, i, x);
+                }
+            }
+            let e = eigh(&a);
+            // A V = V Λ
+            let av = a.matmul(&e.vectors);
+            let mut vl = e.vectors.clone();
+            for k in 0..n {
+                for i in 0..n {
+                    vl.set(i, k, vl.get(i, k) * e.values[k]);
+                }
+            }
+            assert!(av.max_abs_diff(&vl) < 1e-9, "n={n}: {}", av.max_abs_diff(&vl));
+            // Vᵀ V = I
+            let vtv = e.vectors.transpose().matmul(&e.vectors);
+            assert!(vtv.max_abs_diff(&Matrix::identity(n)) < 1e-10);
+            // Ascending order.
+            for k in 1..n {
+                assert!(e.values[k] >= e.values[k - 1] - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn inv_sqrt_property() {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(5);
+        let n = 6;
+        // SPD matrix: I + small symmetric perturbation.
+        let mut s = Matrix::identity(n);
+        for i in 0..n {
+            for j in 0..i {
+                let x = rng.range(-0.2, 0.2);
+                s.set(i, j, x);
+                s.set(j, i, x);
+            }
+        }
+        let x = inv_sqrt(&s).unwrap();
+        let xsx = x.matmul(&s).matmul(&x);
+        assert!(xsx.max_abs_diff(&Matrix::identity(n)) < 1e-10);
+    }
+
+    #[test]
+    fn inv_sqrt_rejects_singular() {
+        let s = Matrix::from_rows(&[&[1.0, 1.0], &[1.0, 1.0]]);
+        assert!(inv_sqrt(&s).is_err());
+    }
+}

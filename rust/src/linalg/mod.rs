@@ -1,0 +1,11 @@
+//! Dense linear algebra substrate: row-major matrices, a cyclic Jacobi
+//! eigensolver for the SCF diagonalization step, and symmetric
+//! orthogonalization. Hand-rolled — the offline vendor set has no BLAS
+//! binding, and the paper's point is that diagonalization is *not* the
+//! hot spot (Fock construction is).
+
+pub mod eigen;
+pub mod matrix;
+
+pub use eigen::{eigh, Eigh};
+pub use matrix::Matrix;

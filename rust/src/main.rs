@@ -1,0 +1,209 @@
+//! `khf` — CLI leader for the hybrid-parallel Hartree–Fock framework.
+//!
+//! Subcommands:
+//!   info                         system/paper inventory
+//!   scf --mol h2o [--engine X]   run RHF on a built-in molecule
+//!   footprint                    paper Table 2 memory footprints
+//!   simulate --system 2.0 ...    simulated scaling run (Table 3 / Fig 6)
+//!   calibrate [--out path]       measure + save the quartet cost model
+//!   artifacts-check              verify the XLA artifacts load + run
+
+use khf::basis::BasisName;
+use khf::chem::graphene::PaperSystem;
+use khf::chem::molecules;
+use khf::cluster::{calibrate, simulate, CostModel, Machine};
+use khf::coordinator::{report, stats_for_system};
+use khf::hf::memmodel::{self, EngineKind};
+use khf::hf::mpi_only::MpiOnlyFock;
+use khf::hf::private_fock::PrivateFock;
+use khf::hf::serial::SerialFock;
+use khf::hf::shared_fock::SharedFock;
+use khf::hf::FockBuilder;
+use khf::runtime::{Runtime, XlaFockBuilder};
+use khf::scf::RhfDriver;
+use khf::util::cli::Args;
+use khf::util::{human_bytes, human_secs, logging};
+
+fn main() {
+    logging::init();
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "info" => cmd_info(),
+        "scf" => cmd_scf(&args),
+        "footprint" => cmd_footprint(),
+        "simulate" => cmd_simulate(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "artifacts-check" => cmd_artifacts_check(),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "khf — hybrid-parallel Hartree-Fock (SC'17 Xeon Phi reproduction)\n\n\
+         usage: khf <command> [options]\n\n\
+         commands:\n\
+           info                              paper system inventory\n\
+           scf --mol <h2|h2o|ch4|c6h6> [--basis sto-3g] [--engine serial|mpi|private|shared|xla]\n\
+               [--ranks N] [--threads N]     run RHF\n\
+           footprint                         Table 2 memory footprints\n\
+           simulate --system <0.5|1.0|1.5|2.0|5.0> [--nodes 4,16,...]\n\
+           calibrate [--out artifacts/calibration.toml] [--budget N]\n\
+           artifacts-check                   verify XLA artifacts"
+    );
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    println!("Paper benchmark systems (Table 4):");
+    let mut rows = vec![vec![
+        "system".to_string(),
+        "atoms".to_string(),
+        "shells".to_string(),
+        "BFs".to_string(),
+    ]];
+    for sys in PaperSystem::ALL {
+        rows.push(vec![
+            sys.label().to_string(),
+            sys.n_atoms().to_string(),
+            sys.n_shells().to_string(),
+            sys.n_bf().to_string(),
+        ]);
+    }
+    print!("{}", report::table(&rows));
+    Ok(())
+}
+
+fn cmd_scf(args: &Args) -> anyhow::Result<()> {
+    let mol_name = args.get_or("mol", "h2o");
+    let mol = molecules::by_name(mol_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown molecule {mol_name:?}"))?;
+    let basis = BasisName::parse(args.get_or("basis", "sto-3g"))
+        .ok_or_else(|| anyhow::anyhow!("unknown basis"))?;
+    let ranks = args.parse_or("ranks", 2usize)?;
+    let threads = args.parse_or("threads", 2usize)?;
+    let engine = args.get_or("engine", "serial");
+
+    let driver = RhfDriver::default();
+    let res = match engine {
+        "serial" => driver.run(&mol, basis, &mut SerialFock::new())?,
+        "mpi" => driver.run(&mol, basis, &mut MpiOnlyFock::new(ranks))?,
+        "private" => driver.run(&mol, basis, &mut PrivateFock::new(ranks, threads))?,
+        "shared" => driver.run(&mol, basis, &mut SharedFock::new(ranks, threads))?,
+        "xla" => {
+            let b = khf::basis::BasisSet::assemble(&mol, basis)?;
+            let rt = Runtime::cpu(Runtime::default_dir())?;
+            let mut builder = XlaFockBuilder::new(rt, &b)?;
+            driver.run_with_basis(&mol, &b, &mut builder)?
+        }
+        other => anyhow::bail!("unknown engine {other:?}"),
+    };
+    println!(
+        "{} {} [{}]: E = {:.8} Ha ({} iterations, converged={}, Fock time {})",
+        mol.name,
+        basis.label(),
+        engine,
+        res.energy,
+        res.iterations,
+        res.converged,
+        human_secs(res.fock_build_seconds),
+    );
+    Ok(())
+}
+
+fn cmd_footprint() -> anyhow::Result<()> {
+    let mut rows = vec![vec![
+        "system".into(),
+        "BFs".into(),
+        "MPI eq3a".into(),
+        "Pr.F eq3b".into(),
+        "Sh.F eq3c".into(),
+        "MPI exact".into(),
+        "Pr.F exact".into(),
+        "Sh.F exact".into(),
+    ]];
+    for sys in PaperSystem::ALL {
+        let n = sys.n_bf();
+        rows.push(vec![
+            sys.label().into(),
+            n.to_string(),
+            human_bytes(memmodel::eq3a_mpi(n, 256)),
+            human_bytes(memmodel::eq3b_private(n, 64, 4)),
+            human_bytes(memmodel::eq3c_shared(n, 4)),
+            human_bytes(memmodel::exact_bytes(EngineKind::MpiOnly, n, 15, 256, 1)),
+            human_bytes(memmodel::exact_bytes(EngineKind::PrivateFock, n, 15, 4, 64)),
+            human_bytes(memmodel::exact_bytes(EngineKind::SharedFock, n, 15, 4, 64)),
+        ]);
+    }
+    print!("{}", report::table(&rows));
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let sys = PaperSystem::parse(args.get_or("system", "2.0"))
+        .ok_or_else(|| anyhow::anyhow!("unknown system (use 0.5|1.0|1.5|2.0|5.0)"))?;
+    let nodes: Vec<usize> = args
+        .parse_list("nodes")?
+        .unwrap_or_else(|| vec![4, 16, 64, 128, 256, 512]);
+    let cost = CostModel::load_or_fallback("artifacts/calibration.toml");
+    let stats = stats_for_system(sys, &cost)?;
+
+    let mut rows = vec![vec![
+        "nodes".into(),
+        "MPI (s)".into(),
+        "Pr.F (s)".into(),
+        "Sh.F (s)".into(),
+    ]];
+    for &n in &nodes {
+        let mpi = simulate(EngineKind::MpiOnly, &stats, &Machine::theta_mpi(n), &cost);
+        let prf = simulate(EngineKind::PrivateFock, &stats, &Machine::theta_hybrid(n), &cost);
+        let shf = simulate(EngineKind::SharedFock, &stats, &Machine::theta_hybrid(n), &cost);
+        rows.push(vec![
+            n.to_string(),
+            report::secs(mpi.fock_seconds * 15.0),
+            report::secs(prf.fock_seconds * 15.0),
+            report::secs(shf.fock_seconds * 15.0),
+        ]);
+    }
+    println!("{} — simulated Fock time (15 SCF iterations):", sys.label());
+    print!("{}", report::table(&rows));
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
+    let out = args.get_or("out", "artifacts/calibration.toml");
+    let budget = args.parse_or("budget", 60_000usize)?;
+    println!("calibrating quartet costs (budget {budget} evaluations)...");
+    let model = calibrate::calibrate_631gd(budget)?;
+    model.to_config().save(out)?;
+    println!(
+        "saved {out}: screen {:.1} ns, quartet range {:.0}-{:.0} ns",
+        model.screen_ns,
+        model.quartet_ns.iter().cloned().fold(f64::INFINITY, f64::min),
+        model.max_quartet_ns()
+    );
+    Ok(())
+}
+
+fn cmd_artifacts_check() -> anyhow::Result<()> {
+    let mut rt = Runtime::cpu(Runtime::default_dir())?;
+    for n in khf::runtime::SIZE_GRID {
+        for stem in ["fock2e", "density"] {
+            let name = format!("{stem}_{n}");
+            if rt.has_artifact(&name) {
+                rt.load(&name)?;
+                println!("{name}: OK");
+            } else {
+                println!("{name}: MISSING (run `make artifacts`)");
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,163 @@
+//! XLA-backed dense Fock builder: the Layer-2/Layer-1 offload path.
+//!
+//! For molecules whose basis fits the artifact size grid, the dense ERI
+//! tensor is assembled once in Rust (integrals engine), zero-padded to
+//! the grid size, and every SCF iteration's two-electron build runs the
+//! AOT-compiled `fock2e_N` artifact (whose hot loop is the Pallas
+//! `fock_jk` kernel) on the PJRT CPU client. Zero padding is exact:
+//! padded rows/columns of ERI and D are zero, so they contribute
+//! nothing to G, D, or the energy.
+
+use crate::basis::BasisSet;
+use crate::integrals::{EriEngine, SchwarzScreen};
+use crate::linalg::Matrix;
+
+use super::pjrt::Runtime;
+use super::grid_size;
+
+use crate::hf::{BuildStats, FockBuilder};
+
+/// Dense-ERI Fock builder executing the `fock2e_{N}` artifact.
+pub struct XlaFockBuilder {
+    runtime: Runtime,
+    /// Padded size in use.
+    n_pad: usize,
+    /// Real basis size.
+    n_bf: usize,
+    /// Dense ERI tensor, padded, row-major [n_pad⁴].
+    eri: Vec<f64>,
+    pub stats: BuildStats,
+}
+
+impl XlaFockBuilder {
+    /// Assemble the dense (padded) ERI tensor for `basis` and prepare
+    /// the runtime. Errors if the basis exceeds the artifact grid.
+    pub fn new(runtime: Runtime, basis: &BasisSet) -> anyhow::Result<XlaFockBuilder> {
+        let n = basis.n_bf;
+        let n_pad = grid_size(n).ok_or_else(|| {
+            anyhow::anyhow!(
+                "basis has {n} functions; the XLA artifact grid tops out at {} — use the \
+                 direct (sparse) engines for larger systems",
+                super::SIZE_GRID.last().unwrap()
+            )
+        })?;
+        let mut eri = vec![0.0; n_pad * n_pad * n_pad * n_pad];
+        let mut eng = EriEngine::new();
+        let mut block = vec![0.0; 6 * 6 * 6 * 6];
+        let ns = basis.n_shells();
+        // Dense assembly: every shell quartet once (no 8-fold symmetry
+        // in the dense tensor — the kernel contracts the full tensor).
+        for i in 0..ns {
+            for j in 0..ns {
+                for k in 0..ns {
+                    for l in 0..ns {
+                        eng.shell_quartet(basis, i, j, k, l, &mut block);
+                        let (ni, nj, nk, nl) = (
+                            basis.shells[i].n_bf(),
+                            basis.shells[j].n_bf(),
+                            basis.shells[k].n_bf(),
+                            basis.shells[l].n_bf(),
+                        );
+                        let (bi, bj, bk, bl) = (
+                            basis.shells[i].bf_first,
+                            basis.shells[j].bf_first,
+                            basis.shells[k].bf_first,
+                            basis.shells[l].bf_first,
+                        );
+                        for a in 0..ni {
+                            for b in 0..nj {
+                                for c in 0..nk {
+                                    for dd in 0..nl {
+                                        let v = block[((a * nj + b) * nk + c) * nl + dd];
+                                        let dst = (((bi + a) * n_pad + bj + b) * n_pad + bk + c)
+                                            * n_pad
+                                            + bl
+                                            + dd;
+                                        eri[dst] = v;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(XlaFockBuilder {
+            runtime,
+            n_pad,
+            n_bf: n,
+            eri,
+            stats: BuildStats::default(),
+        })
+    }
+
+    /// Pad a matrix to n_pad.
+    fn pad(&self, m: &Matrix) -> Vec<f64> {
+        let mut out = vec![0.0; self.n_pad * self.n_pad];
+        for i in 0..self.n_bf {
+            for j in 0..self.n_bf {
+                out[i * self.n_pad + j] = m.get(i, j);
+            }
+        }
+        out
+    }
+
+    /// Unpad back to the real size.
+    fn unpad(&self, v: &[f64]) -> Matrix {
+        let mut m = Matrix::zeros(self.n_bf, self.n_bf);
+        for i in 0..self.n_bf {
+            for j in 0..self.n_bf {
+                m.set(i, j, v[i * self.n_pad + j]);
+            }
+        }
+        m
+    }
+
+    /// Build the density D = 2·C_occ·C_occᵀ through the `density_{N}`
+    /// artifact (occupation passed as a mask so one artifact serves all
+    /// electron counts).
+    pub fn density_xla(&mut self, c: &Matrix, n_occ: usize) -> anyhow::Result<Matrix> {
+        let name = format!("density_{}", self.n_pad);
+        let c_pad = self.pad(c);
+        let mut mask = vec![0.0; self.n_pad];
+        for m in mask.iter_mut().take(n_occ) {
+            *m = 1.0;
+        }
+        let np = self.n_pad;
+        let out = self
+            .runtime
+            .execute_f64(&name, &[(&c_pad, &[np, np]), (&mask, &[np])])?;
+        Ok(self.unpad(&out[0]))
+    }
+
+    pub fn n_pad(&self) -> usize {
+        self.n_pad
+    }
+}
+
+impl FockBuilder for XlaFockBuilder {
+    fn build_2e(&mut self, _basis: &BasisSet, _screen: &SchwarzScreen, d: &Matrix) -> Matrix {
+        let t0 = std::time::Instant::now();
+        let name = format!("fock2e_{}", self.n_pad);
+        let d_pad = self.pad(d);
+        let np = self.n_pad;
+        let out = self
+            .runtime
+            .execute_f64(
+                &name,
+                &[(&self.eri, &[np, np, np, np]), (&d_pad, &[np, np])],
+            )
+            .expect("XLA fock2e execution failed");
+        let g = self.unpad(&out[0]);
+        self.stats = BuildStats {
+            quartets_computed: 0,
+            quartets_screened: 0,
+            seconds: t0.elapsed().as_secs_f64(),
+        };
+        g
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-dense"
+    }
+}

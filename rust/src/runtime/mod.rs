@@ -1,0 +1,35 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` (Layer 2 + the Layer-1 Pallas kernels lower
+//! into the same HLO) and executes them from the Rust request path.
+//! Python never runs at execution time.
+
+pub mod fock_xla;
+pub mod pjrt;
+
+pub use fock_xla::XlaFockBuilder;
+pub use pjrt::Runtime;
+
+/// Artifact size grid: molecules are zero-padded up to the next size
+/// (zero basis rows are exact no-ops for the Fock build, density and
+/// energy — see DESIGN.md §5).
+pub const SIZE_GRID: [usize; 5] = [8, 16, 32, 40, 64];
+
+/// Smallest grid size ≥ n, or None if n exceeds the grid.
+pub fn grid_size(n: usize) -> Option<usize> {
+    SIZE_GRID.iter().copied().find(|&g| g >= n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_rounding() {
+        assert_eq!(grid_size(7), Some(8));
+        assert_eq!(grid_size(8), Some(8));
+        assert_eq!(grid_size(9), Some(16));
+        assert_eq!(grid_size(36), Some(40));
+        assert_eq!(grid_size(64), Some(64));
+        assert_eq!(grid_size(65), None);
+    }
+}

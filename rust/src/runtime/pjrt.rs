@@ -1,0 +1,104 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client: load HLO text,
+//! compile once, execute many times.
+//!
+//! Interchange is HLO **text**, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+/// A PJRT CPU runtime with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime reading artifacts from `dir`.
+    pub fn cpu(dir: impl AsRef<Path>) -> anyhow::Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime {
+            client,
+            artifact_dir: dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Default artifact directory (repo-level `artifacts/`, overridable
+    /// via `KHF_ARTIFACTS`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("KHF_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Does the artifact exist on disk?
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifact_dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    /// Load + compile (cached) an artifact by stem name.
+    pub fn load(&mut self, name: &str) -> anyhow::Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with f64 inputs, returning the flattened f64
+    /// outputs of the (1-)tuple result.
+    pub fn execute_f64(
+        &mut self,
+        name: &str,
+        inputs: &[(&[f64], &[usize])],
+    ) -> anyhow::Result<Vec<Vec<f64>>> {
+        self.load(name)?;
+        let exe = self.cache.get(name).unwrap();
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .with_context(|| format!("reshaping input to {dims:?}"))?;
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {name}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // aot.py lowers with return_tuple=True.
+        let tuple = out.to_tuple().context("untupling result")?;
+        let mut vecs = Vec::with_capacity(tuple.len());
+        for t in tuple {
+            vecs.push(t.to_vec::<f64>().context("reading f64 output")?);
+        }
+        Ok(vecs)
+    }
+
+    /// Number of compiled executables held.
+    pub fn loaded_count(&self) -> usize {
+        self.cache.len()
+    }
+}

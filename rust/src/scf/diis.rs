@@ -1,0 +1,175 @@
+//! DIIS (Pulay) convergence acceleration.
+//!
+//! Keeps a window of (Fock, error) pairs with error e = FDS − SDF
+//! (orthogonalized), solves the constrained least-squares system for
+//! mixing coefficients, and extrapolates the next Fock matrix.
+
+use crate::linalg::Matrix;
+
+/// DIIS accelerator with a bounded history window.
+pub struct Diis {
+    max_vecs: usize,
+    focks: Vec<Matrix>,
+    errors: Vec<Matrix>,
+}
+
+impl Diis {
+    pub fn new(max_vecs: usize) -> Diis {
+        Diis { max_vecs: max_vecs.max(2), focks: Vec::new(), errors: Vec::new() }
+    }
+
+    /// DIIS error vector e = X†(FDS − SDF)X.
+    pub fn error_vector(f: &Matrix, d: &Matrix, s: &Matrix, x: &Matrix) -> Matrix {
+        let fds = f.matmul(d).matmul(s);
+        let mut e = fds.clone();
+        let sdf = s.matmul(d).matmul(f);
+        e.sub_assign(&sdf);
+        x.transpose().matmul(&e).matmul(x)
+    }
+
+    /// Push a new (F, error) pair and return the extrapolated Fock
+    /// matrix (or a clone of F while the history is too short).
+    pub fn extrapolate(&mut self, f: &Matrix, err: Matrix) -> Matrix {
+        self.focks.push(f.clone());
+        self.errors.push(err);
+        if self.focks.len() > self.max_vecs {
+            self.focks.remove(0);
+            self.errors.remove(0);
+        }
+        let m = self.focks.len();
+        if m < 2 {
+            return f.clone();
+        }
+        // B_ij = <e_i, e_j>; bordered with the -1 constraint row/col.
+        let dim = m + 1;
+        let mut b = vec![0.0; dim * dim];
+        for i in 0..m {
+            for j in 0..m {
+                b[i * dim + j] = self.errors[i].dot(&self.errors[j]);
+            }
+            b[i * dim + m] = -1.0;
+            b[m * dim + i] = -1.0;
+        }
+        b[m * dim + m] = 0.0;
+        let mut rhs = vec![0.0; dim];
+        rhs[m] = -1.0;
+        let Some(c) = solve_dense(&mut b, &mut rhs, dim) else {
+            // Singular B (linearly dependent errors): drop the history
+            // and fall back to the raw Fock matrix.
+            self.focks.truncate(1);
+            self.errors.truncate(1);
+            return f.clone();
+        };
+        let mut out = Matrix::zeros(f.rows, f.cols);
+        for (k, fk) in self.focks.iter().enumerate() {
+            let ck = c[k];
+            for (o, v) in out.data.iter_mut().zip(&fk.data) {
+                *o += ck * v;
+            }
+        }
+        out
+    }
+
+    /// Current history depth.
+    pub fn len(&self) -> usize {
+        self.focks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.focks.is_empty()
+    }
+}
+
+/// Gaussian elimination with partial pivoting; returns None if singular.
+fn solve_dense(a: &mut [f64], rhs: &mut [f64], n: usize) -> Option<Vec<f64>> {
+    for col in 0..n {
+        // Pivot.
+        let mut piv = col;
+        for r in (col + 1)..n {
+            if a[r * n + col].abs() > a[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        if a[piv * n + col].abs() < 1e-14 {
+            return None;
+        }
+        if piv != col {
+            for c in 0..n {
+                a.swap(col * n + c, piv * n + c);
+            }
+            rhs.swap(col, piv);
+        }
+        let inv = 1.0 / a[col * n + col];
+        for r in (col + 1)..n {
+            let f = a[r * n + col] * inv;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..n {
+                a[r * n + c] -= f * a[col * n + c];
+            }
+            rhs[r] -= f * rhs[col];
+        }
+    }
+    // Back substitution.
+    let mut x = vec![0.0; n];
+    for r in (0..n).rev() {
+        let mut v = rhs[r];
+        for c in (r + 1)..n {
+            v -= a[r * n + c] * x[c];
+        }
+        x[r] = v / a[r * n + r];
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solver_known_system() {
+        // [[2,1],[1,3]] x = [3,5] -> x = [4/5, 7/5]
+        let mut a = vec![2.0, 1.0, 1.0, 3.0];
+        let mut rhs = vec![3.0, 5.0];
+        let x = solve_dense(&mut a, &mut rhs, 2).unwrap();
+        assert!((x[0] - 0.8).abs() < 1e-12);
+        assert!((x[1] - 1.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solver_detects_singular() {
+        let mut a = vec![1.0, 2.0, 2.0, 4.0];
+        let mut rhs = vec![1.0, 2.0];
+        assert!(solve_dense(&mut a, &mut rhs, 2).is_none());
+    }
+
+    #[test]
+    fn extrapolation_weights_sum_to_one() {
+        // With two orthogonal error vectors, coefficients solve the
+        // constrained problem; extrapolated F = Σ c_i F_i with Σc = 1.
+        let mut diis = Diis::new(4);
+        let f1 = Matrix::from_rows(&[&[1.0, 0.0], &[0.0, 1.0]]);
+        let mut e1 = Matrix::zeros(2, 2);
+        e1.set(0, 0, 1.0);
+        let _ = diis.extrapolate(&f1, e1);
+        let f2 = Matrix::from_rows(&[&[3.0, 0.0], &[0.0, 3.0]]);
+        let mut e2 = Matrix::zeros(2, 2);
+        e2.set(1, 1, 1.0);
+        let out = diis.extrapolate(&f2, e2);
+        // equal error norms -> c = (1/2, 1/2) -> F = 2 I.
+        assert!((out.get(0, 0) - 2.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn window_is_bounded() {
+        let mut diis = Diis::new(3);
+        for k in 0..10 {
+            let f = Matrix::identity(2);
+            let mut e = Matrix::zeros(2, 2);
+            e.set(0, 0, 1.0 + k as f64);
+            let _ = diis.extrapolate(&f, e);
+        }
+        assert!(diis.len() <= 3);
+    }
+}

@@ -1,0 +1,190 @@
+//! The RHF SCF driver.
+
+use crate::basis::{BasisName, BasisSet};
+use crate::chem::Molecule;
+use crate::hf::FockBuilder;
+use crate::integrals::oneint::{core_hamiltonian, overlap_matrix};
+use crate::integrals::SchwarzScreen;
+use crate::linalg::{eigen, Matrix};
+
+use super::diis::Diis;
+use super::{density_from_coeffs, electronic_energy};
+
+/// SCF configuration + entry point.
+#[derive(Debug, Clone)]
+pub struct RhfDriver {
+    pub max_iter: usize,
+    /// Convergence on RMS density change (paper §3).
+    pub conv_dens: f64,
+    pub use_diis: bool,
+    pub schwarz_tau: f64,
+}
+
+impl Default for RhfDriver {
+    fn default() -> Self {
+        RhfDriver { max_iter: 60, conv_dens: 1e-8, use_diis: true, schwarz_tau: SchwarzScreen::DEFAULT_TAU }
+    }
+}
+
+/// Converged (or not) SCF state.
+#[derive(Debug, Clone)]
+pub struct ScfResult {
+    pub energy: f64,
+    pub e_nuclear: f64,
+    pub e_electronic: f64,
+    pub iterations: usize,
+    pub converged: bool,
+    pub orbital_energies: Vec<f64>,
+    pub density: Matrix,
+    pub fock: Matrix,
+    /// Per-iteration (energy, rms density change) history.
+    pub history: Vec<(f64, f64)>,
+    /// Seconds spent inside Fock builds (the paper's reported metric).
+    pub fock_build_seconds: f64,
+}
+
+impl RhfDriver {
+    /// Run RHF with the given Fock-build engine.
+    pub fn run(
+        &self,
+        mol: &Molecule,
+        basis_name: BasisName,
+        builder: &mut dyn FockBuilder,
+    ) -> anyhow::Result<ScfResult> {
+        let basis = BasisSet::assemble(mol, basis_name)?;
+        self.run_with_basis(mol, &basis, builder)
+    }
+
+    /// Run RHF with a pre-assembled basis (lets callers reuse screening).
+    pub fn run_with_basis(
+        &self,
+        mol: &Molecule,
+        basis: &BasisSet,
+        builder: &mut dyn FockBuilder,
+    ) -> anyhow::Result<ScfResult> {
+        let n_occ = mol.n_occ()?;
+        anyhow::ensure!(
+            n_occ <= basis.n_bf,
+            "{} electrons need {} orbitals but basis has {}",
+            mol.n_electrons(),
+            n_occ,
+            basis.n_bf
+        );
+        let e_nn = mol.nuclear_repulsion();
+        let s = overlap_matrix(basis);
+        let x = eigen::inv_sqrt(&s)?;
+        let h = core_hamiltonian(basis, mol);
+        let screen = SchwarzScreen::build(basis, self.schwarz_tau);
+
+        // Core guess.
+        let mut d = self.new_density(&h, &x, n_occ).1;
+        let mut diis = Diis::new(8);
+        let mut history = Vec::new();
+        let mut fock_seconds = 0.0;
+        let mut last = (0.0, f64::INFINITY);
+        let mut fock = h.clone();
+        let mut orbital_energies = Vec::new();
+
+        let mut converged = false;
+        let mut iterations = 0;
+        for it in 0..self.max_iter {
+            iterations = it + 1;
+            let t0 = std::time::Instant::now();
+            let g = builder.build_2e(basis, &screen, &d);
+            fock_seconds += t0.elapsed().as_secs_f64();
+            let mut f = h.clone();
+            f.add_assign(&g);
+            let e_elec = electronic_energy(&d, &h, &f);
+
+            let f_use = if self.use_diis {
+                let err = Diis::error_vector(&f, &d, &s, &x);
+                diis.extrapolate(&f, err)
+            } else {
+                f.clone()
+            };
+
+            let (eps, d_new) = self.new_density(&f_use, &x, n_occ);
+            let mut delta = d_new.clone();
+            delta.sub_assign(&d);
+            let rms = delta.rms();
+            history.push((e_elec + e_nn, rms));
+            log::debug!("iter {it}: E = {:.10} dD = {rms:.3e}", e_elec + e_nn);
+
+            d = d_new;
+            fock = f;
+            orbital_energies = eps;
+            last = (e_elec, rms);
+            if rms < self.conv_dens {
+                converged = true;
+                break;
+            }
+        }
+
+        Ok(ScfResult {
+            energy: last.0 + e_nn,
+            e_nuclear: e_nn,
+            e_electronic: last.0,
+            iterations,
+            converged,
+            orbital_energies,
+            density: d,
+            fock,
+            history,
+            fock_build_seconds: fock_seconds,
+        })
+    }
+
+    /// Diagonalize F in the orthogonal basis and form the new density.
+    fn new_density(&self, f: &Matrix, x: &Matrix, n_occ: usize) -> (Vec<f64>, Matrix) {
+        let fp = x.transpose().matmul(f).matmul(x);
+        let eig = eigen::eigh(&fp);
+        let c = x.matmul(&eig.vectors);
+        (eig.values, density_from_coeffs(&c, n_occ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chem::molecules;
+    use crate::hf::serial::SerialFock;
+
+    fn run(mol: &Molecule, basis: BasisName) -> ScfResult {
+        let mut builder = SerialFock::new();
+        RhfDriver::default().run(mol, basis, &mut builder).unwrap()
+    }
+
+    #[test]
+    fn h2_sto3g_energy() {
+        // Szabo & Ostlund: E(RHF/STO-3G, R=1.4) = -1.1167 hartree.
+        let r = run(&molecules::h2(), BasisName::Sto3g);
+        assert!(r.converged, "not converged");
+        assert!((r.energy - (-1.1167)).abs() < 1e-3, "E = {}", r.energy);
+    }
+
+    #[test]
+    fn h2_idempotent_density() {
+        // D S D = 2 D for a converged closed-shell density.
+        let mol = molecules::h2();
+        let r = run(&mol, BasisName::Sto3g);
+        let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+        let s = overlap_matrix(&basis);
+        let dsd = r.density.matmul(&s).matmul(&r.density);
+        let mut want = r.density.clone();
+        want.scale(2.0);
+        assert!(dsd.max_abs_diff(&want) < 1e-6);
+    }
+
+    #[test]
+    fn energy_monotone_late_iterations() {
+        // With DIIS the energy may wiggle early, but the last few
+        // iterations must be tightly clustered.
+        let r = run(&molecules::water(), BasisName::Sto3g);
+        assert!(r.converged);
+        let n = r.history.len();
+        if n >= 3 {
+            let tail: Vec<f64> = r.history[n - 3..].iter().map(|x| x.0).collect();
+            assert!((tail[2] - tail[1]).abs() < 1e-6);
+        }
+    }
+}

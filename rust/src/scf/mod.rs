@@ -1,0 +1,62 @@
+//! Self-consistent-field driver (restricted Hartree–Fock).
+//!
+//! The SCF loop of paper §3: core-Hamiltonian guess, Fock build via a
+//! pluggable [`crate::hf::FockBuilder`], symmetric orthogonalization +
+//! Jacobi diagonalization, density update, DIIS acceleration, and the
+//! RMS-density convergence criterion.
+
+pub mod diis;
+pub mod driver;
+
+pub use driver::{RhfDriver, ScfResult};
+
+use crate::linalg::Matrix;
+
+/// Closed-shell density D = 2 Σ_occ C C† from MO coefficients.
+pub fn density_from_coeffs(c: &Matrix, n_occ: usize) -> Matrix {
+    let n = c.rows;
+    let mut d = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let mut v = 0.0;
+            for k in 0..n_occ {
+                v += c.get(i, k) * c.get(j, k);
+            }
+            d.set(i, j, 2.0 * v);
+        }
+    }
+    d
+}
+
+/// Electronic energy ½ Σ D∘(H + F).
+pub fn electronic_energy(d: &Matrix, h: &Matrix, f: &Matrix) -> f64 {
+    let mut e = 0.0;
+    for i in 0..d.rows {
+        for j in 0..d.cols {
+            e += d.get(i, j) * (h.get(i, j) + f.get(i, j));
+        }
+    }
+    0.5 * e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn density_trace_counts_electrons() {
+        // Tr(D S) = N_elec; with orthonormal C and S = I, Tr D = 2 n_occ.
+        let c = Matrix::identity(4);
+        let d = density_from_coeffs(&c, 2);
+        let tr: f64 = (0..4).map(|i| d.get(i, i)).sum();
+        assert!((tr - 4.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn energy_of_identity() {
+        let d = Matrix::identity(2);
+        let h = Matrix::identity(2);
+        let f = Matrix::identity(2);
+        assert!((electronic_energy(&d, &h, &f) - 2.0).abs() < 1e-14);
+    }
+}

@@ -1,0 +1,150 @@
+//! Minimal CLI argument parser (hand-rolled; no `clap` in the offline
+//! vendor set). Supports `--flag`, `--key value`, `--key=value` and
+//! positional arguments, with typed accessors and a usage printer.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options (last one wins).
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the current process arguments (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Whether `--name` was given as a bare flag.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// String option value.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed option value; returns Err on parse failure.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{name}={s}: {e}")),
+        }
+    }
+
+    /// Typed option with default.
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parse(name)?.unwrap_or(default))
+    }
+
+    /// Comma-separated list of typed values, e.g. `--nodes 4,16,64`.
+    pub fn parse_list<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<Option<Vec<T>>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| {
+                    p.trim()
+                        .parse::<T>()
+                        .map_err(|e| anyhow::anyhow!("--{name} item {p:?}: {e}"))
+                })
+                .collect::<anyhow::Result<Vec<T>>>()
+                .map(Some),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["scf", "--basis", "sto-3g", "--threads=8", "--verbose"]);
+        assert_eq!(a.positional, vec!["scf"]);
+        assert_eq!(a.get("basis"), Some("sto-3g"));
+        assert_eq!(a.get("threads"), Some("8"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_values() {
+        let a = parse(&["--n", "42", "--x", "2.5"]);
+        assert_eq!(a.parse_or("n", 0usize).unwrap(), 42);
+        assert_eq!(a.parse_or("x", 0.0f64).unwrap(), 2.5);
+        assert_eq!(a.parse_or("missing", 7i32).unwrap(), 7);
+        assert!(a.get_parse::<usize>("x").is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--nodes", "4,16,64"]);
+        assert_eq!(
+            a.parse_list::<usize>("nodes").unwrap().unwrap(),
+            vec![4, 16, 64]
+        );
+        assert!(a.parse_list::<usize>("none").unwrap().is_none());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--a", "--b", "v"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+}

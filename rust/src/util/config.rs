@@ -1,0 +1,227 @@
+//! Minimal TOML-subset reader/writer (no serde in the offline vendor
+//! set). Supports `[section]` headers, `key = value` with string, float,
+//! integer and boolean values, and `#` comments — enough for the
+//! calibration files and job configs this framework persists.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A scalar config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Float(f64),
+    Int(i64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: section -> key -> value. The root section is "".
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Config {
+    /// Parse from text. Unknown syntax produces an error naming the line.
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("config line {}: expected key=value: {raw:?}", lineno + 1))?;
+            let value = parse_value(v.trim())
+                .ok_or_else(|| anyhow::anyhow!("config line {}: bad value {v:?}", lineno + 1))?;
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), value);
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    /// Get a value.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    /// Float with default.
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    /// Integer with default.
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    /// Set a value (creates the section if absent).
+    pub fn set(&mut self, section: &str, key: &str, value: Value) {
+        self.sections
+            .entry(section.to_string())
+            .or_default()
+            .insert(key.to_string(), value);
+    }
+
+    /// Serialize back to TOML-subset text.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        // Root section first.
+        if let Some(root) = self.sections.get("") {
+            for (k, v) in root {
+                out.push_str(&format!("{k} = {}\n", fmt_value(v)));
+            }
+        }
+        for (name, kv) in &self.sections {
+            if name.is_empty() {
+                continue;
+            }
+            out.push_str(&format!("\n[{name}]\n"));
+            for (k, v) in kv {
+                out.push_str(&format!("{k} = {}\n", fmt_value(v)));
+            }
+        }
+        out
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_text())?;
+        Ok(())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Only strip # outside quotes (values here never contain quoted #).
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if let Some(inner) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Some(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Some(Value::Bool(true)),
+        "false" => return Some(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Some(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Some(Value::Float(f));
+    }
+    None
+}
+
+fn fmt_value(v: &Value) -> String {
+    match v {
+        Value::Str(s) => format!("{s:?}"),
+        Value::Float(f) => {
+            if f.fract() == 0.0 && f.abs() < 1e15 {
+                format!("{f:.1}")
+            } else {
+                format!("{f}")
+            }
+        }
+        Value::Int(i) => i.to_string(),
+        Value::Bool(b) => b.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let text = r#"
+# calibration file
+version = 1
+
+[cost]
+eri_ns = 135.5
+classes = "s6,l3,l1,d1"
+enabled = true
+"#;
+        let cfg = Config::parse(text).unwrap();
+        assert_eq!(cfg.i64_or("", "version", 0), 1);
+        assert_eq!(cfg.f64_or("cost", "eri_ns", 0.0), 135.5);
+        assert_eq!(cfg.get("cost", "classes").unwrap().as_str(), Some("s6,l3,l1,d1"));
+        assert_eq!(cfg.get("cost", "enabled").unwrap().as_bool(), Some(true));
+
+        let text2 = cfg.to_text();
+        let cfg2 = Config::parse(&text2).unwrap();
+        assert_eq!(cfg2.f64_or("cost", "eri_ns", 0.0), 135.5);
+    }
+
+    #[test]
+    fn bad_line_errors() {
+        assert!(Config::parse("not a kv line").is_err());
+        assert!(Config::parse("k = @@@").is_err());
+    }
+
+    #[test]
+    fn set_and_defaults() {
+        let mut cfg = Config::default();
+        cfg.set("m", "x", Value::Float(2.0));
+        assert_eq!(cfg.f64_or("m", "x", 0.0), 2.0);
+        assert_eq!(cfg.f64_or("m", "missing", 9.0), 9.0);
+        assert_eq!(cfg.i64_or("nope", "x", -1), -1);
+    }
+}

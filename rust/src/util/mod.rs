@@ -1,0 +1,58 @@
+//! Substrate utilities hand-rolled for the offline sandbox (no clap /
+//! serde / rand / criterion in the vendored crate set).
+
+pub mod cli;
+pub mod config;
+pub mod logging;
+pub mod prng;
+pub mod stats;
+pub mod timer;
+
+/// Format a byte count with binary units.
+pub fn human_bytes(b: f64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = b;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{:.0} {}", v, UNITS[u])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Format seconds adaptively (µs/ms/s/min).
+pub fn human_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.2} s", s)
+    } else {
+        format!("{:.1} min", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(human_bytes(512.0), "512 B");
+        assert!(human_bytes(2048.0).starts_with("2.00 K"));
+        assert!(human_bytes(3.0 * 1024.0 * 1024.0 * 1024.0).contains("GiB"));
+    }
+
+    #[test]
+    fn secs_units() {
+        assert!(human_secs(5e-6).contains("µs"));
+        assert!(human_secs(0.25).contains("ms"));
+        assert!(human_secs(10.0).contains(" s"));
+        assert!(human_secs(600.0).contains("min"));
+    }
+}

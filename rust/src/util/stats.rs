@@ -1,0 +1,79 @@
+//! Small statistics helpers shared by the simulator and benches.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Maximum (0.0 for empty).
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(0.0_f64, f64::max)
+}
+
+/// Sum.
+pub fn sum(xs: &[f64]) -> f64 {
+    xs.iter().sum()
+}
+
+/// p-th percentile (0..=100) by nearest-rank on a sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Load-imbalance factor: max/mean (1.0 = perfectly balanced).
+pub fn imbalance(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 {
+        1.0
+    } else {
+        max(xs) / m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((stddev(&xs) - (1.25f64).sqrt()).abs() < 1e-12);
+        assert_eq!(max(&xs), 4.0);
+        assert_eq!(sum(&xs), 10.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+    }
+
+    #[test]
+    fn imbalance_balanced_is_one() {
+        assert_eq!(imbalance(&[2.0, 2.0, 2.0]), 1.0);
+        assert_eq!(imbalance(&[1.0, 3.0]), 1.5);
+        assert_eq!(imbalance(&[]), 1.0);
+    }
+}

@@ -1,0 +1,96 @@
+//! Wall-clock measurement helpers and the hand-rolled bench harness used
+//! by `rust/benches/*` (no criterion in the offline vendor set).
+//!
+//! The paper's appendix notes GAMESS CPU-time timers mislead under
+//! threading and that `omp_get_wtime()` (wall clock) must be used; we
+//! follow suit: everything here is wall clock.
+
+use std::time::Instant;
+
+/// Measure one invocation, returning (result, seconds).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Statistics of repeated timed runs.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub stddev: f64,
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {} (min {}, max {}, sd {}, n={})",
+            super::human_secs(self.mean),
+            super::human_secs(self.min),
+            super::human_secs(self.max),
+            super::human_secs(self.stddev),
+            self.iters
+        )
+    }
+}
+
+/// Run `f` repeatedly: a warmup call, then until `min_iters` iterations
+/// *and* `min_time` seconds have elapsed (whichever is later), capped at
+/// `max_iters`. Returns timing statistics.
+pub fn bench(min_iters: usize, max_iters: usize, min_time: f64, mut f: impl FnMut()) -> BenchStats {
+    f(); // warmup
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while (samples.len() < min_iters || start.elapsed().as_secs_f64() < min_time)
+        && samples.len() < max_iters
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    stats_of(&samples)
+}
+
+fn stats_of(samples: &[f64]) -> BenchStats {
+    let n = samples.len().max(1) as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    BenchStats {
+        iters: samples.len(),
+        mean,
+        min: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        max: samples.iter().cloned().fold(0.0, f64::max),
+        stddev: var.sqrt(),
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_once_positive() {
+        let (v, t) = time_once(|| (0..1000).sum::<usize>());
+        assert_eq!(v, 499_500);
+        assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn bench_runs_min_iters() {
+        let mut count = 0;
+        let st = bench(3, 10, 0.0, || count += 1);
+        assert!(st.iters >= 3);
+        assert!(count >= 4); // warmup + iters
+        assert!(st.min <= st.mean && st.mean <= st.max + 1e-12);
+    }
+}

@@ -1,0 +1,92 @@
+//! Integration: the paper's three parallel engines must produce
+//! *identical physics* to the serial reference through full SCF — the
+//! strongest end-to-end correctness statement (any race, routing error
+//! or missed flush shifts the energy).
+
+use khf::basis::{BasisName, BasisSet};
+use khf::chem::molecules;
+use khf::hf::mpi_only::MpiOnlyFock;
+use khf::hf::private_fock::PrivateFock;
+use khf::hf::serial::SerialFock;
+use khf::hf::shared_fock::SharedFock;
+use khf::hf::FockBuilder;
+use khf::integrals::SchwarzScreen;
+use khf::linalg::Matrix;
+use khf::scf::RhfDriver;
+use khf::util::prng::Rng;
+
+#[test]
+fn full_scf_energy_identical_across_engines() {
+    let mol = molecules::water();
+    let driver = RhfDriver::default();
+    let e_serial = driver.run(&mol, BasisName::Sto3g, &mut SerialFock::new()).unwrap();
+    let e_mpi = driver.run(&mol, BasisName::Sto3g, &mut MpiOnlyFock::new(3)).unwrap();
+    let e_prf = driver.run(&mol, BasisName::Sto3g, &mut PrivateFock::new(2, 3)).unwrap();
+    let e_shf = driver.run(&mol, BasisName::Sto3g, &mut SharedFock::new(2, 3)).unwrap();
+    for (name, e) in [("mpi", &e_mpi), ("private", &e_prf), ("shared", &e_shf)] {
+        assert!(
+            (e.energy - e_serial.energy).abs() < 1e-9,
+            "{name}: {} vs serial {}",
+            e.energy,
+            e_serial.energy
+        );
+        assert_eq!(e.converged, e_serial.converged, "{name}");
+    }
+}
+
+#[test]
+fn fock_matrices_bitwise_close_on_d_shell_system() {
+    // 6-31G(d) fragment: wide shells stress the shared-Fock routing.
+    let mol = khf::chem::graphene::monolayer(4, "c4");
+    let basis = BasisSet::assemble(&mol, BasisName::SixThirtyOneGd).unwrap();
+    let screen = SchwarzScreen::build(&basis, SchwarzScreen::DEFAULT_TAU);
+    let mut rng = Rng::new(2024);
+    let n = basis.n_bf;
+    let mut d = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let x = rng.range(-0.3, 0.3);
+            d.set(i, j, x);
+            d.set(j, i, x);
+        }
+    }
+    let want = SerialFock::new().build_2e(&basis, &screen, &d);
+    for threads in [2, 3, 7] {
+        let got = SharedFock::new(2, threads).build_2e(&basis, &screen, &d);
+        assert!(
+            got.max_abs_diff(&want) < 1e-11,
+            "threads={threads}: {}",
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn repeated_builds_are_deterministic() {
+    // DLB ordering varies between runs, but the sum must not (addition
+    // reordering stays below 1e-12 for this magnitude).
+    let mol = molecules::methane();
+    let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+    let screen = SchwarzScreen::build(&basis, SchwarzScreen::DEFAULT_TAU);
+    let d = Matrix::identity(basis.n_bf);
+    let mut eng = SharedFock::new(2, 4);
+    let a = eng.build_2e(&basis, &screen, &d);
+    let b = eng.build_2e(&basis, &screen, &d);
+    assert!(a.max_abs_diff(&b) < 1e-11);
+}
+
+#[test]
+fn stats_consistent_across_engines() {
+    let mol = molecules::water();
+    let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+    let screen = SchwarzScreen::build(&basis, SchwarzScreen::DEFAULT_TAU);
+    let d = Matrix::identity(basis.n_bf);
+    let mut serial = SerialFock::new();
+    let mut shf = SharedFock::new(1, 3);
+    let mut prf = PrivateFock::new(1, 3);
+    serial.build_2e(&basis, &screen, &d);
+    shf.build_2e(&basis, &screen, &d);
+    prf.build_2e(&basis, &screen, &d);
+    assert_eq!(serial.stats.quartets_computed, shf.stats.quartets_computed);
+    assert_eq!(serial.stats.quartets_computed, prf.stats.quartets_computed);
+}

@@ -1,0 +1,246 @@
+//! Property-based tests (hand-rolled harness over the deterministic
+//! PRNG — no proptest crate in the offline vendor set). Each property
+//! runs across a seed sweep; failures print the seed for replay.
+
+use khf::basis::{BasisName, BasisSet};
+use khf::chem::geometry::{Atom, Molecule};
+use khf::chem::Element;
+use khf::hf::quartets::{for_each_canonical, n_canonical, pair_from_index};
+use khf::hf::scatter::{distinct_perms, fold_symmetric, scatter_value};
+use khf::hf::serial::SerialFock;
+use khf::hf::shared_fock::SharedFock;
+use khf::hf::FockBuilder;
+use khf::integrals::schwarz::pair_index;
+use khf::integrals::{EriEngine, SchwarzScreen};
+use khf::linalg::{eigen, Matrix};
+use khf::util::prng::Rng;
+
+/// Run a property over `n` seeds.
+fn forall_seeds(n: u64, prop: impl Fn(&mut Rng, u64)) {
+    for seed in 0..n {
+        let mut rng = Rng::new(0xFEED ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        prop(&mut rng, seed);
+    }
+}
+
+fn random_molecule(rng: &mut Rng, max_atoms: usize) -> Molecule {
+    // Random H/He cluster with a minimum separation (keeps S positive
+    // definite).
+    let n = 2 + rng.below(max_atoms.saturating_sub(1));
+    let mut atoms: Vec<Atom> = Vec::new();
+    while atoms.len() < n {
+        let pos = [rng.range(-4.0, 4.0), rng.range(-4.0, 4.0), rng.range(-4.0, 4.0)];
+        if atoms.iter().all(|a| khf::chem::geometry::dist(a.pos, pos) > 1.2) {
+            let e = if rng.below(2) == 0 { Element::H } else { Element::He };
+            atoms.push(Atom::new(e, pos));
+        }
+    }
+    // Even electron count for RHF.
+    let ne: u32 = atoms.iter().map(|a| a.element.charge()).sum();
+    if ne % 2 == 1 {
+        atoms.pop();
+    }
+    Molecule::new("random", atoms)
+}
+
+#[test]
+fn prop_pair_index_bijection() {
+    forall_seeds(50, |rng, seed| {
+        let i = rng.below(2000);
+        let j = rng.below(i + 1);
+        assert_eq!(pair_from_index(pair_index(i, j)), (i, j), "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_quartet_enumeration_count() {
+    forall_seeds(10, |rng, seed| {
+        let n = 1 + rng.below(9);
+        let mut count = 0u64;
+        for_each_canonical(n, |_| count += 1);
+        assert_eq!(count, n_canonical(n), "seed {seed} n={n}");
+    });
+}
+
+#[test]
+fn prop_distinct_perms_all_map_to_same_canonical_quartet() {
+    forall_seeds(200, |rng, seed| {
+        let idx: Vec<usize> = (0..4).map(|_| rng.below(6)).collect();
+        let mut buf = [(0usize, 0usize, 0usize, 0usize); 8];
+        let np = distinct_perms(idx[0], idx[1], idx[2], idx[3], &mut buf);
+        assert!((1..=8).contains(&np), "seed {seed}");
+        // Every permutation must be one of the 8 symmetry images.
+        for &(a, b, c, d) in &buf[..np] {
+            let base = canonical_quartet(idx[0], idx[1], idx[2], idx[3]);
+            assert_eq!(canonical_quartet(a, b, c, d), base, "seed {seed}");
+        }
+        // Pairwise distinct.
+        for x in 0..np {
+            for y in 0..x {
+                assert_ne!(buf[x], buf[y], "seed {seed}");
+            }
+        }
+    });
+}
+
+fn canonical_quartet(a: usize, b: usize, c: usize, d: usize) -> (usize, usize, usize, usize) {
+    let (p, q) = if a >= b { (a, b) } else { (b, a) };
+    let (r, s) = if c >= d { (c, d) } else { (d, c) };
+    if (p, q) >= (r, s) {
+        (p, q, r, s)
+    } else {
+        (r, s, p, q)
+    }
+}
+
+#[test]
+fn prop_scatter_conserves_total_weight() {
+    // Σ over emitted Coulomb weights equals Σ over the full-matrix
+    // expansion halved appropriately: checked indirectly — G from the
+    // canonical scatter equals G from an explicit all-permutation
+    // accumulation with mirroring.
+    forall_seeds(40, |rng, seed| {
+        let n = 6;
+        let mut d = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let x = rng.range(-1.0, 1.0);
+                d.set(i, j, x);
+                d.set(j, i, x);
+            }
+        }
+        let (mu, nu) = {
+            let a = rng.below(n);
+            (a, rng.below(a + 1))
+        };
+        let (la, si) = {
+            let a = rng.below(n);
+            (a, rng.below(a + 1))
+        };
+        if (la, si) > (mu, nu) {
+            return;
+        }
+        let g = rng.range(-2.0, 2.0);
+
+        // Canonical scatter + fold.
+        let mut acc = Matrix::zeros(n, n);
+        scatter_value(mu, nu, la, si, g, &d, &mut |a, b, v| acc.add(a, b, v));
+        fold_symmetric(&mut acc);
+
+        // Oracle: full-matrix J/K over all distinct permutations.
+        let mut want = Matrix::zeros(n, n);
+        let mut buf = [(0usize, 0usize, 0usize, 0usize); 8];
+        let np = distinct_perms(mu, nu, la, si, &mut buf);
+        for &(a, b, c, dd) in &buf[..np] {
+            want.add(a, b, g * d.get(c, dd));
+            want.add(a, c, -0.5 * g * d.get(b, dd));
+        }
+        assert!(
+            acc.max_abs_diff(&want) < 1e-12,
+            "seed {seed}: quartet ({mu}{nu}|{la}{si}) diff {}",
+            acc.max_abs_diff(&want)
+        );
+    });
+}
+
+#[test]
+fn prop_random_molecules_engines_agree() {
+    forall_seeds(6, |rng, seed| {
+        let mol = random_molecule(rng, 6);
+        if mol.atoms.len() < 2 {
+            return;
+        }
+        let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+        let screen = SchwarzScreen::build(&basis, SchwarzScreen::DEFAULT_TAU);
+        let n = basis.n_bf;
+        let mut d = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let x = rng.range(-0.5, 0.5);
+                d.set(i, j, x);
+                d.set(j, i, x);
+            }
+        }
+        let want = SerialFock::new().build_2e(&basis, &screen, &d);
+        let got = SharedFock::new(2, 2).build_2e(&basis, &screen, &d);
+        assert!(
+            got.max_abs_diff(&want) < 1e-11,
+            "seed {seed} atoms {}: diff {}",
+            mol.atoms.len(),
+            got.max_abs_diff(&want)
+        );
+    });
+}
+
+#[test]
+fn prop_eri_positive_semidefinite_diagonal() {
+    // (ij|ij) >= 0 for random geometries (Schwarz soundness).
+    forall_seeds(6, |rng, seed| {
+        let mol = random_molecule(rng, 5);
+        let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+        let mut eng = EriEngine::new();
+        let mut buf = vec![0.0; 6 * 6 * 6 * 6];
+        for i in 0..basis.n_shells() {
+            for j in 0..=i {
+                eng.shell_quartet(&basis, i, j, i, j, &mut buf);
+                let (ni, nj) = (basis.shells[i].n_bf(), basis.shells[j].n_bf());
+                for a in 0..ni {
+                    for b in 0..nj {
+                        let v = buf[((a * nj + b) * ni + a) * nj + b];
+                        assert!(v > -1e-12, "seed {seed} ({i}{j}): {v}");
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_eigh_reconstructs_random_symmetric() {
+    forall_seeds(20, |rng, seed| {
+        let n = 2 + rng.below(12);
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let x = rng.range(-2.0, 2.0);
+                a.set(i, j, x);
+                a.set(j, i, x);
+            }
+        }
+        let e = eigen::eigh(&a);
+        let av = a.matmul(&e.vectors);
+        let mut vl = e.vectors.clone();
+        for k in 0..n {
+            for i in 0..n {
+                vl.set(i, k, vl.get(i, k) * e.values[k]);
+            }
+        }
+        assert!(av.max_abs_diff(&vl) < 1e-8, "seed {seed} n={n}");
+    });
+}
+
+#[test]
+fn prop_schwarz_bound_sound_on_random_offdiagonal() {
+    forall_seeds(4, |rng, seed| {
+        let mol = random_molecule(rng, 4);
+        let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+        let screen = SchwarzScreen::build(&basis, 0.0);
+        let mut eng = EriEngine::new();
+        let mut buf = vec![0.0; 6 * 6 * 6 * 6];
+        let ns = basis.n_shells();
+        for _ in 0..20 {
+            let i = rng.below(ns);
+            let j = rng.below(i + 1);
+            let k = rng.below(i + 1);
+            let l = rng.below(k + 1);
+            eng.shell_quartet(&basis, i, j, k, l, &mut buf);
+            let sz: usize = [i, j, k, l].iter().map(|&x| basis.shells[x].n_bf()).product();
+            let mx = buf[..sz].iter().map(|v| v.abs()).fold(0.0, f64::max);
+            assert!(
+                mx <= screen.q(i, j) * screen.q(k, l) * (1.0 + 1e-9) + 1e-12,
+                "seed {seed}: ({i}{j}|{k}{l}) {mx} > {}",
+                screen.q(i, j) * screen.q(k, l)
+            );
+        }
+    });
+}

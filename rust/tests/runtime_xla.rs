@@ -1,0 +1,109 @@
+//! Integration: the PJRT runtime + AOT artifacts. Skips (with a loud
+//! message) when `make artifacts` hasn't run — CI runs it via the
+//! Makefile `test` target which orders artifacts first.
+
+use khf::basis::{BasisName, BasisSet};
+use khf::chem::molecules;
+use khf::hf::serial::SerialFock;
+use khf::hf::FockBuilder;
+use khf::integrals::SchwarzScreen;
+use khf::linalg::Matrix;
+use khf::runtime::{Runtime, XlaFockBuilder};
+use khf::scf::RhfDriver;
+
+fn artifacts_ready() -> bool {
+    Runtime::default_dir().join("fock2e_8.hlo.txt").exists()
+}
+
+macro_rules! need_artifacts {
+    () => {
+        if !artifacts_ready() {
+            eprintln!("SKIP: artifacts missing — run `make artifacts`");
+            return;
+        }
+    };
+}
+
+#[test]
+fn fock2e_artifact_matches_serial_engine() {
+    need_artifacts!();
+    let mol = molecules::water();
+    let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+    let screen = SchwarzScreen::build(&basis, 0.0);
+    let mut d = Matrix::identity(basis.n_bf);
+    d.scale(0.37);
+    let want = SerialFock::new().build_2e(&basis, &screen, &d);
+    let rt = Runtime::cpu(Runtime::default_dir()).unwrap();
+    let mut xla = XlaFockBuilder::new(rt, &basis).unwrap();
+    let got = xla.build_2e(&basis, &screen, &d);
+    assert!(
+        got.max_abs_diff(&want) < 1e-9,
+        "XLA vs serial: {}",
+        got.max_abs_diff(&want)
+    );
+}
+
+#[test]
+fn density_artifact_matches_rust() {
+    need_artifacts!();
+    let mol = molecules::water();
+    let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+    let rt = Runtime::cpu(Runtime::default_dir()).unwrap();
+    let mut xla = XlaFockBuilder::new(rt, &basis).unwrap();
+    // Orthonormal C via identity: D = 2 * I_occ.
+    let c = Matrix::identity(basis.n_bf);
+    let d = xla.density_xla(&c, 3).unwrap();
+    let want = khf::scf::density_from_coeffs(&c, 3);
+    assert!(d.max_abs_diff(&want) < 1e-12);
+}
+
+#[test]
+fn xla_scf_matches_serial_scf() {
+    need_artifacts!();
+    let mol = molecules::water();
+    let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+    let driver = RhfDriver::default();
+    let serial = driver.run(&mol, BasisName::Sto3g, &mut SerialFock::new()).unwrap();
+    let rt = Runtime::cpu(Runtime::default_dir()).unwrap();
+    let mut xla = XlaFockBuilder::new(rt, &basis).unwrap();
+    let dense = driver.run_with_basis(&mol, &basis, &mut xla).unwrap();
+    assert!(dense.converged);
+    assert!(
+        (dense.energy - serial.energy).abs() < 1e-7,
+        "xla {} vs serial {}",
+        dense.energy,
+        serial.energy
+    );
+}
+
+#[test]
+fn colreduce_artifact_runs() {
+    need_artifacts!();
+    let mut rt = Runtime::cpu(Runtime::default_dir()).unwrap();
+    let name = "colreduce_4096_64";
+    if !rt.has_artifact(name) {
+        eprintln!("SKIP: {name} missing");
+        return;
+    }
+    let m = 4096;
+    let t = 64;
+    let buf: Vec<f64> = (0..m * t).map(|i| (i % 97) as f64 * 0.01).collect();
+    let out = rt.execute_f64(name, &[(&buf, &[m, t])]).unwrap();
+    assert_eq!(out[0].len(), m);
+    for (row, o) in out[0].iter().enumerate().step_by(511) {
+        let want: f64 = (0..t).map(|c| ((row * t + c) % 97) as f64 * 0.01).sum();
+        assert!((o - want).abs() < 1e-9, "row {row}: {o} vs {want}");
+    }
+}
+
+#[test]
+fn oversized_basis_rejected_cleanly() {
+    need_artifacts!();
+    // Benzene STO-3G fits (36 -> 40), but a 6-31G(d) graphene patch
+    // beyond 64 BFs must produce a helpful error, not a panic.
+    let mol = khf::chem::graphene::monolayer(6, "c6");
+    let basis = BasisSet::assemble(&mol, BasisName::SixThirtyOneGd).unwrap(); // 90 BFs
+    let rt = Runtime::cpu(Runtime::default_dir()).unwrap();
+    let err = XlaFockBuilder::new(rt, &basis).err().expect("should fail");
+    assert!(err.to_string().contains("grid"), "{err}");
+}

@@ -1,0 +1,87 @@
+//! Integration: RHF energies against literature anchors and internal
+//! consistency across basis sets.
+
+use khf::basis::BasisName;
+use khf::chem::molecules;
+use khf::hf::serial::SerialFock;
+use khf::scf::RhfDriver;
+
+fn energy(mol: &khf::chem::Molecule, basis: BasisName) -> khf::scf::ScfResult {
+    RhfDriver::default()
+        .run(mol, basis, &mut SerialFock::new())
+        .unwrap()
+}
+
+#[test]
+fn h2_sto3g_matches_szabo() {
+    // Szabo & Ostlund: -1.1167 Ha at R = 1.4 a0.
+    let r = energy(&molecules::h2(), BasisName::Sto3g);
+    assert!(r.converged);
+    assert!((r.energy - (-1.1167)).abs() < 5e-4, "E = {}", r.energy);
+}
+
+#[test]
+fn water_sto3g_matches_literature() {
+    // RHF/STO-3G near experimental geometry: ≈ -74.963 Ha.
+    let r = energy(&molecules::water(), BasisName::Sto3g);
+    assert!(r.converged);
+    assert!((r.energy - (-74.963)).abs() < 2e-3, "E = {}", r.energy);
+}
+
+#[test]
+fn methane_sto3g_matches_literature() {
+    // RHF/STO-3G: ≈ -39.727 Ha.
+    let r = energy(&molecules::methane(), BasisName::Sto3g);
+    assert!(r.converged);
+    assert!((r.energy - (-39.727)).abs() < 3e-3, "E = {}", r.energy);
+}
+
+#[test]
+fn h2_631g_below_sto3g() {
+    // Variational principle: the bigger basis gives a lower energy.
+    let small = energy(&molecules::h2(), BasisName::Sto3g);
+    let big = energy(&molecules::h2(), BasisName::SixThirtyOneG);
+    assert!(big.converged);
+    assert!(big.energy < small.energy, "{} !< {}", big.energy, small.energy);
+    // RHF/6-31G for H2 near R=1.4: ≈ -1.1267 Ha.
+    assert!((big.energy - (-1.1267)).abs() < 2e-3, "E = {}", big.energy);
+}
+
+#[test]
+fn orbital_energies_aufbau() {
+    // Occupied orbital energies below virtuals; HOMO of water negative.
+    let r = energy(&molecules::water(), BasisName::Sto3g);
+    let n_occ = 5;
+    let homo = r.orbital_energies[n_occ - 1];
+    let lumo = r.orbital_energies[n_occ];
+    assert!(homo < 0.0 && lumo > homo, "homo {homo} lumo {lumo}");
+}
+
+#[test]
+fn nuclear_plus_electronic_decomposition() {
+    let r = energy(&molecules::water(), BasisName::Sto3g);
+    assert!((r.e_nuclear + r.e_electronic - r.energy).abs() < 1e-10);
+    assert!(r.e_nuclear > 0.0 && r.e_electronic < 0.0);
+}
+
+#[test]
+fn benzene_sto3g_converges() {
+    // 36 BFs, 222 shells-pairs scale check — and a known ballpark:
+    // RHF/STO-3G benzene ≈ -227.89 Ha.
+    let r = energy(&molecules::benzene(), BasisName::Sto3g);
+    assert!(r.converged);
+    assert!((r.energy - (-227.89)).abs() < 0.05, "E = {}", r.energy);
+}
+
+#[test]
+fn graphene_fragment_631gd_converges() {
+    // A C2 fragment exercises d shells through the entire SCF stack.
+    let mol = khf::chem::graphene::monolayer(2, "c2");
+    let mut builder = SerialFock::new();
+    let r = RhfDriver { max_iter: 100, ..Default::default() }
+        .run(&mol, BasisName::SixThirtyOneGd, &mut builder)
+        .unwrap();
+    assert!(r.converged, "C2/6-31G(d) did not converge");
+    // Two carbons: E well below 2x E(C) ≈ -75 Ha.
+    assert!(r.energy < -74.0, "E = {}", r.energy);
+}
