@@ -35,8 +35,10 @@ fn main() -> anyhow::Result<()> {
     let artifacts = Runtime::default_dir();
     if artifacts.join("fock2e_8.hlo.txt").exists() {
         let rt = Runtime::cpu(&artifacts)?;
-        let mut xla = XlaFockBuilder::new(rt, &basis)?;
-        let r = driver.run_with_basis(&mol, &basis, &mut xla)?;
+        // One shell-pair store serves the dense tabulation and the SCF.
+        let store = std::sync::Arc::new(khf::integrals::ShellPairStore::build(&basis));
+        let mut xla = XlaFockBuilder::new_with_store(rt, &basis, &store)?;
+        let r = driver.run_with_store(&mol, &basis, store, &mut xla)?;
         println!(
             "   E = {:.8} Ha in {} iterations (literature: -74.963) — Fock via Pallas/PJRT, {}",
             r.energy,

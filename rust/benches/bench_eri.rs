@@ -9,7 +9,7 @@ use khf::chem::graphene;
 use khf::cluster::costmodel::pair_class;
 use khf::coordinator::report;
 use khf::hf::scatter::scatter_block;
-use khf::integrals::EriEngine;
+use khf::integrals::{EriEngine, ShellPairStore};
 use khf::linalg::Matrix;
 use khf::util::timer;
 
@@ -34,6 +34,13 @@ fn main() {
         }
     }
 
+    let store = ShellPairStore::build(&basis);
+    println!(
+        "shell-pair store: {} pairs, {} prim pairs, {}\n",
+        store.n_pairs_stored(),
+        store.n_prim_pairs(),
+        khf::util::human_bytes(store.bytes() as f64)
+    );
     let mut eng = EriEngine::new();
     let mut block = vec![0.0; 6 * 6 * 6 * 6];
     let d = Matrix::identity(basis.n_bf);
@@ -59,7 +66,7 @@ fn main() {
                 continue; // symmetric; keep the table compact
             }
             let st = timer::bench(50, 5000, 0.05, || {
-                eng.shell_quartet(&basis, i, j, k, l, &mut block);
+                eng.shell_quartet(&basis, &store, i, j, k, l, &mut block);
                 scatter_block(&basis, (i, j, k, l), &block, &d, &mut |a, b, v| {
                     g.add(a, b, v)
                 });
@@ -76,12 +83,13 @@ fn main() {
     timer::black_box(&g);
 
     // Whole-build throughput on a small real system.
-    let screen = khf::integrals::SchwarzScreen::build(&basis, 1e-10);
+    let screen = khf::integrals::SchwarzScreen::build_with_store(&basis, &store, 1e-10);
     let mut serial = khf::hf::serial::SerialFock::new();
     let dm = Matrix::identity(basis.n_bf);
-    use khf::hf::FockBuilder;
+    use khf::hf::{FockBuilder, FockContext};
+    let ctx = FockContext::new(&basis, &store, &screen, &dm);
     let st = timer::bench(1, 3, 0.1, || {
-        timer::black_box(serial.build_2e(&basis, &screen, &dm));
+        timer::black_box(serial.build_2e(&ctx));
     });
     println!(
         "\nfull c16 Fock build: {} ({} quartets -> {:.2e} quartets/s)",

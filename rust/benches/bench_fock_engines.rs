@@ -13,16 +13,18 @@ use khf::hf::mpi_only::MpiOnlyFock;
 use khf::hf::private_fock::PrivateFock;
 use khf::hf::serial::SerialFock;
 use khf::hf::shared_fock::SharedFock;
-use khf::hf::FockBuilder;
-use khf::integrals::SchwarzScreen;
+use khf::hf::{FockBuilder, FockContext};
+use khf::integrals::{SchwarzScreen, ShellPairStore};
 use khf::linalg::Matrix;
 use khf::util::timer;
 
 fn main() {
     let mol = graphene::bilayer(4, "c8");
     let basis = BasisSet::assemble(&mol, BasisName::SixThirtyOneGd).unwrap();
-    let screen = SchwarzScreen::build(&basis, 1e-10);
+    let store = ShellPairStore::build(&basis);
+    let screen = SchwarzScreen::build_with_store(&basis, &store, 1e-10);
     let d = Matrix::identity(basis.n_bf);
+    let ctx = FockContext::new(&basis, &store, &screen, &d);
 
     println!("== Fock-build engines on c8 bilayer / 6-31G(d) ({} BFs) ==\n", basis.n_bf);
     let mut rows = vec![vec![
@@ -34,7 +36,7 @@ fn main() {
 
     let mut serial = SerialFock::new();
     let st_serial = timer::bench(1, 3, 0.1, || {
-        timer::black_box(serial.build_2e(&basis, &screen, &d));
+        timer::black_box(serial.build_2e(&ctx));
     });
     rows.push(vec![
         "serial".into(),
@@ -55,19 +57,19 @@ fn main() {
     for (r, t) in [(1usize, 2usize), (2, 2), (4, 2)] {
         let mut eng = MpiOnlyFock::new(r * t);
         let st = timer::bench(1, 3, 0.1, || {
-            timer::black_box(eng.build_2e(&basis, &screen, &d));
+            timer::black_box(eng.build_2e(&ctx));
         });
         add("mpi-only", format!("{} ranks", r * t), st);
 
         let mut eng = PrivateFock::new(r, t);
         let st = timer::bench(1, 3, 0.1, || {
-            timer::black_box(eng.build_2e(&basis, &screen, &d));
+            timer::black_box(eng.build_2e(&ctx));
         });
         add("private-fock", format!("{r}x{t}"), st);
 
         let mut eng = SharedFock::new(r, t);
         let st = timer::bench(1, 3, 0.1, || {
-            timer::black_box(eng.build_2e(&basis, &screen, &d));
+            timer::black_box(eng.build_2e(&ctx));
         });
         add("shared-fock", format!("{r}x{t}"), st);
     }

@@ -8,8 +8,8 @@ use khf::basis::{BasisName, BasisSet};
 use khf::chem::molecules;
 use khf::coordinator::report;
 use khf::hf::serial::SerialFock;
-use khf::hf::FockBuilder;
-use khf::integrals::SchwarzScreen;
+use khf::hf::{FockBuilder, FockContext};
+use khf::integrals::{SchwarzScreen, ShellPairStore};
 use khf::linalg::Matrix;
 use khf::runtime::{Runtime, XlaFockBuilder};
 use khf::util::timer;
@@ -32,22 +32,24 @@ fn main() {
     ]];
     for mol in [molecules::h2(), molecules::water(), molecules::methane(), molecules::benzene()] {
         let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
-        let screen = SchwarzScreen::build(&basis, 0.0);
+        let store = ShellPairStore::build(&basis);
+        let screen = SchwarzScreen::build_with_store(&basis, &store, 0.0);
         let mut d = Matrix::identity(basis.n_bf);
         d.scale(0.4);
+        let ctx = FockContext::new(&basis, &store, &screen, &d);
 
         let mut serial = SerialFock::new();
         let st_serial = timer::bench(3, 30, 0.3, || {
-            timer::black_box(serial.build_2e(&basis, &screen, &d));
+            timer::black_box(serial.build_2e(&ctx));
         });
-        let g_serial = serial.build_2e(&basis, &screen, &d);
+        let g_serial = serial.build_2e(&ctx);
 
         let rt = Runtime::cpu(&rt_dir).unwrap();
-        let mut xla = XlaFockBuilder::new(rt, &basis).unwrap();
+        let mut xla = XlaFockBuilder::new_with_store(rt, &basis, &store).unwrap();
         let st_xla = timer::bench(3, 30, 0.3, || {
-            timer::black_box(xla.build_2e(&basis, &screen, &d));
+            timer::black_box(xla.build_2e(&ctx));
         });
-        let g_xla = xla.build_2e(&basis, &screen, &d);
+        let g_xla = xla.build_2e(&ctx);
 
         rows.push(vec![
             mol.name.clone(),

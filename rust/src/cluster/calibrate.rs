@@ -8,7 +8,7 @@ use std::time::Instant;
 use crate::basis::{BasisName, BasisSet};
 use crate::chem::graphene;
 use crate::hf::scatter::scatter_block;
-use crate::integrals::{EriEngine, SchwarzScreen};
+use crate::integrals::{EriEngine, SchwarzScreen, ShellPairStore};
 use crate::linalg::Matrix;
 
 use super::costmodel::{n_pair_classes, pair_class, CostModel};
@@ -49,6 +49,9 @@ pub fn calibrate_631gd(reps_budget: usize) -> anyhow::Result<CostModel> {
     let n = basis.n_bf;
     let d = Matrix::identity(n);
     let mut g = Matrix::zeros(n, n);
+    // Pair tables precomputed once, as in a real SCF — the measured
+    // quartet cost is the store-backed hot path.
+    let store = ShellPairStore::build(&basis);
     let mut eng = EriEngine::new();
     let mut block = vec![0.0; 6 * 6 * 6 * 6];
     let mut quartet_ns = vec![0.0; npc * npc];
@@ -65,13 +68,13 @@ pub fn calibrate_631gd(reps_budget: usize) -> anyhow::Result<CostModel> {
             }
             // Warmup.
             for &(i, j, kk, l) in cell {
-                eng.shell_quartet(&basis, i, j, kk, l, &mut block);
+                eng.shell_quartet(&basis, &store, i, j, kk, l, &mut block);
             }
             let t0 = Instant::now();
             let mut count = 0usize;
             while count < reps_per_cell {
                 for &(i, j, kk, l) in cell {
-                    eng.shell_quartet(&basis, i, j, kk, l, &mut block);
+                    eng.shell_quartet(&basis, &store, i, j, kk, l, &mut block);
                     scatter_block(&basis, (i, j, kk, l), &block, &d, &mut |a, bb, v| {
                         g.add(a, bb, v)
                     });
@@ -85,8 +88,9 @@ pub fn calibrate_631gd(reps_budget: usize) -> anyhow::Result<CostModel> {
         }
     }
 
-    // Schwarz test cost: measure the screened() path.
-    let screen = SchwarzScreen::build(&basis, 1e-10);
+    // Schwarz test cost: measure the screened() path (bounds from the
+    // store built above — no second pair-table construction).
+    let screen = SchwarzScreen::build_with_store(&basis, &store, 1e-10);
     let t0 = Instant::now();
     let mut acc = 0u64;
     let reps = 2_000_000;

@@ -74,6 +74,35 @@ pub fn exact_bytes(
     per_rank * ranks_per_node as f64 * W
 }
 
+/// Shared shell-pair store accounting, bytes per node.
+///
+/// The store ([`crate::integrals::ShellPairStore`]) is read-only pair
+/// data held **once per process** and shared by every thread of that
+/// process. MPI-only runs one single-thread process per core, so the
+/// store is replicated `ranks_per_node` ≈ core-count times; the hybrid
+/// engines hold it once per rank (a handful per node) regardless of
+/// thread count — the same replication asymmetry as eqs. (3a)–(3c),
+/// applied to integral pair data instead of Fock/density matrices.
+/// `store_bytes` is the measured per-copy footprint
+/// (`ShellPairStore::bytes()`).
+pub fn store_bytes_per_node(store_bytes: f64, ranks_per_node: usize) -> f64 {
+    store_bytes * ranks_per_node as f64
+}
+
+/// Exact per-node accounting including the shell-pair store: the matrix
+/// working set of [`exact_bytes`] plus one store copy per rank.
+pub fn exact_bytes_with_store(
+    engine: EngineKind,
+    n_bf: usize,
+    max_shell_bf: usize,
+    ranks_per_node: usize,
+    threads_per_rank: usize,
+    store_bytes: f64,
+) -> f64 {
+    exact_bytes(engine, n_bf, max_shell_bf, ranks_per_node, threads_per_rank)
+        + store_bytes_per_node(store_bytes, ranks_per_node)
+}
+
 /// KNL MCDRAM capacity (bytes, decimal as marketed) — the single-node
 /// feasibility gate behind Figure 4's "MPI-only restricted to 128
 /// hardware threads" (eq. 3a at 256 ranks on the 1.0 nm system is
@@ -154,6 +183,24 @@ mod tests {
             assert!(r_shf > 50.0, "{}: shared reduction {r_shf}", sys.label());
             assert!(r_shf > r_prf);
         }
+    }
+
+    #[test]
+    fn store_replication_favors_hybrid_engines() {
+        // At equal hardware threads (256 ranks × 1 vs 4 ranks × 64) the
+        // MPI-only configuration replicates the pair store 64x more.
+        let sb = 50e6; // a 50 MB store (0.5 nm-class)
+        let mpi = store_bytes_per_node(sb, 256);
+        let hyb = store_bytes_per_node(sb, 4);
+        assert!((mpi / hyb - 64.0).abs() < 1e-12);
+        let n = 1800;
+        let with_mpi = exact_bytes_with_store(EngineKind::MpiOnly, n, 15, 256, 1, sb);
+        let with_shf = exact_bytes_with_store(EngineKind::SharedFock, n, 15, 4, 64, sb);
+        let base_mpi = exact_bytes(EngineKind::MpiOnly, n, 15, 256, 1);
+        let base_shf = exact_bytes(EngineKind::SharedFock, n, 15, 4, 64);
+        assert!(with_mpi > base_mpi);
+        // Adding the store widens the MPI-vs-shared gap.
+        assert!(with_mpi / with_shf > base_mpi / base_shf);
     }
 
     #[test]

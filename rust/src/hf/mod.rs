@@ -13,10 +13,17 @@
 //!   contributions in private column buffers (padded against false
 //!   sharing) and flush them with a chunked tree reduction.
 //!
+//! Every engine consumes a [`FockContext`]: the immutable, SCF-lifetime
+//! [`ShellPairStore`] (shared across threads behind `Arc`), the Schwarz
+//! bound table, and the density to contract — the full D, or ΔD when the
+//! driver runs incremental direct SCF. Quartets are screened by the
+//! density-weighted bound Q_ij·Q_kl·w(D) ≤ τ, so ΔD builds late in the
+//! SCF touch only a residual fraction of the quartet space.
+//!
 //! [`quartets`] owns the canonical loop structure, [`scatter`] the
 //! six-element update of eqs. (2a)–(2f), [`dlb`] the shared-counter
 //! dynamic load balancer (`ddi_dlbnext`), and [`memmodel`] the
-//! footprint model of eqs. (3a)–(3c).
+//! footprint model of eqs. (3a)–(3c) extended with the pair store.
 
 pub mod dlb;
 pub mod memmodel;
@@ -29,16 +36,74 @@ pub mod shared_fock;
 pub mod threadpool;
 
 use crate::basis::BasisSet;
-use crate::integrals::SchwarzScreen;
+use crate::integrals::{PairDensityMax, SchwarzScreen, ShellPairStore};
 use crate::linalg::Matrix;
 
-/// A two-electron Fock builder: given a density matrix, produce the
-/// two-electron part G so that F = H_core + G.
+/// Everything a Fock build consumes, assembled once per build by the
+/// SCF driver (or a test/bench harness). Borrows are all `Sync`: the
+/// hybrid engines hand `&FockContext` straight to their worker threads.
+pub struct FockContext<'a> {
+    pub basis: &'a BasisSet,
+    /// SCF-lifetime shell-pair Hermite tables (one copy per process,
+    /// shared read-only by all threads; the driver owns it in an `Arc`).
+    pub store: &'a ShellPairStore,
+    pub screen: &'a SchwarzScreen,
+    /// Density to contract — the full D, or ΔD = D_n − D_{n−1} for
+    /// incremental builds. `build_2e` is linear in this argument.
+    pub d: &'a Matrix,
+    /// Per-shell-pair |d| bounds for density-weighted screening.
+    pub dmax: PairDensityMax,
+}
+
+impl<'a> FockContext<'a> {
+    pub fn new(
+        basis: &'a BasisSet,
+        store: &'a ShellPairStore,
+        screen: &'a SchwarzScreen,
+        d: &'a Matrix,
+    ) -> FockContext<'a> {
+        assert!(
+            store.matches(basis),
+            "ShellPairStore does not belong to this basis (stale store?)"
+        );
+        let dmax = PairDensityMax::build(basis, d);
+        FockContext { basis, store, screen, d, dmax }
+    }
+
+    /// Density-weighted quartet screen. All engines use this, so their
+    /// `quartets_computed` counts agree exactly. (`quartets_screened`
+    /// may differ: the shared-Fock pair prescreen skips whole ij tasks
+    /// without counting their kl quartets individually.)
+    #[inline]
+    pub fn screened(&self, i: usize, j: usize, k: usize, l: usize) -> bool {
+        self.screen.screened_weighted(i, j, k, l, &self.dmax)
+    }
+
+    /// Density-weighted whole-(i,j)-task prescreen (Algorithm 3 top loop).
+    #[inline]
+    pub fn pair_screened(&self, i: usize, j: usize) -> bool {
+        self.screen.pair_screened_weighted(i, j, &self.dmax)
+    }
+}
+
+/// A two-electron Fock builder: produce the two-electron part
+/// G(d) of F = H_core + G for the context's density. Implementations
+/// must be linear in `ctx.d` (the incremental driver relies on
+/// G(D_n) = G(D_{n−1}) + G(ΔD)).
 pub trait FockBuilder {
-    /// Build G(D). `d` must be symmetric.
-    fn build_2e(&mut self, basis: &BasisSet, screen: &SchwarzScreen, d: &Matrix) -> Matrix;
+    /// Build G(ctx.d). `ctx.d` must be symmetric.
+    fn build_2e(&mut self, ctx: &FockContext) -> Matrix;
     /// Engine name for reports.
     fn name(&self) -> &'static str;
+    /// Statistics of the most recent `build_2e` call.
+    fn last_stats(&self) -> BuildStats;
+    /// Does this builder honor the context's quartet screening? Dense
+    /// builders (the XLA path) contract everything regardless of ΔD, so
+    /// the driver skips incremental builds for them — a ΔD build would
+    /// cost the same as a full one.
+    fn screens(&self) -> bool {
+        true
+    }
 }
 
 /// Statistics returned by engines for reports and the simulator.

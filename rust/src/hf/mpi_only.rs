@@ -9,17 +9,18 @@
 //! Density replication: the real code replicates D per rank; execution
 //! here shares the read-only D (reads are bit-identical), while the
 //! memory model (`memmodel::exact_bytes`) accounts the replication the
-//! paper measures.
+//! paper measures. The shell-pair store is likewise shared read-only —
+//! and counted per rank by the memory model, which is exactly the
+//! replication the hybrid engines eliminate.
 
-use crate::basis::BasisSet;
-use crate::integrals::{EriEngine, SchwarzScreen};
+use crate::integrals::EriEngine;
 use crate::linalg::Matrix;
 
 use super::dlb::DlbCounter;
 use super::quartets::{for_each_kl_of, pair_from_index};
 use super::scatter::{fold_symmetric, scatter_block};
 use super::threadpool::parallel_region;
-use super::{BuildStats, FockBuilder};
+use super::{BuildStats, FockBuilder, FockContext};
 
 /// MPI-only engine with `n_ranks` virtual ranks.
 pub struct MpiOnlyFock {
@@ -35,8 +36,9 @@ impl MpiOnlyFock {
 }
 
 impl FockBuilder for MpiOnlyFock {
-    fn build_2e(&mut self, basis: &BasisSet, screen: &SchwarzScreen, d: &Matrix) -> Matrix {
+    fn build_2e(&mut self, ctx: &FockContext) -> Matrix {
         let t0 = std::time::Instant::now();
+        let basis = ctx.basis;
         let n = basis.n_bf;
         let nsh = basis.n_shells();
         let n_pairs = nsh * (nsh + 1) / 2;
@@ -56,13 +58,13 @@ impl FockBuilder for MpiOnlyFock {
                 }
                 let (i, j) = pair_from_index(ij);
                 for_each_kl_of(i, j, |k, l| {
-                    if screen.screened(i, j, k, l) {
+                    if ctx.screened(i, j, k, l) {
                         screened += 1;
                         return;
                     }
                     computed += 1;
-                    eng.shell_quartet(basis, i, j, k, l, &mut block);
-                    scatter_block(basis, (i, j, k, l), &block, d, &mut |a, b, v| {
+                    eng.shell_quartet(basis, ctx.store, i, j, k, l, &mut block);
+                    scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| {
                         g.add(a, b, v)
                     });
                 });
@@ -91,21 +93,27 @@ impl FockBuilder for MpiOnlyFock {
     fn name(&self) -> &'static str {
         "mpi-only"
     }
+
+    fn last_stats(&self) -> BuildStats {
+        self.stats
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::basis::BasisName;
+    use crate::basis::{BasisName, BasisSet};
     use crate::chem::molecules;
     use crate::hf::serial::SerialFock;
+    use crate::integrals::{SchwarzScreen, ShellPairStore};
     use crate::util::prng::Rng;
 
     #[test]
     fn matches_serial_reference() {
         let mol = molecules::water();
         let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
-        let screen = SchwarzScreen::build(&basis, SchwarzScreen::DEFAULT_TAU);
+        let store = ShellPairStore::build(&basis);
+        let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
         let mut rng = Rng::new(17);
         let nb = basis.n_bf;
         let mut d = Matrix::zeros(nb, nb);
@@ -116,10 +124,11 @@ mod tests {
                 d.set(j, i, x);
             }
         }
-        let want = SerialFock::new().build_2e(&basis, &screen, &d);
+        let ctx = FockContext::new(&basis, &store, &screen, &d);
+        let want = SerialFock::new().build_2e(&ctx);
         for ranks in [1, 2, 4, 7] {
             let mut eng = MpiOnlyFock::new(ranks);
-            let got = eng.build_2e(&basis, &screen, &d);
+            let got = eng.build_2e(&ctx);
             assert!(
                 got.max_abs_diff(&want) < 1e-11,
                 "ranks={ranks}: diff {}",
@@ -132,12 +141,14 @@ mod tests {
     fn work_accounting_is_rank_independent() {
         let mol = molecules::methane();
         let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
-        let screen = SchwarzScreen::build(&basis, SchwarzScreen::DEFAULT_TAU);
+        let store = ShellPairStore::build(&basis);
+        let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
         let d = Matrix::identity(basis.n_bf);
+        let ctx = FockContext::new(&basis, &store, &screen, &d);
         let mut e1 = MpiOnlyFock::new(1);
         let mut e3 = MpiOnlyFock::new(3);
-        let _ = e1.build_2e(&basis, &screen, &d);
-        let _ = e3.build_2e(&basis, &screen, &d);
+        let _ = e1.build_2e(&ctx);
+        let _ = e3.build_2e(&ctx);
         assert_eq!(e1.stats.quartets_computed, e3.stats.quartets_computed);
         assert_eq!(e1.stats.quartets_screened, e3.stats.quartets_screened);
     }

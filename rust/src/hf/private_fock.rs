@@ -4,9 +4,10 @@
 //! Structure per the paper:
 //! * the master thread of each rank claims the next `i` shell from the
 //!   MPI-level DLB counter (guarded by barriers);
-//! * worker threads share the density and split the collapsed (j,k)
-//!   loops with OpenMP `collapse(2) schedule(dynamic,1)` semantics
-//!   (a per-rank chunk counter);
+//! * worker threads share the density, the Schwarz table and the
+//!   shell-pair store, and split the collapsed (j,k) loops with OpenMP
+//!   `collapse(2) schedule(dynamic,1)` semantics (a per-rank chunk
+//!   counter);
 //! * every thread accumulates into its own Fock replica —
 //!   `reduction(+:Fock)` — reduced thread-wise, then rank-wise
 //!   (`ddi_gsumf`).
@@ -14,14 +15,13 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Barrier;
 
-use crate::basis::BasisSet;
-use crate::integrals::{EriEngine, SchwarzScreen};
+use crate::integrals::EriEngine;
 use crate::linalg::Matrix;
 
 use super::dlb::DlbCounter;
 use super::scatter::{fold_symmetric, scatter_block};
 use super::threadpool::parallel_region;
-use super::{BuildStats, FockBuilder};
+use super::{BuildStats, FockBuilder, FockContext};
 
 /// Private-Fock hybrid engine: `n_ranks` virtual ranks × `n_threads`
 /// OpenMP-style threads per rank.
@@ -39,8 +39,9 @@ impl PrivateFock {
 }
 
 impl FockBuilder for PrivateFock {
-    fn build_2e(&mut self, basis: &BasisSet, screen: &SchwarzScreen, d: &Matrix) -> Matrix {
+    fn build_2e(&mut self, ctx: &FockContext) -> Matrix {
         let t0 = std::time::Instant::now();
+        let basis = ctx.basis;
         let n = basis.n_bf;
         let nsh = basis.n_shells();
         let dlb = DlbCounter::new(); // MPI-level DLB over i
@@ -80,13 +81,13 @@ impl FockBuilder for PrivateFock {
                         let k = c % span;
                         let lmax = if k == i { j } else { k };
                         for l in 0..=lmax {
-                            if screen.screened(i, j, k, l) {
+                            if ctx.screened(i, j, k, l) {
                                 screened += 1;
                                 continue;
                             }
                             computed += 1;
-                            eng.shell_quartet(basis, i, j, k, l, &mut block);
-                            scatter_block(basis, (i, j, k, l), &block, d, &mut |a, b, v| {
+                            eng.shell_quartet(basis, ctx.store, i, j, k, l, &mut block);
+                            scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| {
                                 g.add(a, b, v)
                             });
                         }
@@ -130,14 +131,19 @@ impl FockBuilder for PrivateFock {
     fn name(&self) -> &'static str {
         "private-fock"
     }
+
+    fn last_stats(&self) -> BuildStats {
+        self.stats
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::basis::BasisName;
+    use crate::basis::{BasisName, BasisSet};
     use crate::chem::molecules;
     use crate::hf::serial::SerialFock;
+    use crate::integrals::{SchwarzScreen, ShellPairStore};
     use crate::util::prng::Rng;
 
     fn random_density(n: usize, seed: u64) -> Matrix {
@@ -157,12 +163,14 @@ mod tests {
     fn matches_serial_reference() {
         let mol = molecules::water();
         let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
-        let screen = SchwarzScreen::build(&basis, SchwarzScreen::DEFAULT_TAU);
+        let store = ShellPairStore::build(&basis);
+        let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
         let d = random_density(basis.n_bf, 23);
-        let want = SerialFock::new().build_2e(&basis, &screen, &d);
+        let ctx = FockContext::new(&basis, &store, &screen, &d);
+        let want = SerialFock::new().build_2e(&ctx);
         for (ranks, threads) in [(1, 1), (1, 4), (2, 2), (3, 2)] {
             let mut eng = PrivateFock::new(ranks, threads);
-            let got = eng.build_2e(&basis, &screen, &d);
+            let got = eng.build_2e(&ctx);
             assert!(
                 got.max_abs_diff(&want) < 1e-11,
                 "r={ranks} t={threads}: diff {}",
@@ -175,12 +183,14 @@ mod tests {
     fn total_work_conserved() {
         let mol = molecules::methane();
         let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
-        let screen = SchwarzScreen::build(&basis, SchwarzScreen::DEFAULT_TAU);
+        let store = ShellPairStore::build(&basis);
+        let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
         let d = Matrix::identity(basis.n_bf);
+        let ctx = FockContext::new(&basis, &store, &screen, &d);
         let mut serial = SerialFock::new();
-        let _ = serial.build_2e(&basis, &screen, &d);
+        let _ = serial.build_2e(&ctx);
         let mut eng = PrivateFock::new(2, 3);
-        let _ = eng.build_2e(&basis, &screen, &d);
+        let _ = eng.build_2e(&ctx);
         assert_eq!(eng.stats.quartets_computed, serial.stats.quartets_computed);
     }
 }

@@ -166,12 +166,12 @@ mod tests {
     use crate::basis::{BasisName, BasisSet};
     use crate::chem::molecules;
     use crate::hf::quartets::for_each_canonical;
-    use crate::integrals::EriEngine;
+    use crate::integrals::{EriEngine, ShellPairStore};
     use crate::util::prng::Rng;
 
     /// Brute-force oracle: G_ab = Σ_cd D_cd [(ab|cd) − ½(ac|bd)] with
     /// every ERI evaluated directly (no symmetry).
-    fn g_oracle(basis: &BasisSet, d: &Matrix) -> Matrix {
+    fn g_oracle(basis: &BasisSet, store: &ShellPairStore, d: &Matrix) -> Matrix {
         let n = basis.n_bf;
         let ns = basis.n_shells();
         let mut eng = EriEngine::new();
@@ -182,7 +182,7 @@ mod tests {
             for j in 0..ns {
                 for k in 0..ns {
                     for l in 0..ns {
-                        eng.shell_quartet(basis, i, j, k, l, &mut buf);
+                        eng.shell_quartet(basis, store, i, j, k, l, &mut buf);
                         let (ni, nj, nk, nl) = (
                             basis.shells[i].n_bf(),
                             basis.shells[j].n_bf(),
@@ -244,14 +244,15 @@ mod tests {
     fn scatter_matches_bruteforce_oracle() {
         for (mol, seed) in [(molecules::h2(), 1u64), (molecules::water(), 2u64)] {
             let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+            let store = ShellPairStore::build(&basis);
             let d = random_symmetric(basis.n_bf, seed);
-            let want = g_oracle(&basis, &d);
+            let want = g_oracle(&basis, &store, &d);
 
             let mut eng = EriEngine::new();
             let mut block = vec![0.0; 6 * 6 * 6 * 6];
             let mut g = Matrix::zeros(basis.n_bf, basis.n_bf);
             for_each_canonical(basis.n_shells(), |(i, j, k, l)| {
-                eng.shell_quartet(&basis, i, j, k, l, &mut block);
+                eng.shell_quartet(&basis, &store, i, j, k, l, &mut block);
                 scatter_block(&basis, (i, j, k, l), &block, &d, &mut |a, b, v| {
                     g.add(a, b, v)
                 });
@@ -281,11 +282,12 @@ mod tests {
     fn scatter_targets_are_canonical() {
         let mol = molecules::water();
         let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+        let store = ShellPairStore::build(&basis);
         let d = random_symmetric(basis.n_bf, 3);
         let mut eng = EriEngine::new();
         let mut block = vec![0.0; 6 * 6 * 6 * 6];
         for_each_canonical(basis.n_shells(), |(i, j, k, l)| {
-            eng.shell_quartet(&basis, i, j, k, l, &mut block);
+            eng.shell_quartet(&basis, &store, i, j, k, l, &mut block);
             scatter_block(&basis, (i, j, k, l), &block, &d, &mut |a, b, _v| {
                 assert!(a >= b, "non-canonical target ({a},{b})");
             });

@@ -4,7 +4,7 @@
 //! Loop structure per the paper:
 //! * MPI level: the master thread claims combined `ij` pair ordinals
 //!   from the DLB counter; the whole `ij` task is Schwarz-prescreened
-//!   (`schwartz(i,j,i,j)` against the global maximum) so the sparsest
+//!   (density-weighted `Q_ij·q_max·|d|_max ≤ τ`) so the sparsest
 //!   top-loop iterations are skipped outright;
 //! * OpenMP level: threads split the combined `kl ≤ ij` loop with
 //!   `schedule(dynamic,1)` semantics;
@@ -17,19 +17,22 @@
 //! * `F_J` is flushed (chunked row-wise tree reduction + barrier) after
 //!   every `kl` loop; `F_I` lazily, only when `i` changes (the paper's
 //!   key frequency optimization).
+//!
+//! All threads read the one shared [`crate::integrals::ShellPairStore`]
+//! — no per-thread pair tables, which is what keeps the per-thread
+//! footprint at two column buffers.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Barrier;
 
-use crate::basis::BasisSet;
-use crate::integrals::{EriEngine, SchwarzScreen};
+use crate::integrals::EriEngine;
 use crate::linalg::Matrix;
 
 use super::dlb::DlbCounter;
 use super::quartets::pair_from_index;
 use super::scatter::{fold_symmetric, scatter_block};
 use super::threadpool::{parallel_region, ColumnBuffers, SharedMatrix};
-use super::{BuildStats, FockBuilder};
+use super::{BuildStats, FockBuilder, FockContext};
 
 /// Shared-Fock hybrid engine: `n_ranks` virtual ranks × `n_threads`
 /// threads per rank sharing one Fock accumulator.
@@ -57,8 +60,9 @@ fn chunk_of(rows: usize, nt: usize, tid: usize) -> (usize, usize) {
 }
 
 impl FockBuilder for SharedFock {
-    fn build_2e(&mut self, basis: &BasisSet, screen: &SchwarzScreen, d: &Matrix) -> Matrix {
+    fn build_2e(&mut self, ctx: &FockContext) -> Matrix {
         let t0 = std::time::Instant::now();
+        let basis = ctx.basis;
         let n = basis.n_bf;
         let nsh = basis.n_shells();
         let n_pairs = nsh * (nsh + 1) / 2;
@@ -103,16 +107,16 @@ impl FockBuilder for SharedFock {
                     let (i, j) = pair_from_index(ij);
 
                     // I/J prescreening (Algorithm 3 line 12): the entire
-                    // ij task dies if Q_ij · Q_max ≤ τ. The barrier before
-                    // `continue` is essential: without it the master can
-                    // loop around and overwrite `ij_cur` before a slow
-                    // thread has read the current value, desynchronizing
-                    // the barrier sequence (observed as both corrupted
-                    // Fock blocks and deadlock; the paper's Algorithm 3
-                    // pseudocode has the same hazard between its lines
-                    // 8 and 11 — a real OpenMP port needs the barrier
-                    // too).
-                    if screen.pair_screened(i, j) {
+                    // ij task dies if Q_ij·q_max·|d|_max ≤ τ. The barrier
+                    // before `continue` is essential: without it the
+                    // master can loop around and overwrite `ij_cur`
+                    // before a slow thread has read the current value,
+                    // desynchronizing the barrier sequence (observed as
+                    // both corrupted Fock blocks and deadlock; the
+                    // paper's Algorithm 3 pseudocode has the same hazard
+                    // between its lines 8 and 11 — a real OpenMP port
+                    // needs the barrier too).
+                    if ctx.pair_screened(i, j) {
                         barrier.wait();
                         continue;
                     }
@@ -149,13 +153,13 @@ impl FockBuilder for SharedFock {
                             break;
                         }
                         let (k, l) = pair_from_index(kl);
-                        if screen.screened(i, j, k, l) {
+                        if ctx.screened(i, j, k, l) {
                             screened += 1;
                             continue;
                         }
                         computed += 1;
-                        eng.shell_quartet(basis, i, j, k, l, &mut block);
-                        scatter_block(basis, (i, j, k, l), &block, d, &mut |a, b, v| {
+                        eng.shell_quartet(basis, ctx.store, i, j, k, l, &mut block);
+                        scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| {
                             // Route by shell membership (lines 25–27).
                             if i_range.contains(&a) {
                                 unsafe { f_i.add(tid, b, a - i0, v) };
@@ -216,14 +220,19 @@ impl FockBuilder for SharedFock {
     fn name(&self) -> &'static str {
         "shared-fock"
     }
+
+    fn last_stats(&self) -> BuildStats {
+        self.stats
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::basis::BasisName;
+    use crate::basis::{BasisName, BasisSet};
     use crate::chem::molecules;
     use crate::hf::serial::SerialFock;
+    use crate::integrals::{SchwarzScreen, ShellPairStore};
     use crate::util::prng::Rng;
 
     fn random_density(n: usize, seed: u64) -> Matrix {
@@ -243,12 +252,14 @@ mod tests {
     fn matches_serial_reference() {
         let mol = molecules::water();
         let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
-        let screen = SchwarzScreen::build(&basis, SchwarzScreen::DEFAULT_TAU);
+        let store = ShellPairStore::build(&basis);
+        let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
         let d = random_density(basis.n_bf, 31);
-        let want = SerialFock::new().build_2e(&basis, &screen, &d);
+        let ctx = FockContext::new(&basis, &store, &screen, &d);
+        let want = SerialFock::new().build_2e(&ctx);
         for (ranks, threads) in [(1, 1), (1, 2), (1, 5), (2, 3)] {
             let mut eng = SharedFock::new(ranks, threads);
-            let got = eng.build_2e(&basis, &screen, &d);
+            let got = eng.build_2e(&ctx);
             assert!(
                 got.max_abs_diff(&want) < 1e-11,
                 "r={ranks} t={threads}: diff {}",
@@ -262,11 +273,13 @@ mod tests {
         // The routing logic must also hold for wide (d / sp) shells.
         let mol = crate::chem::graphene::monolayer(2, "c2");
         let basis = BasisSet::assemble(&mol, BasisName::SixThirtyOneGd).unwrap();
-        let screen = SchwarzScreen::build(&basis, SchwarzScreen::DEFAULT_TAU);
+        let store = ShellPairStore::build(&basis);
+        let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
         let d = random_density(basis.n_bf, 37);
-        let want = SerialFock::new().build_2e(&basis, &screen, &d);
+        let ctx = FockContext::new(&basis, &store, &screen, &d);
+        let want = SerialFock::new().build_2e(&ctx);
         let mut eng = SharedFock::new(1, 4);
-        let got = eng.build_2e(&basis, &screen, &d);
+        let got = eng.build_2e(&ctx);
         assert!(got.max_abs_diff(&want) < 1e-11, "diff {}", got.max_abs_diff(&want));
     }
 
@@ -274,10 +287,12 @@ mod tests {
     fn lazy_flush_fires_less_than_ij_count() {
         let mol = molecules::benzene();
         let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
-        let screen = SchwarzScreen::build(&basis, SchwarzScreen::DEFAULT_TAU);
+        let store = ShellPairStore::build(&basis);
+        let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
         let d = random_density(basis.n_bf, 41);
+        let ctx = FockContext::new(&basis, &store, &screen, &d);
         let mut eng = SharedFock::new(1, 2);
-        let _ = eng.build_2e(&basis, &screen, &d);
+        let _ = eng.build_2e(&ctx);
         let nsh = basis.n_shells();
         let n_pairs = (nsh * (nsh + 1) / 2) as u64;
         // One flush per distinct i (≤ nsh), far fewer than ij tasks.

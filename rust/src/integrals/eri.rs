@@ -11,10 +11,13 @@
 //!   the combined-SP shells of 6-31G(d) expand one shell quartet into up
 //!   to 16 segment quartets which all share the same primitive-pair
 //!   Hermite tables (they differ only in contraction coefficients).
-//! * The **bra tables are cached** across calls: the canonical loops fix
-//!   (i,j) while sweeping thousands of (k,l), so the bra rebuild
-//!   amortizes to nothing.
-//! * Primitive pairs are screened by |c_max·c_max·exp(−μR²)|.
+//! * Both bra and ket tables come from the SCF-lifetime
+//!   [`ShellPairStore`](super::shellpair::ShellPairStore): every
+//!   surviving pair's tables are computed **once per SCF** and shared
+//!   (read-only) by all engine threads — no per-call bra cache, no
+//!   per-quartet ket rebuild.
+//! * Primitive pairs are screened by |c_max·c_max·exp(−μR²)| at store
+//!   build time.
 //! * l_total = 0 primitive quartets skip the R recursion entirely.
 //! * The component contraction is factored through the ket-Hermite
 //!   intermediate H[q][tuv], removing the bra-component redundancy.
@@ -24,125 +27,24 @@
 use crate::basis::shell::{cart_powers, component_scale, Segment};
 use crate::basis::BasisSet;
 
-use super::hermite::{build_e, ETable};
 use super::rtensor::{build_r_into, RScratch};
-
-/// Primitive pairs whose |c_a·c_b|·exp(−μR²) (max over segments) falls
-/// below this are dropped: their largest possible integral contribution
-/// is orders of magnitude below the SCF convergence threshold. Heavily
-/// contracted shells (6-31G carbon S6: 36 primitive pairs) shrink
-/// several-fold.
-const PAIR_CUTOFF: f64 = 1e-16;
-
-/// Hermite data for one surviving primitive pair of a shell pair.
-struct PrimPair {
-    ex: ETable,
-    ey: ETable,
-    ez: ETable,
-    /// E_0^{00}(x)·E_0^{00}(y)·E_0^{00}(z) — the s-s Hermite prefactor
-    /// (the l_total = 0 fast path).
-    e000: f64,
-    /// p = a + b.
-    p: f64,
-    /// Gaussian product center.
-    center: [f64; 3],
-    /// Primitive indices into the shells' exponent lists (to look up
-    /// segment-specific contraction coefficients).
-    ia: u32,
-    ib: u32,
-}
-
-/// Shell-pair Hermite tables shared by every segment combination.
-#[derive(Default)]
-struct PairTables {
-    prims: Vec<PrimPair>,
-}
-
-/// Largest |contraction coefficient| per primitive across a shell's
-/// segments (the screening bound valid for every segment).
-fn max_coefs(basis: &BasisSet, shell: usize, out: &mut Vec<f64>) {
-    let n = basis.shells[shell].exps.len();
-    out.clear();
-    out.resize(n, 0.0);
-    for seg in basis.shell_segments(shell) {
-        for (i, c) in seg.coefs.iter().enumerate() {
-            out[i] = out[i].max(c.abs());
-        }
-    }
-}
-
-fn build_pair_tables(
-    basis: &BasisSet,
-    sh_a: usize,
-    sh_b: usize,
-    cmax_a: &[f64],
-    cmax_b: &[f64],
-    out: &mut PairTables,
-) {
-    out.prims.clear();
-    let a_sh = &basis.shells[sh_a];
-    let b_sh = &basis.shells[sh_b];
-    let (la, lb) = (a_sh.kind.max_l(), b_sh.kind.max_l());
-    let (ca, cb) = (a_sh.center, b_sh.center);
-    let r2 = crate::chem::geometry::dist2(ca, cb);
-    for (ia, &a) in a_sh.exps.iter().enumerate() {
-        for (ib, &b) in b_sh.exps.iter().enumerate() {
-            let p = a + b;
-            let mu = a * b / p;
-            let kab = (-mu * r2).exp();
-            if cmax_a[ia] * cmax_b[ib] * kab < PAIR_CUTOFF {
-                continue;
-            }
-            let ex = build_e(a, b, ca[0], cb[0], la, lb);
-            let ey = build_e(a, b, ca[1], cb[1], la, lb);
-            let ez = build_e(a, b, ca[2], cb[2], la, lb);
-            let e000 = ex.get(0, 0, 0) * ey.get(0, 0, 0) * ez.get(0, 0, 0);
-            out.prims.push(PrimPair {
-                ex,
-                ey,
-                ez,
-                e000,
-                p,
-                center: [
-                    (a * ca[0] + b * cb[0]) / p,
-                    (a * ca[1] + b * cb[1]) / p,
-                    (a * ca[2] + b * cb[2]) / p,
-                ],
-                ia: ia as u32,
-                ib: ib as u32,
-            });
-        }
-    }
-}
-
-/// Cache key for the bra tables: shell ids plus the exponent-vector
-/// addresses and centers — unique among simultaneously-live bases (the
-/// centers guard against allocator address reuse across bases).
-#[derive(PartialEq, Clone, Copy)]
-struct BraKey {
-    i: usize,
-    j: usize,
-    exps_i: *const f64,
-    exps_j: *const f64,
-    center_i: [f64; 3],
-    center_j: [f64; 3],
-}
+use super::shellpair::{PairView, ResolvedPrim, ShellPairStore};
 
 /// Reusable ERI engine. One per thread; `shell_quartet` is the API the
-/// Fock-build engines call. No heap allocation on the hot path after
-/// warmup.
+/// Fock-build engines call. Holds only scratch — all pair data lives in
+/// the shared [`ShellPairStore`]; the store's views are resolved into
+/// reusable index buffers per quartet. No heap allocation on the hot
+/// path after warmup.
 pub struct EriEngine {
-    bra: PairTables,
-    ket: PairTables,
-    bra_key: Option<BraKey>,
-    cmax_a: Vec<f64>,
-    cmax_b: Vec<f64>,
     /// Scratch for a segment-quartet block (max 6^4 for dddd).
     seg_buf: Vec<f64>,
     /// Reusable Hermite-Coulomb recursion scratch.
     rscratch: RScratch,
     /// Ket-Hermite intermediate H[q][tuv] (see `segment_quartet`).
     hket: Vec<f64>,
+    /// Reusable resolved-prim buffers (see `ResolvedPrim`).
+    bra_scratch: Vec<ResolvedPrim>,
+    ket_scratch: Vec<ResolvedPrim>,
     /// Count of primitive quartets processed (profiling/calibration).
     pub prim_quartets: u64,
 }
@@ -153,42 +55,58 @@ impl Default for EriEngine {
     }
 }
 
-fn bra_key(basis: &BasisSet, i: usize, j: usize) -> BraKey {
-    BraKey {
-        i,
-        j,
-        exps_i: basis.shells[i].exps.as_ptr(),
-        exps_j: basis.shells[j].exps.as_ptr(),
-        center_i: basis.shells[i].center,
-        center_j: basis.shells[j].center,
-    }
-}
-
 impl EriEngine {
     pub fn new() -> EriEngine {
         EriEngine {
-            bra: PairTables::default(),
-            ket: PairTables::default(),
-            bra_key: None,
-            cmax_a: Vec::new(),
-            cmax_b: Vec::new(),
             seg_buf: vec![0.0; 6 * 6 * 6 * 6],
             rscratch: RScratch::new(),
             hket: vec![0.0; 36 * 125],
+            bra_scratch: Vec::new(),
+            ket_scratch: Vec::new(),
             prim_quartets: 0,
         }
     }
 
-    /// Compute the full ERI block of a shell quartet (i,j,k,l).
-    /// `out` is overwritten, laid out row-major over the shells' local
-    /// function indices: out[((a·nb + b)·nc + c)·nd + d].
+    /// Compute the full ERI block of a shell quartet (i,j,k,l) using the
+    /// precomputed pair tables in `store`. `out` is overwritten, laid
+    /// out row-major over the shells' local function indices:
+    /// out[((a·nb + b)·nc + c)·nd + d]. If either pair has no stored
+    /// tables (distance-negligible), the block is zero.
     pub fn shell_quartet(
+        &mut self,
+        basis: &BasisSet,
+        store: &ShellPairStore,
+        i: usize,
+        j: usize,
+        k: usize,
+        l: usize,
+        out: &mut [f64],
+    ) {
+        // Cheap staleness guard: a store from a different basis would
+        // produce finite, plausible, wrong integrals. (Full geometry
+        // fingerprints are checked once per build in FockContext::new
+        // and SchwarzScreen::build_with_store.)
+        debug_assert_eq!(store.n_shells(), basis.n_shells(), "store/basis mismatch");
+        let (Some(bra), Some(ket)) = (store.view(i, j), store.view(k, l)) else {
+            let n: usize = [i, j, k, l].iter().map(|&s| basis.shells[s].n_bf()).product();
+            out[..n].fill(0.0);
+            return;
+        };
+        self.shell_quartet_with_views(basis, i, j, k, l, bra, ket, out);
+    }
+
+    /// Like [`EriEngine::shell_quartet`], with caller-supplied pair
+    /// views — the entry point for transient (store-free) pair tables,
+    /// e.g. the low-memory Schwarz bound construction.
+    pub(crate) fn shell_quartet_with_views(
         &mut self,
         basis: &BasisSet,
         i: usize,
         j: usize,
         k: usize,
         l: usize,
+        bra: PairView,
+        ket: PairView,
         out: &mut [f64],
     ) {
         let (ni, nj, nk, nl) = (
@@ -199,40 +117,20 @@ impl EriEngine {
         );
         debug_assert!(out.len() >= ni * nj * nk * nl);
         out[..ni * nj * nk * nl].fill(0.0);
+        // Resolve the views once per shell quartet into the engine's
+        // reusable index buffers (no allocation after warmup): the
+        // stride/coef-index resolution is hoisted out of the hot loops
+        // and shared by every segment combination and primitive pairing.
+        let mut bra_prims = std::mem::take(&mut self.bra_scratch);
+        let mut ket_prims = std::mem::take(&mut self.ket_scratch);
+        bra.resolve_into(&mut bra_prims);
+        ket.resolve_into(&mut ket_prims);
+        let bra_data = bra.data();
+        let ket_data = ket.data();
         let bfi = basis.shells[i].bf_first;
         let bfj = basis.shells[j].bf_first;
         let bfk = basis.shells[k].bf_first;
         let bfl = basis.shells[l].bf_first;
-
-        // Bra tables: cached while (i,j) stays fixed (the kl sweep).
-        let key = bra_key(basis, i, j);
-        if self.bra_key != Some(key) {
-            let mut cmax_a = std::mem::take(&mut self.cmax_a);
-            let mut cmax_b = std::mem::take(&mut self.cmax_b);
-            max_coefs(basis, i, &mut cmax_a);
-            max_coefs(basis, j, &mut cmax_b);
-            let mut bra = std::mem::take(&mut self.bra);
-            build_pair_tables(basis, i, j, &cmax_a, &cmax_b, &mut bra);
-            self.bra = bra;
-            self.cmax_a = cmax_a;
-            self.cmax_b = cmax_b;
-            self.bra_key = Some(key);
-        }
-        // Ket tables: rebuilt per quartet, shared by all segment combos.
-        {
-            let mut cmax_a = std::mem::take(&mut self.cmax_a);
-            let mut cmax_b = std::mem::take(&mut self.cmax_b);
-            max_coefs(basis, k, &mut cmax_a);
-            max_coefs(basis, l, &mut cmax_b);
-            let mut ket = std::mem::take(&mut self.ket);
-            build_pair_tables(basis, k, l, &cmax_a, &cmax_b, &mut ket);
-            self.ket = ket;
-            self.cmax_a = cmax_a;
-            self.cmax_b = cmax_b;
-        }
-
-        let bra = std::mem::take(&mut self.bra);
-        let ket = std::mem::take(&mut self.ket);
 
         // Loop over pure-l segment combinations of the four shells.
         let (ia0, ia1) = basis.segments_of[i];
@@ -249,7 +147,9 @@ impl EriEngine {
                             &basis.segments[c],
                             &basis.segments[d],
                         );
-                        self.segment_quartet(sa, sb, sc, sd, &bra, &ket);
+                        self.segment_quartet(
+                            sa, sb, sc, sd, bra_data, &bra_prims, ket_data, &ket_prims,
+                        );
                         // Scatter the segment block into the shell block.
                         let (na, nb, nc, nd) =
                             (sa.n_comp(), sb.n_comp(), sc.n_comp(), sd.n_comp());
@@ -278,20 +178,24 @@ impl EriEngine {
                 }
             }
         }
-        self.bra = bra;
-        self.ket = ket;
+        self.bra_scratch = bra_prims;
+        self.ket_scratch = ket_prims;
     }
 
     /// ERI block over one pure-l segment quartet into `self.seg_buf`,
-    /// using the shell-pair Hermite tables.
+    /// using the shared shell-pair Hermite tables (`*_data` are the two
+    /// pairs' E-table arenas the resolved prims index into).
+    #[allow(clippy::too_many_arguments)]
     fn segment_quartet(
         &mut self,
         sa: &Segment,
         sb: &Segment,
         sc: &Segment,
         sd: &Segment,
-        bra: &PairTables,
-        ket: &PairTables,
+        bra_data: &[f64],
+        bra: &[ResolvedPrim],
+        ket_data: &[f64],
+        ket: &[ResolvedPrim],
     ) {
         let (na, nb, nc, nd) = (sa.n_comp(), sb.n_comp(), sc.n_comp(), sd.n_comp());
         let nout = na * nb * nc * nd;
@@ -304,13 +208,13 @@ impl EriEngine {
         let pc = cart_powers(sc.l);
         let pd = cart_powers(sd.l);
 
-        for pe in &bra.prims {
-            let cab = sa.coefs[pe.ia as usize] * sb.coefs[pe.ib as usize];
+        for pe in bra {
+            let cab = sa.coefs[pe.ca] * sb.coefs[pe.cb];
             if cab == 0.0 {
                 continue;
             }
-            for qe in &ket.prims {
-                let ccd = sc.coefs[qe.ia as usize] * sd.coefs[qe.ib as usize];
+            for qe in ket {
+                let ccd = sc.coefs[qe.ca] * sd.coefs[qe.cb];
                 if ccd == 0.0 {
                     continue;
                 }
@@ -353,17 +257,17 @@ impl EriEngine {
                                 for v in 0..=lb_max {
                                     let mut s = 0.0;
                                     for tau in 0..=(i3 + i4) {
-                                        let ekt = qe.ex.get(i3, i4, tau);
+                                        let ekt = qe.ex(ket_data, i3, i4, tau);
                                         if ekt == 0.0 {
                                             continue;
                                         }
                                         for nu in 0..=(j3 + j4) {
-                                            let eku = qe.ey.get(j3, j4, nu);
+                                            let eku = qe.ey(ket_data, j3, j4, nu);
                                             if eku == 0.0 {
                                                 continue;
                                             }
                                             for phi in 0..=(k3 + k4) {
-                                                let ekv = qe.ez.get(k3, k4, phi);
+                                                let ekv = qe.ez(ket_data, k3, k4, phi);
                                                 if ekv == 0.0 {
                                                     continue;
                                                 }
@@ -394,18 +298,18 @@ impl EriEngine {
                         for qh in hket[..nc * nd * hstr_q].chunks_exact(hstr_q) {
                             let mut val = 0.0;
                             for t in 0..=(i1 + i2) {
-                                let ext = pe.ex.get(i1, i2, t);
+                                let ext = pe.ex(bra_data, i1, i2, t);
                                 if ext == 0.0 {
                                     continue;
                                 }
                                 for u in 0..=(j1 + j2) {
-                                    let eyu = pe.ey.get(j1, j2, u);
+                                    let eyu = pe.ey(bra_data, j1, j2, u);
                                     if eyu == 0.0 {
                                         continue;
                                     }
                                     let ebra = ext * eyu;
                                     for v in 0..=(k1 + k2) {
-                                        let ezv = pe.ez.get(k1, k2, v);
+                                        let ezv = pe.ez(bra_data, k1, k2, v);
                                         if ezv != 0.0 {
                                             val += ebra * ezv * qh[t * hstr_u + u * hstr_v + v];
                                         }
@@ -448,10 +352,15 @@ mod tests {
     use crate::basis::BasisSet;
     use crate::chem::molecules;
 
-    fn eri_value(basis: &BasisSet, eng: &mut EriEngine, q: [usize; 4]) -> Vec<f64> {
+    fn eri_value(
+        basis: &BasisSet,
+        store: &ShellPairStore,
+        eng: &mut EriEngine,
+        q: [usize; 4],
+    ) -> Vec<f64> {
         let n: usize = q.iter().map(|&s| basis.shells[s].n_bf()).product();
         let mut out = vec![0.0; n];
-        eng.shell_quartet(basis, q[0], q[1], q[2], q[3], &mut out);
+        eng.shell_quartet(basis, store, q[0], q[1], q[2], q[3], &mut out);
         out
     }
 
@@ -462,11 +371,12 @@ mod tests {
         // (21|11) = 0.4441, (21|21) = 0.2970.
         let m = molecules::h2();
         let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let s = ShellPairStore::build(&b);
         let mut eng = EriEngine::new();
-        let v1111 = eri_value(&b, &mut eng, [0, 0, 0, 0])[0];
-        let v1122 = eri_value(&b, &mut eng, [0, 0, 1, 1])[0];
-        let v2111 = eri_value(&b, &mut eng, [1, 0, 0, 0])[0];
-        let v2121 = eri_value(&b, &mut eng, [1, 0, 1, 0])[0];
+        let v1111 = eri_value(&b, &s, &mut eng, [0, 0, 0, 0])[0];
+        let v1122 = eri_value(&b, &s, &mut eng, [0, 0, 1, 1])[0];
+        let v2111 = eri_value(&b, &s, &mut eng, [1, 0, 0, 0])[0];
+        let v2121 = eri_value(&b, &s, &mut eng, [1, 0, 1, 0])[0];
         assert!((v1111 - 0.7746).abs() < 2e-4, "(11|11)={v1111}");
         assert!((v1122 - 0.5697).abs() < 2e-4, "(11|22)={v1122}");
         assert!((v2111 - 0.4441).abs() < 2e-4, "(21|11)={v2111}");
@@ -477,10 +387,11 @@ mod tests {
     fn permutational_symmetry_8fold() {
         let m = molecules::water();
         let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let s = ShellPairStore::build(&b);
         let mut eng = EriEngine::new();
         // Pick shells with mixed angular momentum: O 2sp is shell 1.
         let (i, j, k, l) = (1usize, 0usize, 2usize, 3usize);
-        let get = |eng: &mut EriEngine, q: [usize; 4]| eri_value(&b, eng, q);
+        let get = |eng: &mut EriEngine, q: [usize; 4]| eri_value(&b, &s, eng, q);
         let base = get(&mut eng, [i, j, k, l]);
         let (ni, nj, nk, nl) = (
             b.shells[i].n_bf(),
@@ -513,10 +424,11 @@ mod tests {
         // (ij|ij) ≥ 0 — needed for Schwarz bounds to be well-defined.
         let m = molecules::methane();
         let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let s = ShellPairStore::build(&b);
         let mut eng = EriEngine::new();
         for i in 0..b.n_shells() {
             for j in 0..=i {
-                let block = eri_value(&b, &mut eng, [i, j, i, j]);
+                let block = eri_value(&b, &s, &mut eng, [i, j, i, j]);
                 let (ni, nj) = (b.shells[i].n_bf(), b.shells[j].n_bf());
                 for a in 0..ni {
                     for bb in 0..nj {
@@ -534,12 +446,13 @@ mod tests {
         // finite, symmetric values.
         let m = crate::chem::graphene::monolayer(2, "c2");
         let b = BasisSet::assemble(&m, BasisName::SixThirtyOneGd).unwrap();
+        let s = ShellPairStore::build(&b);
         let mut eng = EriEngine::new();
         // d shells are index 3 and 7.
-        let block = eri_value(&b, &mut eng, [3, 3, 7, 7]);
+        let block = eri_value(&b, &s, &mut eng, [3, 3, 7, 7]);
         assert!(block.iter().all(|v| v.is_finite()));
         assert!(block.iter().any(|v| v.abs() > 1e-8));
-        let b2 = eri_value(&b, &mut eng, [7, 7, 3, 3]);
+        let b2 = eri_value(&b, &s, &mut eng, [7, 7, 3, 3]);
         let n = 6;
         for a in 0..n {
             for bb in 0..n {
@@ -555,20 +468,34 @@ mod tests {
     }
 
     #[test]
-    fn bra_cache_respects_basis_change() {
-        // Same shell indices, different molecules: the cache must not
-        // serve stale tables.
+    fn engine_is_store_agnostic() {
+        // The same engine instance must serve multiple bases/stores with
+        // no cross-contamination (the seed's bra cache made this a real
+        // hazard; the store design removes the statefulness entirely).
         let m1 = molecules::h2();
         let b1 = BasisSet::assemble(&m1, BasisName::Sto3g).unwrap();
+        let s1 = ShellPairStore::build(&b1);
         let mut m2 = molecules::h2();
         m2.atoms[1].pos[2] = 2.8; // stretched
         let b2 = BasisSet::assemble(&m2, BasisName::Sto3g).unwrap();
+        let s2 = ShellPairStore::build(&b2);
         let mut eng = EriEngine::new();
-        let v1 = eri_value(&b1, &mut eng, [0, 1, 0, 1])[0];
-        let v2 = eri_value(&b2, &mut eng, [0, 1, 0, 1])[0];
+        let v1 = eri_value(&b1, &s1, &mut eng, [0, 1, 0, 1])[0];
+        let v2 = eri_value(&b2, &s2, &mut eng, [0, 1, 0, 1])[0];
         let mut eng_fresh = EriEngine::new();
-        let v2_fresh = eri_value(&b2, &mut eng_fresh, [0, 1, 0, 1])[0];
+        let v2_fresh = eri_value(&b2, &s2, &mut eng_fresh, [0, 1, 0, 1])[0];
         assert!((v2 - v2_fresh).abs() < 1e-14);
         assert!((v1 - v2).abs() > 1e-4, "stretched H2 must differ");
+    }
+
+    #[test]
+    fn negligible_pair_yields_zero_block() {
+        let mut m = molecules::h2();
+        m.atoms[1].pos[2] = 100.0;
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let s = ShellPairStore::build(&b);
+        let mut eng = EriEngine::new();
+        let v = eri_value(&b, &s, &mut eng, [0, 1, 0, 1]);
+        assert!(v.iter().all(|&x| x == 0.0));
     }
 }

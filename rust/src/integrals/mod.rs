@@ -4,7 +4,10 @@
 //! two-electron integrals over contracted cartesian Gaussian shells
 //! (s, p, d and combined sp), plus Cauchy–Schwarz screening bounds.
 //! The ERI path is the system's hot spot — `eri::EriEngine` keeps all
-//! scratch in a reusable workspace so the quartet loop never allocates.
+//! scratch in a reusable workspace so the quartet loop never allocates,
+//! and all shell-pair Hermite tables live in the SCF-lifetime
+//! [`shellpair::ShellPairStore`] shared (read-only) by every engine
+//! thread.
 
 pub mod boys;
 pub mod eri;
@@ -12,6 +15,8 @@ pub mod hermite;
 pub mod oneint;
 pub mod rtensor;
 pub mod schwarz;
+pub mod shellpair;
 
 pub use eri::EriEngine;
-pub use schwarz::SchwarzScreen;
+pub use schwarz::{PairDensityMax, SchwarzScreen};
+pub use shellpair::ShellPairStore;

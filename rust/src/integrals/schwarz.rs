@@ -2,10 +2,19 @@
 //! Q_ij = √(max |(ij|ij)|). Pairs whose Gaussian overlap is negligible by
 //! distance are skipped outright (their Q is ~0), which keeps the bound
 //! table O(N) for 2-D graphene sheets instead of O(N²).
+//!
+//! On top of the static bound, [`PairDensityMax`] adds the standard
+//! direct-SCF *density-weighted* bound (Häser–Ahlrichs): the actual Fock
+//! contribution of a quartet is ≤ Q_ij·Q_kl·w(D) where w(D) is built
+//! from the max |D| over the six shell-pair blocks the quartet touches.
+//! With incremental (ΔD) builds the weights shrink every iteration, so
+//! late iterations screen out almost the entire quartet space.
 
 use crate::basis::BasisSet;
+use crate::linalg::Matrix;
 
 use super::eri::EriEngine;
+use super::shellpair::{tables_for_pair, ShellPairStore};
 
 /// Schwarz bound table over canonical shell pairs.
 #[derive(Debug, Clone)]
@@ -30,9 +39,52 @@ impl SchwarzScreen {
     /// Default GAMESS-like screening threshold.
     pub const DEFAULT_TAU: f64 = 1e-10;
 
-    /// Build the bound table (computes (ij|ij) diagonal quartets, with a
-    /// distance fast-path for far pairs).
+    /// Build the bound table from a prebuilt pair store (computes
+    /// (ij|ij) diagonal quartets; pairs absent from the store are
+    /// distance-negligible and get Q = 0).
+    pub fn build_with_store(
+        basis: &BasisSet,
+        store: &ShellPairStore,
+        tau: f64,
+    ) -> SchwarzScreen {
+        assert!(
+            store.matches(basis),
+            "ShellPairStore does not belong to this basis (stale store?)"
+        );
+        Self::build_impl(basis, tau, |eng, i, j, buf| {
+            if store.get(i, j).is_none() {
+                false
+            } else {
+                eng.shell_quartet(basis, store, i, j, i, j, buf);
+                true
+            }
+        })
+    }
+
+    /// Build the bound table with O(one-pair) transient tables — no
+    /// store is materialized. This keeps the simulator/workload paths
+    /// (which only need bounds, including the multi-thousand-atom paper
+    /// sheets) at the seed's memory footprint; callers that keep a
+    /// store for an SCF should use [`SchwarzScreen::build_with_store`]
+    /// so the diagonal quartets reuse it.
     pub fn build(basis: &BasisSet, tau: f64) -> SchwarzScreen {
+        Self::build_impl(basis, tau, |eng, i, j, buf| match tables_for_pair(basis, i, j) {
+            None => false,
+            Some(t) => {
+                let v = t.view(false);
+                eng.shell_quartet_with_views(basis, i, j, i, j, v, v, buf);
+                true
+            }
+        })
+    }
+
+    /// Shared Q-table construction; `diag` fills `buf` with the (ij|ij)
+    /// block and returns false for negligible pairs (Q = 0).
+    fn build_impl(
+        basis: &BasisSet,
+        tau: f64,
+        mut diag: impl FnMut(&mut EriEngine, usize, usize, &mut [f64]) -> bool,
+    ) -> SchwarzScreen {
         let n = basis.n_shells();
         let mut q = vec![0.0; n * (n + 1) / 2];
         let mut eng = EriEngine::new();
@@ -40,19 +92,10 @@ impl SchwarzScreen {
         let mut q_max = 0.0f64;
         for i in 0..n {
             for j in 0..=i {
-                let qij = if pair_negligible(basis, i, j) {
-                    0.0
+                let qij = if diag(&mut eng, i, j, &mut buf) {
+                    diagonal_max(basis, i, j, &buf).sqrt()
                 } else {
-                    let (ni, nj) = (basis.shells[i].n_bf(), basis.shells[j].n_bf());
-                    eng.shell_quartet(basis, i, j, i, j, &mut buf);
-                    let mut mx = 0.0f64;
-                    for a in 0..ni {
-                        for b in 0..nj {
-                            let v = buf[((a * nj + b) * ni + a) * nj + b];
-                            mx = mx.max(v.abs());
-                        }
-                    }
-                    mx.sqrt()
+                    0.0
                 };
                 q[pair_index(i, j)] = qij;
                 q_max = q_max.max(qij);
@@ -68,17 +111,43 @@ impl SchwarzScreen {
         self.q[pair_index(a, b)]
     }
 
-    /// Is the quartet (ij|kl) screened out?
+    /// Is the quartet (ij|kl) screened out? (Static bound: density
+    /// weight taken as 1.)
     #[inline]
     pub fn screened(&self, i: usize, j: usize, k: usize, l: usize) -> bool {
         self.q(i, j) * self.q(k, l) <= self.tau
     }
 
-    /// Is the whole ij pair screenable against *any* kl (the Algorithm 3
-    /// top-loop prescreen)?
+    /// Is the whole ij pair screenable against *any* kl? Static
+    /// (density-free) variant, used by full-build replay semantics (the
+    /// simulator's workload model); the engines themselves prescreen
+    /// through [`SchwarzScreen::pair_screened_weighted`] via
+    /// `FockContext::pair_screened`.
     #[inline]
     pub fn pair_screened(&self, i: usize, j: usize) -> bool {
         self.q(i, j) * self.q_max <= self.tau
+    }
+
+    /// Density-weighted quartet screen: the quartet's largest possible
+    /// Fock contribution Q_ij·Q_kl·w(D) falls below τ. With ΔD densities
+    /// this is what makes incremental builds cheap.
+    #[inline]
+    pub fn screened_weighted(
+        &self,
+        i: usize,
+        j: usize,
+        k: usize,
+        l: usize,
+        dm: &PairDensityMax,
+    ) -> bool {
+        self.q(i, j) * self.q(k, l) * dm.quartet_weight(i, j, k, l) <= self.tau
+    }
+
+    /// Density-weighted pair prescreen: sound against every kl because
+    /// Q_kl ≤ q_max and every block weight ≤ the global |D| max.
+    #[inline]
+    pub fn pair_screened_weighted(&self, i: usize, j: usize, dm: &PairDensityMax) -> bool {
+        self.q(i, j) * self.q_max * dm.global <= self.tau
     }
 
     pub fn n_shells(&self) -> usize {
@@ -112,20 +181,76 @@ impl SchwarzScreen {
     }
 }
 
-/// Distance fast-path: a pair is negligible when the tightest-exponent
-/// Gaussian product prefactor exp(-μ R²) is below 1e-18.
-fn pair_negligible(basis: &BasisSet, i: usize, j: usize) -> bool {
-    let si = &basis.shells[i];
-    let sj = &basis.shells[j];
-    let r2 = crate::chem::geometry::dist2(si.center, sj.center);
-    if r2 == 0.0 {
-        return false;
+/// Max |(ab|ab)| over the (i,j) diagonal of a freshly computed
+/// (ij|ij) quartet block.
+fn diagonal_max(basis: &BasisSet, i: usize, j: usize, buf: &[f64]) -> f64 {
+    let (ni, nj) = (basis.shells[i].n_bf(), basis.shells[j].n_bf());
+    let mut mx = 0.0f64;
+    for a in 0..ni {
+        for b in 0..nj {
+            let v = buf[((a * nj + b) * ni + a) * nj + b];
+            mx = mx.max(v.abs());
+        }
     }
-    // Smallest exponents give the most diffuse (largest) overlap.
-    let ai = si.exps.iter().cloned().fold(f64::INFINITY, f64::min);
-    let aj = sj.exps.iter().cloned().fold(f64::INFINITY, f64::min);
-    let mu = ai * aj / (ai + aj);
-    mu * r2 > 41.0 // exp(-41) ≈ 1.6e-18
+    mx
+}
+
+/// Per-shell-pair max |D| block bounds for density-weighted screening.
+/// Rebuilt per Fock build from the density being contracted (the full D,
+/// or ΔD in incremental SCF).
+#[derive(Debug, Clone)]
+pub struct PairDensityMax {
+    /// m[pair_index(i,j)] = max |D_ab| over the (i,j) shell block.
+    m: Vec<f64>,
+    /// Global max over all blocks.
+    pub global: f64,
+    n_shells: usize,
+}
+
+impl PairDensityMax {
+    pub fn build(basis: &BasisSet, d: &Matrix) -> PairDensityMax {
+        let n = basis.n_shells();
+        let mut m = vec![0.0f64; n * (n + 1) / 2];
+        let mut global = 0.0f64;
+        for i in 0..n {
+            let ri = basis.shell_bf_range(i);
+            for j in 0..=i {
+                let rj = basis.shell_bf_range(j);
+                let mut mx = 0.0f64;
+                for a in ri.clone() {
+                    for b in rj.clone() {
+                        mx = mx.max(d.get(a, b).abs());
+                    }
+                }
+                m[pair_index(i, j)] = mx;
+                global = global.max(mx);
+            }
+        }
+        PairDensityMax { m, global, n_shells: n }
+    }
+
+    /// Max |D| over the (i,j) shell block, any index order.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let (a, b) = if i >= j { (i, j) } else { (j, i) };
+        debug_assert!(a < self.n_shells);
+        self.m[pair_index(a, b)]
+    }
+
+    /// Bound weight of quartet (ij|kl): Coulomb terms touch the (ij) and
+    /// (kl) density blocks with weight 1, exchange terms the four cross
+    /// blocks with weight ½ (closed-shell RHF scatter). Zero weight ⇒
+    /// the quartet's contribution is identically zero.
+    #[inline]
+    pub fn quartet_weight(&self, i: usize, j: usize, k: usize, l: usize) -> f64 {
+        let coul = self.get(i, j).max(self.get(k, l));
+        let exch = self
+            .get(i, k)
+            .max(self.get(i, l))
+            .max(self.get(j, k))
+            .max(self.get(j, l));
+        coul.max(0.5 * exch)
+    }
 }
 
 #[cfg(test)]
@@ -133,6 +258,7 @@ mod tests {
     use super::*;
     use crate::basis::BasisName;
     use crate::chem::{graphene, molecules};
+    use crate::integrals::shellpair::pair_negligible;
 
     #[test]
     fn pair_index_canonical() {
@@ -148,7 +274,8 @@ mod tests {
         // small molecule.
         let m = molecules::water();
         let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
-        let s = SchwarzScreen::build(&b, 0.0);
+        let store = ShellPairStore::build(&b);
+        let s = SchwarzScreen::build_with_store(&b, &store, 0.0);
         let mut eng = EriEngine::new();
         let mut buf = vec![0.0; 6 * 6 * 6 * 6];
         let n = b.n_shells();
@@ -156,7 +283,7 @@ mod tests {
             for j in 0..=i {
                 for k in 0..=i {
                     for l in 0..=k {
-                        eng.shell_quartet(&b, i, j, k, l, &mut buf);
+                        eng.shell_quartet(&b, &store, i, j, k, l, &mut buf);
                         let sz: usize = [i, j, k, l]
                             .iter()
                             .map(|&x| b.shells[x].n_bf())
@@ -204,5 +331,96 @@ mod tests {
                 assert_eq!(s.q(i, j), s.q(j, i));
             }
         }
+    }
+
+    #[test]
+    fn store_and_distance_paths_agree() {
+        // Pairs pruned from the store are exactly the pair_negligible
+        // ones, and both get Q = 0.
+        let mut mol = molecules::h2();
+        mol.atoms[1].pos[2] = 100.0;
+        let b = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+        let store = ShellPairStore::build(&b);
+        let s = SchwarzScreen::build_with_store(&b, &store, 1e-10);
+        assert!(pair_negligible(&b, 1, 0));
+        assert!(store.get(1, 0).is_none());
+        assert_eq!(s.q(1, 0), 0.0);
+        assert!(s.q(0, 0) > 0.0);
+    }
+
+    #[test]
+    fn density_weight_bounds_fock_contribution() {
+        // w(D) must be an upper bound on every |D| entry a quartet's
+        // scatter reads (Coulomb full weight, exchange half weight).
+        let m = molecules::water();
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let n = b.n_bf;
+        let mut d = Matrix::zeros(n, n);
+        let mut rng = crate::util::prng::Rng::new(5);
+        for i in 0..n {
+            for j in 0..=i {
+                let x = rng.range(-0.7, 0.7);
+                d.set(i, j, x);
+                d.set(j, i, x);
+            }
+        }
+        let dm = PairDensityMax::build(&b, &d);
+        let ns = b.n_shells();
+        for i in 0..ns {
+            for j in 0..ns {
+                assert_eq!(dm.get(i, j), dm.get(j, i));
+                assert!(dm.get(i, j) <= dm.global + 1e-15);
+            }
+        }
+        // Coulomb blocks dominate the weight by construction.
+        for (i, j, k, l) in [(0, 0, 1, 1), (1, 0, 2, 1), (3, 2, 1, 0)] {
+            let w = dm.quartet_weight(i, j, k, l);
+            assert!(w >= dm.get(i, j).max(dm.get(k, l)));
+            assert!(w >= 0.5 * dm.get(i, k));
+        }
+    }
+
+    #[test]
+    fn zero_density_screens_everything() {
+        let m = molecules::water();
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let s = SchwarzScreen::build(&b, SchwarzScreen::DEFAULT_TAU);
+        let d = Matrix::zeros(b.n_bf, b.n_bf);
+        let dm = PairDensityMax::build(&b, &d);
+        assert_eq!(dm.global, 0.0);
+        for i in 0..b.n_shells() {
+            for j in 0..=i {
+                assert!(s.pair_screened_weighted(i, j, &dm));
+                assert!(s.screened_weighted(i, j, i, j, &dm));
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_screen_is_superset_of_static_screen() {
+        // Anything the static bound kills, the weighted bound kills too
+        // (weights ≤ global ≤ ~max|D|; with |D| ≤ 1 here).
+        let m = molecules::benzene();
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let s = SchwarzScreen::build(&b, 1e-8);
+        let n = b.n_bf;
+        let mut d = Matrix::identity(n);
+        d.scale(0.5);
+        let dm = PairDensityMax::build(&b, &d);
+        let ns = b.n_shells();
+        let mut weighted_kills = 0u64;
+        let mut static_kills = 0u64;
+        crate::hf::quartets::for_each_canonical(ns, |(i, j, k, l)| {
+            let st = s.screened(i, j, k, l);
+            let wt = s.screened_weighted(i, j, k, l, &dm);
+            if st {
+                static_kills += 1;
+                assert!(wt, "static-screened quartet must stay weighted-screened");
+            }
+            if wt {
+                weighted_kills += 1;
+            }
+        });
+        assert!(weighted_kills >= static_kills);
     }
 }

@@ -1,0 +1,688 @@
+//! SCF-lifetime shell-pair store: the paper's "shared, precomputed data"
+//! lever applied to the integral hot path.
+//!
+//! The McMurchie–Davidson Hermite expansion tables E^{ab} of a shell
+//! pair depend only on the pair's geometry and exponents — not on the
+//! quartet, the segment combination, or the SCF iteration. The seed
+//! engine rebuilt the *ket* tables on every shell quartet (and kept a
+//! one-entry bra cache), so a (k,l) pair's tables were recomputed once
+//! per surviving (i,j) bra — O(N_pairs²) redundant Hermite recursions
+//! per Fock build, repeated every iteration.
+//!
+//! [`ShellPairStore`] precomputes the surviving primitive-pair tables
+//! for every distance-surviving canonical shell pair **once per SCF**,
+//! in a compact layout sized by the pair's actual angular momenta
+//! (an s–s primitive pair stores 3 doubles, not 3×225). The store is
+//! immutable after construction and shared across all engine threads
+//! behind `Arc` — the same shape as the paper's shared-Fock data
+//! structures: one copy per node, not one per thread.
+//!
+//! Lookup is O(1) by canonical pair ordinal. Either shell order is
+//! served: a swapped view ([`PairView`]) transposes the E-table index
+//! strides instead of copying, using E_t^{ij}(a,A;b,B) = E_t^{ji}(b,B;a,A).
+
+use crate::basis::BasisSet;
+
+use super::hermite::build_e;
+use super::schwarz::pair_index;
+
+/// Primitive pairs whose |c_a·c_b|·exp(−μR²) (max over segments) falls
+/// below this are dropped: their largest possible integral contribution
+/// is orders of magnitude below the SCF convergence threshold. Heavily
+/// contracted shells (6-31G carbon S6: 36 primitive pairs) shrink
+/// several-fold.
+pub const PAIR_CUTOFF: f64 = 1e-16;
+
+/// Distance fast-path: a pair is negligible when the tightest-exponent
+/// Gaussian product prefactor exp(-μ R²) is below 1e-18. Keeps the
+/// store (and the Schwarz bound table) O(N) for 2-D graphene sheets.
+pub fn pair_negligible(basis: &BasisSet, i: usize, j: usize) -> bool {
+    let si = &basis.shells[i];
+    let sj = &basis.shells[j];
+    let r2 = crate::chem::geometry::dist2(si.center, sj.center);
+    if r2 == 0.0 {
+        return false;
+    }
+    // Smallest exponents give the most diffuse (largest) overlap.
+    let ai = si.exps.iter().cloned().fold(f64::INFINITY, f64::min);
+    let aj = sj.exps.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mu = ai * aj / (ai + aj);
+    mu * r2 > 41.0 // exp(-41) ≈ 1.6e-18
+}
+
+/// Per-primitive-pair scalars (the Hermite tables live in the owning
+/// [`PairTables`] arena).
+#[derive(Debug, Clone, Copy)]
+pub struct PrimMeta {
+    /// E_0^{00}(x)·E_0^{00}(y)·E_0^{00}(z) — the s-s Hermite prefactor
+    /// (the l_total = 0 fast path).
+    pub e000: f64,
+    /// p = a + b.
+    pub p: f64,
+    /// Gaussian product center.
+    pub center: [f64; 3],
+    /// Primitive indices into the two shells' exponent lists (to look
+    /// up segment-specific contraction coefficients). `ia` indexes the
+    /// canonical-first (higher-index) shell.
+    pub ia: u32,
+    pub ib: u32,
+}
+
+/// Hermite tables of every surviving primitive pair of one shell pair,
+/// stored in a single arena sized by the pair's angular momenta.
+/// Layout: `data[prim][dim][ (i·(lb+1) + j)·tdim + t ]` with dim ∈
+/// {x, y, z}, i ≤ la, j ≤ lb, t ≤ la+lb.
+#[derive(Debug, Clone)]
+pub struct PairTables {
+    /// max_l of the canonical-first (higher-index) shell.
+    pub la: usize,
+    /// max_l of the second shell.
+    pub lb: usize,
+    tdim: usize,
+    /// Per-dimension table length: (la+1)·(lb+1)·tdim.
+    esize: usize,
+    pub prims: Vec<PrimMeta>,
+    data: Vec<f64>,
+}
+
+impl PairTables {
+    /// View these tables in the caller's shell order (`swap` when the
+    /// caller's first shell is the stored second one).
+    pub(crate) fn view(&self, swap: bool) -> PairView<'_> {
+        PairView { tables: self, swap }
+    }
+}
+
+/// Strided view of one dimension's E table: `get(i, j, t)` where `i`
+/// belongs to the *caller's* first shell. Swapped pair orders are
+/// served by exchanging the two index strides (no data movement).
+#[derive(Clone, Copy)]
+pub struct EView<'a> {
+    data: &'a [f64],
+    si: usize,
+    sj: usize,
+}
+
+impl EView<'_> {
+    #[inline]
+    pub fn get(&self, i: usize, j: usize, t: usize) -> f64 {
+        self.data[i * self.si + j * self.sj + t]
+    }
+}
+
+/// One primitive pair as seen in the caller's shell order: scalars plus
+/// the three strided E-table views. `ca`/`cb` index the caller-first /
+/// caller-second shell's primitive lists.
+#[derive(Clone, Copy)]
+pub struct PrimView<'a> {
+    pub e000: f64,
+    pub p: f64,
+    pub center: [f64; 3],
+    pub ca: usize,
+    pub cb: usize,
+    pub ex: EView<'a>,
+    pub ey: EView<'a>,
+    pub ez: EView<'a>,
+}
+
+/// A primitive pair resolved to lifetime-free index form: scalars plus
+/// offsets/strides into the owning pair's arena (`PairView::data`).
+/// Lets the ERI engine keep reusable scratch vectors of resolved prims
+/// across calls — zero allocation on the hot path after warmup.
+#[derive(Debug, Clone, Copy)]
+pub struct ResolvedPrim {
+    pub e000: f64,
+    pub p: f64,
+    pub center: [f64; 3],
+    /// Primitive indices in the caller-first / caller-second shell.
+    pub ca: usize,
+    pub cb: usize,
+    /// Arena offsets of this prim's x/y/z E tables.
+    bx: usize,
+    by: usize,
+    bz: usize,
+    /// Caller-order index strides (swap-resolved).
+    si: usize,
+    sj: usize,
+}
+
+impl ResolvedPrim {
+    #[inline]
+    pub fn ex(&self, data: &[f64], i: usize, j: usize, t: usize) -> f64 {
+        data[self.bx + i * self.si + j * self.sj + t]
+    }
+
+    #[inline]
+    pub fn ey(&self, data: &[f64], i: usize, j: usize, t: usize) -> f64 {
+        data[self.by + i * self.si + j * self.sj + t]
+    }
+
+    #[inline]
+    pub fn ez(&self, data: &[f64], i: usize, j: usize, t: usize) -> f64 {
+        data[self.bz + i * self.si + j * self.sj + t]
+    }
+}
+
+/// A [`PairTables`] adapted to the caller's shell order.
+#[derive(Clone, Copy)]
+pub struct PairView<'a> {
+    tables: &'a PairTables,
+    swap: bool,
+}
+
+impl<'a> PairView<'a> {
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.tables.prims.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.tables.prims.is_empty()
+    }
+
+    /// Resolve one primitive pair to caller order — the single copy of
+    /// the swap-transposition index math (strides and coefficient
+    /// indices); both `prim` and `resolve_into` are built on it.
+    #[inline]
+    fn resolve(&self, idx: usize) -> ResolvedPrim {
+        let t = self.tables;
+        let m = &t.prims[idx];
+        let (s_first, s_second) = ((t.lb + 1) * t.tdim, t.tdim);
+        let (si, sj) = if self.swap { (s_second, s_first) } else { (s_first, s_second) };
+        let (ca, cb) = if self.swap {
+            (m.ib as usize, m.ia as usize)
+        } else {
+            (m.ia as usize, m.ib as usize)
+        };
+        let base = idx * 3 * t.esize;
+        ResolvedPrim {
+            e000: m.e000,
+            p: m.p,
+            center: m.center,
+            ca,
+            cb,
+            bx: base,
+            by: base + t.esize,
+            bz: base + 2 * t.esize,
+            si,
+            sj,
+        }
+    }
+
+    /// The primitive pair at `idx` in the caller's shell order.
+    #[inline]
+    pub fn prim(&self, idx: usize) -> PrimView<'a> {
+        let t = self.tables;
+        let r = self.resolve(idx);
+        let view = |b: usize| EView { data: &t.data[b..b + t.esize], si: r.si, sj: r.sj };
+        PrimView {
+            e000: r.e000,
+            p: r.p,
+            center: r.center,
+            ca: r.ca,
+            cb: r.cb,
+            ex: view(r.bx),
+            ey: view(r.by),
+            ez: view(r.bz),
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = PrimView<'a>> + '_ {
+        (0..self.len()).map(|i| self.prim(i))
+    }
+
+    /// The pair's E-table arena (indexed by [`ResolvedPrim`] offsets).
+    #[inline]
+    pub fn data(&self) -> &'a [f64] {
+        &self.tables.data
+    }
+
+    /// Resolve every primitive pair into lifetime-free index form,
+    /// reusing `out`'s capacity (cleared first).
+    pub fn resolve_into(&self, out: &mut Vec<ResolvedPrim>) {
+        out.clear();
+        out.extend((0..self.len()).map(|i| self.resolve(i)));
+    }
+}
+
+/// The single source of truth for primitive-pair survival — used by
+/// both `build_pair_tables` and `estimate_bytes` so cutoff semantics
+/// cannot diverge.
+#[inline]
+fn prim_survives(cmax_a: f64, cmax_b: f64, a: f64, b: f64, r2: f64) -> bool {
+    let mu = a * b / (a + b);
+    cmax_a * cmax_b * (-mu * r2).exp() >= PAIR_CUTOFF
+}
+
+/// Per-dimension E-table length of a (la, lb) pair.
+#[inline]
+fn e_table_len(la: usize, lb: usize) -> usize {
+    (la + 1) * (lb + 1) * (la + lb + 1)
+}
+
+/// Largest |contraction coefficient| per primitive across a shell's
+/// segments (the screening bound valid for every segment).
+fn max_coefs(basis: &BasisSet, shell: usize) -> Vec<f64> {
+    let n = basis.shells[shell].exps.len();
+    let mut out = vec![0.0f64; n];
+    for seg in basis.shell_segments(shell) {
+        for (i, c) in seg.coefs.iter().enumerate() {
+            out[i] = out[i].max(c.abs());
+        }
+    }
+    out
+}
+
+/// FNV-1a fingerprint of a basis's geometry and exponents (shell
+/// centers, kinds and primitive exponents) — cheap identity check
+/// between a store and the basis it was built from.
+fn basis_fingerprint(basis: &BasisSet) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    mix(basis.n_shells() as u64);
+    for sh in &basis.shells {
+        mix(sh.kind.n_bf() as u64);
+        for c in sh.center {
+            mix(c.to_bits());
+        }
+        for &e in &sh.exps {
+            mix(e.to_bits());
+        }
+        // Coefficients matter too: PAIR_CUTOFF survivor sets depend on
+        // them, so a re-contracted basis must not match.
+        for &c in sh.coefs.iter().chain(&sh.coefs_p) {
+            mix(c.to_bits());
+        }
+    }
+    h
+}
+
+/// Build the pair tables for one shell pair in caller order `(i, j)`
+/// (no canonicalization), or `None` if the pair is distance-negligible
+/// or loses all primitives — the O(one-pair) transient path used by
+/// the store-free Schwarz build.
+pub(crate) fn tables_for_pair(basis: &BasisSet, i: usize, j: usize) -> Option<PairTables> {
+    if pair_negligible(basis, i, j) {
+        return None;
+    }
+    let t = build_pair_tables(basis, i, j, &max_coefs(basis, i), &max_coefs(basis, j));
+    if t.prims.is_empty() {
+        None
+    } else {
+        Some(t)
+    }
+}
+
+/// Sentinel for "no tables stored for this pair".
+const NONE: u32 = u32::MAX;
+
+/// Immutable, thread-shareable store of precomputed shell-pair Hermite
+/// tables, built once per SCF and shared by every Fock-build engine
+/// (and the Schwarz bound construction) behind `Arc`.
+#[derive(Debug, Clone)]
+pub struct ShellPairStore {
+    n_shells: usize,
+    /// Canonical pair ordinal → index into `tables`, or `NONE`.
+    idx: Vec<u32>,
+    tables: Vec<PairTables>,
+    n_prim_pairs: usize,
+    bytes: usize,
+    /// Fingerprint of the basis this store was built from.
+    fingerprint: u64,
+}
+
+impl ShellPairStore {
+    /// Precompute tables for every distance-surviving canonical shell
+    /// pair of `basis`. Primitive pairs below [`PAIR_CUTOFF`] are
+    /// dropped; pairs failing [`pair_negligible`] (or losing all their
+    /// primitives) get no entry — their quartets are identically
+    /// negligible and [`super::eri::EriEngine::shell_quartet`] returns
+    /// a zero block for them.
+    pub fn build(basis: &BasisSet) -> ShellPairStore {
+        let n = basis.n_shells();
+        let cmax: Vec<Vec<f64>> = (0..n).map(|s| max_coefs(basis, s)).collect();
+        let mut idx = vec![NONE; n * (n + 1) / 2];
+        let mut tables: Vec<PairTables> = Vec::new();
+        let mut n_prim_pairs = 0usize;
+
+        for i in 0..n {
+            for j in 0..=i {
+                if pair_negligible(basis, i, j) {
+                    continue;
+                }
+                let mut t = build_pair_tables(basis, i, j, &cmax[i], &cmax[j]);
+                if t.prims.is_empty() {
+                    continue;
+                }
+                // Drop push-growth slack so bytes() is a true footprint.
+                t.prims.shrink_to_fit();
+                t.data.shrink_to_fit();
+                n_prim_pairs += t.prims.len();
+                idx[pair_index(i, j)] = tables.len() as u32;
+                tables.push(t);
+            }
+        }
+
+        let bytes = std::mem::size_of::<ShellPairStore>()
+            + idx.len() * std::mem::size_of::<u32>()
+            + tables
+                .iter()
+                .map(|t| {
+                    std::mem::size_of::<PairTables>()
+                        + t.prims.len() * std::mem::size_of::<PrimMeta>()
+                        + t.data.len() * std::mem::size_of::<f64>()
+                })
+                .sum::<usize>();
+
+        ShellPairStore {
+            n_shells: n,
+            idx,
+            tables,
+            n_prim_pairs,
+            bytes,
+            fingerprint: basis_fingerprint(basis),
+        }
+    }
+
+    /// Tables for shell pair (a, b) in either order, or `None` if the
+    /// pair is negligible.
+    #[inline]
+    pub fn get(&self, a: usize, b: usize) -> Option<&PairTables> {
+        let (i, j) = if a >= b { (a, b) } else { (b, a) };
+        debug_assert!(i < self.n_shells);
+        match self.idx[pair_index(i, j)] {
+            NONE => None,
+            t => Some(&self.tables[t as usize]),
+        }
+    }
+
+    /// View of pair (a, b) adapted to the caller's order.
+    #[inline]
+    pub fn view(&self, a: usize, b: usize) -> Option<PairView<'_>> {
+        self.get(a, b).map(|tables| tables.view(a < b))
+    }
+
+    pub fn n_shells(&self) -> usize {
+        self.n_shells
+    }
+
+    /// Does this store belong to `basis`? Checks the geometry/exponent
+    /// fingerprint recorded at build time — a stale store (rebuilt
+    /// basis, moved geometry) would otherwise produce finite, plausible,
+    /// wrong integrals.
+    pub fn matches(&self, basis: &BasisSet) -> bool {
+        self.n_shells == basis.n_shells() && self.fingerprint == basis_fingerprint(basis)
+    }
+
+    /// Number of pairs with stored tables (≤ canonical pair count).
+    pub fn n_pairs_stored(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Total surviving primitive pairs across the store.
+    pub fn n_prim_pairs(&self) -> usize {
+        self.n_prim_pairs
+    }
+
+    /// Exact heap footprint in bytes (for the memory model / reports).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Predict `ShellPairStore::build(basis).bytes()` without building
+    /// any Hermite tables — the same survivor loops, counting only.
+    /// Cheap enough for the multi-thousand-atom paper systems, so the
+    /// footprint report can include the store without paying for it.
+    pub fn estimate_bytes(basis: &BasisSet) -> usize {
+        let n = basis.n_shells();
+        let cmax: Vec<Vec<f64>> = (0..n).map(|s| max_coefs(basis, s)).collect();
+        let mut bytes = std::mem::size_of::<ShellPairStore>()
+            + (n * (n + 1) / 2) * std::mem::size_of::<u32>();
+        for i in 0..n {
+            for j in 0..=i {
+                if pair_negligible(basis, i, j) {
+                    continue;
+                }
+                let a_sh = &basis.shells[i];
+                let b_sh = &basis.shells[j];
+                let esize = e_table_len(a_sh.kind.max_l(), b_sh.kind.max_l());
+                let r2 = crate::chem::geometry::dist2(a_sh.center, b_sh.center);
+                let mut n_prims = 0usize;
+                for (ia, &a) in a_sh.exps.iter().enumerate() {
+                    for (ib, &b) in b_sh.exps.iter().enumerate() {
+                        if prim_survives(cmax[i][ia], cmax[j][ib], a, b, r2) {
+                            n_prims += 1;
+                        }
+                    }
+                }
+                if n_prims > 0 {
+                    bytes += std::mem::size_of::<PairTables>()
+                        + n_prims
+                            * (std::mem::size_of::<PrimMeta>()
+                                + 3 * esize * std::mem::size_of::<f64>());
+                }
+            }
+        }
+        bytes
+    }
+}
+
+fn build_pair_tables(
+    basis: &BasisSet,
+    sh_a: usize,
+    sh_b: usize,
+    cmax_a: &[f64],
+    cmax_b: &[f64],
+) -> PairTables {
+    let a_sh = &basis.shells[sh_a];
+    let b_sh = &basis.shells[sh_b];
+    let (la, lb) = (a_sh.kind.max_l(), b_sh.kind.max_l());
+    let (ca, cb) = (a_sh.center, b_sh.center);
+    let r2 = crate::chem::geometry::dist2(ca, cb);
+    let tdim = la + lb + 1;
+    let esize = e_table_len(la, lb);
+    let mut out = PairTables {
+        la,
+        lb,
+        tdim,
+        esize,
+        prims: Vec::new(),
+        data: Vec::new(),
+    };
+    for (ia, &a) in a_sh.exps.iter().enumerate() {
+        for (ib, &b) in b_sh.exps.iter().enumerate() {
+            if !prim_survives(cmax_a[ia], cmax_b[ib], a, b, r2) {
+                continue;
+            }
+            let p = a + b;
+            let ex = build_e(a, b, ca[0], cb[0], la, lb);
+            let ey = build_e(a, b, ca[1], cb[1], la, lb);
+            let ez = build_e(a, b, ca[2], cb[2], la, lb);
+            let e000 = ex.get(0, 0, 0) * ey.get(0, 0, 0) * ez.get(0, 0, 0);
+            // Compact copy: one (la+1)×(lb+1)×tdim block per dimension.
+            for e in [&ex, &ey, &ez] {
+                for i in 0..=la {
+                    for j in 0..=lb {
+                        for t in 0..tdim {
+                            out.data.push(if t <= i + j { e.get(i, j, t) } else { 0.0 });
+                        }
+                    }
+                }
+            }
+            out.prims.push(PrimMeta {
+                e000,
+                p,
+                center: [
+                    (a * ca[0] + b * cb[0]) / p,
+                    (a * ca[1] + b * cb[1]) / p,
+                    (a * ca[2] + b * cb[2]) / p,
+                ],
+                ia: ia as u32,
+                ib: ib as u32,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basis::BasisName;
+    use crate::chem::molecules;
+
+    #[test]
+    fn store_covers_all_near_pairs() {
+        let m = molecules::water();
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let s = ShellPairStore::build(&b);
+        let n = b.n_shells();
+        assert_eq!(s.n_shells(), n);
+        // Water is compact: every canonical pair survives.
+        assert_eq!(s.n_pairs_stored(), n * (n + 1) / 2);
+        for i in 0..n {
+            for j in 0..n {
+                assert!(s.get(i, j).is_some(), "({i},{j})");
+            }
+        }
+        assert!(s.bytes() > 0);
+        assert!(s.n_prim_pairs() > 0);
+    }
+
+    #[test]
+    fn far_pairs_not_stored() {
+        let mut m = molecules::h2();
+        m.atoms[1].pos[2] = 100.0; // 100 bohr apart
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let s = ShellPairStore::build(&b);
+        assert!(s.get(0, 0).is_some());
+        assert!(s.get(1, 1).is_some());
+        assert!(s.get(1, 0).is_none(), "far cross pair must be pruned");
+    }
+
+    #[test]
+    fn swapped_view_transposes_e_tables() {
+        // For a mixed-l pair, view(i,j) and view(j,i) must expose the
+        // same tables with transposed indices: E^{ij}(i,j,t) = E^{ji}(j,i,t).
+        let m = molecules::water();
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let s = ShellPairStore::build(&b);
+        // Shell 1 is the O 2sp shell (l=1), shell 2 an H s shell (l=0).
+        let fwd = s.view(1, 2).unwrap();
+        let rev = s.view(2, 1).unwrap();
+        assert_eq!(fwd.len(), rev.len());
+        for idx in 0..fwd.len() {
+            let f = fwd.prim(idx);
+            let r = rev.prim(idx);
+            assert_eq!(f.ca, r.cb);
+            assert_eq!(f.cb, r.ca);
+            assert_eq!(f.e000, r.e000);
+            for i in 0..=1usize {
+                for t in 0..=1usize {
+                    assert_eq!(f.ex.get(i, 0, t), r.ex.get(0, i, t), "i={i} t={t}");
+                    assert_eq!(f.ez.get(i, 0, t), r.ez.get(0, i, t), "i={i} t={t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compact_tables_match_full_hermite_recursion() {
+        // The compact arena must reproduce build_e entry-for-entry.
+        let m = crate::chem::graphene::monolayer(2, "c2");
+        let b = BasisSet::assemble(&m, BasisName::SixThirtyOneGd).unwrap();
+        let s = ShellPairStore::build(&b);
+        // d shell (index 3) against sp shell (index 1).
+        let (hi, lo) = (3usize, 1usize);
+        let v = s.view(hi, lo).unwrap();
+        let sh_a = &b.shells[hi];
+        let sh_b = &b.shells[lo];
+        let (la, lb) = (sh_a.kind.max_l(), sh_b.kind.max_l());
+        for pr in v.iter() {
+            let (a, bb) = (sh_a.exps[pr.ca], sh_b.exps[pr.cb]);
+            let ex = build_e(a, bb, sh_a.center[0], sh_b.center[0], la, lb);
+            for i in 0..=la {
+                for j in 0..=lb {
+                    for t in 0..=(i + j) {
+                        assert!(
+                            (pr.ex.get(i, j, t) - ex.get(i, j, t)).abs() < 1e-15,
+                            "i={i} j={j} t={t}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn resolved_prims_match_views() {
+        // ResolvedPrim's offset/stride form must reproduce PrimView
+        // exactly, in both shell orders.
+        let m = molecules::water();
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let s = ShellPairStore::build(&b);
+        for (first, second) in [(1usize, 2usize), (2, 1)] {
+            let v = s.view(first, second).unwrap();
+            let data = v.data();
+            let mut rp = Vec::new();
+            v.resolve_into(&mut rp);
+            assert_eq!(rp.len(), v.len());
+            for (idx, pv) in v.iter().enumerate() {
+                let r = rp[idx];
+                assert_eq!(pv.ca, r.ca);
+                assert_eq!(pv.cb, r.cb);
+                assert_eq!(pv.e000, r.e000);
+                // Caller-order shell momenta bound the table indices.
+                let li = b.shells[first].kind.max_l();
+                let lj = b.shells[second].kind.max_l();
+                for i in 0..=li {
+                    for j in 0..=lj {
+                        for t in 0..=(i + j) {
+                            assert_eq!(pv.ex.get(i, j, t), r.ex(data, i, j, t));
+                            assert_eq!(pv.ey.get(i, j, t), r.ey(data, i, j, t));
+                            assert_eq!(pv.ez.get(i, j, t), r.ez(data, i, j, t));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stale_store_detected() {
+        let m1 = molecules::h2();
+        let b1 = BasisSet::assemble(&m1, BasisName::Sto3g).unwrap();
+        let s1 = ShellPairStore::build(&b1);
+        assert!(s1.matches(&b1));
+        let mut m2 = molecules::h2();
+        m2.atoms[1].pos[2] = 2.8; // moved geometry, same shell count
+        let b2 = BasisSet::assemble(&m2, BasisName::Sto3g).unwrap();
+        assert!(!s1.matches(&b2), "moved geometry must invalidate the store");
+    }
+
+    #[test]
+    fn estimate_matches_built_store() {
+        // estimate_bytes mirrors build()'s survivor loops exactly.
+        for mol in [molecules::water(), molecules::benzene()] {
+            let b = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+            let s = ShellPairStore::build(&b);
+            assert_eq!(ShellPairStore::estimate_bytes(&b), s.bytes(), "{}", mol.name);
+        }
+    }
+
+    #[test]
+    fn bytes_accounting_scales_with_system() {
+        let small = ShellPairStore::build(
+            &BasisSet::assemble(&molecules::h2(), BasisName::Sto3g).unwrap(),
+        );
+        let big = ShellPairStore::build(
+            &BasisSet::assemble(&molecules::benzene(), BasisName::Sto3g).unwrap(),
+        );
+        assert!(big.bytes() > small.bytes());
+        assert!(big.n_prim_pairs() > small.n_prim_pairs());
+    }
+}

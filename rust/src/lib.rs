@@ -20,6 +20,18 @@
 //!
 //! Start with [`scf::RhfDriver`] for serial SCF, [`hf`] for the paper's
 //! engines, and [`cluster::simulate`] for the scaling studies.
+//!
+//! The integral hot path is organized around the SCF-lifetime
+//! [`integrals::ShellPairStore`] (shared pair Hermite tables, one copy
+//! per process) and incremental ΔD Fock builds in the driver — see
+//! EXPERIMENTS.md for the perf-iteration log.
+
+// Numeric kernel code: index-heavy loops over small tensors are written
+// as explicit loops on purpose (they mirror the paper's Fortran and keep
+// the stride arithmetic auditable).
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::many_single_char_names)]
 
 pub mod util;
 pub mod chem;

@@ -18,7 +18,6 @@ use khf::hf::mpi_only::MpiOnlyFock;
 use khf::hf::private_fock::PrivateFock;
 use khf::hf::serial::SerialFock;
 use khf::hf::shared_fock::SharedFock;
-use khf::hf::FockBuilder;
 use khf::runtime::{Runtime, XlaFockBuilder};
 use khf::scf::RhfDriver;
 use khf::util::cli::Args;
@@ -54,6 +53,8 @@ fn print_help() {
            info                              paper system inventory\n\
            scf --mol <h2|h2o|ch4|c6h6> [--basis sto-3g] [--engine serial|mpi|private|shared|xla]\n\
                [--ranks N] [--threads N]     run RHF\n\
+               [--no-incremental] [--rebuild-every N] [--tau T]\n\
+                                             incremental (ΔD) Fock-build controls\n\
            footprint                         Table 2 memory footprints\n\
            simulate --system <0.5|1.0|1.5|2.0|5.0> [--nodes 4,16,...]\n\
            calibrate [--out artifacts/calibration.toml] [--budget N]\n\
@@ -91,7 +92,12 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
     let threads = args.parse_or("threads", 2usize)?;
     let engine = args.get_or("engine", "serial");
 
-    let driver = RhfDriver::default();
+    let driver = RhfDriver {
+        incremental: !args.flag("no-incremental"),
+        rebuild_every: args.parse_or("rebuild-every", 8)?,
+        schwarz_tau: args.parse_or("tau", khf::integrals::SchwarzScreen::DEFAULT_TAU)?,
+        ..RhfDriver::default()
+    };
     let res = match engine {
         "serial" => driver.run(&mol, basis, &mut SerialFock::new())?,
         "mpi" => driver.run(&mol, basis, &mut MpiOnlyFock::new(ranks))?,
@@ -99,9 +105,11 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
         "shared" => driver.run(&mol, basis, &mut SharedFock::new(ranks, threads))?,
         "xla" => {
             let b = khf::basis::BasisSet::assemble(&mol, basis)?;
+            // One store serves both the dense ERI tabulation and the SCF.
+            let store = std::sync::Arc::new(khf::integrals::ShellPairStore::build(&b));
             let rt = Runtime::cpu(Runtime::default_dir())?;
-            let mut builder = XlaFockBuilder::new(rt, &b)?;
-            driver.run_with_basis(&mol, &b, &mut builder)?
+            let mut builder = XlaFockBuilder::new_with_store(rt, &b, &store)?;
+            driver.run_with_store(&mol, &b, store, &mut builder)?
         }
         other => anyhow::bail!("unknown engine {other:?}"),
     };
@@ -115,6 +123,41 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
         res.converged,
         human_secs(res.fock_build_seconds),
     );
+    // BuildStats screening counters: the incremental-SCF observability.
+    println!(
+        "  shell-pair store: {} ({} mode, rebuild every {})",
+        human_bytes(res.store_bytes as f64),
+        if driver.incremental { "incremental ΔD" } else { "full rebuild" },
+        driver.rebuild_every,
+    );
+    // (The xla engine does no quartet screening and reports 0 counts —
+    // skip the counter lines rather than print a bogus reduction.)
+    if let Some((first, last)) = res
+        .build_stats
+        .first()
+        .zip(res.build_stats.last())
+        .filter(|(f, _)| f.quartets_computed > 0)
+    {
+        let total: u64 = res.build_stats.iter().map(|s| s.quartets_computed).sum();
+        let ratio = if last.quartets_computed > 0 {
+            first.quartets_computed as f64 / last.quartets_computed as f64
+        } else {
+            f64::INFINITY
+        };
+        println!(
+            "  quartets computed: {} (first iter) -> {} (final iter), {:.1}x reduction; \
+             {} total over {} builds",
+            first.quartets_computed,
+            last.quartets_computed,
+            ratio,
+            total,
+            res.build_stats.len(),
+        );
+        println!(
+            "  quartets screened: {} (first iter) -> {} (final iter)",
+            first.quartets_screened, last.quartets_screened,
+        );
+    }
     Ok(())
 }
 
@@ -128,9 +171,18 @@ fn cmd_footprint() -> anyhow::Result<()> {
         "MPI exact".into(),
         "Pr.F exact".into(),
         "Sh.F exact".into(),
+        "store/rank".into(),
     ]];
+    let mut store_05nm = None;
     for sys in PaperSystem::ALL {
         let n = sys.n_bf();
+        // Predicted pair-store footprint per process (counting loops
+        // only — no Hermite tables are built here).
+        let basis = khf::basis::BasisSet::assemble(&sys.build(), BasisName::SixThirtyOneGd)?;
+        let store_bytes = khf::integrals::ShellPairStore::estimate_bytes(&basis) as f64;
+        if sys == PaperSystem::Nm05 {
+            store_05nm = Some(store_bytes);
+        }
         rows.push(vec![
             sys.label().into(),
             n.to_string(),
@@ -140,9 +192,33 @@ fn cmd_footprint() -> anyhow::Result<()> {
             human_bytes(memmodel::exact_bytes(EngineKind::MpiOnly, n, 15, 256, 1)),
             human_bytes(memmodel::exact_bytes(EngineKind::PrivateFock, n, 15, 4, 64)),
             human_bytes(memmodel::exact_bytes(EngineKind::SharedFock, n, 15, 4, 64)),
+            human_bytes(store_bytes),
         ]);
     }
     print!("{}", report::table(&rows));
+    if let Some(sb) = store_05nm {
+        let n = PaperSystem::Nm05.n_bf();
+        println!(
+            "\npair store replicates per process: x256 for MPI-only, x4 for the hybrids\n\
+             (0.5 nm with store: MPI-only {} vs shared-Fock {})",
+            human_bytes(memmodel::exact_bytes_with_store(
+                EngineKind::MpiOnly,
+                n,
+                15,
+                256,
+                1,
+                sb
+            )),
+            human_bytes(memmodel::exact_bytes_with_store(
+                EngineKind::SharedFock,
+                n,
+                15,
+                4,
+                64,
+                sb
+            )),
+        );
+    }
     Ok(())
 }
 

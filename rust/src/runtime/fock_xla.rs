@@ -9,13 +9,13 @@
 //! nothing to G, D, or the energy.
 
 use crate::basis::BasisSet;
-use crate::integrals::{EriEngine, SchwarzScreen};
+use crate::integrals::{EriEngine, ShellPairStore};
 use crate::linalg::Matrix;
 
 use super::pjrt::Runtime;
 use super::grid_size;
 
-use crate::hf::{BuildStats, FockBuilder};
+use crate::hf::{BuildStats, FockBuilder, FockContext};
 
 /// Dense-ERI Fock builder executing the `fock2e_{N}` artifact.
 pub struct XlaFockBuilder {
@@ -31,8 +31,22 @@ pub struct XlaFockBuilder {
 
 impl XlaFockBuilder {
     /// Assemble the dense (padded) ERI tensor for `basis` and prepare
-    /// the runtime. Errors if the basis exceeds the artifact grid.
+    /// the runtime, building a private shell-pair store for the
+    /// tabulation. Callers that already hold a store should use
+    /// [`XlaFockBuilder::new_with_store`].
     pub fn new(runtime: Runtime, basis: &BasisSet) -> anyhow::Result<XlaFockBuilder> {
+        let store = ShellPairStore::build(basis);
+        Self::new_with_store(runtime, basis, &store)
+    }
+
+    /// Like [`XlaFockBuilder::new`], reusing an existing pair store for
+    /// the dense ERI assembly. Errors if the basis exceeds the
+    /// artifact grid.
+    pub fn new_with_store(
+        runtime: Runtime,
+        basis: &BasisSet,
+        store: &ShellPairStore,
+    ) -> anyhow::Result<XlaFockBuilder> {
         let n = basis.n_bf;
         let n_pad = grid_size(n).ok_or_else(|| {
             anyhow::anyhow!(
@@ -51,7 +65,7 @@ impl XlaFockBuilder {
             for j in 0..ns {
                 for k in 0..ns {
                     for l in 0..ns {
-                        eng.shell_quartet(basis, i, j, k, l, &mut block);
+                        eng.shell_quartet(basis, store, i, j, k, l, &mut block);
                         let (ni, nj, nk, nl) = (
                             basis.shells[i].n_bf(),
                             basis.shells[j].n_bf(),
@@ -136,10 +150,10 @@ impl XlaFockBuilder {
 }
 
 impl FockBuilder for XlaFockBuilder {
-    fn build_2e(&mut self, _basis: &BasisSet, _screen: &SchwarzScreen, d: &Matrix) -> Matrix {
+    fn build_2e(&mut self, ctx: &FockContext) -> Matrix {
         let t0 = std::time::Instant::now();
         let name = format!("fock2e_{}", self.n_pad);
-        let d_pad = self.pad(d);
+        let d_pad = self.pad(ctx.d);
         let np = self.n_pad;
         let out = self
             .runtime
@@ -159,5 +173,15 @@ impl FockBuilder for XlaFockBuilder {
 
     fn name(&self) -> &'static str {
         "xla-dense"
+    }
+
+    fn last_stats(&self) -> BuildStats {
+        self.stats
+    }
+
+    /// Dense path: every build contracts the full (padded) ERI tensor,
+    /// so ΔD builds would cost the same as full ones.
+    fn screens(&self) -> bool {
+        false
     }
 }

@@ -1,10 +1,26 @@
-//! The RHF SCF driver.
+//! The RHF SCF driver: incremental direct SCF over a shared shell-pair
+//! store.
+//!
+//! Every run builds the [`ShellPairStore`] once (behind `Arc` — the
+//! SCF-lifetime shared data the engines read from every thread), derives
+//! the Schwarz bounds from it, and then drives the Fock builds
+//! incrementally: F_n = H + G_n with
+//!
+//!   G_n = G_{n−1} + G(D_n − D_{n−1})
+//!
+//! using linearity of G in D. Because the engines screen with the
+//! density-weighted bound Q_ij·Q_kl·w(ΔD) ≤ τ and ‖ΔD‖ → 0 as the SCF
+//! converges, late iterations compute only a residual fraction of the
+//! quartet space. A periodic full rebuild (every `rebuild_every`
+//! iterations) bounds the accumulated screening drift.
+
+use std::sync::Arc;
 
 use crate::basis::{BasisName, BasisSet};
 use crate::chem::Molecule;
-use crate::hf::FockBuilder;
+use crate::hf::{BuildStats, FockBuilder, FockContext};
 use crate::integrals::oneint::{core_hamiltonian, overlap_matrix};
-use crate::integrals::SchwarzScreen;
+use crate::integrals::{SchwarzScreen, ShellPairStore};
 use crate::linalg::{eigen, Matrix};
 
 use super::diis::Diis;
@@ -18,11 +34,23 @@ pub struct RhfDriver {
     pub conv_dens: f64,
     pub use_diis: bool,
     pub schwarz_tau: f64,
+    /// Incremental (ΔD) Fock builds: G_n = G_{n−1} + G(D_n − D_{n−1}).
+    pub incremental: bool,
+    /// Full G rebuild cadence under incremental mode (0 = never after
+    /// the first build). Bounds screening-error drift.
+    pub rebuild_every: usize,
 }
 
 impl Default for RhfDriver {
     fn default() -> Self {
-        RhfDriver { max_iter: 60, conv_dens: 1e-8, use_diis: true, schwarz_tau: SchwarzScreen::DEFAULT_TAU }
+        RhfDriver {
+            max_iter: 60,
+            conv_dens: 1e-8,
+            use_diis: true,
+            schwarz_tau: SchwarzScreen::DEFAULT_TAU,
+            incremental: true,
+            rebuild_every: 8,
+        }
     }
 }
 
@@ -41,6 +69,11 @@ pub struct ScfResult {
     pub history: Vec<(f64, f64)>,
     /// Seconds spent inside Fock builds (the paper's reported metric).
     pub fock_build_seconds: f64,
+    /// Per-iteration Fock-build statistics (screening counters). With
+    /// incremental builds the computed count collapses as ΔD → 0.
+    pub build_stats: Vec<BuildStats>,
+    /// Heap bytes of the shared shell-pair store used by the run.
+    pub store_bytes: usize,
 }
 
 impl RhfDriver {
@@ -55,11 +88,25 @@ impl RhfDriver {
         self.run_with_basis(mol, &basis, builder)
     }
 
-    /// Run RHF with a pre-assembled basis (lets callers reuse screening).
+    /// Run RHF with a pre-assembled basis, building the shell-pair
+    /// store internally.
     pub fn run_with_basis(
         &self,
         mol: &Molecule,
         basis: &BasisSet,
+        builder: &mut dyn FockBuilder,
+    ) -> anyhow::Result<ScfResult> {
+        let store = Arc::new(ShellPairStore::build(basis));
+        self.run_with_store(mol, basis, store, builder)
+    }
+
+    /// Run RHF reusing an existing shell-pair store (e.g. one already
+    /// built for an `XlaFockBuilder`'s dense ERI tabulation).
+    pub fn run_with_store(
+        &self,
+        mol: &Molecule,
+        basis: &BasisSet,
+        store: Arc<ShellPairStore>,
         builder: &mut dyn FockBuilder,
     ) -> anyhow::Result<ScfResult> {
         let n_occ = mol.n_occ()?;
@@ -74,26 +121,64 @@ impl RhfDriver {
         let s = overlap_matrix(basis);
         let x = eigen::inv_sqrt(&s)?;
         let h = core_hamiltonian(basis, mol);
-        let screen = SchwarzScreen::build(basis, self.schwarz_tau);
+        // SCF-lifetime shared data: pair tables once, bounds from them.
+        let screen = SchwarzScreen::build_with_store(basis, &store, self.schwarz_tau);
+        log::debug!(
+            "shell-pair store: {} pairs, {} prim pairs, {} bytes",
+            store.n_pairs_stored(),
+            store.n_prim_pairs(),
+            store.bytes()
+        );
+
+        // Incremental builds only pay off for builders that honor the
+        // quartet screen; dense builders (XLA) do full-price ΔD builds,
+        // so run them in plain direct-SCF mode.
+        let incremental = self.incremental && builder.screens();
 
         // Core guess.
         let mut d = self.new_density(&h, &x, n_occ).1;
         let mut diis = Diis::new(8);
         let mut history = Vec::new();
+        let mut build_stats: Vec<BuildStats> = Vec::new();
         let mut fock_seconds = 0.0;
         let mut last = (0.0, f64::INFINITY);
         let mut fock = h.clone();
         let mut orbital_energies = Vec::new();
 
+        // Running two-electron matrix G(d) and the density it matches.
+        let mut g_total = Matrix::zeros(basis.n_bf, basis.n_bf);
+        let mut d_of_g: Option<Matrix> = None;
+
         let mut converged = false;
         let mut iterations = 0;
+        // Incremental mode confirms convergence with one extra ΔD build:
+        // the final (sub-threshold) ΔD is folded into G so the reported
+        // Fock and energy correspond to the *converged* density. That
+        // build is nearly free — its ΔD weights screen out almost the
+        // whole quartet space.
+        let mut confirmed = false;
         for it in 0..self.max_iter {
             iterations = it + 1;
+            let full_rebuild = !incremental
+                || d_of_g.is_none()
+                || (self.rebuild_every > 0 && it % self.rebuild_every == 0);
             let t0 = std::time::Instant::now();
-            let g = builder.build_2e(basis, &screen, &d);
+            if full_rebuild {
+                let ctx = FockContext::new(basis, &store, &screen, &d);
+                g_total = builder.build_2e(&ctx);
+            } else {
+                let mut delta = d.clone();
+                delta.sub_assign(d_of_g.as_ref().unwrap());
+                let ctx = FockContext::new(basis, &store, &screen, &delta);
+                let g_delta = builder.build_2e(&ctx);
+                g_total.add_assign(&g_delta);
+            }
             fock_seconds += t0.elapsed().as_secs_f64();
+            build_stats.push(builder.last_stats());
+            d_of_g = Some(d.clone());
+
             let mut f = h.clone();
-            f.add_assign(&g);
+            f.add_assign(&g_total);
             let e_elec = electronic_energy(&d, &h, &f);
 
             let f_use = if self.use_diis {
@@ -114,7 +199,20 @@ impl RhfDriver {
             fock = f;
             orbital_energies = eps;
             last = (e_elec, rms);
+            if confirmed {
+                // The confirmation build ran this iteration; convergence
+                // was already established when it was scheduled, so stop
+                // regardless of this iteration's rms.
+                converged = true;
+                break;
+            }
             if rms < self.conv_dens {
+                // Spend the confirmation iteration only if one remains;
+                // convergence itself is already established either way.
+                if incremental && it + 1 < self.max_iter {
+                    confirmed = true;
+                    continue;
+                }
                 converged = true;
                 break;
             }
@@ -131,6 +229,8 @@ impl RhfDriver {
             fock,
             history,
             fock_build_seconds: fock_seconds,
+            build_stats,
+            store_bytes: store.bytes(),
         })
     }
 
@@ -186,5 +286,62 @@ mod tests {
             let tail: Vec<f64> = r.history[n - 3..].iter().map(|x| x.0).collect();
             assert!((tail[2] - tail[1]).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn incremental_matches_full_rebuild() {
+        // The ΔD path must land on the same energy as plain direct SCF.
+        for mol in [molecules::water(), molecules::methane()] {
+            let mut b1 = SerialFock::new();
+            let full = RhfDriver { incremental: false, ..Default::default() }
+                .run(&mol, BasisName::Sto3g, &mut b1)
+                .unwrap();
+            let mut b2 = SerialFock::new();
+            let incr = RhfDriver::default().run(&mol, BasisName::Sto3g, &mut b2).unwrap();
+            assert!(full.converged && incr.converged, "{}", mol.name);
+            assert!(
+                (full.energy - incr.energy).abs() < 1e-8,
+                "{}: {} vs {}",
+                mol.name,
+                full.energy,
+                incr.energy
+            );
+        }
+    }
+
+    #[test]
+    fn incremental_screens_out_late_quartets() {
+        // The acceptance headline: with ΔD builds the final iteration
+        // (the post-convergence confirmation build, whose ΔD is below
+        // the convergence threshold) computes ≥2x fewer quartets than
+        // the first. Benzene has the broad Schwarz-bound distribution
+        // where ΔD weighting visibly collapses the quartet space.
+        // rebuild_every: 0 keeps the final iteration on the ΔD path.
+        let mut builder = SerialFock::new();
+        let r = RhfDriver { rebuild_every: 0, ..Default::default() }
+            .run(&molecules::benzene(), BasisName::Sto3g, &mut builder)
+            .unwrap();
+        assert!(r.converged);
+        let first = r.build_stats.first().unwrap().quartets_computed;
+        let last = r.build_stats.last().unwrap().quartets_computed;
+        assert!(
+            last * 2 <= first,
+            "no screening win: first {first}, last {last}"
+        );
+        // And the non-incremental driver keeps computing the full set.
+        let mut b2 = SerialFock::new();
+        let rf = RhfDriver { incremental: false, ..Default::default() }
+            .run(&molecules::methane(), BasisName::SixThirtyOneG, &mut b2)
+            .unwrap();
+        let f_first = rf.build_stats.first().unwrap().quartets_computed;
+        let f_last = rf.build_stats.last().unwrap().quartets_computed;
+        assert!(f_last * 2 > f_first, "full rebuilds should stay ~flat");
+    }
+
+    #[test]
+    fn store_is_reported() {
+        let r = run(&molecules::h2(), BasisName::Sto3g);
+        assert!(r.store_bytes > 0);
+        assert_eq!(r.build_stats.len(), r.iterations);
     }
 }

@@ -1,7 +1,9 @@
 //! Integration: the paper's three parallel engines must produce
 //! *identical physics* to the serial reference through full SCF — the
 //! strongest end-to-end correctness statement (any race, routing error
-//! or missed flush shifts the energy).
+//! or missed flush shifts the energy). The incremental (ΔD) driver path
+//! is held to the same bar: every engine's incremental SCF must match
+//! the serial full-rebuild reference to 1e-8.
 
 use khf::basis::{BasisName, BasisSet};
 use khf::chem::molecules;
@@ -9,8 +11,8 @@ use khf::hf::mpi_only::MpiOnlyFock;
 use khf::hf::private_fock::PrivateFock;
 use khf::hf::serial::SerialFock;
 use khf::hf::shared_fock::SharedFock;
-use khf::hf::FockBuilder;
-use khf::integrals::SchwarzScreen;
+use khf::hf::{FockBuilder, FockContext};
+use khf::integrals::{SchwarzScreen, ShellPairStore};
 use khf::linalg::Matrix;
 use khf::scf::RhfDriver;
 use khf::util::prng::Rng;
@@ -35,11 +37,75 @@ fn full_scf_energy_identical_across_engines() {
 }
 
 #[test]
+fn incremental_scf_matches_serial_full_rebuild_all_engines() {
+    // The ΔD path through every engine vs the serial non-incremental
+    // reference, on water and benzene: energies within 1e-8, and the
+    // incremental runs must actually converge.
+    for mol in [molecules::water(), molecules::benzene()] {
+        let full_driver = RhfDriver { incremental: false, ..Default::default() };
+        let reference = full_driver
+            .run(&mol, BasisName::Sto3g, &mut SerialFock::new())
+            .unwrap();
+        assert!(reference.converged, "{}: reference did not converge", mol.name);
+
+        let incr_driver = RhfDriver::default();
+        assert!(incr_driver.incremental, "incremental must be the default");
+        let mut engines: Vec<(&str, Box<dyn FockBuilder>)> = vec![
+            ("serial", Box::new(SerialFock::new())),
+            ("mpi", Box::new(MpiOnlyFock::new(3))),
+            ("private", Box::new(PrivateFock::new(2, 2))),
+            ("shared", Box::new(SharedFock::new(2, 2))),
+        ];
+        for (name, builder) in engines.iter_mut() {
+            let r = incr_driver.run(&mol, BasisName::Sto3g, builder.as_mut()).unwrap();
+            assert!(r.converged, "{}/{name}: did not converge", mol.name);
+            assert!(
+                (r.energy - reference.energy).abs() < 1e-8,
+                "{}/{name}: incremental {} vs full {}",
+                mol.name,
+                r.energy,
+                reference.energy
+            );
+        }
+    }
+}
+
+#[test]
+fn incremental_final_iteration_computes_fewer_quartets() {
+    // The point of ΔD builds: as the density settles, the weighted
+    // screen kills most of the quartet space (the final build is the
+    // post-convergence confirmation pass with a sub-threshold ΔD).
+    // Benzene's broad Schwarz-bound spread makes the collapse visible;
+    // rebuild_every: 0 so the final iteration is guaranteed to be a ΔD
+    // build (the default cadence could land a full rebuild on the
+    // convergence iteration and mask the drop).
+    let mol = molecules::benzene();
+    let driver = RhfDriver { rebuild_every: 0, ..Default::default() };
+    let mut engines: Vec<(&str, Box<dyn FockBuilder>)> = vec![
+        ("serial", Box::new(SerialFock::new())),
+        ("mpi", Box::new(MpiOnlyFock::new(2))),
+        ("private", Box::new(PrivateFock::new(1, 3))),
+        ("shared", Box::new(SharedFock::new(1, 3))),
+    ];
+    for (name, builder) in engines.iter_mut() {
+        let r = driver.run(&mol, BasisName::Sto3g, builder.as_mut()).unwrap();
+        assert!(r.converged, "{name}");
+        let first = r.build_stats.first().unwrap().quartets_computed;
+        let last = r.build_stats.last().unwrap().quartets_computed;
+        assert!(
+            last * 2 <= first,
+            "{name}: first iter computed {first}, final {last} — no ΔD win"
+        );
+    }
+}
+
+#[test]
 fn fock_matrices_bitwise_close_on_d_shell_system() {
     // 6-31G(d) fragment: wide shells stress the shared-Fock routing.
     let mol = khf::chem::graphene::monolayer(4, "c4");
     let basis = BasisSet::assemble(&mol, BasisName::SixThirtyOneGd).unwrap();
-    let screen = SchwarzScreen::build(&basis, SchwarzScreen::DEFAULT_TAU);
+    let store = ShellPairStore::build(&basis);
+    let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
     let mut rng = Rng::new(2024);
     let n = basis.n_bf;
     let mut d = Matrix::zeros(n, n);
@@ -50,9 +116,10 @@ fn fock_matrices_bitwise_close_on_d_shell_system() {
             d.set(j, i, x);
         }
     }
-    let want = SerialFock::new().build_2e(&basis, &screen, &d);
+    let ctx = FockContext::new(&basis, &store, &screen, &d);
+    let want = SerialFock::new().build_2e(&ctx);
     for threads in [2, 3, 7] {
-        let got = SharedFock::new(2, threads).build_2e(&basis, &screen, &d);
+        let got = SharedFock::new(2, threads).build_2e(&ctx);
         assert!(
             got.max_abs_diff(&want) < 1e-11,
             "threads={threads}: {}",
@@ -67,11 +134,13 @@ fn repeated_builds_are_deterministic() {
     // reordering stays below 1e-12 for this magnitude).
     let mol = molecules::methane();
     let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
-    let screen = SchwarzScreen::build(&basis, SchwarzScreen::DEFAULT_TAU);
+    let store = ShellPairStore::build(&basis);
+    let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
     let d = Matrix::identity(basis.n_bf);
+    let ctx = FockContext::new(&basis, &store, &screen, &d);
     let mut eng = SharedFock::new(2, 4);
-    let a = eng.build_2e(&basis, &screen, &d);
-    let b = eng.build_2e(&basis, &screen, &d);
+    let a = eng.build_2e(&ctx);
+    let b = eng.build_2e(&ctx);
     assert!(a.max_abs_diff(&b) < 1e-11);
 }
 
@@ -79,14 +148,16 @@ fn repeated_builds_are_deterministic() {
 fn stats_consistent_across_engines() {
     let mol = molecules::water();
     let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
-    let screen = SchwarzScreen::build(&basis, SchwarzScreen::DEFAULT_TAU);
+    let store = ShellPairStore::build(&basis);
+    let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
     let d = Matrix::identity(basis.n_bf);
+    let ctx = FockContext::new(&basis, &store, &screen, &d);
     let mut serial = SerialFock::new();
     let mut shf = SharedFock::new(1, 3);
     let mut prf = PrivateFock::new(1, 3);
-    serial.build_2e(&basis, &screen, &d);
-    shf.build_2e(&basis, &screen, &d);
-    prf.build_2e(&basis, &screen, &d);
+    serial.build_2e(&ctx);
+    shf.build_2e(&ctx);
+    prf.build_2e(&ctx);
     assert_eq!(serial.stats.quartets_computed, shf.stats.quartets_computed);
     assert_eq!(serial.stats.quartets_computed, prf.stats.quartets_computed);
 }

@@ -9,9 +9,9 @@ use khf::hf::quartets::{for_each_canonical, n_canonical, pair_from_index};
 use khf::hf::scatter::{distinct_perms, fold_symmetric, scatter_value};
 use khf::hf::serial::SerialFock;
 use khf::hf::shared_fock::SharedFock;
-use khf::hf::FockBuilder;
+use khf::hf::{FockBuilder, FockContext};
 use khf::integrals::schwarz::pair_index;
-use khf::integrals::{EriEngine, SchwarzScreen};
+use khf::integrals::{EriEngine, SchwarzScreen, ShellPairStore};
 use khf::linalg::{eigen, Matrix};
 use khf::util::prng::Rng;
 
@@ -151,7 +151,8 @@ fn prop_random_molecules_engines_agree() {
             return;
         }
         let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
-        let screen = SchwarzScreen::build(&basis, SchwarzScreen::DEFAULT_TAU);
+        let store = ShellPairStore::build(&basis);
+        let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
         let n = basis.n_bf;
         let mut d = Matrix::zeros(n, n);
         for i in 0..n {
@@ -161,8 +162,9 @@ fn prop_random_molecules_engines_agree() {
                 d.set(j, i, x);
             }
         }
-        let want = SerialFock::new().build_2e(&basis, &screen, &d);
-        let got = SharedFock::new(2, 2).build_2e(&basis, &screen, &d);
+        let ctx = FockContext::new(&basis, &store, &screen, &d);
+        let want = SerialFock::new().build_2e(&ctx);
+        let got = SharedFock::new(2, 2).build_2e(&ctx);
         assert!(
             got.max_abs_diff(&want) < 1e-11,
             "seed {seed} atoms {}: diff {}",
@@ -178,11 +180,12 @@ fn prop_eri_positive_semidefinite_diagonal() {
     forall_seeds(6, |rng, seed| {
         let mol = random_molecule(rng, 5);
         let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+        let store = ShellPairStore::build(&basis);
         let mut eng = EriEngine::new();
         let mut buf = vec![0.0; 6 * 6 * 6 * 6];
         for i in 0..basis.n_shells() {
             for j in 0..=i {
-                eng.shell_quartet(&basis, i, j, i, j, &mut buf);
+                eng.shell_quartet(&basis, &store, i, j, i, j, &mut buf);
                 let (ni, nj) = (basis.shells[i].n_bf(), basis.shells[j].n_bf());
                 for a in 0..ni {
                     for b in 0..nj {
@@ -224,7 +227,8 @@ fn prop_schwarz_bound_sound_on_random_offdiagonal() {
     forall_seeds(4, |rng, seed| {
         let mol = random_molecule(rng, 4);
         let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
-        let screen = SchwarzScreen::build(&basis, 0.0);
+        let store = ShellPairStore::build(&basis);
+        let screen = SchwarzScreen::build_with_store(&basis, &store, 0.0);
         let mut eng = EriEngine::new();
         let mut buf = vec![0.0; 6 * 6 * 6 * 6];
         let ns = basis.n_shells();
@@ -233,7 +237,7 @@ fn prop_schwarz_bound_sound_on_random_offdiagonal() {
             let j = rng.below(i + 1);
             let k = rng.below(i + 1);
             let l = rng.below(k + 1);
-            eng.shell_quartet(&basis, i, j, k, l, &mut buf);
+            eng.shell_quartet(&basis, &store, i, j, k, l, &mut buf);
             let sz: usize = [i, j, k, l].iter().map(|&x| basis.shells[x].n_bf()).product();
             let mx = buf[..sz].iter().map(|v| v.abs()).fold(0.0, f64::max);
             assert!(

@@ -5,8 +5,8 @@
 use khf::basis::{BasisName, BasisSet};
 use khf::chem::molecules;
 use khf::hf::serial::SerialFock;
-use khf::hf::FockBuilder;
-use khf::integrals::SchwarzScreen;
+use khf::hf::{FockBuilder, FockContext};
+use khf::integrals::{SchwarzScreen, ShellPairStore};
 use khf::linalg::Matrix;
 use khf::runtime::{Runtime, XlaFockBuilder};
 use khf::scf::RhfDriver;
@@ -29,13 +29,15 @@ fn fock2e_artifact_matches_serial_engine() {
     need_artifacts!();
     let mol = molecules::water();
     let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
-    let screen = SchwarzScreen::build(&basis, 0.0);
+    let store = ShellPairStore::build(&basis);
+    let screen = SchwarzScreen::build_with_store(&basis, &store, 0.0);
     let mut d = Matrix::identity(basis.n_bf);
     d.scale(0.37);
-    let want = SerialFock::new().build_2e(&basis, &screen, &d);
+    let ctx = FockContext::new(&basis, &store, &screen, &d);
+    let want = SerialFock::new().build_2e(&ctx);
     let rt = Runtime::cpu(Runtime::default_dir()).unwrap();
-    let mut xla = XlaFockBuilder::new(rt, &basis).unwrap();
-    let got = xla.build_2e(&basis, &screen, &d);
+    let mut xla = XlaFockBuilder::new_with_store(rt, &basis, &store).unwrap();
+    let got = xla.build_2e(&ctx);
     assert!(
         got.max_abs_diff(&want) < 1e-9,
         "XLA vs serial: {}",

@@ -1,0 +1,57 @@
+//! Minimal std-only shim of `once_cell::sync::Lazy` built on
+//! `std::sync::OnceLock`. Vendored for the offline sandbox.
+
+pub mod sync {
+    use std::cell::Cell;
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// Lazily initialized static value, like `once_cell::sync::Lazy`.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: Cell<Option<F>>,
+    }
+
+    // Safety: `init` is consumed exactly once under OnceLock's
+    // initialization lock; afterwards only the immutable `cell` is read.
+    unsafe impl<T: Send + Sync, F: Send> Sync for Lazy<T, F> {}
+
+    impl<T, F: FnOnce() -> T> Lazy<T, F> {
+        pub const fn new(init: F) -> Lazy<T, F> {
+            Lazy { cell: OnceLock::new(), init: Cell::new(Some(init)) }
+        }
+
+        pub fn force(this: &Lazy<T, F>) -> &T {
+            this.cell.get_or_init(|| {
+                let f = this.init.take().expect("Lazy instance poisoned");
+                f()
+            })
+        }
+    }
+
+    impl<T, F: FnOnce() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::Lazy;
+
+    static N: Lazy<Vec<u32>> = Lazy::new(|| vec![1, 2, 3]);
+
+    #[test]
+    fn static_lazy_initializes_once() {
+        assert_eq!(N.len(), 3);
+        assert_eq!(*N, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn deref_via_star() {
+        let l: Lazy<u64, _> = Lazy::new(|| 7);
+        assert_eq!(*l, 7);
+    }
+}
