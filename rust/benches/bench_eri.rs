@@ -84,10 +84,11 @@ fn main() {
 
     // Whole-build throughput on a small real system.
     let screen = khf::integrals::SchwarzScreen::build_with_store(&basis, &store, 1e-10);
+    let pairs = khf::integrals::SortedPairList::build(&screen, &store);
     let mut serial = khf::hf::serial::SerialFock::new();
     let dm = Matrix::identity(basis.n_bf);
     use khf::hf::{FockBuilder, FockContext};
-    let ctx = FockContext::new(&basis, &store, &screen, &dm);
+    let ctx = FockContext::new(&basis, &store, &screen, &pairs, &dm);
     let st = timer::bench(1, 3, 0.1, || {
         timer::black_box(serial.build_2e(&ctx));
     });

@@ -14,7 +14,7 @@ use khf::hf::private_fock::PrivateFock;
 use khf::hf::serial::SerialFock;
 use khf::hf::shared_fock::SharedFock;
 use khf::hf::{FockBuilder, FockContext};
-use khf::integrals::{SchwarzScreen, ShellPairStore};
+use khf::integrals::{SchwarzScreen, ShellPairStore, SortedPairList};
 use khf::linalg::Matrix;
 use khf::util::timer;
 
@@ -23,8 +23,9 @@ fn main() {
     let basis = BasisSet::assemble(&mol, BasisName::SixThirtyOneGd).unwrap();
     let store = ShellPairStore::build(&basis);
     let screen = SchwarzScreen::build_with_store(&basis, &store, 1e-10);
+    let pairs = SortedPairList::build(&screen, &store);
     let d = Matrix::identity(basis.n_bf);
-    let ctx = FockContext::new(&basis, &store, &screen, &d);
+    let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
 
     println!("== Fock-build engines on c8 bilayer / 6-31G(d) ({} BFs) ==\n", basis.n_bf);
     let mut rows = vec![vec![

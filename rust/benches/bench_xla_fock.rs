@@ -9,7 +9,7 @@ use khf::chem::molecules;
 use khf::coordinator::report;
 use khf::hf::serial::SerialFock;
 use khf::hf::{FockBuilder, FockContext};
-use khf::integrals::{SchwarzScreen, ShellPairStore};
+use khf::integrals::{SchwarzScreen, ShellPairStore, SortedPairList};
 use khf::linalg::Matrix;
 use khf::runtime::{Runtime, XlaFockBuilder};
 use khf::util::timer;
@@ -34,9 +34,10 @@ fn main() {
         let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
         let store = ShellPairStore::build(&basis);
         let screen = SchwarzScreen::build_with_store(&basis, &store, 0.0);
+        let pairs = SortedPairList::build(&screen, &store);
         let mut d = Matrix::identity(basis.n_bf);
         d.scale(0.4);
-        let ctx = FockContext::new(&basis, &store, &screen, &d);
+        let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
 
         let mut serial = SerialFock::new();
         let st_serial = timer::bench(3, 30, 0.3, || {

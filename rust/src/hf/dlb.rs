@@ -27,6 +27,19 @@ impl DlbCounter {
         self.next.fetch_add(1, Ordering::Relaxed)
     }
 
+    /// Claim the next ordinal of a bounded task space, or `None` once
+    /// `n_tasks` have been handed out. The engines pass
+    /// [`PairWalk::n_tasks`](crate::integrals::PairWalk::n_tasks) here:
+    /// the DLB distributes *surviving-pair ranks*, so every claim is a
+    /// live task — dead bra pairs never enter the counter's range and
+    /// never cost a claim (or, in the shared-Fock engine, a barrier
+    /// round).
+    #[inline]
+    pub fn next_task(&self, n_tasks: usize) -> Option<usize> {
+        let t = self.next.fetch_add(1, Ordering::Relaxed);
+        (t < n_tasks).then_some(t)
+    }
+
     /// Reset for the next SCF iteration (`ddi_dlbreset`).
     pub fn reset(&self) {
         self.next.store(0, Ordering::SeqCst);
@@ -50,6 +63,18 @@ mod tests {
         assert_eq!(c.next(), 1);
         c.reset();
         assert_eq!(c.next(), 0);
+    }
+
+    #[test]
+    fn bounded_task_claims_exhaust() {
+        let c = DlbCounter::new();
+        assert_eq!(c.next_task(2), Some(0));
+        assert_eq!(c.next_task(2), Some(1));
+        assert_eq!(c.next_task(2), None);
+        assert_eq!(c.next_task(2), None, "exhaustion is sticky");
+        c.reset();
+        assert_eq!(c.next_task(1), Some(0));
+        assert_eq!(c.next_task(0), None);
     }
 
     #[test]

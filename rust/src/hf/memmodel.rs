@@ -89,8 +89,24 @@ pub fn store_bytes_per_node(store_bytes: f64, ranks_per_node: usize) -> f64 {
     store_bytes * ranks_per_node as f64
 }
 
-/// Exact per-node accounting including the shell-pair store: the matrix
-/// working set of [`exact_bytes`] plus one store copy per rank.
+/// Combined per-node bytes of the SCF-lifetime shared read-only
+/// structures — the shell-pair store plus the Q-sorted pair list. Both
+/// are held once per process and shared by every thread of that
+/// process, so both replicate `ranks_per_node` times; the list is a few
+/// tens of bytes per surviving pair (entries + q array + traversal
+/// template) against the store's kilobytes of Hermite tables, so it
+/// rides along essentially for free.
+pub fn shared_scf_bytes_per_node(
+    store_bytes: f64,
+    pairlist_bytes: f64,
+    ranks_per_node: usize,
+) -> f64 {
+    (store_bytes + pairlist_bytes) * ranks_per_node as f64
+}
+
+/// Exact per-node accounting including the SCF-lifetime shared
+/// structures: the matrix working set of [`exact_bytes`] plus one
+/// shell-pair store and one sorted pair list per rank.
 pub fn exact_bytes_with_store(
     engine: EngineKind,
     n_bf: usize,
@@ -98,9 +114,10 @@ pub fn exact_bytes_with_store(
     ranks_per_node: usize,
     threads_per_rank: usize,
     store_bytes: f64,
+    pairlist_bytes: f64,
 ) -> f64 {
     exact_bytes(engine, n_bf, max_shell_bf, ranks_per_node, threads_per_rank)
-        + store_bytes_per_node(store_bytes, ranks_per_node)
+        + shared_scf_bytes_per_node(store_bytes, pairlist_bytes, ranks_per_node)
 }
 
 /// KNL MCDRAM capacity (bytes, decimal as marketed) — the single-node
@@ -193,9 +210,12 @@ mod tests {
         let mpi = store_bytes_per_node(sb, 256);
         let hyb = store_bytes_per_node(sb, 4);
         assert!((mpi / hyb - 64.0).abs() < 1e-12);
+        // The pair list replicates alongside the store.
+        let pl = 2e6; // a 2 MB list
+        assert!(shared_scf_bytes_per_node(sb, pl, 4) > store_bytes_per_node(sb, 4));
         let n = 1800;
-        let with_mpi = exact_bytes_with_store(EngineKind::MpiOnly, n, 15, 256, 1, sb);
-        let with_shf = exact_bytes_with_store(EngineKind::SharedFock, n, 15, 4, 64, sb);
+        let with_mpi = exact_bytes_with_store(EngineKind::MpiOnly, n, 15, 256, 1, sb, pl);
+        let with_shf = exact_bytes_with_store(EngineKind::SharedFock, n, 15, 4, 64, sb, pl);
         let base_mpi = exact_bytes(EngineKind::MpiOnly, n, 15, 256, 1);
         let base_shf = exact_bytes(EngineKind::SharedFock, n, 15, 4, 64);
         assert!(with_mpi > base_mpi);

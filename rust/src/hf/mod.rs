@@ -4,26 +4,32 @@
 //! Three engines, mirroring the paper §4:
 //! * [`serial`] — single-threaded reference (correctness oracle);
 //! * [`mpi_only`] — Algorithm 1: virtual MPI ranks, everything
-//!   replicated, dynamic load balancing over (i,j) shell pairs;
+//!   replicated, dynamic load balancing over surviving (i,j) pair
+//!   ranks;
 //! * [`private_fock`] — Algorithm 2: threads share the density, each
-//!   keeps a private Fock replica; OpenMP-style `collapse(2)` dynamic
-//!   distribution of the (j,k) loops under an MPI-balanced `i` loop;
+//!   keeps a private Fock replica; OpenMP-style dynamic distribution
+//!   of the surviving ket prefix under MPI-balanced bra tasks;
 //! * [`shared_fock`] — Algorithm 3: one shared Fock per rank; threads
 //!   own disjoint `kl` pairs, accumulate `i`/`j` shell-column
 //!   contributions in private column buffers (padded against false
 //!   sharing) and flush them with a chunked tree reduction.
 //!
 //! Every engine consumes a [`FockContext`]: the immutable, SCF-lifetime
-//! [`ShellPairStore`] (shared across threads behind `Arc`), the Schwarz
-//! bound table, and the density to contract — the full D, or ΔD when the
-//! driver runs incremental direct SCF. Quartets are screened by the
-//! density-weighted bound Q_ij·Q_kl·w(D) ≤ τ, so ΔD builds late in the
-//! SCF touch only a residual fraction of the quartet space.
+//! [`ShellPairStore`] and Q-sorted [`SortedPairList`] (shared across
+//! threads behind `Arc`), the Schwarz bound table, and the density to
+//! contract — the full D, or ΔD when the driver runs incremental direct
+//! SCF. Screening is a *loop bound*, not a per-quartet branch: the DLB
+//! hands out surviving-pair ranks from the context's [`PairWalk`], and
+//! each bra rank's ket walk spans exactly the prefix of the Q-sorted
+//! list where Q_ij·Q_kl·w(D) > τ. With ΔD densities w → 0 and the walk
+//! collapses — late iterations neither compute *nor enumerate* the dead
+//! quartet space.
 //!
-//! [`quartets`] owns the canonical loop structure, [`scatter`] the
-//! six-element update of eqs. (2a)–(2f), [`dlb`] the shared-counter
-//! dynamic load balancer (`ddi_dlbnext`), and [`memmodel`] the
-//! footprint model of eqs. (3a)–(3c) extended with the pair store.
+//! [`quartets`] owns the canonical loop structure and the sorted-walk
+//! enumerator, [`scatter`] the six-element update of eqs. (2a)–(2f),
+//! [`dlb`] the shared-counter dynamic load balancer (`ddi_dlbnext`)
+//! handing out walk tasks, and [`memmodel`] the footprint model of
+//! eqs. (3a)–(3c) extended with the pair store and list.
 
 pub mod dlb;
 pub mod memmodel;
@@ -36,7 +42,7 @@ pub mod shared_fock;
 pub mod threadpool;
 
 use crate::basis::BasisSet;
-use crate::integrals::{PairDensityMax, SchwarzScreen, ShellPairStore};
+use crate::integrals::{PairDensityMax, PairWalk, SchwarzScreen, ShellPairStore, SortedPairList};
 use crate::linalg::Matrix;
 
 /// Everything a Fock build consumes, assembled once per build by the
@@ -48,11 +54,18 @@ pub struct FockContext<'a> {
     /// shared read-only by all threads; the driver owns it in an `Arc`).
     pub store: &'a ShellPairStore,
     pub screen: &'a SchwarzScreen,
+    /// SCF-lifetime Q-sorted surviving-pair list (built once, next to
+    /// the store) — the engines' iteration space.
+    pub pairs: &'a SortedPairList,
     /// Density to contract — the full D, or ΔD = D_n − D_{n−1} for
     /// incremental builds. `build_2e` is linear in this argument.
     pub d: &'a Matrix,
     /// Per-shell-pair |d| bounds for density-weighted screening.
     pub dmax: PairDensityMax,
+    /// This build's early-exit walk over `pairs`: the density weight
+    /// folded into the Schwarz bound as a *loop bound* — engines
+    /// enumerate `walk` tasks and never test quartets individually.
+    pub walk: PairWalk<'a>,
 }
 
 impl<'a> FockContext<'a> {
@@ -60,26 +73,42 @@ impl<'a> FockContext<'a> {
         basis: &'a BasisSet,
         store: &'a ShellPairStore,
         screen: &'a SchwarzScreen,
+        pairs: &'a SortedPairList,
         d: &'a Matrix,
     ) -> FockContext<'a> {
         assert!(
             store.matches(basis),
             "ShellPairStore does not belong to this basis (stale store?)"
         );
+        assert_eq!(
+            pairs.n_shells(),
+            basis.n_shells(),
+            "SortedPairList does not belong to this basis (stale list?)"
+        );
+        debug_assert_eq!(
+            pairs.tau(),
+            screen.tau,
+            "pair list and screen were built with different taus"
+        );
         let dmax = PairDensityMax::build(basis, d);
-        FockContext { basis, store, screen, d, dmax }
+        let walk = pairs.weighted(&dmax);
+        FockContext { basis, store, screen, pairs, d, dmax, walk }
     }
 
-    /// Density-weighted quartet screen. All engines use this, so their
-    /// `quartets_computed` counts agree exactly. (`quartets_screened`
-    /// may differ: the shared-Fock pair prescreen skips whole ij tasks
-    /// without counting their kl quartets individually.)
+    /// Legacy per-quartet density-weighted screen (Häser–Ahlrichs block
+    /// weights). The engines no longer call this on their hot paths —
+    /// the sorted walk's bound is a loop limit, not a per-iteration
+    /// branch — but it remains the enumerate-and-test baseline for
+    /// `bench_pairwalk` and the tightness oracle in tests: the walk's
+    /// visited set is a superset of this screen's survivors.
     #[inline]
     pub fn screened(&self, i: usize, j: usize, k: usize, l: usize) -> bool {
         self.screen.screened_weighted(i, j, k, l, &self.dmax)
     }
 
-    /// Density-weighted whole-(i,j)-task prescreen (Algorithm 3 top loop).
+    /// Legacy whole-(i,j)-task prescreen. With the sorted walk, dead ij
+    /// tasks are impossible by construction (`PairWalk::n_tasks` only
+    /// spans ranks with a nonempty ket prefix); kept for tests.
     #[inline]
     pub fn pair_screened(&self, i: usize, j: usize) -> bool {
         self.screen.pair_screened_weighted(i, j, &self.dmax)
@@ -107,12 +136,41 @@ pub trait FockBuilder {
 }
 
 /// Statistics returned by engines for reports and the simulator.
+///
+/// With the sorted early-exit walk the engines never *test* quartets
+/// individually, so the skip counters are derived in bulk:
+/// `computed + screened` always equals the canonical quartet count
+/// ([`quartets::n_canonical`]), and `skipped_by_early_exit` isolates
+/// the listed-pair quartets the walk's loop bound never reached (the
+/// work the legacy enumerate-and-test scheme would have branched on
+/// one by one).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct BuildStats {
-    /// Shell quartets that survived screening.
+    /// Shell quartets visited (and computed) by the walk.
     pub quartets_computed: u64,
-    /// Shell quartets screened out.
+    /// Canonical quartets not visited (all skip causes: unlisted pairs
+    /// plus the early exit).
     pub quartets_screened: u64,
+    /// Quartets of *listed* pairs the early-exit bound skipped —
+    /// list-space quartets minus computed.
+    pub skipped_by_early_exit: u64,
     /// Wall-clock seconds of the build.
     pub seconds: f64,
+}
+
+impl BuildStats {
+    /// Assemble the per-build counters from the visited count: the two
+    /// skip counters follow in bulk from the quartet-space sizes. One
+    /// constructor so every engine's accounting stays identical.
+    pub fn from_walk(computed: u64, ctx: &FockContext, seconds: f64) -> BuildStats {
+        let total = quartets::n_canonical(ctx.basis.n_shells());
+        let listed = ctx.pairs.n_list_quartets();
+        debug_assert!(computed <= listed && listed <= total);
+        BuildStats {
+            quartets_computed: computed,
+            quartets_screened: total - computed,
+            skipped_by_early_exit: listed - computed,
+            seconds,
+        }
+    }
 }

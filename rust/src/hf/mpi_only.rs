@@ -1,23 +1,24 @@
 //! Algorithm 1 — the stock MPI-only Fock build.
 //!
 //! Virtual MPI ranks (in-process threads; repro band 0 — no MPI in the
-//! sandbox) each own a *replicated* Fock accumulator and claim (i,j)
-//! shell pairs from the shared DLB counter (`ddi_dlbnext`), computing
-//! the full (k,l) half-space of each pair. The final Fock matrix is the
-//! `ddi_gsumf` reduction over rank replicas.
+//! sandbox) each own a *replicated* Fock accumulator and claim bra
+//! tasks — surviving-pair ranks of the Q-sorted list — from the shared
+//! DLB counter (`ddi_dlbnext`), walking each task's early-exit ket
+//! prefix. The final Fock matrix is the `ddi_gsumf` reduction over rank
+//! replicas.
 //!
 //! Density replication: the real code replicates D per rank; execution
 //! here shares the read-only D (reads are bit-identical), while the
 //! memory model (`memmodel::exact_bytes`) accounts the replication the
-//! paper measures. The shell-pair store is likewise shared read-only —
-//! and counted per rank by the memory model, which is exactly the
-//! replication the hybrid engines eliminate.
+//! paper measures. The shell-pair store and sorted pair list are
+//! likewise shared read-only — and counted per rank by the memory
+//! model, which is exactly the replication the hybrid engines
+//! eliminate.
 
 use crate::integrals::EriEngine;
 use crate::linalg::Matrix;
 
 use super::dlb::DlbCounter;
-use super::quartets::{for_each_kl_of, pair_from_index};
 use super::scatter::{fold_symmetric, scatter_block};
 use super::threadpool::parallel_region;
 use super::{BuildStats, FockBuilder, FockContext};
@@ -40,53 +41,46 @@ impl FockBuilder for MpiOnlyFock {
         let t0 = std::time::Instant::now();
         let basis = ctx.basis;
         let n = basis.n_bf;
-        let nsh = basis.n_shells();
-        let n_pairs = nsh * (nsh + 1) / 2;
+        let (walk, pairs) = (&ctx.walk, ctx.pairs);
+        let n_tasks = walk.n_tasks();
         let dlb = DlbCounter::new();
 
-        // Each virtual rank: replicated G, DLB over (i,j), full kl space.
-        let per_rank: Vec<(Matrix, u64, u64)> = parallel_region(self.n_ranks, |_rank| {
+        // Each virtual rank: replicated G, DLB over surviving bra
+        // ranks, early-exit ket prefix per task.
+        let per_rank: Vec<(Matrix, u64)> = parallel_region(self.n_ranks, |_rank| {
             let mut g = Matrix::zeros(n, n);
             let mut eng = EriEngine::new();
             let mut block = vec![0.0; 6 * 6 * 6 * 6];
             let mut computed = 0u64;
-            let mut screened = 0u64;
-            loop {
-                let ij = dlb.next();
-                if ij >= n_pairs {
-                    break;
-                }
-                let (i, j) = pair_from_index(ij);
-                for_each_kl_of(i, j, |k, l| {
-                    if ctx.screened(i, j, k, l) {
-                        screened += 1;
-                        return;
-                    }
+            while let Some(t) = dlb.next_task(n_tasks) {
+                let rij = walk.task(t);
+                let bra = pairs.entry(rij);
+                let (i, j) = (bra.i as usize, bra.j as usize);
+                let limit = walk.kl_limit(rij);
+                for rkl in 0..limit {
+                    let ket = pairs.entry(rkl);
+                    let (k, l) = (ket.i as usize, ket.j as usize);
                     computed += 1;
-                    eng.shell_quartet(basis, ctx.store, i, j, k, l, &mut block);
+                    eng.shell_quartet_slots(
+                        basis, ctx.store, i, j, k, l, bra.slot, ket.slot, &mut block,
+                    );
                     scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| {
                         g.add(a, b, v)
                     });
-                });
+                }
             }
-            (g, computed, screened)
+            (g, computed)
         });
 
         // ddi_gsumf: sum the rank replicas.
         let mut total = Matrix::zeros(n, n);
         let mut computed = 0;
-        let mut screened = 0;
-        for (g, c, s) in per_rank {
+        for (g, c) in per_rank {
             total.add_assign(&g);
             computed += c;
-            screened += s;
         }
         fold_symmetric(&mut total);
-        self.stats = BuildStats {
-            quartets_computed: computed,
-            quartets_screened: screened,
-            seconds: t0.elapsed().as_secs_f64(),
-        };
+        self.stats = BuildStats::from_walk(computed, ctx, t0.elapsed().as_secs_f64());
         total
     }
 
@@ -105,7 +99,7 @@ mod tests {
     use crate::basis::{BasisName, BasisSet};
     use crate::chem::molecules;
     use crate::hf::serial::SerialFock;
-    use crate::integrals::{SchwarzScreen, ShellPairStore};
+    use crate::integrals::{SchwarzScreen, ShellPairStore, SortedPairList};
     use crate::util::prng::Rng;
 
     #[test]
@@ -114,6 +108,7 @@ mod tests {
         let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
         let store = ShellPairStore::build(&basis);
         let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+        let pairs = SortedPairList::build(&screen, &store);
         let mut rng = Rng::new(17);
         let nb = basis.n_bf;
         let mut d = Matrix::zeros(nb, nb);
@@ -124,7 +119,7 @@ mod tests {
                 d.set(j, i, x);
             }
         }
-        let ctx = FockContext::new(&basis, &store, &screen, &d);
+        let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
         let want = SerialFock::new().build_2e(&ctx);
         for ranks in [1, 2, 4, 7] {
             let mut eng = MpiOnlyFock::new(ranks);
@@ -143,13 +138,17 @@ mod tests {
         let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
         let store = ShellPairStore::build(&basis);
         let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+        let pairs = SortedPairList::build(&screen, &store);
         let d = Matrix::identity(basis.n_bf);
-        let ctx = FockContext::new(&basis, &store, &screen, &d);
+        let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
         let mut e1 = MpiOnlyFock::new(1);
         let mut e3 = MpiOnlyFock::new(3);
         let _ = e1.build_2e(&ctx);
         let _ = e3.build_2e(&ctx);
         assert_eq!(e1.stats.quartets_computed, e3.stats.quartets_computed);
         assert_eq!(e1.stats.quartets_screened, e3.stats.quartets_screened);
+        assert_eq!(e1.stats.skipped_by_early_exit, e3.stats.skipped_by_early_exit);
+        // The DLB hands out exactly the walk's task count.
+        assert_eq!(e1.stats.quartets_computed, ctx.walk.n_visited());
     }
 }

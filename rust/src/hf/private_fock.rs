@@ -1,13 +1,18 @@
 //! Algorithm 2 — hybrid MPI/OpenMP with a *private* (thread-replicated)
 //! Fock matrix.
 //!
-//! Structure per the paper:
-//! * the master thread of each rank claims the next `i` shell from the
-//!   MPI-level DLB counter (guarded by barriers);
-//! * worker threads share the density, the Schwarz table and the
-//!   shell-pair store, and split the collapsed (j,k) loops with OpenMP
-//!   `collapse(2) schedule(dynamic,1)` semantics (a per-rank chunk
-//!   counter);
+//! Structure per the paper, updated for the Q-sorted pair list:
+//! * the master thread of each rank claims the next bra task — a
+//!   surviving-pair rank of the sorted list — from the MPI-level DLB
+//!   counter (guarded by barriers);
+//! * worker threads share the density, the Schwarz table, the
+//!   shell-pair store and the pair list, and split the task's
+//!   early-exit ket prefix with OpenMP `schedule(dynamic,1)` semantics
+//!   (a per-rank chunk counter). This replaces the paper's
+//!   `collapse(2)` over raw (j,k): the collapsed loop enumerated the
+//!   dense quartet space and tested each quartet, whereas the sorted
+//!   prefix *is* the surviving set — same dynamic balance, no dead
+//!   iterations;
 //! * every thread accumulates into its own Fock replica —
 //!   `reduction(+:Fock)` — reduced thread-wise, then rank-wise
 //!   (`ddi_gsumf`).
@@ -43,88 +48,88 @@ impl FockBuilder for PrivateFock {
         let t0 = std::time::Instant::now();
         let basis = ctx.basis;
         let n = basis.n_bf;
-        let nsh = basis.n_shells();
-        let dlb = DlbCounter::new(); // MPI-level DLB over i
+        let (walk, pairs) = (&ctx.walk, ctx.pairs);
+        let n_tasks = walk.n_tasks();
+        let dlb = DlbCounter::new(); // MPI-level DLB over bra tasks
 
-        let per_rank: Vec<(Matrix, u64, u64)> = parallel_region(self.n_ranks, |_rank| {
+        let per_rank: Vec<(Matrix, u64)> = parallel_region(self.n_ranks, |_rank| {
             let nt = self.n_threads;
-            let i_cur = AtomicUsize::new(usize::MAX);
+            let rij_cur = AtomicUsize::new(usize::MAX);
+            let limit_cur = AtomicUsize::new(0);
             let chunk = AtomicUsize::new(0);
             let barrier = Barrier::new(nt);
 
             // !$omp parallel private(...) reduction(+:Fock)
-            let thread_g: Vec<(Matrix, u64, u64)> = parallel_region(nt, |tid| {
+            let thread_g: Vec<(Matrix, u64)> = parallel_region(nt, |tid| {
                 let mut g = Matrix::zeros(n, n); // thread-private Fock
                 let mut eng = EriEngine::new();
                 let mut block = vec![0.0; 6 * 6 * 6 * 6];
                 let mut computed = 0u64;
-                let mut screened = 0u64;
                 loop {
-                    // !$omp master: fetch next I; barriers on both sides.
+                    // !$omp master: fetch the next bra task; barriers on
+                    // both sides. Every handed-out task has work by
+                    // construction of the walk.
                     if tid == 0 {
-                        i_cur.store(dlb.next(), Ordering::SeqCst);
+                        match dlb.next_task(n_tasks) {
+                            Some(t) => {
+                                let rij = walk.task(t);
+                                rij_cur.store(rij, Ordering::SeqCst);
+                                limit_cur.store(walk.kl_limit(rij), Ordering::SeqCst);
+                            }
+                            None => rij_cur.store(usize::MAX, Ordering::SeqCst),
+                        }
                         chunk.store(0, Ordering::SeqCst);
                     }
                     barrier.wait();
-                    let i = i_cur.load(Ordering::SeqCst);
-                    if i >= nsh {
+                    let rij = rij_cur.load(Ordering::SeqCst);
+                    if rij == usize::MAX {
                         break;
                     }
-                    // !$omp do collapse(2) schedule(dynamic,1) over (j,k).
-                    let span = i + 1;
+                    let bra = pairs.entry(rij);
+                    let (i, j) = (bra.i as usize, bra.j as usize);
+                    let limit = limit_cur.load(Ordering::SeqCst);
+                    // !$omp do schedule(dynamic,1) over the surviving
+                    // ket prefix — the early exit is the loop bound.
                     loop {
-                        let c = chunk.fetch_add(1, Ordering::Relaxed);
-                        if c >= span * span {
+                        let rkl = chunk.fetch_add(1, Ordering::Relaxed);
+                        if rkl >= limit {
                             break;
                         }
-                        let j = c / span;
-                        let k = c % span;
-                        let lmax = if k == i { j } else { k };
-                        for l in 0..=lmax {
-                            if ctx.screened(i, j, k, l) {
-                                screened += 1;
-                                continue;
-                            }
-                            computed += 1;
-                            eng.shell_quartet(basis, ctx.store, i, j, k, l, &mut block);
-                            scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| {
-                                g.add(a, b, v)
-                            });
-                        }
+                        let ket = pairs.entry(rkl);
+                        let (k, l) = (ket.i as usize, ket.j as usize);
+                        computed += 1;
+                        eng.shell_quartet_slots(
+                            basis, ctx.store, i, j, k, l, bra.slot, ket.slot, &mut block,
+                        );
+                        scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| {
+                            g.add(a, b, v)
+                        });
                     }
                     // Implicit barrier at !$omp end do.
                     barrier.wait();
                 }
-                (g, computed, screened)
+                (g, computed)
             });
 
             // reduction(+:Fock) over threads.
             let mut g = Matrix::zeros(n, n);
             let mut computed = 0;
-            let mut screened = 0;
-            for (tg, c, s) in thread_g {
+            for (tg, c) in thread_g {
                 g.add_assign(&tg);
                 computed += c;
-                screened += s;
             }
-            (g, computed, screened)
+            (g, computed)
         });
 
         // ddi_gsumf over ranks.
         let mut total = Matrix::zeros(n, n);
         let mut computed = 0;
-        let mut screened = 0;
-        for (g, c, s) in per_rank {
+        for (g, c) in per_rank {
             total.add_assign(&g);
             computed += c;
-            screened += s;
         }
         fold_symmetric(&mut total);
-        self.stats = BuildStats {
-            quartets_computed: computed,
-            quartets_screened: screened,
-            seconds: t0.elapsed().as_secs_f64(),
-        };
+        self.stats = BuildStats::from_walk(computed, ctx, t0.elapsed().as_secs_f64());
         total
     }
 
@@ -143,7 +148,7 @@ mod tests {
     use crate::basis::{BasisName, BasisSet};
     use crate::chem::molecules;
     use crate::hf::serial::SerialFock;
-    use crate::integrals::{SchwarzScreen, ShellPairStore};
+    use crate::integrals::{SchwarzScreen, ShellPairStore, SortedPairList};
     use crate::util::prng::Rng;
 
     fn random_density(n: usize, seed: u64) -> Matrix {
@@ -165,8 +170,9 @@ mod tests {
         let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
         let store = ShellPairStore::build(&basis);
         let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+        let pairs = SortedPairList::build(&screen, &store);
         let d = random_density(basis.n_bf, 23);
-        let ctx = FockContext::new(&basis, &store, &screen, &d);
+        let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
         let want = SerialFock::new().build_2e(&ctx);
         for (ranks, threads) in [(1, 1), (1, 4), (2, 2), (3, 2)] {
             let mut eng = PrivateFock::new(ranks, threads);
@@ -185,8 +191,9 @@ mod tests {
         let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
         let store = ShellPairStore::build(&basis);
         let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+        let pairs = SortedPairList::build(&screen, &store);
         let d = Matrix::identity(basis.n_bf);
-        let ctx = FockContext::new(&basis, &store, &screen, &d);
+        let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
         let mut serial = SerialFock::new();
         let _ = serial.build_2e(&ctx);
         let mut eng = PrivateFock::new(2, 3);

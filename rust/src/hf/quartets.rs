@@ -55,6 +55,21 @@ pub fn n_kl_of(i: usize, j: usize) -> usize {
     crate::integrals::schwarz::pair_index(i, j) + 1
 }
 
+/// Enumerate the quartets a density-weighted early-exit walk visits, in
+/// task order: `f(rank_ij, rank_kl)` over q-ranks of the walk's
+/// [`SortedPairList`](crate::integrals::SortedPairList). This is the
+/// serial engine's loop and the oracle the parallel engines' DLB
+/// distributions must partition: no quartet is tested individually —
+/// each bra task's ket range is the walk's precomputed loop bound.
+pub fn for_each_surviving(walk: &crate::integrals::PairWalk, mut f: impl FnMut(usize, usize)) {
+    for t in 0..walk.n_tasks() {
+        let rij = walk.task(t);
+        for rkl in 0..walk.kl_limit(rij) {
+            f(rij, rkl);
+        }
+    }
+}
+
 /// Map a linear canonical pair ordinal back to (i, j), i ≥ j.
 /// Inverse of `pair_index`.
 pub fn pair_from_index(idx: usize) -> (usize, usize) {
@@ -112,6 +127,28 @@ mod tests {
                 assert_eq!(pair_from_index(pair_index(i, j)), (i, j));
             }
         }
+    }
+
+    #[test]
+    fn surviving_walk_is_unique_and_sized() {
+        let m = crate::chem::molecules::water();
+        let b = crate::basis::BasisSet::assemble(&m, crate::basis::BasisName::Sto3g).unwrap();
+        let store = crate::integrals::ShellPairStore::build(&b);
+        let screen = crate::integrals::SchwarzScreen::build_with_store(&b, &store, 1e-10);
+        let pairs = crate::integrals::SortedPairList::build(&screen, &store);
+        let d = crate::linalg::Matrix::identity(b.n_bf);
+        let dmax = crate::integrals::PairDensityMax::build(&b, &d);
+        let walk = pairs.weighted(&dmax);
+        let mut seen = HashSet::new();
+        let mut count = 0u64;
+        for_each_surviving(&walk, |ra, rb| {
+            assert!(rb <= ra, "ket rank above bra rank");
+            assert!(seen.insert((ra, rb)), "duplicate rank pair ({ra},{rb})");
+            count += 1;
+        });
+        assert_eq!(count, walk.n_visited());
+        assert!(count > 0);
+        assert!(count <= n_canonical(b.n_shells()));
     }
 
     #[test]

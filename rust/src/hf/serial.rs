@@ -1,10 +1,15 @@
 //! Serial reference Fock builder — the correctness oracle for the
 //! parallel engines and the single-thread baseline for calibration.
+//!
+//! The loop is the sorted early-exit walk: bra tasks come from the
+//! context's [`crate::integrals::PairWalk`] and each ket range is the
+//! walk's precomputed loop bound — no quartet is tested individually.
 
-use crate::integrals::EriEngine;
 use crate::linalg::Matrix;
 
-use super::quartets::for_each_canonical;
+use crate::integrals::EriEngine;
+
+use super::quartets::for_each_surviving;
 use super::scatter::{mirror, scatter_block};
 use super::{BuildStats, FockBuilder, FockContext};
 
@@ -29,22 +34,22 @@ impl FockBuilder for SerialFock {
         let mut g = Matrix::zeros(n, n);
         let mut block = vec![0.0; 6 * 6 * 6 * 6];
         let mut computed = 0u64;
-        let mut screened = 0u64;
-        for_each_canonical(basis.n_shells(), |(i, j, k, l)| {
-            if ctx.screened(i, j, k, l) {
-                screened += 1;
-                return;
-            }
+        let pairs = ctx.pairs;
+        for_each_surviving(&ctx.walk, |rij, rkl| {
+            let bra = pairs.entry(rij);
+            let ket = pairs.entry(rkl);
+            let (i, j) = (bra.i as usize, bra.j as usize);
+            let (k, l) = (ket.i as usize, ket.j as usize);
             computed += 1;
-            self.eng.shell_quartet(basis, ctx.store, i, j, k, l, &mut block);
-            scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| g.add(a, b, v));
+            self.eng.shell_quartet_slots(
+                basis, ctx.store, i, j, k, l, bra.slot, ket.slot, &mut block,
+            );
+            scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| {
+                g.add(a, b, v)
+            });
         });
         mirror(&mut g);
-        self.stats = BuildStats {
-            quartets_computed: computed,
-            quartets_screened: screened,
-            seconds: t0.elapsed().as_secs_f64(),
-        };
+        self.stats = BuildStats::from_walk(computed, ctx, t0.elapsed().as_secs_f64());
         g
     }
 
@@ -62,7 +67,7 @@ mod tests {
     use super::*;
     use crate::basis::{BasisName, BasisSet};
     use crate::chem::molecules;
-    use crate::integrals::{SchwarzScreen, ShellPairStore};
+    use crate::integrals::{SchwarzScreen, ShellPairStore, SortedPairList};
     use crate::util::prng::Rng;
 
     #[test]
@@ -71,6 +76,7 @@ mod tests {
         let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
         let store = ShellPairStore::build(&basis);
         let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+        let pairs = SortedPairList::build(&screen, &store);
         let mut rng = Rng::new(7);
         let n = basis.n_bf;
         let mut d = Matrix::zeros(n, n);
@@ -81,7 +87,7 @@ mod tests {
                 d.set(j, i, x);
             }
         }
-        let ctx = FockContext::new(&basis, &store, &screen, &d);
+        let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
         let g = SerialFock::new().build_2e(&ctx);
         assert!(g.is_symmetric(1e-12));
     }
@@ -97,21 +103,30 @@ mod tests {
         let mut d = Matrix::identity(n);
         d.scale(0.3);
         let exact_screen = SchwarzScreen::build_with_store(&basis, &store, 0.0);
+        let exact_pairs = SortedPairList::build(&exact_screen, &store);
         let loose_screen = SchwarzScreen::build_with_store(&basis, &store, 1e-8);
+        let loose_pairs = SortedPairList::build(&loose_screen, &store);
         let mut e1 = SerialFock::new();
-        let ctx_exact = FockContext::new(&basis, &store, &exact_screen, &d);
+        let ctx_exact = FockContext::new(&basis, &store, &exact_screen, &exact_pairs, &d);
         let g_exact = e1.build_2e(&ctx_exact);
-        let exact_total = e1.stats.quartets_computed + e1.stats.quartets_screened;
         let mut e2 = SerialFock::new();
-        let ctx_loose = FockContext::new(&basis, &store, &loose_screen, &d);
+        let ctx_loose = FockContext::new(&basis, &store, &loose_screen, &loose_pairs, &d);
         let g_screened = e2.build_2e(&ctx_loose);
         assert!(g_exact.max_abs_diff(&g_screened) < 1e-7);
-        // Both runs enumerate the same canonical quartet space; only the
-        // computed/screened split differs.
-        assert_eq!(
-            e2.stats.quartets_computed + e2.stats.quartets_screened,
-            exact_total
-        );
         assert!(e2.stats.quartets_computed <= e1.stats.quartets_computed);
+        // Independent oracle (not derived from the walk): brute-force
+        // count of canonical quartets passing the weighted bound must
+        // equal what the engine computed.
+        for (eng, screen, ctx) in
+            [(&e1, &exact_screen, &ctx_exact), (&e2, &loose_screen, &ctx_loose)]
+        {
+            let mut expect = 0u64;
+            crate::hf::quartets::for_each_canonical(basis.n_shells(), |(i, j, k, l)| {
+                if screen.q(i, j) * screen.q(k, l) * ctx.dmax.global > screen.tau {
+                    expect += 1;
+                }
+            });
+            assert_eq!(eng.stats.quartets_computed, expect);
+        }
     }
 }

@@ -1,13 +1,15 @@
 //! Algorithm 3 — hybrid MPI/OpenMP with a *shared* Fock matrix (the
 //! paper's novel contribution).
 //!
-//! Loop structure per the paper:
-//! * MPI level: the master thread claims combined `ij` pair ordinals
-//!   from the DLB counter; the whole `ij` task is Schwarz-prescreened
-//!   (density-weighted `Q_ij·q_max·|d|_max ≤ τ`) so the sparsest
-//!   top-loop iterations are skipped outright;
-//! * OpenMP level: threads split the combined `kl ≤ ij` loop with
-//!   `schedule(dynamic,1)` semantics;
+//! Loop structure per the paper, on the Q-sorted pair list:
+//! * MPI level: the master thread claims bra tasks — surviving-pair
+//!   ranks of the sorted list — from the DLB counter. Dead `ij` tasks
+//!   (the ones the legacy prescreen caught *after* claiming, paying a
+//!   full barrier round each) are impossible by construction: the walk
+//!   only spans ranks with a nonempty surviving ket prefix;
+//! * OpenMP level: threads split the task's early-exit ket prefix
+//!   (`kl_limit` ranks, rank ≤ bra rank) with `schedule(dynamic,1)`
+//!   semantics — screening is the loop bound, no per-quartet test;
 //! * race elimination: updates touching shell `i` go to the thread's
 //!   private `F_I` column buffer, updates touching shell `j` to `F_J`
 //!   (both `[N_BF × shellWidth] × nthreads`, cache-line padded —
@@ -29,7 +31,6 @@ use crate::integrals::EriEngine;
 use crate::linalg::Matrix;
 
 use super::dlb::DlbCounter;
-use super::quartets::pair_from_index;
 use super::scatter::{fold_symmetric, scatter_block};
 use super::threadpool::{parallel_region, ColumnBuffers, SharedMatrix};
 use super::{BuildStats, FockBuilder, FockContext};
@@ -64,36 +65,48 @@ impl FockBuilder for SharedFock {
         let t0 = std::time::Instant::now();
         let basis = ctx.basis;
         let n = basis.n_bf;
-        let nsh = basis.n_shells();
-        let n_pairs = nsh * (nsh + 1) / 2;
+        let (walk, pairs) = (&ctx.walk, ctx.pairs);
+        let n_tasks = walk.n_tasks();
         let dlb = DlbCounter::new();
         let width = basis.max_shell_bf;
 
-        let per_rank: Vec<(Matrix, u64, u64, u64)> = parallel_region(self.n_ranks, |_rank| {
+        let per_rank: Vec<(Matrix, u64, u64)> = parallel_region(self.n_ranks, |_rank| {
             let nt = self.n_threads;
             let shared = SharedMatrix::zeros(n, n);
             // mxsize = ubound(Fock) * shellSize (Algorithm 3 line 1).
             let f_i = ColumnBuffers::new(n, width, nt);
             let f_j = ColumnBuffers::new(n, width, nt);
-            let ij_cur = AtomicUsize::new(0);
+            let rij_cur = AtomicUsize::new(0);
+            let nkl_cur = AtomicUsize::new(0);
             let kl_counter = AtomicUsize::new(0);
             let i_old = AtomicUsize::new(usize::MAX);
             let flush_count = AtomicUsize::new(0);
             let barrier = Barrier::new(nt);
 
-            let counts: Vec<(u64, u64)> = parallel_region(nt, |tid| {
+            let counts: Vec<u64> = parallel_region(nt, |tid| {
                 let mut eng = EriEngine::new();
                 let mut block = vec![0.0; 6 * 6 * 6 * 6];
                 let mut computed = 0u64;
-                let mut screened = 0u64;
                 loop {
                     if tid == 0 {
-                        ij_cur.store(dlb.next(), Ordering::SeqCst);
+                        // The DLB hands out surviving-pair ranks: the
+                        // legacy per-task I/J prescreen (Algorithm 3
+                        // line 12) — and the full barrier round every
+                        // dead ij task cost — is gone, because the walk
+                        // contains no dead tasks to prescreen.
+                        match dlb.next_task(n_tasks) {
+                            Some(t) => {
+                                let rij = walk.task(t);
+                                rij_cur.store(rij, Ordering::SeqCst);
+                                nkl_cur.store(walk.kl_limit(rij), Ordering::SeqCst);
+                            }
+                            None => rij_cur.store(usize::MAX, Ordering::SeqCst),
+                        }
                         kl_counter.store(0, Ordering::SeqCst);
                     }
                     barrier.wait();
-                    let ij = ij_cur.load(Ordering::SeqCst);
-                    if ij >= n_pairs {
+                    let rij = rij_cur.load(Ordering::SeqCst);
+                    if rij == usize::MAX {
                         // Final F_I flush (Algorithm 3 line 36).
                         let iold = i_old.load(Ordering::SeqCst);
                         if iold != usize::MAX {
@@ -104,28 +117,21 @@ impl FockBuilder for SharedFock {
                         barrier.wait();
                         break;
                     }
-                    let (i, j) = pair_from_index(ij);
+                    let bra = pairs.entry(rij);
+                    let (i, j) = (bra.i as usize, bra.j as usize);
+                    let n_kl = nkl_cur.load(Ordering::SeqCst);
+                    // Dead tasks are impossible by construction of the
+                    // sorted walk (rank < n_tasks ⇒ nonempty prefix).
+                    debug_assert!(n_kl > 0, "DLB handed out a dead ij task");
 
-                    // I/J prescreening (Algorithm 3 line 12): the entire
-                    // ij task dies if Q_ij·q_max·|d|_max ≤ τ. The barrier
-                    // before `continue` is essential: without it the
-                    // master can loop around and overwrite `ij_cur`
-                    // before a slow thread has read the current value,
-                    // desynchronizing the barrier sequence (observed as
-                    // both corrupted Fock blocks and deadlock; the
-                    // paper's Algorithm 3 pseudocode has the same hazard
-                    // between its lines 8 and 11 — a real OpenMP port
-                    // needs the barrier too).
-                    if ctx.pair_screened(i, j) {
-                        barrier.wait();
-                        continue;
-                    }
-
-                    // Lazy F_I flush on i change (lines 14–17). NB the
-                    // buffer holds contributions of the *previous* i, so
-                    // the flush targets i_old's column block (the paper's
-                    // listing writes "Fock(:,i)" but line 33 stores i_old
-                    // for exactly this purpose).
+                    // Lazy F_I flush on i change (lines 14–17). Tasks
+                    // are (i, j)-grouped by the walk precisely so `i`
+                    // stays monotone here and this fires once per
+                    // distinct i, not once per task. NB the buffer holds
+                    // contributions of the *previous* i, so the flush
+                    // targets i_old's column block (the paper's listing
+                    // writes "Fock(:,i)" but line 33 stores i_old for
+                    // exactly this purpose).
                     let iold = i_old.load(Ordering::SeqCst);
                     if iold != i {
                         if iold != usize::MAX {
@@ -145,20 +151,20 @@ impl FockBuilder for SharedFock {
                     let j_range = basis.shell_bf_range(j);
                     let (i0, j0) = (i_range.start, j_range.start);
 
-                    // !$omp do schedule(dynamic,1) over kl ordinals.
-                    let n_kl = ij + 1;
+                    // !$omp do schedule(dynamic,1) over the surviving
+                    // ket prefix — the early exit is the loop bound; no
+                    // quartet is tested individually.
                     loop {
-                        let kl = kl_counter.fetch_add(1, Ordering::Relaxed);
-                        if kl >= n_kl {
+                        let rkl = kl_counter.fetch_add(1, Ordering::Relaxed);
+                        if rkl >= n_kl {
                             break;
                         }
-                        let (k, l) = pair_from_index(kl);
-                        if ctx.screened(i, j, k, l) {
-                            screened += 1;
-                            continue;
-                        }
+                        let ket = pairs.entry(rkl);
+                        let (k, l) = (ket.i as usize, ket.j as usize);
                         computed += 1;
-                        eng.shell_quartet(basis, ctx.store, i, j, k, l, &mut block);
+                        eng.shell_quartet_slots(
+                            basis, ctx.store, i, j, k, l, bra.slot, ket.slot, &mut block,
+                        );
                         scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| {
                             // Route by shell membership (lines 25–27).
                             if i_range.contains(&a) {
@@ -183,15 +189,13 @@ impl FockBuilder for SharedFock {
                     unsafe { f_j.flush_rows(&shared, j0, r0, r1) };
                     barrier.wait();
                 }
-                (computed, screened)
+                computed
             });
 
-            let computed: u64 = counts.iter().map(|c| c.0).sum();
-            let screened: u64 = counts.iter().map(|c| c.1).sum();
+            let computed: u64 = counts.iter().sum();
             (
                 shared.into_matrix(),
                 computed,
-                screened,
                 flush_count.load(Ordering::SeqCst) as u64,
             )
         });
@@ -199,21 +203,15 @@ impl FockBuilder for SharedFock {
         // ddi_gsumf over ranks.
         let mut total = Matrix::zeros(n, n);
         let mut computed = 0;
-        let mut screened = 0;
         let mut flushes = 0;
-        for (g, c, s, fl) in per_rank {
+        for (g, c, fl) in per_rank {
             total.add_assign(&g);
             computed += c;
-            screened += s;
             flushes += fl;
         }
         fold_symmetric(&mut total);
         self.fi_flushes = flushes;
-        self.stats = BuildStats {
-            quartets_computed: computed,
-            quartets_screened: screened,
-            seconds: t0.elapsed().as_secs_f64(),
-        };
+        self.stats = BuildStats::from_walk(computed, ctx, t0.elapsed().as_secs_f64());
         total
     }
 
@@ -232,7 +230,7 @@ mod tests {
     use crate::basis::{BasisName, BasisSet};
     use crate::chem::molecules;
     use crate::hf::serial::SerialFock;
-    use crate::integrals::{SchwarzScreen, ShellPairStore};
+    use crate::integrals::{SchwarzScreen, ShellPairStore, SortedPairList};
     use crate::util::prng::Rng;
 
     fn random_density(n: usize, seed: u64) -> Matrix {
@@ -254,8 +252,9 @@ mod tests {
         let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
         let store = ShellPairStore::build(&basis);
         let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+        let pairs = SortedPairList::build(&screen, &store);
         let d = random_density(basis.n_bf, 31);
-        let ctx = FockContext::new(&basis, &store, &screen, &d);
+        let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
         let want = SerialFock::new().build_2e(&ctx);
         for (ranks, threads) in [(1, 1), (1, 2), (1, 5), (2, 3)] {
             let mut eng = SharedFock::new(ranks, threads);
@@ -275,8 +274,9 @@ mod tests {
         let basis = BasisSet::assemble(&mol, BasisName::SixThirtyOneGd).unwrap();
         let store = ShellPairStore::build(&basis);
         let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+        let pairs = SortedPairList::build(&screen, &store);
         let d = random_density(basis.n_bf, 37);
-        let ctx = FockContext::new(&basis, &store, &screen, &d);
+        let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
         let want = SerialFock::new().build_2e(&ctx);
         let mut eng = SharedFock::new(1, 4);
         let got = eng.build_2e(&ctx);
@@ -289,8 +289,9 @@ mod tests {
         let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
         let store = ShellPairStore::build(&basis);
         let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+        let pairs = SortedPairList::build(&screen, &store);
         let d = random_density(basis.n_bf, 41);
-        let ctx = FockContext::new(&basis, &store, &screen, &d);
+        let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
         let mut eng = SharedFock::new(1, 2);
         let _ = eng.build_2e(&ctx);
         let nsh = basis.n_shells();

@@ -95,6 +95,31 @@ impl EriEngine {
         self.shell_quartet_with_views(basis, i, j, k, l, bra, ket, out);
     }
 
+    /// Like [`EriEngine::shell_quartet`], with both pairs' store slots
+    /// already resolved (the `SortedPairList` hands them out with each
+    /// rank) — the sorted-walk hot path: no canonical-ordinal lookup,
+    /// no negligible-pair branch. `(i, j)` and `(k, l)` must be the
+    /// canonical (i ≥ j) shell orders the slots were stored under.
+    #[allow(clippy::too_many_arguments)]
+    pub fn shell_quartet_slots(
+        &mut self,
+        basis: &BasisSet,
+        store: &ShellPairStore,
+        i: usize,
+        j: usize,
+        k: usize,
+        l: usize,
+        bra_slot: u32,
+        ket_slot: u32,
+        out: &mut [f64],
+    ) {
+        debug_assert_eq!(store.slot(i, j), Some(bra_slot), "stale bra slot");
+        debug_assert_eq!(store.slot(k, l), Some(ket_slot), "stale ket slot");
+        let bra = store.view_by_slot(bra_slot, i < j);
+        let ket = store.view_by_slot(ket_slot, k < l);
+        self.shell_quartet_with_views(basis, i, j, k, l, bra, ket, out);
+    }
+
     /// Like [`EriEngine::shell_quartet`], with caller-supplied pair
     /// views — the entry point for transient (store-free) pair tables,
     /// e.g. the low-memory Schwarz bound construction.

@@ -13,10 +13,12 @@ pub mod boys;
 pub mod eri;
 pub mod hermite;
 pub mod oneint;
+pub mod pairlist;
 pub mod rtensor;
 pub mod schwarz;
 pub mod shellpair;
 
 pub use eri::EriEngine;
+pub use pairlist::{PairWalk, SortedPairList};
 pub use schwarz::{PairDensityMax, SchwarzScreen};
 pub use shellpair::ShellPairStore;

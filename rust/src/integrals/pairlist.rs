@@ -1,0 +1,446 @@
+//! Q-sorted shell-pair lists — screening as a *loop bound* (paper §4.1).
+//!
+//! The engines' legacy inner loops enumerated every triangular pair
+//! ordinal and tested `screened_weighted` per quartet, so a late-SCF ΔD
+//! build paid O(N⁴) loop-and-branch overhead just to *skip* work. The
+//! paper's structure never tests doomed quartets one by one: shell
+//! pairs are ordered by their Schwarz bound, so for a fixed bra pair
+//! the ket walk simply *stops* at the first pair whose bound product
+//! drops below τ — everything after it is smaller still.
+//!
+//! [`SortedPairList`] is the SCF-lifetime half of that structure: the
+//! surviving canonical pairs (Schwarz-nonzero, with a
+//! [`ShellPairStore`] slot) sorted descending by `Q_ij`, built once per
+//! SCF next to the store. [`PairWalk`] is the per-build (per-density)
+//! half: the density weight `w = max|D|` folds into the bound
+//!
+//! ```text
+//!   visit (ij, kl)  ⟺  Q_ij · Q_kl · w  >  τ         (rank kl ≤ rank ij)
+//! ```
+//!
+//! which factorizes per pair, so the surviving ket range of every bra
+//! pair is a *prefix* of the Q-sorted list — found by binary search,
+//! walked with zero per-quartet branching. `w` bounds the
+//! Häser–Ahlrichs quartet weight (`PairDensityMax::quartet_weight ≤
+//! global`), so the visited set is a superset of the per-quartet
+//! weighted survivors: accuracy can only improve, and with ΔD densities
+//! `w → 0` collapses the walk to nothing.
+//!
+//! The outer traversal is *not* Q-ordered: tasks are handed out grouped
+//! by leading shell `i` (the order the shared-Fock engine's lazy `F_I`
+//! flush depends on). Because the active set under any weight is a
+//! prefix of the Q-sorted ranks, the per-build task order is a linear
+//! *filter* of one precomputed (i, j)-sorted template — no per-build
+//! re-sort.
+
+use super::schwarz::{PairDensityMax, SchwarzScreen};
+use super::shellpair::ShellPairStore;
+
+/// One surviving shell pair: canonical indices (i ≥ j), its Schwarz
+/// bound, and its precomputed-table slot in the [`ShellPairStore`].
+#[derive(Debug, Clone, Copy)]
+pub struct PairEntry {
+    pub i: u32,
+    pub j: u32,
+    /// Schwarz bound Q_ij = √max|(ij|ij)|.
+    pub q: f64,
+    /// Table slot in the store ([`ShellPairStore::view_by_slot`]).
+    pub slot: u32,
+}
+
+/// SCF-lifetime list of surviving shell pairs sorted descending by
+/// Schwarz bound. Built once per SCF alongside the [`ShellPairStore`];
+/// shared read-only by every engine thread.
+#[derive(Debug, Clone)]
+pub struct SortedPairList {
+    n_shells: usize,
+    /// Screening threshold τ the walks are built against (copied from
+    /// the [`SchwarzScreen`] this list was derived from).
+    tau: f64,
+    /// Entries in descending-q order; the index into this vector is the
+    /// pair's *rank*.
+    entries: Vec<PairEntry>,
+    /// `qs[rank] = entries[rank].q` — a dense copy so the binary-search
+    /// walks touch one cache-friendly array. Descending; `qs[0]` is the
+    /// prefix maximum of every suffix walk.
+    qs: Vec<f64>,
+    /// All ranks sorted by (i, j) — the outer-traversal template the
+    /// per-build [`PairWalk`] filters (see module docs).
+    ij_order: Vec<u32>,
+}
+
+impl SortedPairList {
+    /// Collect the pairs with a nonzero Schwarz bound *and* stored pair
+    /// tables, sorted descending by bound. Pairs failing either test
+    /// contribute only identically-negligible (or exactly zero-block)
+    /// quartets.
+    pub fn build(screen: &SchwarzScreen, store: &ShellPairStore) -> SortedPairList {
+        let n = screen.n_shells();
+        assert_eq!(
+            n,
+            store.n_shells(),
+            "SchwarzScreen and ShellPairStore disagree on shell count"
+        );
+        let mut entries: Vec<PairEntry> = Vec::new();
+        for i in 0..n {
+            for j in 0..=i {
+                let q = screen.q(i, j);
+                if q <= 0.0 {
+                    continue;
+                }
+                let Some(slot) = store.slot(i, j) else {
+                    continue;
+                };
+                entries.push(PairEntry { i: i as u32, j: j as u32, q, slot });
+            }
+        }
+        // Descending q; (i, j) tie-break keeps the rank assignment (and
+        // therefore every engine's visited set) deterministic.
+        entries.sort_by(|a, b| {
+            b.q.partial_cmp(&a.q)
+                .expect("Schwarz bounds are finite")
+                .then_with(|| (a.i, a.j).cmp(&(b.i, b.j)))
+        });
+        let qs: Vec<f64> = entries.iter().map(|e| e.q).collect();
+        let mut ij_order: Vec<u32> = (0..entries.len() as u32).collect();
+        ij_order.sort_by_key(|&r| {
+            let e = &entries[r as usize];
+            (e.i, e.j)
+        });
+        SortedPairList { n_shells: n, tau: screen.tau, entries, qs, ij_order }
+    }
+
+    /// Number of listed (surviving) pairs.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn n_shells(&self) -> usize {
+        self.n_shells
+    }
+
+    /// The τ this list's walks screen against.
+    pub fn tau(&self) -> f64 {
+        self.tau
+    }
+
+    /// Shell indices (i ≥ j) of the pair at `rank`.
+    #[inline]
+    pub fn pair(&self, rank: usize) -> (usize, usize) {
+        let e = &self.entries[rank];
+        (e.i as usize, e.j as usize)
+    }
+
+    /// Schwarz bound of the pair at `rank`.
+    #[inline]
+    pub fn q(&self, rank: usize) -> f64 {
+        self.qs[rank]
+    }
+
+    /// Store slot of the pair at `rank`.
+    #[inline]
+    pub fn slot(&self, rank: usize) -> u32 {
+        self.entries[rank].slot
+    }
+
+    /// Full entry at `rank`.
+    #[inline]
+    pub fn entry(&self, rank: usize) -> PairEntry {
+        self.entries[rank]
+    }
+
+    /// Largest Schwarz bound in the list (the rank-0 entry).
+    pub fn q_max(&self) -> f64 {
+        self.qs.first().copied().unwrap_or(0.0)
+    }
+
+    /// Quartets in *list space*: every unordered pair-of-listed-pairs,
+    /// m(m+1)/2. The gap between this and a walk's visited count is
+    /// what the early exit saved over enumerate-and-test.
+    pub fn n_list_quartets(&self) -> u64 {
+        let m = self.entries.len() as u64;
+        m * (m + 1) / 2
+    }
+
+    /// Rank of canonical pair (i ≥ j), if listed. O(m) — for tests and
+    /// diagnostics, not hot paths (engines work in rank space).
+    pub fn rank_of(&self, i: usize, j: usize) -> Option<usize> {
+        let (a, b) = if i >= j { (i, j) } else { (j, i) };
+        self.entries
+            .iter()
+            .position(|e| e.i as usize == a && e.j as usize == b)
+    }
+
+    /// Heap footprint in bytes (memory-model accounting).
+    pub fn bytes(&self) -> usize {
+        Self::estimate_bytes_for(self.entries.len())
+    }
+
+    /// Footprint of a list with `n_pairs` entries — the same formula
+    /// `bytes()` reports, for footprint predictions that count
+    /// survivors without building anything
+    /// (`ShellPairStore::estimate_pair_count`).
+    pub fn estimate_bytes_for(n_pairs: usize) -> usize {
+        std::mem::size_of::<SortedPairList>()
+            + n_pairs
+                * (std::mem::size_of::<PairEntry>()
+                    + std::mem::size_of::<f64>()
+                    + std::mem::size_of::<u32>())
+    }
+
+    /// Build the per-density walk: fold `dmax`'s global weight into the
+    /// bound and materialize the active task order (a linear filter of
+    /// the precomputed (i, j) template — no sorting).
+    pub fn weighted(&self, dmax: &PairDensityMax) -> PairWalk<'_> {
+        let weight = dmax.global;
+        let n_active = match self.qs.first() {
+            None => 0,
+            Some(&q0) => self.qs.partition_point(|&q| q * q0 * weight > self.tau),
+        };
+        let tasks: Vec<u32> = self
+            .ij_order
+            .iter()
+            .copied()
+            .filter(|&r| (r as usize) < n_active)
+            .collect();
+        PairWalk { list: self, weight, n_active, tasks }
+    }
+}
+
+/// A density-weighted early-exit view over a [`SortedPairList`] — one
+/// Fock build's iteration space. Screening is a *loop bound* here: the
+/// surviving ket range of bra rank `r` is `0..kl_limit(r)`, with no
+/// per-quartet test inside.
+#[derive(Debug, Clone)]
+pub struct PairWalk<'a> {
+    list: &'a SortedPairList,
+    /// Density weight folded into the bound: max |D| over shell blocks
+    /// (bounds every Häser–Ahlrichs quartet weight from above).
+    weight: f64,
+    /// Ranks [0, n_active) have a nonempty ket range; everything at or
+    /// beyond n_active is dead against *every* partner — dead bra tasks
+    /// are impossible by construction.
+    n_active: usize,
+    /// The active ranks in (i, j)-grouped order — what the DLB hands
+    /// out. `tasks.len() == n_active`.
+    tasks: Vec<u32>,
+}
+
+impl<'a> PairWalk<'a> {
+    /// The list this walk views.
+    #[inline]
+    pub fn pairs(&self) -> &'a SortedPairList {
+        self.list
+    }
+
+    /// The density weight folded into the bound.
+    pub fn weight(&self) -> f64 {
+        self.weight
+    }
+
+    /// Number of bra tasks (= active ranks). The DLB distributes
+    /// ordinals in `0..n_tasks()`; every task has work.
+    #[inline]
+    pub fn n_tasks(&self) -> usize {
+        self.n_active
+    }
+
+    /// The q-rank of task ordinal `t` (tasks are (i, j)-grouped so the
+    /// shared-Fock lazy F_I flush sees monotone `i`).
+    #[inline]
+    pub fn task(&self, t: usize) -> usize {
+        self.tasks[t] as usize
+    }
+
+    /// Early-exit loop bound of bra rank `rij`: the number of leading
+    /// ket ranks surviving `q_ij·q_kl·w > τ`, capped by the triangular
+    /// constraint `rkl ≤ rij`. Binary search over the descending-q
+    /// prefix — the single place the bound is evaluated.
+    #[inline]
+    pub fn kl_limit(&self, rij: usize) -> usize {
+        let qij = self.list.qs[rij];
+        let (w, tau) = (self.weight, self.list.tau);
+        self.list.qs[..=rij].partition_point(|&qkl| qij * qkl * w > tau)
+    }
+
+    /// Does the walk visit the rank pair {ra, rb}? (Order-free; for
+    /// property tests.)
+    pub fn visits(&self, ra: usize, rb: usize) -> bool {
+        let (hi, lo) = if ra >= rb { (ra, rb) } else { (rb, ra) };
+        hi < self.n_active && lo < self.kl_limit(hi)
+    }
+
+    /// Total quartets the walk visits (= every engine's
+    /// `quartets_computed` for this build).
+    pub fn n_visited(&self) -> u64 {
+        (0..self.n_active).map(|r| self.kl_limit(r) as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basis::{BasisName, BasisSet};
+    use crate::chem::molecules;
+    use crate::linalg::Matrix;
+    use crate::util::prng::Rng;
+
+    fn setup(
+        mol: &crate::chem::Molecule,
+        tau: f64,
+    ) -> (BasisSet, ShellPairStore, SchwarzScreen) {
+        let basis = BasisSet::assemble(mol, BasisName::Sto3g).unwrap();
+        let store = ShellPairStore::build(&basis);
+        let screen = SchwarzScreen::build_with_store(&basis, &store, tau);
+        (basis, store, screen)
+    }
+
+    fn random_density(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut d = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let x = rng.range(-0.5, 0.5);
+                d.set(i, j, x);
+                d.set(j, i, x);
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn list_is_sorted_canonical_and_slotted() {
+        let (basis, store, screen) = setup(&molecules::water(), 1e-10);
+        let list = SortedPairList::build(&screen, &store);
+        assert!(!list.is_empty());
+        assert_eq!(list.n_shells(), basis.n_shells());
+        for r in 0..list.len() {
+            let (i, j) = list.pair(r);
+            assert!(i >= j, "rank {r}: non-canonical ({i},{j})");
+            assert!(list.q(r) > 0.0);
+            assert_eq!(list.q(r), screen.q(i, j));
+            // The slot resolves to this pair's tables.
+            assert_eq!(store.slot(i, j), Some(list.slot(r)));
+            if r > 0 {
+                assert!(list.q(r) <= list.q(r - 1), "not descending at {r}");
+            }
+        }
+        assert_eq!(list.q_max(), list.q(0));
+        assert!(list.bytes() > 0);
+    }
+
+    #[test]
+    fn far_pairs_are_not_listed() {
+        let mut mol = molecules::h2();
+        mol.atoms[1].pos[2] = 100.0;
+        let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+        let store = ShellPairStore::build(&basis);
+        let screen = SchwarzScreen::build_with_store(&basis, &store, 1e-10);
+        let list = SortedPairList::build(&screen, &store);
+        assert_eq!(list.rank_of(1, 0), None, "negligible pair must be unlisted");
+        assert!(list.rank_of(0, 0).is_some());
+        assert!(list.rank_of(1, 1).is_some());
+    }
+
+    #[test]
+    fn walk_tasks_are_i_grouped_and_active() {
+        let (basis, store, screen) = setup(&molecules::benzene(), 1e-10);
+        let list = SortedPairList::build(&screen, &store);
+        let d = random_density(basis.n_bf, 11);
+        let dmax = PairDensityMax::build(&basis, &d);
+        let walk = list.weighted(&dmax);
+        assert!(walk.n_tasks() > 0);
+        assert!(walk.n_tasks() <= list.len());
+        let mut prev = (0usize, 0usize);
+        for t in 0..walk.n_tasks() {
+            let r = walk.task(t);
+            // Every handed-out task has work: dead bra tasks are
+            // impossible by construction.
+            assert!(walk.kl_limit(r) > 0, "task {t} (rank {r}) is dead");
+            let ij = list.pair(r);
+            if t > 0 {
+                assert!(ij >= prev, "tasks not (i,j)-grouped at {t}");
+            }
+            prev = ij;
+        }
+    }
+
+    #[test]
+    fn kl_limit_matches_linear_scan() {
+        let (basis, store, screen) = setup(&molecules::benzene(), 1e-9);
+        let list = SortedPairList::build(&screen, &store);
+        let d = random_density(basis.n_bf, 23);
+        let dmax = PairDensityMax::build(&basis, &d);
+        let walk = list.weighted(&dmax);
+        let w = walk.weight();
+        for rij in (0..list.len()).step_by(7) {
+            let mut expect = 0usize;
+            for rkl in 0..=rij {
+                if list.q(rij) * list.q(rkl) * w > list.tau() {
+                    expect += 1;
+                } else {
+                    break; // descending q: nothing later survives
+                }
+            }
+            assert_eq!(walk.kl_limit(rij), expect, "rij={rij}");
+        }
+    }
+
+    #[test]
+    fn visited_set_is_exact_bound_set() {
+        // Brute force over every rank pair: visited ⟺ bound survives.
+        let (basis, store, screen) = setup(&molecules::water(), 1e-10);
+        let list = SortedPairList::build(&screen, &store);
+        let d = random_density(basis.n_bf, 5);
+        let dmax = PairDensityMax::build(&basis, &d);
+        let walk = list.weighted(&dmax);
+        let mut visited = 0u64;
+        for ra in 0..list.len() {
+            for rb in 0..=ra {
+                let expect = list.q(ra) * list.q(rb) * walk.weight() > list.tau();
+                assert_eq!(walk.visits(ra, rb), expect, "({ra},{rb})");
+                if expect {
+                    visited += 1;
+                }
+            }
+        }
+        assert_eq!(walk.n_visited(), visited);
+        assert!(visited <= list.n_list_quartets());
+    }
+
+    #[test]
+    fn zero_weight_kills_everything() {
+        let (basis, store, screen) = setup(&molecules::water(), 1e-10);
+        let list = SortedPairList::build(&screen, &store);
+        let d = Matrix::zeros(basis.n_bf, basis.n_bf);
+        let dmax = PairDensityMax::build(&basis, &d);
+        let walk = list.weighted(&dmax);
+        assert_eq!(walk.n_tasks(), 0);
+        assert_eq!(walk.n_visited(), 0);
+    }
+
+    #[test]
+    fn shrinking_weight_shrinks_the_walk() {
+        // ΔD → 0 is the whole point: smaller weights must visit
+        // (weakly) fewer quartets, collapsing to zero.
+        let (basis, store, screen) = setup(&molecules::benzene(), 1e-10);
+        let list = SortedPairList::build(&screen, &store);
+        let mut last = u64::MAX;
+        for scale in [1.0, 1e-3, 1e-6, 1e-9, 1e-12] {
+            let mut d = Matrix::identity(basis.n_bf);
+            d.scale(scale);
+            let dmax = PairDensityMax::build(&basis, &d);
+            let visited = list.weighted(&dmax).n_visited();
+            assert!(visited <= last, "scale {scale}: {visited} > {last}");
+            last = visited;
+        }
+        // q_max² · 1e-12 is far below the default τ = 1e-10.
+        assert_eq!(last, 0, "1e-12-scale density must screen out everything");
+    }
+}

@@ -406,6 +406,28 @@ impl ShellPairStore {
         self.get(a, b).map(|tables| tables.view(a < b))
     }
 
+    /// Table slot of pair (a, b) in either order, or `None` if the pair
+    /// is negligible. Slots are stable for the store's lifetime — the
+    /// [`super::pairlist::SortedPairList`] carries them so the engines'
+    /// hot loops skip the ordinal lookup entirely.
+    #[inline]
+    pub fn slot(&self, a: usize, b: usize) -> Option<u32> {
+        let (i, j) = if a >= b { (a, b) } else { (b, a) };
+        debug_assert!(i < self.n_shells);
+        match self.idx[pair_index(i, j)] {
+            NONE => None,
+            t => Some(t),
+        }
+    }
+
+    /// View the tables at a slot previously obtained from
+    /// [`ShellPairStore::slot`]; `swap` when the caller's first shell is
+    /// the stored second (lower-index) one.
+    #[inline]
+    pub fn view_by_slot(&self, slot: u32, swap: bool) -> PairView<'_> {
+        self.tables[slot as usize].view(swap)
+    }
+
     pub fn n_shells(&self) -> usize {
         self.n_shells
     }
@@ -431,6 +453,24 @@ impl ShellPairStore {
     /// Exact heap footprint in bytes (for the memory model / reports).
     pub fn bytes(&self) -> usize {
         self.bytes
+    }
+
+    /// Count the distance-surviving canonical pairs without building
+    /// any tables — an upper bound on the built store's
+    /// `n_pairs_stored` (pairs can additionally lose all primitives to
+    /// [`PAIR_CUTOFF`]) and the population bound the footprint report
+    /// uses to size the Q-sorted pair list.
+    pub fn estimate_pair_count(basis: &BasisSet) -> usize {
+        let n = basis.n_shells();
+        let mut count = 0usize;
+        for i in 0..n {
+            for j in 0..=i {
+                if !pair_negligible(basis, i, j) {
+                    count += 1;
+                }
+            }
+        }
+        count
     }
 
     /// Predict `ShellPairStore::build(basis).bytes()` without building

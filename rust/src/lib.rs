@@ -23,7 +23,9 @@
 //!
 //! The integral hot path is organized around the SCF-lifetime
 //! [`integrals::ShellPairStore`] (shared pair Hermite tables, one copy
-//! per process) and incremental ΔD Fock builds in the driver — see
+//! per process), the Q-sorted [`integrals::SortedPairList`] whose
+//! early-exit walks make Schwarz screening a loop bound instead of a
+//! per-quartet test, and incremental ΔD Fock builds in the driver — see
 //! EXPERIMENTS.md for the perf-iteration log.
 
 // Numeric kernel code: index-heavy loops over small tensors are written

@@ -125,10 +125,12 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
     );
     // BuildStats screening counters: the incremental-SCF observability.
     println!(
-        "  shell-pair store: {} ({} mode, rebuild every {})",
+        "  shell-pair store: {} ({} mode, rebuild every {}); sorted pair list: {} pairs, {}",
         human_bytes(res.store_bytes as f64),
         if driver.incremental { "incremental ΔD" } else { "full rebuild" },
         driver.rebuild_every,
+        res.pairs_listed,
+        human_bytes(res.pairlist_bytes as f64),
     );
     // (The xla engine does no quartet screening and reports 0 counts —
     // skip the counter lines rather than print a bogus reduction.)
@@ -157,6 +159,10 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
             "  quartets screened: {} (first iter) -> {} (final iter)",
             first.quartets_screened, last.quartets_screened,
         );
+        println!(
+            "  skipped by early exit: {} (first iter) -> {} (final iter)",
+            first.skipped_by_early_exit, last.skipped_by_early_exit,
+        );
     }
     Ok(())
 }
@@ -176,12 +182,15 @@ fn cmd_footprint() -> anyhow::Result<()> {
     let mut store_05nm = None;
     for sys in PaperSystem::ALL {
         let n = sys.n_bf();
-        // Predicted pair-store footprint per process (counting loops
-        // only — no Hermite tables are built here).
+        // Predicted pair-store + pair-list footprint per process
+        // (counting loops only — no Hermite tables are built here).
         let basis = khf::basis::BasisSet::assemble(&sys.build(), BasisName::SixThirtyOneGd)?;
         let store_bytes = khf::integrals::ShellPairStore::estimate_bytes(&basis) as f64;
+        let pairlist_bytes = khf::integrals::SortedPairList::estimate_bytes_for(
+            khf::integrals::ShellPairStore::estimate_pair_count(&basis),
+        ) as f64;
         if sys == PaperSystem::Nm05 {
-            store_05nm = Some(store_bytes);
+            store_05nm = Some((store_bytes, pairlist_bytes));
         }
         rows.push(vec![
             sys.label().into(),
@@ -196,18 +205,20 @@ fn cmd_footprint() -> anyhow::Result<()> {
         ]);
     }
     print!("{}", report::table(&rows));
-    if let Some(sb) = store_05nm {
+    if let Some((sb, pl)) = store_05nm {
         let n = PaperSystem::Nm05.n_bf();
         println!(
-            "\npair store replicates per process: x256 for MPI-only, x4 for the hybrids\n\
-             (0.5 nm with store: MPI-only {} vs shared-Fock {})",
+            "\npair store + sorted pair list replicate per process: x256 for MPI-only,\n\
+             x4 for the hybrids (0.5 nm with both: MPI-only {} vs shared-Fock {};\n\
+             list alone {})",
             human_bytes(memmodel::exact_bytes_with_store(
                 EngineKind::MpiOnly,
                 n,
                 15,
                 256,
                 1,
-                sb
+                sb,
+                pl
             )),
             human_bytes(memmodel::exact_bytes_with_store(
                 EngineKind::SharedFock,
@@ -215,8 +226,10 @@ fn cmd_footprint() -> anyhow::Result<()> {
                 15,
                 4,
                 64,
-                sb
+                sb,
+                pl
             )),
+            human_bytes(pl),
         );
     }
     Ok(())

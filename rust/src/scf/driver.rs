@@ -20,7 +20,7 @@ use crate::basis::{BasisName, BasisSet};
 use crate::chem::Molecule;
 use crate::hf::{BuildStats, FockBuilder, FockContext};
 use crate::integrals::oneint::{core_hamiltonian, overlap_matrix};
-use crate::integrals::{SchwarzScreen, ShellPairStore};
+use crate::integrals::{SchwarzScreen, ShellPairStore, SortedPairList};
 use crate::linalg::{eigen, Matrix};
 
 use super::diis::Diis;
@@ -74,6 +74,10 @@ pub struct ScfResult {
     pub build_stats: Vec<BuildStats>,
     /// Heap bytes of the shared shell-pair store used by the run.
     pub store_bytes: usize,
+    /// Surviving pairs in the Q-sorted list the engines walked.
+    pub pairs_listed: usize,
+    /// Heap bytes of the shared sorted pair list.
+    pub pairlist_bytes: usize,
 }
 
 impl RhfDriver {
@@ -121,13 +125,19 @@ impl RhfDriver {
         let s = overlap_matrix(basis);
         let x = eigen::inv_sqrt(&s)?;
         let h = core_hamiltonian(basis, mol);
-        // SCF-lifetime shared data: pair tables once, bounds from them.
+        // SCF-lifetime shared data: pair tables once, bounds from them,
+        // and the Q-sorted surviving-pair list the engines walk. The
+        // per-iteration density weighting happens inside each
+        // FockContext (a linear filter of the list — no re-sort).
         let screen = SchwarzScreen::build_with_store(basis, &store, self.schwarz_tau);
+        let pairs = SortedPairList::build(&screen, &store);
         log::debug!(
-            "shell-pair store: {} pairs, {} prim pairs, {} bytes",
+            "shell-pair store: {} pairs, {} prim pairs, {} bytes; sorted list: {} pairs, {} bytes",
             store.n_pairs_stored(),
             store.n_prim_pairs(),
-            store.bytes()
+            store.bytes(),
+            pairs.len(),
+            pairs.bytes()
         );
 
         // Incremental builds only pay off for builders that honor the
@@ -164,12 +174,12 @@ impl RhfDriver {
                 || (self.rebuild_every > 0 && it % self.rebuild_every == 0);
             let t0 = std::time::Instant::now();
             if full_rebuild {
-                let ctx = FockContext::new(basis, &store, &screen, &d);
+                let ctx = FockContext::new(basis, &store, &screen, &pairs, &d);
                 g_total = builder.build_2e(&ctx);
             } else {
                 let mut delta = d.clone();
                 delta.sub_assign(d_of_g.as_ref().unwrap());
-                let ctx = FockContext::new(basis, &store, &screen, &delta);
+                let ctx = FockContext::new(basis, &store, &screen, &pairs, &delta);
                 let g_delta = builder.build_2e(&ctx);
                 g_total.add_assign(&g_delta);
             }
@@ -231,6 +241,8 @@ impl RhfDriver {
             fock_build_seconds: fock_seconds,
             build_stats,
             store_bytes: store.bytes(),
+            pairs_listed: pairs.len(),
+            pairlist_bytes: pairs.bytes(),
         })
     }
 
@@ -343,5 +355,33 @@ mod tests {
         let r = run(&molecules::h2(), BasisName::Sto3g);
         assert!(r.store_bytes > 0);
         assert_eq!(r.build_stats.len(), r.iterations);
+        assert!(r.pairs_listed > 0);
+        assert!(r.pairlist_bytes > 0);
+    }
+
+    #[test]
+    fn final_delta_build_engages_early_exit() {
+        // The confirmation build's ΔD is sub-threshold: the sorted walk
+        // must skip (not merely screen) nearly the whole listed quartet
+        // space — the skipped_by_early_exit counter is the observable.
+        let mut builder = SerialFock::new();
+        let r = RhfDriver { rebuild_every: 0, ..Default::default() }
+            .run(&molecules::benzene(), BasisName::Sto3g, &mut builder)
+            .unwrap();
+        assert!(r.converged);
+        let first = r.build_stats.first().unwrap();
+        let last = r.build_stats.last().unwrap();
+        assert!(
+            last.skipped_by_early_exit > first.skipped_by_early_exit,
+            "late ΔD builds must skip more: first {} vs last {}",
+            first.skipped_by_early_exit,
+            last.skipped_by_early_exit
+        );
+        // Bulk accounting: computed + early-exit skips = listed space.
+        let listed = last.quartets_computed + last.skipped_by_early_exit;
+        assert_eq!(
+            first.quartets_computed + first.skipped_by_early_exit,
+            listed
+        );
     }
 }

@@ -12,7 +12,7 @@ use khf::hf::private_fock::PrivateFock;
 use khf::hf::serial::SerialFock;
 use khf::hf::shared_fock::SharedFock;
 use khf::hf::{FockBuilder, FockContext};
-use khf::integrals::{SchwarzScreen, ShellPairStore};
+use khf::integrals::{SchwarzScreen, ShellPairStore, SortedPairList};
 use khf::linalg::Matrix;
 use khf::scf::RhfDriver;
 use khf::util::prng::Rng;
@@ -106,6 +106,7 @@ fn fock_matrices_bitwise_close_on_d_shell_system() {
     let basis = BasisSet::assemble(&mol, BasisName::SixThirtyOneGd).unwrap();
     let store = ShellPairStore::build(&basis);
     let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+    let pairs = SortedPairList::build(&screen, &store);
     let mut rng = Rng::new(2024);
     let n = basis.n_bf;
     let mut d = Matrix::zeros(n, n);
@@ -116,7 +117,7 @@ fn fock_matrices_bitwise_close_on_d_shell_system() {
             d.set(j, i, x);
         }
     }
-    let ctx = FockContext::new(&basis, &store, &screen, &d);
+    let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
     let want = SerialFock::new().build_2e(&ctx);
     for threads in [2, 3, 7] {
         let got = SharedFock::new(2, threads).build_2e(&ctx);
@@ -136,8 +137,9 @@ fn repeated_builds_are_deterministic() {
     let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
     let store = ShellPairStore::build(&basis);
     let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+    let pairs = SortedPairList::build(&screen, &store);
     let d = Matrix::identity(basis.n_bf);
-    let ctx = FockContext::new(&basis, &store, &screen, &d);
+    let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
     let mut eng = SharedFock::new(2, 4);
     let a = eng.build_2e(&ctx);
     let b = eng.build_2e(&ctx);
@@ -150,8 +152,9 @@ fn stats_consistent_across_engines() {
     let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
     let store = ShellPairStore::build(&basis);
     let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+    let pairs = SortedPairList::build(&screen, &store);
     let d = Matrix::identity(basis.n_bf);
-    let ctx = FockContext::new(&basis, &store, &screen, &d);
+    let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
     let mut serial = SerialFock::new();
     let mut shf = SharedFock::new(1, 3);
     let mut prf = PrivateFock::new(1, 3);
@@ -160,4 +163,15 @@ fn stats_consistent_across_engines() {
     prf.build_2e(&ctx);
     assert_eq!(serial.stats.quartets_computed, shf.stats.quartets_computed);
     assert_eq!(serial.stats.quartets_computed, prf.stats.quartets_computed);
+    // The walk's visited set is deterministic, so the bulk skip
+    // counters agree too — and match the walk's own prediction.
+    assert_eq!(serial.stats.quartets_computed, ctx.walk.n_visited());
+    assert_eq!(
+        serial.stats.skipped_by_early_exit,
+        shf.stats.skipped_by_early_exit
+    );
+    assert_eq!(
+        serial.stats.quartets_screened,
+        prf.stats.quartets_screened
+    );
 }

@@ -1,0 +1,169 @@
+//! The sorted early-exit walk's contract, end to end:
+//!
+//! 1. the walk visits *exactly* the quartet set passing the weighted
+//!    bound Q_ij·Q_kl·max|D| > τ (brute-force enumeration oracle on
+//!    water and a random-density benzene);
+//! 2. that set is a superset of the legacy per-quartet Häser–Ahlrichs
+//!    survivors (so dropping the per-quartet test cannot lose physics);
+//! 3. all four engines still land on the serial full-rebuild energy at
+//!    1e-8 through the incremental ΔD driver (see also
+//!    `engines_agree.rs`).
+
+use std::collections::HashSet;
+
+use khf::basis::{BasisName, BasisSet};
+use khf::chem::molecules;
+use khf::hf::mpi_only::MpiOnlyFock;
+use khf::hf::private_fock::PrivateFock;
+use khf::hf::quartets::{for_each_canonical, for_each_surviving};
+use khf::hf::serial::SerialFock;
+use khf::hf::shared_fock::SharedFock;
+use khf::hf::{FockBuilder, FockContext};
+use khf::integrals::schwarz::pair_index;
+use khf::integrals::{SchwarzScreen, ShellPairStore, SortedPairList};
+use khf::linalg::Matrix;
+use khf::scf::RhfDriver;
+use khf::util::prng::Rng;
+
+fn random_density(n: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let mut d = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let x = rng.range(-0.6, 0.6);
+            d.set(i, j, x);
+            d.set(j, i, x);
+        }
+    }
+    d
+}
+
+/// Canonical-pair-ordinal key of a quartet, order-free over the two
+/// pairs — the common currency between the walk's rank space and the
+/// canonical enumeration.
+fn quartet_key(i: usize, j: usize, k: usize, l: usize) -> (usize, usize) {
+    let a = pair_index(i.max(j), i.min(j));
+    let b = pair_index(k.max(l), k.min(l));
+    (a.max(b), a.min(b))
+}
+
+#[test]
+fn walk_visits_exactly_the_weighted_bound_set() {
+    for (mol, seed, tau) in [
+        (molecules::water(), 5u64, SchwarzScreen::DEFAULT_TAU),
+        (molecules::benzene(), 91u64, 1e-8),
+    ] {
+        let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+        let store = ShellPairStore::build(&basis);
+        let screen = SchwarzScreen::build_with_store(&basis, &store, tau);
+        let pairs = SortedPairList::build(&screen, &store);
+        let d = random_density(basis.n_bf, seed);
+        let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
+        let weight = ctx.dmax.global;
+
+        // Walk side: the quartets the engines will compute.
+        let mut visited = HashSet::new();
+        for_each_surviving(&ctx.walk, |ra, rb| {
+            let (i, j) = pairs.pair(ra);
+            let (k, l) = pairs.pair(rb);
+            assert!(
+                visited.insert(quartet_key(i, j, k, l)),
+                "{}: duplicate quartet ({i}{j}|{k}{l})",
+                mol.name
+            );
+        });
+
+        // Oracle side: brute-force enumeration of the whole canonical
+        // space, testing the weighted bound per quartet.
+        let mut expected = HashSet::new();
+        let mut legacy_survivors = 0u64;
+        for_each_canonical(basis.n_shells(), |(i, j, k, l)| {
+            let passes = screen.q(i, j) * screen.q(k, l) * weight > tau;
+            if passes {
+                expected.insert(quartet_key(i, j, k, l));
+            }
+            if !ctx.screened(i, j, k, l) {
+                legacy_survivors += 1;
+                // Superset property: every legacy (block-weighted)
+                // survivor must be in the walk's visited set.
+                assert!(
+                    passes,
+                    "{}: legacy survivor ({i}{j}|{k}{l}) missed by the bound",
+                    mol.name
+                );
+            }
+        });
+
+        assert_eq!(visited, expected, "{}: visited ≠ bound set", mol.name);
+        assert_eq!(visited.len() as u64, ctx.walk.n_visited(), "{}", mol.name);
+        assert!(
+            visited.len() as u64 >= legacy_survivors,
+            "{}: superset violated",
+            mol.name
+        );
+    }
+}
+
+#[test]
+fn engines_compute_the_walk_exactly() {
+    // Every engine's computed counter must equal the walk's visited
+    // count — no engine enumerates more (dead tasks) or less (lost
+    // tasks) than the sorted walk defines.
+    let mol = molecules::benzene();
+    let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+    let store = ShellPairStore::build(&basis);
+    let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+    let pairs = SortedPairList::build(&screen, &store);
+    let d = random_density(basis.n_bf, 17);
+    let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
+    let want = ctx.walk.n_visited();
+    assert!(want > 0);
+
+    let mut engines: Vec<(&str, Box<dyn FockBuilder>)> = vec![
+        ("serial", Box::new(SerialFock::new())),
+        ("mpi", Box::new(MpiOnlyFock::new(3))),
+        ("private", Box::new(PrivateFock::new(2, 2))),
+        ("shared", Box::new(SharedFock::new(2, 3))),
+    ];
+    for (name, builder) in engines.iter_mut() {
+        let _ = builder.build_2e(&ctx);
+        let st = builder.last_stats();
+        assert_eq!(st.quartets_computed, want, "{name}");
+        assert_eq!(
+            st.quartets_computed + st.skipped_by_early_exit,
+            pairs.n_list_quartets(),
+            "{name}: listed-space accounting"
+        );
+    }
+}
+
+#[test]
+fn incremental_delta_scf_still_agrees_across_engines() {
+    // Satellite contract: the four engines through the ΔD driver vs the
+    // serial full-rebuild reference, 1e-8. (engines_agree.rs covers
+    // water + benzene at default cadence; this pins the pure-ΔD
+    // trajectory with rebuilds disabled — every post-first build rides
+    // the early-exit walk with a shrinking weight.)
+    let mol = molecules::water();
+    let reference = RhfDriver { incremental: false, ..Default::default() }
+        .run(&mol, BasisName::Sto3g, &mut SerialFock::new())
+        .unwrap();
+    assert!(reference.converged);
+    let driver = RhfDriver { rebuild_every: 0, ..Default::default() };
+    let mut engines: Vec<(&str, Box<dyn FockBuilder>)> = vec![
+        ("serial", Box::new(SerialFock::new())),
+        ("mpi", Box::new(MpiOnlyFock::new(2))),
+        ("private", Box::new(PrivateFock::new(1, 3))),
+        ("shared", Box::new(SharedFock::new(2, 2))),
+    ];
+    for (name, builder) in engines.iter_mut() {
+        let r = driver.run(&mol, BasisName::Sto3g, builder.as_mut()).unwrap();
+        assert!(r.converged, "{name}");
+        assert!(
+            (r.energy - reference.energy).abs() < 1e-8,
+            "{name}: {} vs {}",
+            r.energy,
+            reference.energy
+        );
+    }
+}

@@ -11,7 +11,7 @@ use khf::hf::serial::SerialFock;
 use khf::hf::shared_fock::SharedFock;
 use khf::hf::{FockBuilder, FockContext};
 use khf::integrals::schwarz::pair_index;
-use khf::integrals::{EriEngine, SchwarzScreen, ShellPairStore};
+use khf::integrals::{EriEngine, SchwarzScreen, ShellPairStore, SortedPairList};
 use khf::linalg::{eigen, Matrix};
 use khf::util::prng::Rng;
 
@@ -153,6 +153,7 @@ fn prop_random_molecules_engines_agree() {
         let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
         let store = ShellPairStore::build(&basis);
         let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+        let pairs = SortedPairList::build(&screen, &store);
         let n = basis.n_bf;
         let mut d = Matrix::zeros(n, n);
         for i in 0..n {
@@ -162,7 +163,7 @@ fn prop_random_molecules_engines_agree() {
                 d.set(j, i, x);
             }
         }
-        let ctx = FockContext::new(&basis, &store, &screen, &d);
+        let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
         let want = SerialFock::new().build_2e(&ctx);
         let got = SharedFock::new(2, 2).build_2e(&ctx);
         assert!(

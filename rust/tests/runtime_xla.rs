@@ -6,7 +6,7 @@ use khf::basis::{BasisName, BasisSet};
 use khf::chem::molecules;
 use khf::hf::serial::SerialFock;
 use khf::hf::{FockBuilder, FockContext};
-use khf::integrals::{SchwarzScreen, ShellPairStore};
+use khf::integrals::{SchwarzScreen, ShellPairStore, SortedPairList};
 use khf::linalg::Matrix;
 use khf::runtime::{Runtime, XlaFockBuilder};
 use khf::scf::RhfDriver;
@@ -31,9 +31,10 @@ fn fock2e_artifact_matches_serial_engine() {
     let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
     let store = ShellPairStore::build(&basis);
     let screen = SchwarzScreen::build_with_store(&basis, &store, 0.0);
+    let pairs = SortedPairList::build(&screen, &store);
     let mut d = Matrix::identity(basis.n_bf);
     d.scale(0.37);
-    let ctx = FockContext::new(&basis, &store, &screen, &d);
+    let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
     let want = SerialFock::new().build_2e(&ctx);
     let rt = Runtime::cpu(Runtime::default_dir()).unwrap();
     let mut xla = XlaFockBuilder::new_with_store(rt, &basis, &store).unwrap();
