@@ -4,9 +4,11 @@
 //!
 //! Run: cargo bench --bench table2_memory
 
+use khf::basis::{BasisName, BasisSet};
 use khf::chem::graphene::PaperSystem;
 use khf::coordinator::report;
 use khf::hf::memmodel::{self, EngineKind};
+use khf::integrals::{ShellPairStore, SortedPairList};
 
 fn gb(b: f64) -> String {
     format!("{:.2}", b / 1e9)
@@ -51,6 +53,57 @@ fn main() {
             format!("{}", paper[k].3),
             gb(memmodel::exact_bytes(EngineKind::SharedFock, n, 15, 4, 64)),
             gb(memmodel::eq3c_shared(n, 4)),
+        ]);
+    }
+    print!("{}", report::table(&rows));
+
+    println!("\n== Shell-pair store: replicated vs sharded (MPI-only, 256 ranks/node) ==");
+    println!("   sharded gate figures: max shard at 1.5x the even split, shared ket");
+    println!("   prefix window at 0.3x one copy (held once per node)\n");
+    let mut rows = vec![vec![
+        "system".into(),
+        "store/copy".into(),
+        "replicated/node".into(),
+        "sharded/node".into(),
+        "total repl.".into(),
+        "total sharded".into(),
+        "feasible (repl/shard)".into(),
+    ]];
+    for sys in PaperSystem::ALL {
+        let n = sys.n_bf();
+        let basis = BasisSet::assemble(&sys.build(), BasisName::SixThirtyOneGd)
+            .expect("paper system basis");
+        let sb = ShellPairStore::estimate_bytes(&basis) as f64;
+        let pl = SortedPairList::estimate_bytes_for(ShellPairStore::estimate_pair_count(
+            &basis,
+        )) as f64;
+        let repl_store = memmodel::shared_scf_bytes_per_node(sb, pl, 256);
+        let shard_store =
+            memmodel::sharded_scf_bytes_per_node(sb / 256.0 * 1.5, 0.3 * sb, pl, 256);
+        let total_repl =
+            memmodel::exact_bytes_with_store(EngineKind::MpiOnly, n, 15, 256, 1, sb, pl);
+        let total_shard = memmodel::exact_bytes_with_sharded_store(
+            EngineKind::MpiOnly,
+            n,
+            15,
+            256,
+            1,
+            sb / 256.0 * 1.5,
+            0.3 * sb,
+            pl,
+        );
+        rows.push(vec![
+            sys.label().into(),
+            gb(sb),
+            gb(repl_store),
+            gb(shard_store),
+            gb(total_repl),
+            gb(total_shard),
+            format!(
+                "{}/{}",
+                memmodel::feasible(total_repl, false),
+                memmodel::feasible(total_shard, false)
+            ),
         ]);
     }
     print!("{}", report::table(&rows));

@@ -54,6 +54,11 @@ pub struct Machine {
     pub sync: SyncParams,
     /// Gate footprints against MCDRAM only (single-node studies) or DDR4.
     pub mcdram_only: bool,
+    /// Shard the shell-pair store across virtual ranks: the memory gate
+    /// charges each rank its private bra shard plus one node-shared ket
+    /// prefix window ([`SystemStats::shard_model`]) instead of one full
+    /// store copy per rank.
+    pub shard_store: bool,
 }
 
 impl Machine {
@@ -69,6 +74,7 @@ impl Machine {
             net: NetParams::default(),
             sync: SyncParams::default(),
             mcdram_only: false,
+            shard_store: false,
         }
     }
 
@@ -116,7 +122,11 @@ pub struct SimResult {
     pub breakdown: Breakdown,
     /// Effective ranks/node after the memory gate (MPI-only downsizes).
     pub ranks_per_node_used: usize,
+    /// Total per-node footprint (matrix working set + store/list,
+    /// sharded or replicated per `Machine::shard_store`).
     pub bytes_per_node: f64,
+    /// The store + pair-list share of `bytes_per_node`.
+    pub store_bytes_per_node: f64,
     pub feasible: bool,
     /// Busy-time imbalance factor max/mean across ranks.
     pub rank_imbalance: f64,
@@ -163,24 +173,57 @@ pub fn simulate(
 ) -> SimResult {
     let mut m = machine.clone();
 
+    // Store + pair-list share of the per-node footprint: replicated per
+    // rank by default, or (with `shard_store`) one private bra shard
+    // per rank plus a node-shared hot ket prefix window. The Q-sorted
+    // shard order is built once; the memory gate's halving loop below
+    // only re-derives the cheap per-rank-count partition.
+    let pairlist_bytes = crate::integrals::SortedPairList::estimate_bytes_for(
+        stats.pairs.len(),
+    ) as f64;
+    let shard_order = m.shard_store.then(|| stats.shard_order());
+    let store_per_node = |nodes: usize, ranks_per_node: usize| -> f64 {
+        match &shard_order {
+            Some(order) => {
+                let model = order.model((nodes * ranks_per_node).max(1));
+                memmodel::sharded_scf_bytes_per_node(
+                    model.max_shard_bytes,
+                    model.prefix_bytes,
+                    pairlist_bytes,
+                    ranks_per_node,
+                )
+            }
+            None => memmodel::shared_scf_bytes_per_node(
+                stats.store_bytes_total,
+                pairlist_bytes,
+                ranks_per_node,
+            ),
+        }
+    };
+
     // Memory gate. The MPI-only engine downsizes ranks/node (halving,
-    // as GAMESS users do) until the replicated footprint fits.
+    // as GAMESS users do) until the per-rank footprint fits — with the
+    // sharded store, the per-rank store share shrinks with the rank
+    // count, which is what keeps high-rank MPI-only configurations
+    // feasible where the replicated store forced a downsize.
     let cap = if m.mcdram_only { memmodel::MCDRAM_BYTES } else { memmodel::NODE_BYTES };
     if engine == EngineKind::MpiOnly {
         while m.ranks_per_node > 1
             && memmodel::exact_bytes(engine, stats.n_bf, stats.max_shell_bf, m.ranks_per_node, 1)
+                + store_per_node(m.nodes, m.ranks_per_node)
                 > cap
         {
             m.ranks_per_node /= 2;
         }
     }
+    let store_bytes_per_node = store_per_node(m.nodes, m.ranks_per_node);
     let bytes_per_node = memmodel::exact_bytes(
         engine,
         stats.n_bf,
         stats.max_shell_bf,
         m.ranks_per_node,
         m.threads_per_rank,
-    );
+    ) + store_bytes_per_node;
     let feasible = bytes_per_node <= cap;
 
     let shared_traffic = engine == EngineKind::SharedFock;
@@ -318,6 +361,7 @@ pub fn simulate(
         breakdown: bd,
         ranks_per_node_used: m.ranks_per_node,
         bytes_per_node,
+        store_bytes_per_node,
         feasible,
         rank_imbalance: if mean_busy > 0.0 { max_busy / mean_busy } else { 1.0 },
     }
@@ -409,6 +453,36 @@ mod tests {
             shf.fock_seconds,
             mpi.fock_seconds
         );
+    }
+
+    #[test]
+    fn sharded_store_shrinks_mpi_footprint() {
+        // With 256 single-thread ranks the replicated store is charged
+        // 256x; sharding drops the store share of the footprint and
+        // never *raises* the gated rank count.
+        let stats = small_stats();
+        let cost = CostModel::fallback_631gd();
+        let mut repl = Machine::theta_mpi(1);
+        repl.mcdram_only = true;
+        let mut shard = repl.clone();
+        shard.shard_store = true;
+        let r_repl = simulate(EngineKind::MpiOnly, &stats, &repl, &cost);
+        let r_shard = simulate(EngineKind::MpiOnly, &stats, &shard, &cost);
+        assert!(
+            r_shard.store_bytes_per_node < r_repl.store_bytes_per_node,
+            "sharded {} !< replicated {}",
+            r_shard.store_bytes_per_node,
+            r_repl.store_bytes_per_node
+        );
+        assert!(r_shard.ranks_per_node_used >= r_repl.ranks_per_node_used);
+        assert!(r_shard.feasible);
+        // Hybrid engines share the store per rank already; sharding
+        // still must not increase their footprint.
+        let mut hyb = Machine::theta_hybrid(1);
+        hyb.shard_store = true;
+        let h_shard = simulate(EngineKind::SharedFock, &stats, &hyb, &cost);
+        let h_repl = simulate(EngineKind::SharedFock, &stats, &Machine::theta_hybrid(1), &cost);
+        assert!(h_shard.bytes_per_node <= h_repl.bytes_per_node);
     }
 
     #[test]

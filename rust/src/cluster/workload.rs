@@ -31,6 +31,10 @@ pub struct PairTask {
     pub cost_ns: f64,
     /// Surviving quartets in this task.
     pub n_quartets: u64,
+    /// Estimated Hermite-table bytes the shell-pair store would hold
+    /// for this pair ([`ShellPairStore::estimate_pair_bytes`]) — the
+    /// unit the sharded-store model partitions.
+    pub store_bytes: f64,
 }
 
 /// System-level workload statistics.
@@ -54,6 +58,9 @@ pub struct SystemStats {
     pub max_quartet_ns: f64,
     /// Screening threshold used.
     pub tau: f64,
+    /// Estimated shell-pair store footprint of one replicated copy
+    /// (surviving pairs' table bytes + index overhead), bytes.
+    pub store_bytes_total: f64,
 }
 
 /// Fenwick (binary indexed) tree over Q-ranks with f64 payloads.
@@ -104,12 +111,17 @@ pub fn build_stats(
 
     // Collect surviving pairs in ordinal order.
     let mut pairs: Vec<PairTask> = Vec::new();
+    let mut store_bytes_total = (std::mem::size_of::<crate::integrals::ShellPairStore>()
+        + (nsh * (nsh + 1) / 2) * std::mem::size_of::<u32>()) as f64;
     for i in 0..nsh {
         for j in 0..=i {
             let q = screen.q(i, j);
             if q * screen.q_max <= screen.tau {
                 continue;
             }
+            let store_bytes =
+                crate::integrals::ShellPairStore::estimate_pair_bytes(basis, i, j) as f64;
+            store_bytes_total += store_bytes;
             pairs.push(PairTask {
                 ordinal: pair_index(i, j),
                 i: i as u32,
@@ -118,6 +130,7 @@ pub fn build_stats(
                 cls: pair_class(shell_class[i] as usize, shell_class[j] as usize) as u16,
                 cost_ns: 0.0,
                 n_quartets: 0,
+                store_bytes,
             });
         }
     }
@@ -174,6 +187,7 @@ pub fn build_stats(
         total_quartets,
         max_quartet_ns: cost.max_quartet_ns(),
         tau: screen.tau,
+        store_bytes_total,
     }
 }
 
@@ -193,7 +207,94 @@ fn partition_point_desc(desc: &[f64], thresh: f64) -> usize {
     lo
 }
 
+/// Modeled sharded-store footprint (the simulator-side mirror of
+/// [`StoreSharding::report`](crate::integrals::StoreSharding::report),
+/// computed from the workload's surviving pairs without building any
+/// Hermite tables). Same partition rule: contiguous Q-rank ranges
+/// balanced by table bytes; each shard's resident ket prefix sized by
+/// the early-exit bound at weight 1.0 (the full-density walk that
+/// dominates SCF-lifetime residency); the reported prefix is the union
+/// window (prefixes nest at rank 0), held once per node.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardModel {
+    pub n_shards: usize,
+    pub max_shard_bytes: f64,
+    pub mean_shard_bytes: f64,
+    pub prefix_bytes: f64,
+}
+
+/// The reusable, shard-count-independent core of [`ShardModel`]: the
+/// workload's surviving pairs in Q-descending (SortedPairList rank)
+/// order with per-rank store bytes and weight-1.0 early-exit limits.
+/// Built once per simulation (O(m log m)); [`ShardOrder::model`] is a
+/// cheap O(m) pass per candidate rank count, so the memory gate's
+/// halving loop doesn't re-sort.
+#[derive(Debug, Clone)]
+pub struct ShardOrder {
+    /// Estimated table bytes per Q-rank.
+    bytes: Vec<u64>,
+    /// kl_limit at weight 1.0 per Q-rank (#kets with q_r·q_kl > τ,
+    /// capped by the triangular constraint rank+1).
+    kl_limit: Vec<usize>,
+}
+
+impl ShardOrder {
+    /// Model a sharded store over `n_shards` virtual ranks — the same
+    /// partition rule as `StoreSharding::build`
+    /// ([`balanced_bounds`](crate::integrals::pairlist::balanced_bounds)).
+    pub fn model(&self, n_shards: usize) -> ShardModel {
+        let bounds = crate::integrals::pairlist::balanced_bounds(&self.bytes, n_shards);
+        let mut max_shard = 0u64;
+        let mut union_prefix = 0usize;
+        for s in 0..n_shards {
+            let (lo, hi) = (bounds[s], bounds[s + 1]);
+            let shard_bytes: u64 = self.bytes[lo..hi].iter().sum();
+            max_shard = max_shard.max(shard_bytes);
+            for rank in lo..hi {
+                union_prefix = union_prefix.max(self.kl_limit[rank].min(lo));
+            }
+        }
+        let total: u64 = self.bytes.iter().sum();
+        let prefix_bytes: u64 = self.bytes[..union_prefix].iter().sum();
+        ShardModel {
+            n_shards,
+            max_shard_bytes: max_shard as f64,
+            mean_shard_bytes: total as f64 / n_shards as f64,
+            prefix_bytes: prefix_bytes as f64,
+        }
+    }
+}
+
 impl SystemStats {
+    /// Build the Q-descending shard order once (the expensive half of
+    /// [`SystemStats::shard_model`]).
+    pub fn shard_order(&self) -> ShardOrder {
+        let m = self.pairs.len();
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| {
+            self.pairs[b]
+                .q
+                .partial_cmp(&self.pairs[a].q)
+                .expect("Schwarz bounds are finite")
+                .then_with(|| self.pairs[a].ordinal.cmp(&self.pairs[b].ordinal))
+        });
+        let bytes: Vec<u64> =
+            order.iter().map(|&i| self.pairs[i].store_bytes as u64).collect();
+        let q_desc: Vec<f64> = order.iter().map(|&i| self.pairs[i].q).collect();
+        let kl_limit: Vec<usize> = (0..m)
+            .map(|rank| partition_point_desc(&q_desc[..=rank], self.tau / q_desc[rank]))
+            .collect();
+        ShardOrder { bytes, kl_limit }
+    }
+
+    /// Model a sharded store over this workload's surviving pairs
+    /// (convenience one-shot; sweeps over rank counts should build
+    /// [`SystemStats::shard_order`] once and call
+    /// [`ShardOrder::model`] per count).
+    pub fn shard_model(&self, n_shards: usize) -> ShardModel {
+        self.shard_order().model(n_shards)
+    }
+
     /// Per-i aggregate costs for Algorithm 2 (private Fock): W_i over
     /// the i-task's whole (j,k,l) space, host ns. Indexed by shell i.
     pub fn per_i_cost(&self) -> Vec<f64> {
@@ -284,6 +385,61 @@ mod tests {
         let stats = build_stats("c10", &basis, &screen, &cost);
         let per_i: f64 = stats.per_i_cost().iter().sum();
         assert!((per_i - stats.total_cost_ns).abs() / stats.total_cost_ns < 1e-12);
+    }
+
+    #[test]
+    fn store_bytes_track_real_store() {
+        // The workload's store estimate must bound/track the built
+        // store's real footprint (surviving-pair sets differ slightly:
+        // the workload keeps Schwarz survivors, the store keeps
+        // distance survivors — on a compact system both are all pairs).
+        let cost = CostModel::fallback_631gd();
+        let mol = graphene::monolayer(8, "c8");
+        let basis = BasisSet::assemble(&mol, BasisName::SixThirtyOneGd).unwrap();
+        let screen = SchwarzScreen::build(&basis, 1e-10);
+        let stats = build_stats("c8", &basis, &screen, &cost);
+        assert!(stats.store_bytes_total > 0.0);
+        let real = crate::integrals::ShellPairStore::build(&basis).bytes() as f64;
+        let ratio = stats.store_bytes_total / real;
+        assert!(
+            (0.5..=1.5).contains(&ratio),
+            "estimated {} vs built {} (ratio {ratio})",
+            stats.store_bytes_total,
+            real
+        );
+    }
+
+    #[test]
+    fn shard_model_balances_and_bounds() {
+        let cost = CostModel::fallback_631gd();
+        let mol = graphene::bilayer(12, "c24");
+        let basis = BasisSet::assemble(&mol, BasisName::SixThirtyOneGd).unwrap();
+        let screen = SchwarzScreen::build(&basis, 1e-10);
+        let stats = build_stats("c24", &basis, &screen, &cost);
+        let table_bytes: f64 = stats.pairs.iter().map(|p| p.store_bytes).sum();
+        for n_shards in [1usize, 4, 16] {
+            let m = stats.shard_model(n_shards);
+            assert_eq!(m.n_shards, n_shards);
+            assert!(m.mean_shard_bytes <= m.max_shard_bytes + 1e-9);
+            // Byte-balanced contiguous split: the max shard holds the
+            // even share plus at most one pair of slack.
+            let max_pair = stats
+                .pairs
+                .iter()
+                .map(|p| p.store_bytes)
+                .fold(0.0, f64::max);
+            assert!(
+                m.max_shard_bytes <= table_bytes / n_shards as f64 + max_pair + 1e-9,
+                "{n_shards} shards: max {} vs even {}",
+                m.max_shard_bytes,
+                table_bytes / n_shards as f64
+            );
+            // The shared prefix window is part of one replicated copy.
+            assert!(m.prefix_bytes <= table_bytes);
+            if n_shards == 1 {
+                assert!(m.prefix_bytes == 0.0, "single shard needs no shared prefix");
+            }
+        }
     }
 
     #[test]

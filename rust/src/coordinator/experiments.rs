@@ -40,7 +40,7 @@ fn save_stats(path: &str, s: &SystemStats) -> anyhow::Result<()> {
     let mut buf: Vec<u8> = Vec::with_capacity(64 + s.pairs.len() * 40);
     let w64 = |b: &mut Vec<u8>, v: u64| b.extend_from_slice(&v.to_le_bytes());
     let wf = |b: &mut Vec<u8>, v: f64| b.extend_from_slice(&v.to_le_bytes());
-    buf.extend_from_slice(b"KHFSTAT2");
+    buf.extend_from_slice(b"KHFSTAT3");
     w64(&mut buf, s.label.len() as u64);
     buf.extend_from_slice(s.label.as_bytes());
     w64(&mut buf, s.n_shells as u64);
@@ -51,6 +51,7 @@ fn save_stats(path: &str, s: &SystemStats) -> anyhow::Result<()> {
     wf(&mut buf, s.total_cost_ns);
     wf(&mut buf, s.max_quartet_ns);
     wf(&mut buf, s.tau);
+    wf(&mut buf, s.store_bytes_total);
     w64(&mut buf, s.shell_class.len() as u64);
     for &c in &s.shell_class {
         buf.extend_from_slice(&c.to_le_bytes());
@@ -64,6 +65,7 @@ fn save_stats(path: &str, s: &SystemStats) -> anyhow::Result<()> {
         buf.extend_from_slice(&p.cls.to_le_bytes());
         wf(&mut buf, p.cost_ns);
         w64(&mut buf, p.n_quartets);
+        wf(&mut buf, p.store_bytes);
     }
     let mut f = std::fs::File::create(path)?;
     f.write_all(&buf)?;
@@ -85,7 +87,7 @@ fn load_stats(path: &str) -> anyhow::Result<SystemStats> {
     let rf = |off: &mut usize| -> anyhow::Result<f64> {
         Ok(f64::from_le_bytes(take(off, 8)?.try_into().unwrap()))
     };
-    anyhow::ensure!(take(&mut off, 8)? == b"KHFSTAT2", "bad stats magic");
+    anyhow::ensure!(take(&mut off, 8)? == b"KHFSTAT3", "bad stats magic");
     let label_len = r64(&mut off)? as usize;
     let label = String::from_utf8(take(&mut off, label_len)?.to_vec())?;
     let n_shells = r64(&mut off)? as usize;
@@ -96,6 +98,7 @@ fn load_stats(path: &str) -> anyhow::Result<SystemStats> {
     let total_cost_ns = rf(&mut off)?;
     let max_quartet_ns = rf(&mut off)?;
     let tau = rf(&mut off)?;
+    let store_bytes_total = rf(&mut off)?;
     let ncls = r64(&mut off)? as usize;
     let mut shell_class = Vec::with_capacity(ncls);
     for _ in 0..ncls {
@@ -111,6 +114,7 @@ fn load_stats(path: &str) -> anyhow::Result<SystemStats> {
         let cls = u16::from_le_bytes(take(&mut off, 2)?.try_into().unwrap());
         let cost_ns = rf(&mut off)?;
         let n_quartets = r64(&mut off)?;
+        let store_bytes = rf(&mut off)?;
         pairs.push(crate::cluster::workload::PairTask {
             ordinal,
             i,
@@ -119,6 +123,7 @@ fn load_stats(path: &str) -> anyhow::Result<SystemStats> {
             cls,
             cost_ns,
             n_quartets,
+            store_bytes,
         });
     }
     Ok(SystemStats {
@@ -133,6 +138,7 @@ fn load_stats(path: &str) -> anyhow::Result<SystemStats> {
         total_quartets,
         max_quartet_ns,
         tau,
+        store_bytes_total,
     })
 }
 

@@ -34,10 +34,28 @@ impl DlbCounter {
     /// live task — dead bra pairs never enter the counter's range and
     /// never cost a claim (or, in the shared-Fock engine, a barrier
     /// round).
+    ///
+    /// Exhausted claims saturate: a poll past the end leaves the counter
+    /// at `n_tasks` instead of blindly incrementing, so `claimed()`
+    /// reports exactly the tasks handed out no matter how many idle
+    /// polls follow (work-stealing ranks poll drained shards repeatedly,
+    /// and a fetch-add here would both over-report and creep toward
+    /// overflow across a long simulated run).
     #[inline]
     pub fn next_task(&self, n_tasks: usize) -> Option<usize> {
-        let t = self.next.fetch_add(1, Ordering::Relaxed);
-        (t < n_tasks).then_some(t)
+        let mut cur = self.next.load(Ordering::Relaxed);
+        while cur < n_tasks {
+            match self.next.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Some(cur),
+                Err(now) => cur = now,
+            }
+        }
+        None
     }
 
     /// Reset for the next SCF iteration (`ddi_dlbreset`).
@@ -48,6 +66,75 @@ impl DlbCounter {
     /// Tasks handed out so far.
     pub fn claimed(&self) -> usize {
         self.next.load(Ordering::SeqCst)
+    }
+}
+
+/// Per-shard DLB with work-stealing fallback — the task hand-out for a
+/// sharded shell-pair store
+/// ([`StoreSharding`](crate::integrals::StoreSharding)).
+///
+/// Each virtual rank first drains its *home* shard's counter (its bra
+/// tasks are the pairs whose Hermite tables it owns), then falls back to
+/// stealing from neighbor shards cyclically. Stealing preserves the
+/// Algorithms 1–3 load-balance invariant — no rank idles while any shard
+/// still has work — at the modeled cost of fetching the victim shard's
+/// pair tables remotely (counted by
+/// [`StoreShard::remote_fetches`](crate::integrals::StoreShard)).
+///
+/// Every task is claimed exactly once regardless of who executes it:
+/// the per-shard task lists partition the walk's tasks, and each list
+/// is drained through its own saturating [`DlbCounter`].
+#[derive(Debug)]
+pub struct ShardedDlb {
+    /// Per-shard bra tasks (surviving-pair ranks in the walk's
+    /// (i, j)-grouped order, filtered by shard ownership).
+    tasks: Vec<Vec<u32>>,
+    counters: Vec<DlbCounter>,
+}
+
+impl ShardedDlb {
+    /// Build from per-shard task lists (one entry per shard; see
+    /// [`StoreSharding::partition_tasks`](crate::integrals::StoreSharding::partition_tasks)).
+    pub fn new(tasks: Vec<Vec<u32>>) -> ShardedDlb {
+        assert!(!tasks.is_empty());
+        let counters = tasks.iter().map(|_| DlbCounter::new()).collect();
+        ShardedDlb { tasks, counters }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Total tasks across all shards.
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.iter().map(|t| t.len()).sum()
+    }
+
+    /// Claim the next bra task for the rank whose home shard is `home`:
+    /// the home shard first, then neighbor shards cyclically once it
+    /// drains. Returns the claimed pair rank and the shard it came from
+    /// (`!= home` ⟹ stolen), or `None` when every shard is exhausted.
+    pub fn claim(&self, home: usize) -> Option<(usize, usize)> {
+        let n = self.tasks.len();
+        debug_assert!(home < n);
+        for k in 0..n {
+            let s = (home + k) % n;
+            if let Some(t) = self.counters[s].next_task(self.tasks[s].len()) {
+                return Some((self.tasks[s][t] as usize, s));
+            }
+        }
+        None
+    }
+
+    /// Tasks handed out from each shard's list so far. With the
+    /// saturating counter these are exact (≤ each list's length) even
+    /// after arbitrarily many exhausted stealing polls.
+    pub fn claimed_per_shard(&self) -> Vec<usize> {
+        self.tasks
+            .iter()
+            .zip(&self.counters)
+            .map(|(ts, c)| c.claimed().min(ts.len()))
+            .collect()
     }
 }
 
@@ -72,9 +159,79 @@ mod tests {
         assert_eq!(c.next_task(2), Some(1));
         assert_eq!(c.next_task(2), None);
         assert_eq!(c.next_task(2), None, "exhaustion is sticky");
+        // Saturation: repeated exhausted polls must not drift claimed()
+        // past the task count (the pre-fix fetch-add over-reported by
+        // one per poll and crept toward overflow in long runs).
+        for _ in 0..100 {
+            assert_eq!(c.next_task(2), None);
+        }
+        assert_eq!(c.claimed(), 2, "exhausted polls must not inflate claimed()");
         c.reset();
         assert_eq!(c.next_task(1), Some(0));
         assert_eq!(c.next_task(0), None);
+        assert_eq!(c.claimed(), 1);
+    }
+
+    #[test]
+    fn concurrent_bounded_claims_saturate() {
+        // Hammer an 80-task counter from 8 threads, 500 polls each: the
+        // Some() set must be exactly 0..80 and the counter must end at
+        // exactly 80 despite thousands of exhausted polls.
+        let c = Arc::new(DlbCounter::new());
+        let n_tasks = 80usize;
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let c = Arc::clone(&c);
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                for _ in 0..500 {
+                    if let Some(t) = c.next_task(n_tasks) {
+                        got.push(t);
+                    }
+                }
+                got
+            }));
+        }
+        let mut all: Vec<usize> =
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        let want: Vec<usize> = (0..n_tasks).collect();
+        assert_eq!(all, want);
+        assert_eq!(c.claimed(), n_tasks);
+    }
+
+    #[test]
+    fn sharded_claims_cover_all_tasks_once() {
+        // 3 shards of different sizes (one empty): every task claimed
+        // exactly once, empty/drained shards served by stealing.
+        let dlb = ShardedDlb::new(vec![vec![10, 11, 12], vec![], vec![20, 21]]);
+        assert_eq!(dlb.n_shards(), 3);
+        assert_eq!(dlb.n_tasks(), 5);
+        let mut got = Vec::new();
+        // Rank 1's home shard is empty: its first claim is a steal.
+        let (r, from) = dlb.claim(1).unwrap();
+        assert_ne!(from, 1);
+        got.push(r);
+        while let Some((r, _)) = dlb.claim(0) {
+            got.push(r);
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![10, 11, 12, 20, 21]);
+        assert_eq!(dlb.claim(0), None);
+        assert_eq!(dlb.claim(2), None, "exhaustion is global");
+        assert_eq!(dlb.claimed_per_shard(), vec![3, 0, 2]);
+    }
+
+    #[test]
+    fn sharded_home_shard_drains_first() {
+        let dlb = ShardedDlb::new(vec![vec![0, 1], vec![5, 6]]);
+        let (r, from) = dlb.claim(1).unwrap();
+        assert_eq!((r, from), (5, 1), "home shard first");
+        let (r, from) = dlb.claim(1).unwrap();
+        assert_eq!((r, from), (6, 1));
+        let (r, from) = dlb.claim(1).unwrap();
+        assert_eq!(from, 0, "steal only after home drains");
+        assert_eq!(r, 0);
     }
 
     #[test]

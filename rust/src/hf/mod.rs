@@ -28,8 +28,11 @@
 //! [`quartets`] owns the canonical loop structure and the sorted-walk
 //! enumerator, [`scatter`] the six-element update of eqs. (2a)–(2f),
 //! [`dlb`] the shared-counter dynamic load balancer (`ddi_dlbnext`)
-//! handing out walk tasks, and [`memmodel`] the footprint model of
-//! eqs. (3a)–(3c) extended with the pair store and list.
+//! handing out walk tasks — plus its sharded, work-stealing variant
+//! ([`dlb::ShardedDlb`]) used when the store is partitioned across
+//! virtual ranks ([`crate::integrals::StoreSharding`]) — and
+//! [`memmodel`] the footprint model of eqs. (3a)–(3c) extended with
+//! the pair store and list, replicated or sharded.
 
 pub mod dlb;
 pub mod memmodel;
@@ -42,7 +45,9 @@ pub mod shared_fock;
 pub mod threadpool;
 
 use crate::basis::BasisSet;
-use crate::integrals::{PairDensityMax, PairWalk, SchwarzScreen, ShellPairStore, SortedPairList};
+use crate::integrals::{
+    PairDensityMax, PairWalk, SchwarzScreen, ShellPairStore, SortedPairList, StoreSharding,
+};
 use crate::linalg::Matrix;
 
 /// Everything a Fock build consumes, assembled once per build by the
@@ -66,6 +71,12 @@ pub struct FockContext<'a> {
     /// folded into the Schwarz bound as a *loop bound* — engines
     /// enumerate `walk` tasks and never test quartets individually.
     pub walk: PairWalk<'a>,
+    /// When set, the store is sharded across virtual ranks: the
+    /// parallel engines claim bra tasks from their own shard's range
+    /// (stealing from neighbors once it drains) and fetch pair tables
+    /// through their shard's resident view. `None` (the default)
+    /// preserves the replicated-store behavior bit for bit.
+    pub sharding: Option<&'a StoreSharding<'a>>,
 }
 
 impl<'a> FockContext<'a> {
@@ -92,7 +103,27 @@ impl<'a> FockContext<'a> {
         );
         let dmax = PairDensityMax::build(basis, d);
         let walk = pairs.weighted(&dmax);
-        FockContext { basis, store, screen, pairs, d, dmax, walk }
+        FockContext { basis, store, screen, pairs, d, dmax, walk, sharding: None }
+    }
+
+    /// Like [`FockContext::new`] with a sharded store: the parallel
+    /// engines will claim bra tasks shard-locally (work-stealing once a
+    /// shard drains) and fetch tables through the shard views.
+    pub fn with_sharding(
+        basis: &'a BasisSet,
+        store: &'a ShellPairStore,
+        screen: &'a SchwarzScreen,
+        pairs: &'a SortedPairList,
+        d: &'a Matrix,
+        sharding: &'a StoreSharding<'a>,
+    ) -> FockContext<'a> {
+        assert!(
+            std::ptr::eq(sharding.list(), pairs),
+            "StoreSharding partitions a different SortedPairList"
+        );
+        let mut ctx = FockContext::new(basis, store, screen, pairs, d);
+        ctx.sharding = Some(sharding);
+        ctx
     }
 
     /// Legacy per-quartet density-weighted screen (Häser–Ahlrichs block
@@ -135,42 +166,81 @@ pub trait FockBuilder {
     }
 }
 
+/// Per-build shard summary (present when the build ran against a
+/// sharded store). Fixed-width so [`BuildStats`] stays `Copy`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardBuildStats {
+    pub n_shards: usize,
+    /// Tasks executed by a rank other than the shard's home rank (the
+    /// work-stealing fallback that preserves Algorithms 1–3 balance
+    /// when a shard drains early).
+    pub tasks_stolen: u64,
+    /// Fewest / most bra tasks drawn from any one shard's list this
+    /// build — the raw imbalance the stealing had to cover.
+    pub min_shard_tasks: u64,
+    pub max_shard_tasks: u64,
+}
+
+impl ShardBuildStats {
+    /// Summarize a build's per-shard claim counts.
+    pub fn collect(claimed_per_shard: &[usize], tasks_stolen: u64) -> ShardBuildStats {
+        ShardBuildStats {
+            n_shards: claimed_per_shard.len(),
+            tasks_stolen,
+            min_shard_tasks: claimed_per_shard.iter().copied().min().unwrap_or(0) as u64,
+            max_shard_tasks: claimed_per_shard.iter().copied().max().unwrap_or(0) as u64,
+        }
+    }
+}
+
 /// Statistics returned by engines for reports and the simulator.
 ///
 /// With the sorted early-exit walk the engines never *test* quartets
-/// individually, so the skip counters are derived in bulk:
-/// `computed + screened` always equals the canonical quartet count
-/// ([`quartets::n_canonical`]), and `skipped_by_early_exit` isolates
-/// the listed-pair quartets the walk's loop bound never reached (the
-/// work the legacy enumerate-and-test scheme would have branched on
-/// one by one).
+/// individually, so the skip counters are derived in bulk from the
+/// quartet-space sizes. The three counters are **disjoint** and
+/// partition the canonical space:
+///
+/// ```text
+/// computed + screened + skipped_by_early_exit == n_canonical
+/// ```
+///
+/// ([`quartets::n_canonical`]). `quartets_screened` covers quartets
+/// with at least one *unlisted* pair (Schwarz-dead or table-less);
+/// `skipped_by_early_exit` the listed-pair quartets the walk's loop
+/// bound never reached. The identity holds for sharded builds too:
+/// the per-shard task lists partition the walk, so the shared ket
+/// prefix is never double-counted.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct BuildStats {
     /// Shell quartets visited (and computed) by the walk.
     pub quartets_computed: u64,
-    /// Canonical quartets not visited (all skip causes: unlisted pairs
-    /// plus the early exit).
+    /// Canonical quartets excluded because at least one pair is
+    /// unlisted (disjoint from the early-exit counter).
     pub quartets_screened: u64,
     /// Quartets of *listed* pairs the early-exit bound skipped —
     /// list-space quartets minus computed.
     pub skipped_by_early_exit: u64,
     /// Wall-clock seconds of the build.
     pub seconds: f64,
+    /// Shard summary when the build ran against a sharded store.
+    pub shard: Option<ShardBuildStats>,
 }
 
 impl BuildStats {
     /// Assemble the per-build counters from the visited count: the two
     /// skip counters follow in bulk from the quartet-space sizes. One
-    /// constructor so every engine's accounting stays identical.
+    /// constructor so every engine's accounting stays identical — and
+    /// the partition invariant above holds by construction.
     pub fn from_walk(computed: u64, ctx: &FockContext, seconds: f64) -> BuildStats {
         let total = quartets::n_canonical(ctx.basis.n_shells());
         let listed = ctx.pairs.n_list_quartets();
         debug_assert!(computed <= listed && listed <= total);
         BuildStats {
             quartets_computed: computed,
-            quartets_screened: total - computed,
+            quartets_screened: total - listed,
             skipped_by_early_exit: listed - computed,
             seconds,
+            shard: None,
         }
     }
 }

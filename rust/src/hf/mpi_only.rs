@@ -18,10 +18,10 @@
 use crate::integrals::EriEngine;
 use crate::linalg::Matrix;
 
-use super::dlb::DlbCounter;
+use super::dlb::{DlbCounter, ShardedDlb};
 use super::scatter::{fold_symmetric, scatter_block};
 use super::threadpool::parallel_region;
-use super::{BuildStats, FockBuilder, FockContext};
+use super::{BuildStats, FockBuilder, FockContext, ShardBuildStats};
 
 /// MPI-only engine with `n_ranks` virtual ranks.
 pub struct MpiOnlyFock {
@@ -44,43 +44,94 @@ impl FockBuilder for MpiOnlyFock {
         let (walk, pairs) = (&ctx.walk, ctx.pairs);
         let n_tasks = walk.n_tasks();
         let dlb = DlbCounter::new();
+        let sharding = ctx.sharding;
+        if let Some(sh) = sharding {
+            assert_eq!(
+                self.n_ranks,
+                sh.n_shards(),
+                "sharded store has {} shards but engine has {} ranks",
+                sh.n_shards(),
+                self.n_ranks
+            );
+        }
+        // Sharded hand-out: each rank drains its own shard's bra tasks,
+        // then steals from neighbors (Algorithms 1–3 balance preserved).
+        let sdlb = sharding.map(|sh| ShardedDlb::new(sh.partition_tasks(walk)));
 
         // Each virtual rank: replicated G, DLB over surviving bra
         // ranks, early-exit ket prefix per task.
-        let per_rank: Vec<(Matrix, u64)> = parallel_region(self.n_ranks, |_rank| {
+        let per_rank: Vec<(Matrix, u64, u64)> = parallel_region(self.n_ranks, |rank| {
             let mut g = Matrix::zeros(n, n);
             let mut eng = EriEngine::new();
             let mut block = vec![0.0; 6 * 6 * 6 * 6];
             let mut computed = 0u64;
-            while let Some(t) = dlb.next_task(n_tasks) {
-                let rij = walk.task(t);
+            let mut stolen = 0u64;
+            loop {
+                let rij = match &sdlb {
+                    Some(sd) => match sd.claim(rank) {
+                        Some((rij, from)) => {
+                            if from != rank {
+                                stolen += 1;
+                            }
+                            rij
+                        }
+                        None => break,
+                    },
+                    None => match dlb.next_task(n_tasks) {
+                        Some(t) => walk.task(t),
+                        None => break,
+                    },
+                };
                 let bra = pairs.entry(rij);
                 let (i, j) = (bra.i as usize, bra.j as usize);
                 let limit = walk.kl_limit(rij);
+                // Sharded: fetch through the rank's resident shard
+                // view. The bra is fetched once per task (a stolen
+                // task pays one remote get, not one per ket); spilled
+                // kets count per lookup below.
+                let shard = sharding.map(|sh| sh.shard(rank));
+                let bra_view = shard.map(|s| s.view_by_slot(bra.slot, i < j));
                 for rkl in 0..limit {
                     let ket = pairs.entry(rkl);
                     let (k, l) = (ket.i as usize, ket.j as usize);
                     computed += 1;
-                    eng.shell_quartet_slots(
-                        basis, ctx.store, i, j, k, l, bra.slot, ket.slot, &mut block,
-                    );
+                    match (shard, bra_view) {
+                        (Some(shard), Some(bv)) => eng.shell_quartet_with_views(
+                            basis,
+                            i,
+                            j,
+                            k,
+                            l,
+                            bv,
+                            shard.view_by_slot(ket.slot, k < l),
+                            &mut block,
+                        ),
+                        _ => eng.shell_quartet_slots(
+                            basis, ctx.store, i, j, k, l, bra.slot, ket.slot, &mut block,
+                        ),
+                    }
                     scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| {
                         g.add(a, b, v)
                     });
                 }
             }
-            (g, computed)
+            (g, computed, stolen)
         });
 
         // ddi_gsumf: sum the rank replicas.
         let mut total = Matrix::zeros(n, n);
         let mut computed = 0;
-        for (g, c) in per_rank {
+        let mut stolen = 0;
+        for (g, c, st) in per_rank {
             total.add_assign(&g);
             computed += c;
+            stolen += st;
         }
         fold_symmetric(&mut total);
         self.stats = BuildStats::from_walk(computed, ctx, t0.elapsed().as_secs_f64());
+        if let Some(sd) = &sdlb {
+            self.stats.shard = Some(ShardBuildStats::collect(&sd.claimed_per_shard(), stolen));
+        }
         total
     }
 

@@ -17,16 +17,16 @@
 //!   `reduction(+:Fock)` — reduced thread-wise, then rank-wise
 //!   (`ddi_gsumf`).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Barrier;
 
 use crate::integrals::EriEngine;
 use crate::linalg::Matrix;
 
-use super::dlb::DlbCounter;
+use super::dlb::{DlbCounter, ShardedDlb};
 use super::scatter::{fold_symmetric, scatter_block};
 use super::threadpool::parallel_region;
-use super::{BuildStats, FockBuilder, FockContext};
+use super::{BuildStats, FockBuilder, FockContext, ShardBuildStats};
 
 /// Private-Fock hybrid engine: `n_ranks` virtual ranks × `n_threads`
 /// OpenMP-style threads per rank.
@@ -51,12 +51,24 @@ impl FockBuilder for PrivateFock {
         let (walk, pairs) = (&ctx.walk, ctx.pairs);
         let n_tasks = walk.n_tasks();
         let dlb = DlbCounter::new(); // MPI-level DLB over bra tasks
+        let sharding = ctx.sharding;
+        if let Some(sh) = sharding {
+            assert_eq!(
+                self.n_ranks,
+                sh.n_shards(),
+                "sharded store has {} shards but engine has {} ranks",
+                sh.n_shards(),
+                self.n_ranks
+            );
+        }
+        let sdlb = sharding.map(|sh| ShardedDlb::new(sh.partition_tasks(walk)));
 
-        let per_rank: Vec<(Matrix, u64)> = parallel_region(self.n_ranks, |_rank| {
+        let per_rank: Vec<(Matrix, u64, u64)> = parallel_region(self.n_ranks, |rank| {
             let nt = self.n_threads;
             let rij_cur = AtomicUsize::new(usize::MAX);
             let limit_cur = AtomicUsize::new(0);
             let chunk = AtomicUsize::new(0);
+            let stolen = AtomicU64::new(0);
             let barrier = Barrier::new(nt);
 
             // !$omp parallel private(...) reduction(+:Fock)
@@ -68,11 +80,20 @@ impl FockBuilder for PrivateFock {
                 loop {
                     // !$omp master: fetch the next bra task; barriers on
                     // both sides. Every handed-out task has work by
-                    // construction of the walk.
+                    // construction of the walk. Sharded runs claim from
+                    // the rank's own shard first, stealing once drained.
                     if tid == 0 {
-                        match dlb.next_task(n_tasks) {
-                            Some(t) => {
-                                let rij = walk.task(t);
+                        let claim = match &sdlb {
+                            Some(sd) => sd.claim(rank).map(|(rij, from)| {
+                                if from != rank {
+                                    stolen.fetch_add(1, Ordering::Relaxed);
+                                }
+                                rij
+                            }),
+                            None => dlb.next_task(n_tasks).map(|t| walk.task(t)),
+                        };
+                        match claim {
+                            Some(rij) => {
                                 rij_cur.store(rij, Ordering::SeqCst);
                                 limit_cur.store(walk.kl_limit(rij), Ordering::SeqCst);
                             }
@@ -88,6 +109,11 @@ impl FockBuilder for PrivateFock {
                     let bra = pairs.entry(rij);
                     let (i, j) = (bra.i as usize, bra.j as usize);
                     let limit = limit_cur.load(Ordering::SeqCst);
+                    // Sharded: one bra fetch per thread per task (a
+                    // stolen task pays per-thread remote gets, not one
+                    // per ket); spilled kets count per lookup below.
+                    let shard = sharding.map(|sh| sh.shard(rank));
+                    let bra_view = shard.map(|s| s.view_by_slot(bra.slot, i < j));
                     // !$omp do schedule(dynamic,1) over the surviving
                     // ket prefix — the early exit is the loop bound.
                     loop {
@@ -98,9 +124,21 @@ impl FockBuilder for PrivateFock {
                         let ket = pairs.entry(rkl);
                         let (k, l) = (ket.i as usize, ket.j as usize);
                         computed += 1;
-                        eng.shell_quartet_slots(
-                            basis, ctx.store, i, j, k, l, bra.slot, ket.slot, &mut block,
-                        );
+                        match (shard, bra_view) {
+                            (Some(shard), Some(bv)) => eng.shell_quartet_with_views(
+                                basis,
+                                i,
+                                j,
+                                k,
+                                l,
+                                bv,
+                                shard.view_by_slot(ket.slot, k < l),
+                                &mut block,
+                            ),
+                            _ => eng.shell_quartet_slots(
+                                basis, ctx.store, i, j, k, l, bra.slot, ket.slot, &mut block,
+                            ),
+                        }
                         scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| {
                             g.add(a, b, v)
                         });
@@ -118,18 +156,23 @@ impl FockBuilder for PrivateFock {
                 g.add_assign(&tg);
                 computed += c;
             }
-            (g, computed)
+            (g, computed, stolen.load(Ordering::Relaxed))
         });
 
         // ddi_gsumf over ranks.
         let mut total = Matrix::zeros(n, n);
         let mut computed = 0;
-        for (g, c) in per_rank {
+        let mut stolen = 0;
+        for (g, c, st) in per_rank {
             total.add_assign(&g);
             computed += c;
+            stolen += st;
         }
         fold_symmetric(&mut total);
         self.stats = BuildStats::from_walk(computed, ctx, t0.elapsed().as_secs_f64());
+        if let Some(sd) = &sdlb {
+            self.stats.shard = Some(ShardBuildStats::collect(&sd.claimed_per_shard(), stolen));
+        }
         total
     }
 

@@ -24,16 +24,16 @@
 //! — no per-thread pair tables, which is what keeps the per-thread
 //! footprint at two column buffers.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Barrier;
 
 use crate::integrals::EriEngine;
 use crate::linalg::Matrix;
 
-use super::dlb::DlbCounter;
+use super::dlb::{DlbCounter, ShardedDlb};
 use super::scatter::{fold_symmetric, scatter_block};
 use super::threadpool::{parallel_region, ColumnBuffers, SharedMatrix};
-use super::{BuildStats, FockBuilder, FockContext};
+use super::{BuildStats, FockBuilder, FockContext, ShardBuildStats};
 
 /// Shared-Fock hybrid engine: `n_ranks` virtual ranks × `n_threads`
 /// threads per rank sharing one Fock accumulator.
@@ -69,8 +69,19 @@ impl FockBuilder for SharedFock {
         let n_tasks = walk.n_tasks();
         let dlb = DlbCounter::new();
         let width = basis.max_shell_bf;
+        let sharding = ctx.sharding;
+        if let Some(sh) = sharding {
+            assert_eq!(
+                self.n_ranks,
+                sh.n_shards(),
+                "sharded store has {} shards but engine has {} ranks",
+                sh.n_shards(),
+                self.n_ranks
+            );
+        }
+        let sdlb = sharding.map(|sh| ShardedDlb::new(sh.partition_tasks(walk)));
 
-        let per_rank: Vec<(Matrix, u64, u64)> = parallel_region(self.n_ranks, |_rank| {
+        let per_rank: Vec<(Matrix, u64, u64, u64)> = parallel_region(self.n_ranks, |rank| {
             let nt = self.n_threads;
             let shared = SharedMatrix::zeros(n, n);
             // mxsize = ubound(Fock) * shellSize (Algorithm 3 line 1).
@@ -81,6 +92,7 @@ impl FockBuilder for SharedFock {
             let kl_counter = AtomicUsize::new(0);
             let i_old = AtomicUsize::new(usize::MAX);
             let flush_count = AtomicUsize::new(0);
+            let stolen = AtomicU64::new(0);
             let barrier = Barrier::new(nt);
 
             let counts: Vec<u64> = parallel_region(nt, |tid| {
@@ -93,10 +105,22 @@ impl FockBuilder for SharedFock {
                         // legacy per-task I/J prescreen (Algorithm 3
                         // line 12) — and the full barrier round every
                         // dead ij task cost — is gone, because the walk
-                        // contains no dead tasks to prescreen.
-                        match dlb.next_task(n_tasks) {
-                            Some(t) => {
-                                let rij = walk.task(t);
+                        // contains no dead tasks to prescreen. Sharded
+                        // runs drain the rank's own shard first, then
+                        // steal; a stolen task's `i` may repeat an
+                        // earlier shell, which just re-arms the lazy
+                        // F_I flush (the buffers drain on every flush).
+                        let claim = match &sdlb {
+                            Some(sd) => sd.claim(rank).map(|(rij, from)| {
+                                if from != rank {
+                                    stolen.fetch_add(1, Ordering::Relaxed);
+                                }
+                                rij
+                            }),
+                            None => dlb.next_task(n_tasks).map(|t| walk.task(t)),
+                        };
+                        match claim {
+                            Some(rij) => {
                                 rij_cur.store(rij, Ordering::SeqCst);
                                 nkl_cur.store(walk.kl_limit(rij), Ordering::SeqCst);
                             }
@@ -151,6 +175,12 @@ impl FockBuilder for SharedFock {
                     let j_range = basis.shell_bf_range(j);
                     let (i0, j0) = (i_range.start, j_range.start);
 
+                    // Sharded: one bra fetch per thread per task (a
+                    // stolen task pays per-thread remote gets, not one
+                    // per ket); spilled kets count per lookup below.
+                    let shard = sharding.map(|sh| sh.shard(rank));
+                    let bra_view = shard.map(|s| s.view_by_slot(bra.slot, i < j));
+
                     // !$omp do schedule(dynamic,1) over the surviving
                     // ket prefix — the early exit is the loop bound; no
                     // quartet is tested individually.
@@ -162,9 +192,21 @@ impl FockBuilder for SharedFock {
                         let ket = pairs.entry(rkl);
                         let (k, l) = (ket.i as usize, ket.j as usize);
                         computed += 1;
-                        eng.shell_quartet_slots(
-                            basis, ctx.store, i, j, k, l, bra.slot, ket.slot, &mut block,
-                        );
+                        match (shard, bra_view) {
+                            (Some(shard), Some(bv)) => eng.shell_quartet_with_views(
+                                basis,
+                                i,
+                                j,
+                                k,
+                                l,
+                                bv,
+                                shard.view_by_slot(ket.slot, k < l),
+                                &mut block,
+                            ),
+                            _ => eng.shell_quartet_slots(
+                                basis, ctx.store, i, j, k, l, bra.slot, ket.slot, &mut block,
+                            ),
+                        }
                         scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| {
                             // Route by shell membership (lines 25–27).
                             if i_range.contains(&a) {
@@ -197,6 +239,7 @@ impl FockBuilder for SharedFock {
                 shared.into_matrix(),
                 computed,
                 flush_count.load(Ordering::SeqCst) as u64,
+                stolen.load(Ordering::Relaxed),
             )
         });
 
@@ -204,14 +247,19 @@ impl FockBuilder for SharedFock {
         let mut total = Matrix::zeros(n, n);
         let mut computed = 0;
         let mut flushes = 0;
-        for (g, c, fl) in per_rank {
+        let mut stolen = 0;
+        for (g, c, fl, st) in per_rank {
             total.add_assign(&g);
             computed += c;
             flushes += fl;
+            stolen += st;
         }
         fold_symmetric(&mut total);
         self.fi_flushes = flushes;
         self.stats = BuildStats::from_walk(computed, ctx, t0.elapsed().as_secs_f64());
+        if let Some(sd) = &sdlb {
+            self.stats.shard = Some(ShardBuildStats::collect(&sd.claimed_per_shard(), stolen));
+        }
         total
     }
 

@@ -34,7 +34,7 @@
 //! re-sort.
 
 use super::schwarz::{PairDensityMax, SchwarzScreen};
-use super::shellpair::ShellPairStore;
+use super::shellpair::{ShellPairStore, StoreShard};
 
 /// One surviving shell pair: canonical indices (i ≥ j), its Schwarz
 /// bound, and its precomputed-table slot in the [`ShellPairStore`].
@@ -194,6 +194,18 @@ impl SortedPairList {
                     + std::mem::size_of::<u32>())
     }
 
+    /// Early-exit loop bound of bra rank `rij` at an explicit density
+    /// weight: the number of leading ket ranks surviving
+    /// `q_ij·q_kl·weight > τ`, capped by the triangular constraint
+    /// `rkl ≤ rij`. [`PairWalk::kl_limit`] is this at the walk's weight;
+    /// [`StoreSharding`] uses it directly to size each shard's resident
+    /// ket prefix.
+    #[inline]
+    pub fn kl_limit_at(&self, rij: usize, weight: f64) -> usize {
+        let qij = self.qs[rij];
+        self.qs[..=rij].partition_point(|&qkl| qij * qkl * weight > self.tau)
+    }
+
     /// Build the per-density walk: fold `dmax`'s global weight into the
     /// bound and materialize the active task order (a linear filter of
     /// the precomputed (i, j) template — no sorting).
@@ -261,12 +273,10 @@ impl<'a> PairWalk<'a> {
     /// Early-exit loop bound of bra rank `rij`: the number of leading
     /// ket ranks surviving `q_ij·q_kl·w > τ`, capped by the triangular
     /// constraint `rkl ≤ rij`. Binary search over the descending-q
-    /// prefix — the single place the bound is evaluated.
+    /// prefix ([`SortedPairList::kl_limit_at`] at the walk's weight).
     #[inline]
     pub fn kl_limit(&self, rij: usize) -> usize {
-        let qij = self.list.qs[rij];
-        let (w, tau) = (self.weight, self.list.tau);
-        self.list.qs[..=rij].partition_point(|&qkl| qij * qkl * w > tau)
+        self.list.kl_limit_at(rij, self.weight)
     }
 
     /// Does the walk visit the rank pair {ra, rb}? (Order-free; for
@@ -280,6 +290,218 @@ impl<'a> PairWalk<'a> {
     /// `quartets_computed` for this build).
     pub fn n_visited(&self) -> u64 {
         (0..self.n_active).map(|r| self.kl_limit(r) as u64).sum()
+    }
+}
+
+/// Contiguous partition bounds over per-item byte weights, balanced by
+/// cumulative bytes: shard `s` owns items `[bounds[s], bounds[s+1])`,
+/// ending at the first index where the running total reaches
+/// `s/n_shards` of the grand total (so the largest shard holds the even
+/// share plus at most one item of slack). The single partition rule
+/// shared by [`StoreSharding::build`] and the cluster simulator's
+/// shard model — one implementation, no drift between the engines'
+/// sharding and the memory gate's model of it.
+pub fn balanced_bounds(bytes: &[u64], n_shards: usize) -> Vec<usize> {
+    assert!(n_shards > 0, "need at least one shard");
+    let m = bytes.len();
+    let total: u128 = bytes.iter().map(|&b| b as u128).sum();
+    let mut bounds = Vec::with_capacity(n_shards + 1);
+    bounds.push(0usize);
+    let mut acc = 0u128;
+    let mut r = 0usize;
+    for s in 1..=n_shards {
+        let target = total * s as u128 / n_shards as u128;
+        while r < m && acc < target {
+            acc += bytes[r] as u128;
+            r += 1;
+        }
+        bounds.push(if s == n_shards { m } else { r });
+    }
+    bounds
+}
+
+/// Run-level summary of a [`StoreSharding`] for `ScfResult` / the CLI.
+#[derive(Debug, Clone)]
+pub struct ShardingReport {
+    pub n_shards: usize,
+    /// Largest private per-rank shard footprint (owned bra tables +
+    /// slot remap) — the number the acceptance gate compares against
+    /// the replicated store.
+    pub max_shard_bytes: usize,
+    /// Mean private shard footprint.
+    pub mean_shard_bytes: usize,
+    /// Length (pairs) of the union of all shards' resident ket
+    /// prefixes. Prefixes nest (all start at rank 0), so this window,
+    /// held **once per node**, serves every shard.
+    pub prefix_len: usize,
+    /// Bytes of that shared prefix window's tables.
+    pub prefix_bytes: usize,
+    /// Non-resident lookups served so far across all shards
+    /// (work-stealing traffic).
+    pub remote_fetches: u64,
+}
+
+/// Partition of a [`ShellPairStore`] across virtual ranks — the paper's
+/// share-don't-replicate lever (§6.2, Table 2) applied to integral pair
+/// data.
+///
+/// The surviving bra pairs of the Q-sorted list are split into
+/// `n_shards` **contiguous rank ranges**, balanced by table bytes.
+/// Contiguity in Q-rank keeps the early-exit walk semantics untouched:
+/// a shard's bra tasks are exactly the walk tasks whose rank falls in
+/// its range, and each bra's surviving ket range is still the same
+/// binary-searched prefix of the global order.
+///
+/// Each shard's resident set is its owned range plus the ket prefix
+/// `[0, P_s)` its bra walks touch at the sharding weight
+/// (`P_s = max over owned ranks of kl_limit_at(r, weight)`, capped at
+/// the range start — kets inside the range are owned already). Because
+/// the triangular constraint bounds `kl_limit(r) ≤ r + 1`, a shard
+/// never needs kets beyond its own range end, and all prefixes nest at
+/// rank 0 — which is why the memory model holds **one** shared prefix
+/// window per node while every rank owns only its private bra shard.
+///
+/// Built once per SCF next to the list; walks with weights at or below
+/// the sharding weight stay fully resident, larger ones (a ΔD spike)
+/// spill into counted remote fetches without affecting correctness.
+#[derive(Debug)]
+pub struct StoreSharding<'a> {
+    list: &'a SortedPairList,
+    store: &'a ShellPairStore,
+    weight: f64,
+    /// Shard `s` owns ranks `[bounds[s], bounds[s+1])`.
+    bounds: Vec<usize>,
+    /// Per-shard resident ket prefix lengths (ranks `[0, prefix[s])`,
+    /// always ≤ `bounds[s]`).
+    prefix: Vec<usize>,
+    shards: Vec<StoreShard<'a>>,
+}
+
+impl<'a> StoreSharding<'a> {
+    /// Shard `list`'s ranks over `n_shards` virtual ranks, sizing each
+    /// resident ket prefix at `weight` (callers pass the first full
+    /// build's density weight; 1.0 is a reasonable default for
+    /// accounting studies).
+    pub fn build(
+        list: &'a SortedPairList,
+        store: &'a ShellPairStore,
+        n_shards: usize,
+        weight: f64,
+    ) -> StoreSharding<'a> {
+        assert!(n_shards > 0, "need at least one shard");
+        assert_eq!(
+            list.n_shells(),
+            store.n_shells(),
+            "SortedPairList and ShellPairStore disagree on shell count"
+        );
+        let m = list.len();
+        let bytes: Vec<u64> =
+            (0..m).map(|r| store.table_bytes_at(list.slot(r)) as u64).collect();
+
+        // Contiguous split balanced by cumulative table bytes — the
+        // shared rule, also used by the simulator's shard model.
+        let bounds = balanced_bounds(&bytes, n_shards);
+
+        // Resident ket prefix per shard: the furthest ket any owned bra
+        // walks at the sharding weight, clipped to the range start.
+        let mut prefix = Vec::with_capacity(n_shards);
+        for s in 0..n_shards {
+            let (lo, hi) = (bounds[s], bounds[s + 1]);
+            let mut p = 0usize;
+            for rank in lo..hi {
+                p = p.max(list.kl_limit_at(rank, weight).min(lo));
+            }
+            prefix.push(p);
+        }
+
+        let shards = (0..n_shards)
+            .map(|s| {
+                StoreShard::new(
+                    store,
+                    (bounds[s]..bounds[s + 1]).map(|rank| list.slot(rank)),
+                    (0..prefix[s]).map(|rank| list.slot(rank)),
+                )
+            })
+            .collect();
+
+        StoreSharding { list, store, weight, bounds, prefix, shards }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The list this sharding partitions.
+    pub fn list(&self) -> &'a SortedPairList {
+        self.list
+    }
+
+    /// The weight the resident prefixes were sized at.
+    pub fn weight(&self) -> f64 {
+        self.weight
+    }
+
+    /// The shard owning bra rank `rank`.
+    #[inline]
+    pub fn shard_of(&self, rank: usize) -> usize {
+        debug_assert!(rank < self.list.len());
+        self.bounds.partition_point(|&b| b <= rank) - 1
+    }
+
+    /// Owned rank range of shard `s`.
+    pub fn rank_range(&self, s: usize) -> (usize, usize) {
+        (self.bounds[s], self.bounds[s + 1])
+    }
+
+    /// Resident ket prefix length of shard `s`.
+    pub fn prefix_len(&self, s: usize) -> usize {
+        self.prefix[s]
+    }
+
+    /// The resident store view of shard `s`.
+    #[inline]
+    pub fn shard(&self, s: usize) -> &StoreShard<'a> {
+        &self.shards[s]
+    }
+
+    /// Split a walk's bra tasks by shard ownership, preserving the
+    /// (i, j)-grouped task order inside each shard (a filter of the
+    /// walk's order). The lists partition the walk's tasks: feeding
+    /// them to a [`ShardedDlb`](crate::hf::dlb::ShardedDlb) hands every
+    /// task out exactly once.
+    pub fn partition_tasks(&self, walk: &PairWalk) -> Vec<Vec<u32>> {
+        assert!(
+            std::ptr::eq(walk.pairs(), self.list),
+            "walk and sharding must view the same SortedPairList"
+        );
+        let mut out = vec![Vec::new(); self.n_shards()];
+        for t in 0..walk.n_tasks() {
+            let r = walk.task(t);
+            out[self.shard_of(r)].push(r as u32);
+        }
+        out
+    }
+
+    /// Run-level accounting summary.
+    pub fn report(&self) -> ShardingReport {
+        let n = self.n_shards();
+        let max_shard_bytes =
+            self.shards.iter().map(|s| s.bytes()).max().unwrap_or(0);
+        let mean_shard_bytes =
+            self.shards.iter().map(|s| s.bytes()).sum::<usize>() / n;
+        let prefix_len = self.prefix.iter().copied().max().unwrap_or(0);
+        let prefix_bytes = (0..prefix_len)
+            .map(|rank| self.store.table_bytes_at(self.list.slot(rank)))
+            .sum();
+        let remote_fetches = self.shards.iter().map(|s| s.remote_fetches()).sum();
+        ShardingReport {
+            n_shards: n,
+            max_shard_bytes,
+            mean_shard_bytes,
+            prefix_len,
+            prefix_bytes,
+            remote_fetches,
+        }
     }
 }
 
@@ -412,6 +634,116 @@ mod tests {
         }
         assert_eq!(walk.n_visited(), visited);
         assert!(visited <= list.n_list_quartets());
+    }
+
+    #[test]
+    fn sharding_partitions_ranks_and_balances_bytes() {
+        let (_, store, screen) = setup(&molecules::benzene(), 1e-10);
+        let list = SortedPairList::build(&screen, &store);
+        let n_shards = 4;
+        let sh = StoreSharding::build(&list, &store, n_shards, 1.0);
+        assert_eq!(sh.n_shards(), n_shards);
+        // Ranges are contiguous, cover [0, m), and shard_of agrees.
+        let mut covered = 0usize;
+        for s in 0..n_shards {
+            let (lo, hi) = sh.rank_range(s);
+            assert_eq!(lo, covered);
+            covered = hi;
+            for r in lo..hi {
+                assert_eq!(sh.shard_of(r), s, "rank {r}");
+            }
+            // The prefix never reaches into the shard's own range.
+            assert!(sh.prefix_len(s) <= lo);
+        }
+        assert_eq!(covered, list.len());
+        // Byte balance: every private shard stays well under the
+        // replicated store (the acceptance bound is max ≤ 0.5x at 4
+        // shards; the partition targets ~0.25x plus one pair of slack).
+        let rep = sh.report();
+        assert!(rep.max_shard_bytes > 0);
+        assert!(
+            rep.max_shard_bytes * 2 <= store.bytes(),
+            "max shard {} vs replicated {}",
+            rep.max_shard_bytes,
+            store.bytes()
+        );
+        assert!(rep.mean_shard_bytes <= rep.max_shard_bytes);
+        // Owned tables across shards + shared prefix window never
+        // exceed one replicated copy (prefix tables are a subset of the
+        // early shards' owned tables, counted once).
+        let owned_tables: usize = (0..n_shards)
+            .map(|s| {
+                let (lo, hi) = sh.rank_range(s);
+                (lo..hi).map(|r| store.table_bytes_at(list.slot(r))).sum::<usize>()
+            })
+            .sum();
+        assert!(rep.prefix_bytes <= owned_tables);
+        assert_eq!(rep.remote_fetches, 0);
+    }
+
+    #[test]
+    fn shard_residency_covers_own_walk() {
+        // At the sharding weight, every ket a shard's bra tasks touch
+        // must be resident (owned range or shared prefix) — no remote
+        // fetch on un-stolen work.
+        let (basis, store, screen) = setup(&molecules::benzene(), 1e-9);
+        let list = SortedPairList::build(&screen, &store);
+        let d = random_density(basis.n_bf, 3);
+        let dmax = PairDensityMax::build(&basis, &d);
+        let walk = list.weighted(&dmax);
+        let sh = StoreSharding::build(&list, &store, 3, walk.weight());
+        for s in 0..sh.n_shards() {
+            let shard = sh.shard(s);
+            let (lo, hi) = sh.rank_range(s);
+            for rij in lo..hi {
+                assert!(shard.is_resident(list.slot(rij)), "own bra {rij}");
+                for rkl in 0..walk.kl_limit(rij) {
+                    assert!(
+                        shard.is_resident(list.slot(rkl)),
+                        "shard {s}: bra {rij} touches non-resident ket {rkl}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partition_tasks_covers_walk_exactly_once() {
+        let (basis, store, screen) = setup(&molecules::benzene(), 1e-10);
+        let list = SortedPairList::build(&screen, &store);
+        let d = random_density(basis.n_bf, 29);
+        let dmax = PairDensityMax::build(&basis, &d);
+        let walk = list.weighted(&dmax);
+        let sh = StoreSharding::build(&list, &store, 4, walk.weight());
+        let parts = sh.partition_tasks(&walk);
+        assert_eq!(parts.len(), 4);
+        let mut all: Vec<u32> = parts.iter().flatten().copied().collect();
+        assert_eq!(all.len(), walk.n_tasks(), "task lists must partition the walk");
+        all.sort_unstable();
+        let mut want: Vec<u32> = (0..walk.n_tasks()).map(|t| walk.task(t) as u32).collect();
+        want.sort_unstable();
+        assert_eq!(all, want);
+        // Ownership: each list's ranks fall in its shard's range.
+        for (s, part) in parts.iter().enumerate() {
+            let (lo, hi) = sh.rank_range(s);
+            for &r in part {
+                assert!((r as usize) >= lo && (r as usize) < hi);
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_degenerates_to_replicated() {
+        let (_, store, screen) = setup(&molecules::water(), 1e-10);
+        let list = SortedPairList::build(&screen, &store);
+        let sh = StoreSharding::build(&list, &store, 1, 1.0);
+        let rep = sh.report();
+        assert_eq!(rep.n_shards, 1);
+        assert_eq!(sh.rank_range(0), (0, list.len()));
+        // One shard owns every listed table; no shared prefix needed.
+        assert_eq!(rep.prefix_len, 0);
+        assert_eq!(rep.prefix_bytes, 0);
+        assert_eq!(rep.max_shard_bytes, rep.mean_shard_bytes);
     }
 
     #[test]

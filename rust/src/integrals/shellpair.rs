@@ -455,6 +455,15 @@ impl ShellPairStore {
         self.bytes
     }
 
+    /// Heap bytes of one pair's stored tables (arena + primitive
+    /// metadata + struct) — the unit the sharded store partitions.
+    pub fn table_bytes_at(&self, slot: u32) -> usize {
+        let t = &self.tables[slot as usize];
+        std::mem::size_of::<PairTables>()
+            + t.prims.len() * std::mem::size_of::<PrimMeta>()
+            + t.data.len() * std::mem::size_of::<f64>()
+    }
+
     /// Count the distance-surviving canonical pairs without building
     /// any tables — an upper bound on the built store's
     /// `n_pairs_stored` (pairs can additionally lose all primitives to
@@ -484,30 +493,183 @@ impl ShellPairStore {
             + (n * (n + 1) / 2) * std::mem::size_of::<u32>();
         for i in 0..n {
             for j in 0..=i {
-                if pair_negligible(basis, i, j) {
-                    continue;
-                }
-                let a_sh = &basis.shells[i];
-                let b_sh = &basis.shells[j];
-                let esize = e_table_len(a_sh.kind.max_l(), b_sh.kind.max_l());
-                let r2 = crate::chem::geometry::dist2(a_sh.center, b_sh.center);
-                let mut n_prims = 0usize;
-                for (ia, &a) in a_sh.exps.iter().enumerate() {
-                    for (ib, &b) in b_sh.exps.iter().enumerate() {
-                        if prim_survives(cmax[i][ia], cmax[j][ib], a, b, r2) {
-                            n_prims += 1;
-                        }
-                    }
-                }
-                if n_prims > 0 {
-                    bytes += std::mem::size_of::<PairTables>()
-                        + n_prims
-                            * (std::mem::size_of::<PrimMeta>()
-                                + 3 * esize * std::mem::size_of::<f64>());
-                }
+                bytes += estimate_pair_bytes_with(basis, i, j, &cmax[i], &cmax[j]);
             }
         }
         bytes
+    }
+
+    /// Predict the table bytes `build` would store for canonical pair
+    /// (i ≥ j) — 0 when the pair is distance-negligible or loses every
+    /// primitive. The per-pair unit of [`ShellPairStore::estimate_bytes`],
+    /// exposed so the cluster workload model can cost a *sharded* store
+    /// without building Hermite tables.
+    pub fn estimate_pair_bytes(basis: &BasisSet, i: usize, j: usize) -> usize {
+        estimate_pair_bytes_with(basis, i, j, &max_coefs(basis, i), &max_coefs(basis, j))
+    }
+}
+
+/// Shared survivor-counting core of the byte estimators (mirrors
+/// `build_pair_tables` exactly; see `estimate_matches_built_store`).
+fn estimate_pair_bytes_with(
+    basis: &BasisSet,
+    i: usize,
+    j: usize,
+    cmax_i: &[f64],
+    cmax_j: &[f64],
+) -> usize {
+    if pair_negligible(basis, i, j) {
+        return 0;
+    }
+    let a_sh = &basis.shells[i];
+    let b_sh = &basis.shells[j];
+    let esize = e_table_len(a_sh.kind.max_l(), b_sh.kind.max_l());
+    let r2 = crate::chem::geometry::dist2(a_sh.center, b_sh.center);
+    let mut n_prims = 0usize;
+    for (ia, &a) in a_sh.exps.iter().enumerate() {
+        for (ib, &b) in b_sh.exps.iter().enumerate() {
+            if prim_survives(cmax_i[ia], cmax_j[ib], a, b, r2) {
+                n_prims += 1;
+            }
+        }
+    }
+    if n_prims == 0 {
+        return 0;
+    }
+    std::mem::size_of::<PairTables>()
+        + n_prims
+            * (std::mem::size_of::<PrimMeta>() + 3 * esize * std::mem::size_of::<f64>())
+}
+
+/// One virtual rank's resident slice of a [`ShellPairStore`] — the
+/// distributed-memory view behind `--shard-store`.
+///
+/// A shard holds two classes of pair tables:
+/// * its **owned** bra slots — the contiguous Q-rank range of the
+///   sorted pair list assigned to this virtual rank (see
+///   [`StoreSharding`](super::pairlist::StoreSharding)); these are the
+///   shard's private footprint, reported by [`StoreShard::bytes`];
+/// * its resident **ket prefix** slots — the leading (hot) Q-ranks its
+///   bra walks actually touch. The prefixes of all shards nest (they
+///   all start at rank 0), so the memory model counts one shared
+///   prefix window per node, not one per rank.
+///
+/// Global store slots are remapped to dense local ids
+/// ([`StoreShard::local_slot`]) — the index translation a real
+/// distributed store would apply. Lookups of non-resident slots are
+/// still served (this is a single-process simulation; the data exists)
+/// but are tallied as *remote fetches*, modeling the one-sided gets a
+/// work-stealing rank pays when it executes a neighbor shard's task.
+#[derive(Debug)]
+pub struct StoreShard<'a> {
+    store: &'a ShellPairStore,
+    /// Global slot → dense local slot, or `NONE` when non-resident.
+    local: Vec<u32>,
+    n_owned: usize,
+    n_prefix: usize,
+    owned_bytes: usize,
+    prefix_bytes: usize,
+    remote_fetches: std::sync::atomic::AtomicU64,
+}
+
+impl<'a> StoreShard<'a> {
+    /// Build a shard resident view from its owned slots and the ket
+    /// prefix slots it shares. Duplicates are ignored (an owned slot
+    /// listed again as prefix stays owned — the shared prefix never
+    /// double-counts a shard's own range).
+    pub fn new(
+        store: &'a ShellPairStore,
+        owned: impl IntoIterator<Item = u32>,
+        prefix: impl IntoIterator<Item = u32>,
+    ) -> StoreShard<'a> {
+        let mut local = vec![NONE; store.n_pairs_stored()];
+        let mut next = 0u32;
+        let mut n_owned = 0usize;
+        let mut n_prefix = 0usize;
+        // Private footprint: the remap table plus the owned tables.
+        let mut owned_bytes = std::mem::size_of::<StoreShard>()
+            + local.len() * std::mem::size_of::<u32>();
+        let mut prefix_bytes = 0usize;
+        for slot in owned {
+            if local[slot as usize] == NONE {
+                local[slot as usize] = next;
+                next += 1;
+                n_owned += 1;
+                owned_bytes += store.table_bytes_at(slot);
+            }
+        }
+        for slot in prefix {
+            if local[slot as usize] == NONE {
+                local[slot as usize] = next;
+                next += 1;
+                n_prefix += 1;
+                prefix_bytes += store.table_bytes_at(slot);
+            }
+        }
+        StoreShard {
+            store,
+            local,
+            n_owned,
+            n_prefix,
+            owned_bytes,
+            prefix_bytes,
+            remote_fetches: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Dense local id of a resident global slot, or `None`.
+    #[inline]
+    pub fn local_slot(&self, slot: u32) -> Option<u32> {
+        match self.local[slot as usize] {
+            NONE => None,
+            l => Some(l),
+        }
+    }
+
+    #[inline]
+    pub fn is_resident(&self, slot: u32) -> bool {
+        self.local[slot as usize] != NONE
+    }
+
+    /// View the tables at a global slot through this shard. Resident
+    /// slots are the local fast path; non-resident slots (stolen tasks,
+    /// walks past the sized prefix) are served from the underlying
+    /// store and counted as remote fetches.
+    #[inline]
+    pub fn view_by_slot(&self, slot: u32, swap: bool) -> PairView<'a> {
+        if self.local[slot as usize] == NONE {
+            self.remote_fetches
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+        self.store.view_by_slot(slot, swap)
+    }
+
+    /// Owned (bra-range) slot count.
+    pub fn n_owned(&self) -> usize {
+        self.n_owned
+    }
+
+    /// Resident ket-prefix slot count (excluding owned overlap).
+    pub fn n_prefix(&self) -> usize {
+        self.n_prefix
+    }
+
+    /// Private per-rank footprint: owned tables plus the slot remap.
+    /// The shared ket prefix is *not* included — it is held once per
+    /// node (see [`StoreShard::prefix_bytes`]).
+    pub fn bytes(&self) -> usize {
+        self.owned_bytes
+    }
+
+    /// Bytes of this shard's resident ket prefix (node-shared).
+    pub fn prefix_bytes(&self) -> usize {
+        self.prefix_bytes
+    }
+
+    /// Non-resident lookups served so far (work-stealing traffic).
+    pub fn remote_fetches(&self) -> u64 {
+        self.remote_fetches
+            .load(std::sync::atomic::Ordering::Relaxed)
     }
 }
 
@@ -712,6 +874,63 @@ mod tests {
             let s = ShellPairStore::build(&b);
             assert_eq!(ShellPairStore::estimate_bytes(&b), s.bytes(), "{}", mol.name);
         }
+    }
+
+    #[test]
+    fn per_pair_estimates_sum_to_store_estimate() {
+        let m = molecules::benzene();
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let n = b.n_shells();
+        let mut total = std::mem::size_of::<ShellPairStore>()
+            + (n * (n + 1) / 2) * std::mem::size_of::<u32>();
+        for i in 0..n {
+            for j in 0..=i {
+                total += ShellPairStore::estimate_pair_bytes(&b, i, j);
+            }
+        }
+        assert_eq!(total, ShellPairStore::estimate_bytes(&b));
+        // And per-slot table bytes of the built store sum to its
+        // measured footprint (minus the index and struct overhead).
+        let s = ShellPairStore::build(&b);
+        let table_sum: usize =
+            (0..s.n_pairs_stored() as u32).map(|t| s.table_bytes_at(t)).sum();
+        let overhead = std::mem::size_of::<ShellPairStore>()
+            + (n * (n + 1) / 2) * std::mem::size_of::<u32>();
+        assert_eq!(table_sum + overhead, s.bytes());
+    }
+
+    #[test]
+    fn shard_view_remaps_and_counts_remote() {
+        let m = molecules::water();
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let s = ShellPairStore::build(&b);
+        let n_slots = s.n_pairs_stored() as u32;
+        assert!(n_slots >= 4);
+        // Own the first two slots, share the next one as prefix.
+        let shard = StoreShard::new(&s, [0u32, 1], [2u32, 0]);
+        assert_eq!(shard.n_owned(), 2);
+        assert_eq!(shard.n_prefix(), 1, "owned slot re-listed as prefix is ignored");
+        assert_eq!(shard.local_slot(0), Some(0));
+        assert_eq!(shard.local_slot(1), Some(1));
+        assert_eq!(shard.local_slot(2), Some(2));
+        assert_eq!(shard.local_slot(3), None);
+        assert!(shard.is_resident(2) && !shard.is_resident(3));
+        // Byte split: owned counts tables 0 and 1 plus remap overhead;
+        // the shared prefix counts table 2 only.
+        let overhead = std::mem::size_of::<StoreShard>()
+            + s.n_pairs_stored() * std::mem::size_of::<u32>();
+        assert_eq!(
+            shard.bytes(),
+            overhead + s.table_bytes_at(0) + s.table_bytes_at(1)
+        );
+        assert_eq!(shard.prefix_bytes(), s.table_bytes_at(2));
+        // Resident views are free; a non-resident view counts remote.
+        assert_eq!(shard.remote_fetches(), 0);
+        let _ = shard.view_by_slot(1, false);
+        assert_eq!(shard.remote_fetches(), 0);
+        let v = shard.view_by_slot(3, false);
+        assert_eq!(v.len(), s.view_by_slot(3, false).len());
+        assert_eq!(shard.remote_fetches(), 1);
     }
 
     #[test]

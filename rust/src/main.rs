@@ -55,6 +55,8 @@ fn print_help() {
                [--ranks N] [--threads N]     run RHF\n\
                [--no-incremental] [--rebuild-every N] [--tau T]\n\
                                              incremental (ΔD) Fock-build controls\n\
+               [--shard-store]               shard the shell-pair store across the\n\
+                                             virtual ranks (per-shard bytes reported)\n\
            footprint                         Table 2 memory footprints\n\
            simulate --system <0.5|1.0|1.5|2.0|5.0> [--nodes 4,16,...]\n\
            calibrate [--out artifacts/calibration.toml] [--budget N]\n\
@@ -91,11 +93,26 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
     let ranks = args.parse_or("ranks", 2usize)?;
     let threads = args.parse_or("threads", 2usize)?;
     let engine = args.get_or("engine", "serial");
+    // `--shard-store` shards across the engine's virtual ranks;
+    // `--shard-store N` picks an explicit shard count (it must match
+    // the rank count for the parallel engines).
+    let shard_store = if args.flag("shard-store") {
+        ranks
+    } else {
+        args.parse_or("shard-store", 0usize)?
+    };
+    if shard_store > 0 && matches!(engine, "mpi" | "private" | "shared") {
+        anyhow::ensure!(
+            shard_store == ranks,
+            "--shard-store {shard_store} must equal --ranks {ranks} for the {engine} engine"
+        );
+    }
 
     let driver = RhfDriver {
         incremental: !args.flag("no-incremental"),
         rebuild_every: args.parse_or("rebuild-every", 8)?,
         schwarz_tau: args.parse_or("tau", khf::integrals::SchwarzScreen::DEFAULT_TAU)?,
+        shard_store,
         ..RhfDriver::default()
     };
     let res = match engine {
@@ -132,6 +149,25 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
         res.pairs_listed,
         human_bytes(res.pairlist_bytes as f64),
     );
+    if let Some(sh) = &res.sharding {
+        println!(
+            "  sharded store: {} shards, max {} / mean {} per shard ({:.2}x replicated), \
+             shared ket prefix {} pairs ({}), {} remote fetches",
+            sh.n_shards,
+            human_bytes(sh.max_shard_bytes as f64),
+            human_bytes(sh.mean_shard_bytes as f64),
+            sh.max_shard_bytes as f64 / res.store_bytes as f64,
+            sh.prefix_len,
+            human_bytes(sh.prefix_bytes as f64),
+            sh.remote_fetches,
+        );
+        if let Some(sb) = res.build_stats.last().and_then(|s| s.shard) {
+            println!(
+                "  shard DLB (final build): {}..{} tasks/shard, {} stolen",
+                sb.min_shard_tasks, sb.max_shard_tasks, sb.tasks_stolen,
+            );
+        }
+    }
     // (The xla engine does no quartet screening and reports 0 counts —
     // skip the counter lines rather than print a bogus reduction.)
     if let Some((first, last)) = res

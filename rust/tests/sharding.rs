@@ -1,0 +1,181 @@
+//! Sharded shell-pair store, end to end: the four engines must produce
+//! the serial full-rebuild physics with the store partitioned across
+//! virtual ranks (work-stealing DLB, shard-view fetches), the stats
+//! invariants must hold for sharded and unsharded builds alike, and the
+//! per-shard memory accounting must beat the replicated store.
+
+use khf::basis::{BasisName, BasisSet};
+use khf::chem::molecules;
+use khf::hf::mpi_only::MpiOnlyFock;
+use khf::hf::private_fock::PrivateFock;
+use khf::hf::quartets::n_canonical;
+use khf::hf::serial::SerialFock;
+use khf::hf::shared_fock::SharedFock;
+use khf::hf::{BuildStats, FockBuilder, FockContext};
+use khf::integrals::{SchwarzScreen, ShellPairStore, SortedPairList, StoreSharding};
+use khf::linalg::Matrix;
+use khf::scf::RhfDriver;
+use khf::util::prng::Rng;
+
+fn setup(
+    mol: &khf::chem::Molecule,
+) -> (BasisSet, ShellPairStore, SchwarzScreen) {
+    let basis = BasisSet::assemble(mol, BasisName::Sto3g).unwrap();
+    let store = ShellPairStore::build(&basis);
+    let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+    (basis, store, screen)
+}
+
+fn random_density(n: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let mut d = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let x = rng.range(-0.4, 0.4);
+            d.set(i, j, x);
+            d.set(j, i, x);
+        }
+    }
+    d
+}
+
+#[test]
+fn sharded_engines_reproduce_serial_scf_energy() {
+    // The acceptance bar: with sharding on at 4 virtual ranks, every
+    // engine's full SCF lands on the serial full-rebuild energy to
+    // 1e-8, on water and benzene.
+    for mol in [molecules::water(), molecules::benzene()] {
+        let reference = RhfDriver { incremental: false, ..Default::default() }
+            .run(&mol, BasisName::Sto3g, &mut SerialFock::new())
+            .unwrap();
+        assert!(reference.converged, "{}: reference did not converge", mol.name);
+
+        let driver = RhfDriver { shard_store: 4, ..Default::default() };
+        let mut engines: Vec<(&str, Box<dyn FockBuilder>)> = vec![
+            ("serial", Box::new(SerialFock::new())),
+            ("mpi", Box::new(MpiOnlyFock::new(4))),
+            ("private", Box::new(PrivateFock::new(4, 2))),
+            ("shared", Box::new(SharedFock::new(4, 2))),
+        ];
+        for (name, builder) in engines.iter_mut() {
+            let r = driver.run(&mol, BasisName::Sto3g, builder.as_mut()).unwrap();
+            assert!(r.converged, "{}/{name}: did not converge", mol.name);
+            assert!(
+                (r.energy - reference.energy).abs() < 1e-8,
+                "{}/{name}: sharded {} vs serial {}",
+                mol.name,
+                r.energy,
+                reference.energy
+            );
+            let rep = r.sharding.as_ref().expect("missing sharding report");
+            assert_eq!(rep.n_shards, 4);
+        }
+    }
+}
+
+#[test]
+fn sharded_build_matches_unsharded_fock_matrix() {
+    // One Fock build, same context modulo sharding: identical physics.
+    let mol = molecules::benzene();
+    let (basis, store, screen) = setup(&mol);
+    let pairs = SortedPairList::build(&screen, &store);
+    let d = random_density(basis.n_bf, 97);
+    let plain = FockContext::new(&basis, &store, &screen, &pairs, &d);
+    let want = SerialFock::new().build_2e(&plain);
+    let sharding = StoreSharding::build(&pairs, &store, 4, plain.walk.weight());
+    let ctx = FockContext::with_sharding(&basis, &store, &screen, &pairs, &d, &sharding);
+    for (name, builder) in [
+        ("mpi", &mut MpiOnlyFock::new(4) as &mut dyn FockBuilder),
+        ("private", &mut PrivateFock::new(4, 2)),
+        ("shared", &mut SharedFock::new(4, 3)),
+    ] {
+        let got = builder.build_2e(&ctx);
+        assert!(
+            got.max_abs_diff(&want) < 1e-11,
+            "{name}: diff {}",
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn buildstats_partition_invariant_sharded_and_unsharded() {
+    // computed + screened + skipped_by_early_exit == n_canonical must
+    // hold for both build modes, with identical counters: per-shard
+    // task lists partition the walk, so the shared ket prefix is never
+    // double-counted even though every shard's walk reads it.
+    let mol = molecules::benzene();
+    let (basis, store, screen) = setup(&mol);
+    let pairs = SortedPairList::build(&screen, &store);
+    let d = random_density(basis.n_bf, 13);
+    let total = n_canonical(basis.n_shells());
+
+    let plain_ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
+    let mut serial = SerialFock::new();
+    serial.build_2e(&plain_ctx);
+    let check = |s: &BuildStats, label: &str| {
+        assert_eq!(
+            s.quartets_computed + s.quartets_screened + s.skipped_by_early_exit,
+            total,
+            "{label}: counters must partition the canonical space"
+        );
+    };
+    check(&serial.stats, "serial unsharded");
+    assert!(serial.stats.shard.is_none());
+
+    let sharding = StoreSharding::build(&pairs, &store, 4, plain_ctx.walk.weight());
+    let ctx = FockContext::with_sharding(&basis, &store, &screen, &pairs, &d, &sharding);
+    let mut eng = MpiOnlyFock::new(4);
+    eng.build_2e(&ctx);
+    check(&eng.stats, "mpi sharded");
+    assert_eq!(eng.stats.quartets_computed, serial.stats.quartets_computed);
+    assert_eq!(eng.stats.quartets_screened, serial.stats.quartets_screened);
+    assert_eq!(
+        eng.stats.skipped_by_early_exit,
+        serial.stats.skipped_by_early_exit
+    );
+    // Per-shard claim counts sum to the walk's task count — every task
+    // handed out exactly once across shards (with the saturating
+    // counter, exhausted stealing polls cannot inflate this).
+    let shard = eng.stats.shard.expect("sharded build must report shard stats");
+    assert_eq!(shard.n_shards, 4);
+    assert!(shard.min_shard_tasks <= shard.max_shard_tasks);
+    assert!(shard.max_shard_tasks as usize <= ctx.walk.n_tasks());
+}
+
+#[test]
+fn max_shard_bytes_at_most_half_replicated_on_benzene() {
+    // The acceptance memory bound: at 4 shards the largest private
+    // shard is at most 0.5x the replicated per-rank store bytes.
+    let mol = molecules::benzene();
+    let (_, store, screen) = setup(&mol);
+    let pairs = SortedPairList::build(&screen, &store);
+    let sharding = StoreSharding::build(&pairs, &store, 4, 1.0);
+    let rep = sharding.report();
+    assert!(
+        rep.max_shard_bytes * 2 <= store.bytes(),
+        "max shard {} vs replicated {}",
+        rep.max_shard_bytes,
+        store.bytes()
+    );
+    assert!(rep.mean_shard_bytes <= rep.max_shard_bytes);
+    assert!(rep.max_shard_bytes > 0);
+}
+
+#[test]
+fn sharded_scf_reports_dlb_and_store_stats() {
+    let mol = molecules::benzene();
+    let driver = RhfDriver { shard_store: 4, ..Default::default() };
+    let mut eng = MpiOnlyFock::new(4);
+    let r = driver.run(&mol, BasisName::Sto3g, &mut eng).unwrap();
+    assert!(r.converged);
+    let rep = r.sharding.as_ref().unwrap();
+    assert_eq!(rep.n_shards, 4);
+    assert!(rep.max_shard_bytes * 2 <= r.store_bytes, "acceptance bound");
+    // Every build carries shard stats; the first (full-D) build hands
+    // out every walk task across the four shards.
+    for (k, s) in r.build_stats.iter().enumerate() {
+        let sb = s.shard.unwrap_or_else(|| panic!("iter {k}: no shard stats"));
+        assert_eq!(sb.n_shards, 4, "iter {k}");
+    }
+}
