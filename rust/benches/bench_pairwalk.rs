@@ -1,14 +1,18 @@
-//! Benchmark: sorted early-exit pair walks vs the legacy
-//! enumerate-and-test screening, per SCF iteration.
+//! Benchmark: two-key sorted early-exit pair walks vs the PR 2
+//! single-key (global-weight) walk vs the legacy enumerate-and-test
+//! screening, per SCF iteration.
 //!
 //! The legacy scheme visits every canonical quartet ordinal and calls
 //! `screened_weighted` on each — O(N⁴) loop-and-branch work even when
-//! ΔD has collapsed and almost nothing survives. The sorted walk makes
-//! the bound a *loop limit*: visited = computed, and the dead quartet
-//! space is never enumerated. This bench drives a real incremental SCF
-//! with a probing builder that, for every build, counts both schemes on
-//! the same density, then times the two enumeration strategies in
-//! isolation on the converged ΔD.
+//! ΔD has collapsed and almost nothing survives. The sorted walks make
+//! the bound a *loop limit*; the two-key walk additionally folds
+//! per-pair row-max density weights in, computing exactly the
+//! factorized weighted survivor set (strictly fewer quartets than the
+//! global-weight walk whenever the density's block structure is
+//! uneven). This bench drives a real incremental SCF with a probing
+//! builder that, for every build, counts all three schemes on the same
+//! density, then times the enumeration strategies in isolation on the
+//! converged ΔD.
 //!
 //! Run: cargo bench --bench bench_pairwalk
 //! (Numbers land in EXPERIMENTS.md §2.)
@@ -31,11 +35,18 @@ struct ProbeRow {
     legacy_visited: u64,
     /// Quartets surviving the legacy per-quartet weighted test.
     legacy_survivors: u64,
-    /// Quartets the sorted walk enumerates (= computes).
-    early_visited: u64,
+    /// Quartets the PR 2 single-key walk (global weight max|D|) would
+    /// compute on this density.
+    global_visited: u64,
+    /// Quartets the two-key walk computes (= the exact factorized
+    /// weighted survivor set).
+    two_key_visited: u64,
+    /// Two-key iteration ordinals enumerated (computed + rejected
+    /// segment-B candidates, each one integer compare).
+    two_key_candidates: u64,
 }
 
-/// A serial builder that counts both screening schemes per build.
+/// A serial builder that counts all screening schemes per build.
 struct PairwalkProbe {
     inner: SerialFock,
     rows: Vec<ProbeRow>,
@@ -60,7 +71,9 @@ impl FockBuilder for PairwalkProbe {
         self.rows.push(ProbeRow {
             legacy_visited: n_canonical(nsh),
             legacy_survivors: survivors,
-            early_visited: ctx.walk.n_visited(),
+            global_visited: ctx.pairs.n_visited_at(ctx.dmax.global),
+            two_key_visited: ctx.walk.n_visited(),
+            two_key_candidates: ctx.walk.n_candidates(),
         });
         self.inner.build_2e(ctx)
     }
@@ -94,16 +107,23 @@ fn run_case(mol: &Molecule, basis: BasisName, expect_final_win: bool) {
         "iter".into(),
         "legacy visited".into(),
         "legacy survivors".into(),
-        "early-exit visited".into(),
-        "visit reduction".into(),
+        "global-w visited".into(),
+        "two-key visited".into(),
+        "two-key candidates".into(),
+        "two-key gain".into(),
     ]];
     for (it, r) in probe.rows.iter().enumerate() {
         rows.push(vec![
             (it + 1).to_string(),
             r.legacy_visited.to_string(),
             r.legacy_survivors.to_string(),
-            r.early_visited.to_string(),
-            format!("{:.1}x", r.legacy_visited as f64 / (r.early_visited.max(1)) as f64),
+            r.global_visited.to_string(),
+            r.two_key_visited.to_string(),
+            r.two_key_candidates.to_string(),
+            format!(
+                "{:.2}x",
+                r.global_visited as f64 / (r.two_key_visited.max(1)) as f64
+            ),
         ]);
     }
     print!("{}", report::table(&rows));
@@ -111,20 +131,40 @@ fn run_case(mol: &Molecule, basis: BasisName, expect_final_win: bool) {
     let last = probe.rows.last().expect("at least one build");
     println!(
         "   final ΔD iteration: legacy enumerates {} quartets to keep {}, \
-         early exit visits {} ({}x fewer loop iterations); wall {}\n",
+         global-weight walk computes {}, two-key walk computes {} \
+         ({} candidates); wall {}\n",
         last.legacy_visited,
         last.legacy_survivors,
-        last.early_visited,
-        (last.legacy_visited / last.early_visited.max(1)),
+        last.global_visited,
+        last.two_key_visited,
+        last.two_key_candidates,
         khf::util::human_secs(wall),
     );
+    // Structural invariants of the two-key walk, on every build: it
+    // nests inside the PR 2 global-weight walk and keeps every legacy
+    // per-quartet Häser–Ahlrichs survivor.
+    let mut sum_global = 0u64;
+    let mut sum_two_key = 0u64;
+    for r in &probe.rows {
+        assert!(r.two_key_visited <= r.global_visited, "two-key must nest");
+        assert!(r.two_key_visited >= r.legacy_survivors, "lost HA survivors");
+        assert!(r.two_key_candidates >= r.two_key_visited);
+        sum_global += r.global_visited;
+        sum_two_key += r.two_key_visited;
+    }
     // Compact few-shell systems can keep every Q product above τ/w even
-    // at convergence (no pairs to exit over); the headline claim is for
-    // systems with a broad Schwarz spread, so only those hard-assert.
+    // at convergence (no pairs to exit over); the headline claims are
+    // for systems with a broad Schwarz spread, so only those
+    // hard-assert.
     if expect_final_win {
         assert!(
-            last.early_visited < last.legacy_visited,
+            last.two_key_visited < last.legacy_visited,
             "early exit must beat enumerate-and-test on the final ΔD iteration"
+        );
+        assert!(
+            sum_two_key < sum_global,
+            "two-key walk must compute strictly fewer quartets over the run \
+             ({sum_two_key} vs global {sum_global})"
         );
     }
 }
@@ -158,12 +198,14 @@ fn time_enumeration(mol: &Molecule, basis_name: BasisName) {
         let mut kept = 0u64;
         for t in 0..ctx.walk.n_tasks() {
             let rij = ctx.walk.task(t);
-            kept += ctx.walk.kl_limit(rij) as u64;
+            // Full two-key enumeration including the segment-B
+            // candidate rejections — what an engine actually pays.
+            kept += ctx.walk.kets(rij).iter().count() as u64;
         }
         timer::black_box(&kept);
     });
     println!(
-        "enumeration overhead on {} (1e-9 ΔD): legacy {} vs sorted walk {} ({:.0}x)",
+        "enumeration overhead on {} (1e-9 ΔD): legacy {} vs two-key walk {} ({:.0}x)",
         mol.name,
         st_legacy,
         st_walk,
@@ -181,8 +223,11 @@ fn main() {
     }
     time_enumeration(&molecules::benzene(), BasisName::Sto3g);
     println!(
-        "\nnote: 'early-exit visited' equals quartets computed (the walk never tests\n\
-         quartets individually); the legacy column pays a screened_weighted call per\n\
-         canonical quartet every iteration regardless of how little survives."
+        "\nnote: 'two-key visited' equals quartets computed — exactly the survivors of\n\
+         Q_ij·Q_kl·max(w_ij,w_kl) > tau, never more; 'two-key candidates' adds the\n\
+         segment-B rejections (one integer compare each, no bound evaluation). The\n\
+         'global-w visited' column is the PR 2 single-key walk; the legacy column\n\
+         pays a screened_weighted call per canonical quartet every iteration\n\
+         regardless of how little survives."
     );
 }

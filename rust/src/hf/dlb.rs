@@ -2,11 +2,17 @@
 //!
 //! GAMESS's DDI dynamic load balancer is a single global get-and-
 //! increment counter: every caller (rank or master thread) receives the
-//! next unclaimed task ordinal. With virtual in-process ranks this is
-//! exactly an `AtomicUsize::fetch_add`, which preserves the semantics
-//! the paper's Algorithms 1–3 rely on: tasks are handed out in order,
-//! first-come-first-served, with no idle slot going unserved while work
-//! remains.
+//! next unclaimed task ordinal. With virtual in-process ranks this is a
+//! shared atomic counter — bounded and **saturating**
+//! ([`DlbCounter::next_task`]) so exhausted polls can neither inflate
+//! the claim accounting nor creep toward overflow — which preserves the
+//! semantics the paper's Algorithms 1–3 rely on: tasks are handed out
+//! in order, first-come-first-served, with no idle slot going unserved
+//! while work remains. Task ordinals index the per-build
+//! [`PairWalk`](crate::integrals::PairWalk) task list (or a shard's
+//! slice of it); the walk's per-build `Q·w` re-ranking only changes the
+//! *ket* traversal inside a task, so shard ownership of bra ranks — and
+//! therefore [`ShardedDlb`]'s task partition — is stable across builds.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -21,11 +27,12 @@ impl DlbCounter {
         DlbCounter { next: AtomicUsize::new(0) }
     }
 
-    /// Claim the next task ordinal.
-    #[inline]
-    pub fn next(&self) -> usize {
-        self.next.fetch_add(1, Ordering::Relaxed)
-    }
+    // NB there is deliberately no unbounded `next()` anymore: the old
+    // raw fetch-add kept incrementing on every poll past the end, so
+    // idle ranks drifted `claimed()` upward and crept toward overflow —
+    // the exact bug `next_task` fixed with CAS saturation. Every task
+    // space in this codebase is bounded (walk tasks, shard lists), so
+    // all callers go through `next_task`.
 
     /// Claim the next ordinal of a bounded task space, or `None` once
     /// `n_tasks` have been handed out. The engines pass
@@ -146,10 +153,10 @@ mod tests {
     #[test]
     fn sequential_hand_out() {
         let c = DlbCounter::new();
-        assert_eq!(c.next(), 0);
-        assert_eq!(c.next(), 1);
+        assert_eq!(c.next_task(usize::MAX), Some(0));
+        assert_eq!(c.next_task(usize::MAX), Some(1));
         c.reset();
-        assert_eq!(c.next(), 0);
+        assert_eq!(c.next_task(usize::MAX), Some(0));
     }
 
     #[test]
@@ -236,16 +243,19 @@ mod tests {
 
     #[test]
     fn concurrent_claims_are_unique_and_complete() {
+        // Claims well inside the bound behave like the old raw counter:
+        // unique, gap-free ordinals across threads.
         let c = Arc::new(DlbCounter::new());
         let n_threads = 8;
         let per_thread = 500;
+        let n_tasks = n_threads * per_thread;
         let mut handles = Vec::new();
         for _ in 0..n_threads {
             let c = Arc::clone(&c);
             handles.push(std::thread::spawn(move || {
                 let mut got = Vec::with_capacity(per_thread);
                 for _ in 0..per_thread {
-                    got.push(c.next());
+                    got.push(c.next_task(n_tasks).expect("bound never reached"));
                 }
                 got
             }));
@@ -255,7 +265,8 @@ mod tests {
             .flat_map(|h| h.join().unwrap())
             .collect();
         all.sort_unstable();
-        let want: Vec<usize> = (0..n_threads * per_thread).collect();
+        let want: Vec<usize> = (0..n_tasks).collect();
         assert_eq!(all, want);
+        assert_eq!(c.claimed(), n_tasks);
     }
 }

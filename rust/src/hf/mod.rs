@@ -20,10 +20,12 @@
 //! contract — the full D, or ΔD when the driver runs incremental direct
 //! SCF. Screening is a *loop bound*, not a per-quartet branch: the DLB
 //! hands out surviving-pair ranks from the context's [`PairWalk`], and
-//! each bra rank's ket walk spans exactly the prefix of the Q-sorted
-//! list where Q_ij·Q_kl·w(D) > τ. With ΔD densities w → 0 and the walk
-//! collapses — late iterations neither compute *nor enumerate* the dead
-//! quartet space.
+//! each bra rank's kets are the walk's two binary-searched segments —
+//! exactly the survivors of the two-key bound
+//! Q_ij·Q_kl·max(w_ij, w_kl) > τ with per-pair row-max weights
+//! (`PairDensityMax::pair_weight`). With ΔD densities the weights → 0
+//! and the walk collapses — late iterations neither compute *nor
+//! enumerate* the dead quartet space.
 //!
 //! [`quartets`] owns the canonical loop structure and the sorted-walk
 //! enumerator, [`scatter`] the six-element update of eqs. (2a)–(2f),
@@ -220,6 +222,14 @@ pub struct BuildStats {
     /// Quartets of *listed* pairs the early-exit bound skipped —
     /// list-space quartets minus computed.
     pub skipped_by_early_exit: u64,
+    /// Two-key walk iteration ordinals enumerated — computed quartets
+    /// plus rejected segment-B candidates (skipped on an integer rank
+    /// compare, never a bound evaluation). `walk_candidates −
+    /// quartets_computed` is the enumeration overhead the exact two-key
+    /// set costs; it is bounded by ~2x the *global-weight* walk's
+    /// visited count (segment A plus an uncapped-ordered-pair B
+    /// prefix), while the computed count can drop far below it.
+    pub walk_candidates: u64,
     /// Wall-clock seconds of the build.
     pub seconds: f64,
     /// Shard summary when the build ran against a sharded store.
@@ -227,10 +237,11 @@ pub struct BuildStats {
 }
 
 impl BuildStats {
-    /// Assemble the per-build counters from the visited count: the two
-    /// skip counters follow in bulk from the quartet-space sizes. One
-    /// constructor so every engine's accounting stays identical — and
-    /// the partition invariant above holds by construction.
+    /// Assemble the per-build counters from the engine's visited count
+    /// (and the walk's candidate total): the two skip counters follow
+    /// in bulk from the quartet-space sizes. One constructor so every
+    /// engine's accounting stays identical — and the partition
+    /// invariant above holds by construction.
     pub fn from_walk(computed: u64, ctx: &FockContext, seconds: f64) -> BuildStats {
         let total = quartets::n_canonical(ctx.basis.n_shells());
         let listed = ctx.pairs.n_list_quartets();
@@ -239,6 +250,7 @@ impl BuildStats {
             quartets_computed: computed,
             quartets_screened: total - listed,
             skipped_by_early_exit: listed - computed,
+            walk_candidates: ctx.walk.n_candidates(),
             seconds,
             shard: None,
         }

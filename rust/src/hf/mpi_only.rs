@@ -84,14 +84,16 @@ impl FockBuilder for MpiOnlyFock {
                 };
                 let bra = pairs.entry(rij);
                 let (i, j) = (bra.i as usize, bra.j as usize);
-                let limit = walk.kl_limit(rij);
                 // Sharded: fetch through the rank's resident shard
                 // view. The bra is fetched once per task (a stolen
                 // task pays one remote get, not one per ket); spilled
                 // kets count per lookup below.
                 let shard = sharding.map(|sh| sh.shard(rank));
                 let bra_view = shard.map(|s| s.view_by_slot(bra.slot, i < j));
-                for rkl in 0..limit {
+                // Two-key ket walk: segment A then the segment-B
+                // candidates; rejected candidates skip on an integer
+                // compare (no bound is evaluated per quartet).
+                for rkl in walk.kets(rij).iter() {
                     let ket = pairs.entry(rkl);
                     let (k, l) = (ket.i as usize, ket.j as usize);
                     computed += 1;

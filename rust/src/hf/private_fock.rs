@@ -6,13 +6,13 @@
 //!   surviving-pair rank of the sorted list — from the MPI-level DLB
 //!   counter (guarded by barriers);
 //! * worker threads share the density, the Schwarz table, the
-//!   shell-pair store and the pair list, and split the task's
-//!   early-exit ket prefix with OpenMP `schedule(dynamic,1)` semantics
-//!   (a per-rank chunk counter). This replaces the paper's
-//!   `collapse(2)` over raw (j,k): the collapsed loop enumerated the
-//!   dense quartet space and tested each quartet, whereas the sorted
-//!   prefix *is* the surviving set — same dynamic balance, no dead
-//!   iterations;
+//!   shell-pair store and the pair list, and split the task's two-key
+//!   ket segments with OpenMP `schedule(dynamic,1)` semantics (a
+//!   per-rank chunk counter). This replaces the paper's `collapse(2)`
+//!   over raw (j,k): the collapsed loop enumerated the dense quartet
+//!   space and tested each quartet, whereas the walk's segments *are*
+//!   the surviving set (modulo integer-compare-rejected segment-B
+//!   candidates) — same dynamic balance, no bound evaluations;
 //! * every thread accumulates into its own Fock replica —
 //!   `reduction(+:Fock)` — reduced thread-wise, then rank-wise
 //!   (`ddi_gsumf`).
@@ -95,7 +95,7 @@ impl FockBuilder for PrivateFock {
                         match claim {
                             Some(rij) => {
                                 rij_cur.store(rij, Ordering::SeqCst);
-                                limit_cur.store(walk.kl_limit(rij), Ordering::SeqCst);
+                                limit_cur.store(walk.kets(rij).len(), Ordering::SeqCst);
                             }
                             None => rij_cur.store(usize::MAX, Ordering::SeqCst),
                         }
@@ -109,18 +109,27 @@ impl FockBuilder for PrivateFock {
                     let bra = pairs.entry(rij);
                     let (i, j) = (bra.i as usize, bra.j as usize);
                     let limit = limit_cur.load(Ordering::SeqCst);
+                    // Each thread derives the task's two-key ket walk
+                    // locally (two binary searches); `limit` is its
+                    // iteration-ordinal count, shared so every thread
+                    // agrees on the loop bound.
+                    let kw = walk.kets(rij);
+                    debug_assert_eq!(kw.len(), limit);
                     // Sharded: one bra fetch per thread per task (a
                     // stolen task pays per-thread remote gets, not one
                     // per ket); spilled kets count per lookup below.
                     let shard = sharding.map(|sh| sh.shard(rank));
                     let bra_view = shard.map(|s| s.view_by_slot(bra.slot, i < j));
                     // !$omp do schedule(dynamic,1) over the surviving
-                    // ket prefix — the early exit is the loop bound.
+                    // ket segments — the early exit is the loop bound;
+                    // rejected segment-B candidates skip on an integer
+                    // compare.
                     loop {
-                        let rkl = chunk.fetch_add(1, Ordering::Relaxed);
-                        if rkl >= limit {
+                        let t = chunk.fetch_add(1, Ordering::Relaxed);
+                        if t >= limit {
                             break;
                         }
+                        let Some(rkl) = kw.ket(t) else { continue };
                         let ket = pairs.entry(rkl);
                         let (k, l) = (ket.i as usize, ket.j as usize);
                         computed += 1;

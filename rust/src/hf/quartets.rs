@@ -55,16 +55,18 @@ pub fn n_kl_of(i: usize, j: usize) -> usize {
     crate::integrals::schwarz::pair_index(i, j) + 1
 }
 
-/// Enumerate the quartets a density-weighted early-exit walk visits, in
+/// Enumerate the quartets a density-weighted two-key walk visits, in
 /// task order: `f(rank_ij, rank_kl)` over q-ranks of the walk's
 /// [`SortedPairList`](crate::integrals::SortedPairList). This is the
 /// serial engine's loop and the oracle the parallel engines' DLB
-/// distributions must partition: no quartet is tested individually —
-/// each bra task's ket range is the walk's precomputed loop bound.
+/// distributions must partition: the Schwarz bound is never evaluated
+/// per quartet — each bra task's kets are the walk's two
+/// binary-searched segments ([`crate::integrals::PairWalk::kets`]),
+/// with rejected segment-B candidates skipped on an integer compare.
 pub fn for_each_surviving(walk: &crate::integrals::PairWalk, mut f: impl FnMut(usize, usize)) {
     for t in 0..walk.n_tasks() {
         let rij = walk.task(t);
-        for rkl in 0..walk.kl_limit(rij) {
+        for rkl in walk.kets(rij).iter() {
             f(rij, rkl);
         }
     }

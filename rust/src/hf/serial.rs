@@ -115,14 +115,17 @@ mod tests {
         assert!(g_exact.max_abs_diff(&g_screened) < 1e-7);
         assert!(e2.stats.quartets_computed <= e1.stats.quartets_computed);
         // Independent oracle (not derived from the walk): brute-force
-        // count of canonical quartets passing the weighted bound must
-        // equal what the engine computed.
+        // count of canonical quartets passing the factorized two-key
+        // weighted bound must equal what the engine computed.
         for (eng, screen, ctx) in
             [(&e1, &exact_screen, &ctx_exact), (&e2, &loose_screen, &ctx_loose)]
         {
             let mut expect = 0u64;
             crate::hf::quartets::for_each_canonical(basis.n_shells(), |(i, j, k, l)| {
-                if screen.q(i, j) * screen.q(k, l) * ctx.dmax.global > screen.tau {
+                let s_ij = screen.q(i, j) * ctx.dmax.pair_weight(i, j);
+                let s_kl = screen.q(k, l) * ctx.dmax.pair_weight(k, l);
+                if s_ij * screen.q(k, l) > screen.tau || screen.q(i, j) * s_kl > screen.tau
+                {
                     expect += 1;
                 }
             });

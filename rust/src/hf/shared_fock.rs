@@ -7,9 +7,10 @@
 //!   (the ones the legacy prescreen caught *after* claiming, paying a
 //!   full barrier round each) are impossible by construction: the walk
 //!   only spans ranks with a nonempty surviving ket prefix;
-//! * OpenMP level: threads split the task's early-exit ket prefix
-//!   (`kl_limit` ranks, rank ≤ bra rank) with `schedule(dynamic,1)`
-//!   semantics — screening is the loop bound, no per-quartet test;
+//! * OpenMP level: threads split the task's two-key ket segments
+//!   ([`PairWalk::kets`](crate::integrals::PairWalk::kets), ket rank ≤
+//!   bra rank) with `schedule(dynamic,1)` semantics — screening is the
+//!   loop bound, the Schwarz bound is never evaluated per quartet;
 //! * race elimination: updates touching shell `i` go to the thread's
 //!   private `F_I` column buffer, updates touching shell `j` to `F_J`
 //!   (both `[N_BF × shellWidth] × nthreads`, cache-line padded —
@@ -122,7 +123,7 @@ impl FockBuilder for SharedFock {
                         match claim {
                             Some(rij) => {
                                 rij_cur.store(rij, Ordering::SeqCst);
-                                nkl_cur.store(walk.kl_limit(rij), Ordering::SeqCst);
+                                nkl_cur.store(walk.kets(rij).len(), Ordering::SeqCst);
                             }
                             None => rij_cur.store(usize::MAX, Ordering::SeqCst),
                         }
@@ -144,8 +145,13 @@ impl FockBuilder for SharedFock {
                     let bra = pairs.entry(rij);
                     let (i, j) = (bra.i as usize, bra.j as usize);
                     let n_kl = nkl_cur.load(Ordering::SeqCst);
+                    // Each thread derives the task's two-key ket walk
+                    // locally; n_kl is its iteration-ordinal count.
+                    let kw = walk.kets(rij);
+                    debug_assert_eq!(kw.len(), n_kl);
                     // Dead tasks are impossible by construction of the
-                    // sorted walk (rank < n_tasks ⇒ nonempty prefix).
+                    // walk (the prefix-max live test ⇒ ≥ 1 surviving
+                    // ket, hence ≥ 1 iteration ordinal).
                     debug_assert!(n_kl > 0, "DLB handed out a dead ij task");
 
                     // Lazy F_I flush on i change (lines 14–17). Tasks
@@ -182,13 +188,18 @@ impl FockBuilder for SharedFock {
                     let bra_view = shard.map(|s| s.view_by_slot(bra.slot, i < j));
 
                     // !$omp do schedule(dynamic,1) over the surviving
-                    // ket prefix — the early exit is the loop bound; no
-                    // quartet is tested individually.
+                    // ket segments — the early exit is the loop bound;
+                    // the Schwarz bound is never evaluated per quartet
+                    // (rejected segment-B candidates skip on an integer
+                    // compare). Distinct ordinals map to distinct ket
+                    // pairs, so the kl-ownership race argument is
+                    // unchanged.
                     loop {
-                        let rkl = kl_counter.fetch_add(1, Ordering::Relaxed);
-                        if rkl >= n_kl {
+                        let t = kl_counter.fetch_add(1, Ordering::Relaxed);
+                        if t >= n_kl {
                             break;
                         }
+                        let Some(rkl) = kw.ket(t) else { continue };
                         let ket = pairs.entry(rkl);
                         let (k, l) = (ket.i as usize, ket.j as usize);
                         computed += 1;

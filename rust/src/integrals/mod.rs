@@ -19,6 +19,6 @@ pub mod schwarz;
 pub mod shellpair;
 
 pub use eri::EriEngine;
-pub use pairlist::{PairWalk, ShardingReport, SortedPairList, StoreSharding};
+pub use pairlist::{KetWalk, PairWalk, ShardingReport, SortedPairList, StoreSharding};
 pub use schwarz::{PairDensityMax, SchwarzScreen};
 pub use shellpair::{ShellPairStore, StoreShard};

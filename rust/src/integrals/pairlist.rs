@@ -12,26 +12,49 @@
 //! surviving canonical pairs (Schwarz-nonzero, with a
 //! [`ShellPairStore`] slot) sorted descending by `Q_ij`, built once per
 //! SCF next to the store. [`PairWalk`] is the per-build (per-density)
-//! half: the density weight `w = max|D|` folds into the bound
+//! half — a **two-key** walk. Each pair gets a per-build weight key
+//! `w_p` ([`PairDensityMax::pair_weight`]: block max + half row max)
+//! chosen so the Häser–Ahlrichs quartet weight factorizes over the two
+//! pairs, and the walk visits
 //!
 //! ```text
-//!   visit (ij, kl)  ⟺  Q_ij · Q_kl · w  >  τ         (rank kl ≤ rank ij)
+//!   visit (ij, kl)  ⟺  Q_ij · Q_kl · max(w_ij, w_kl)  >  τ
+//!                                                   (rank kl ≤ rank ij)
 //! ```
 //!
-//! which factorizes per pair, so the surviving ket range of every bra
-//! pair is a *prefix* of the Q-sorted list — found by binary search,
-//! walked with zero per-quartet branching. `w` bounds the
-//! Häser–Ahlrichs quartet weight (`PairDensityMax::quartet_weight ≤
-//! global`), so the visited set is a superset of the per-quartet
-//! weighted survivors: accuracy can only improve, and with ΔD densities
-//! `w → 0` collapses the walk to nothing.
+//! — *exactly* the survivors of the factorized per-quartet weighted
+//! bound, not the superset the old single global `w = max|D|` kept
+//! (`w_p ≤ max|D|`, so the two-key set nests inside the global-weight
+//! set; and `quartet_weight ≤ max(w_ij, w_kl)`, so it still contains
+//! every true Häser–Ahlrichs survivor — no physics can be lost).
+//!
+//! Writing `s_p = Q_p · w_p`, the bound splits into two one-key tests:
+//! `max(s_ij·Q_kl, Q_ij·s_kl) > τ`. Each bra's surviving kets are then
+//! two loop-bounded segments over two sorted orders:
+//!
+//! * **segment A** — kets in the static Q-descending order up to
+//!   `partition_point(s_ij·Q_kl > τ)`: the kets carried by the *bra's*
+//!   weight key;
+//! * **segment B** — kets in the per-build `s`-descending re-rank
+//!   (pairs re-ranked once per build by `Q·w`) up to
+//!   `partition_point(Q_ij·s_kl > τ)`: the kets carried by their *own*
+//!   weight key. Segment-B candidates already covered by A (or outside
+//!   the triangular range) are rejected by an integer rank comparison —
+//!   the Schwarz bound itself is never evaluated per quartet.
+//!
+//! Both limits are binary searches; `ΔD → 0` still collapses the walk
+//! to nothing. A prefix-max array of `s` over the static order makes
+//! "does bra rank r have any surviving ket" an O(1) test
+//! (`s_r·Q_0 > τ ∨ Q_r·smax[..=r] > τ`), so dead bra tasks remain
+//! impossible by construction.
 //!
 //! The outer traversal is *not* Q-ordered: tasks are handed out grouped
 //! by leading shell `i` (the order the shared-Fock engine's lazy `F_I`
-//! flush depends on). Because the active set under any weight is a
-//! prefix of the Q-sorted ranks, the per-build task order is a linear
-//! *filter* of one precomputed (i, j)-sorted template — no per-build
-//! re-sort.
+//! flush depends on). The per-build task order is a linear *filter* of
+//! one precomputed (i, j)-sorted template — no per-build re-sort of the
+//! template, and bra ranks keep their static Q-rank identity, which is
+//! what keeps [`StoreSharding::partition_tasks`] ownership stable under
+//! the per-build `Q·w` re-ranking of the *ket* side.
 
 use super::schwarz::{PairDensityMax, SchwarzScreen};
 use super::shellpair::{ShellPairStore, StoreShard};
@@ -194,54 +217,176 @@ impl SortedPairList {
                     + std::mem::size_of::<u32>())
     }
 
-    /// Early-exit loop bound of bra rank `rij` at an explicit density
-    /// weight: the number of leading ket ranks surviving
+    /// Early-exit loop bound of bra rank `rij` at an explicit *scalar*
+    /// density weight: the number of leading ket ranks surviving
     /// `q_ij·q_kl·weight > τ`, capped by the triangular constraint
-    /// `rkl ≤ rij`. [`PairWalk::kl_limit`] is this at the walk's weight;
-    /// [`StoreSharding`] uses it directly to size each shard's resident
-    /// ket prefix.
+    /// `rkl ≤ rij`. This is the PR 2 global-weight walk's ket limit;
+    /// the two-key [`PairWalk`] visits a subset of it at the same
+    /// global weight, which is why [`StoreSharding`] still uses it to
+    /// size each shard's resident ket prefix (a sound ceiling).
     #[inline]
     pub fn kl_limit_at(&self, rij: usize, weight: f64) -> usize {
         let qij = self.qs[rij];
         self.qs[..=rij].partition_point(|&qkl| qij * qkl * weight > self.tau)
     }
 
-    /// Build the per-density walk: fold `dmax`'s global weight into the
-    /// bound and materialize the active task order (a linear filter of
-    /// the precomputed (i, j) template — no sorting).
-    pub fn weighted(&self, dmax: &PairDensityMax) -> PairWalk<'_> {
-        let weight = dmax.global;
+    /// Quartets the legacy single-key (global-weight) walk would visit
+    /// at scalar `weight` — the PR 2 iteration space. Kept as the
+    /// comparison baseline for the two-key walk's tightening
+    /// (`bench_pairwalk`, property tests): at `weight = max|D|`,
+    /// [`PairWalk::n_visited`] ≤ this, usually strictly.
+    pub fn n_visited_at(&self, weight: f64) -> u64 {
         let n_active = match self.qs.first() {
             None => 0,
             Some(&q0) => self.qs.partition_point(|&q| q * q0 * weight > self.tau),
         };
+        (0..n_active).map(|r| self.kl_limit_at(r, weight) as u64).sum()
+    }
+
+    /// Build the per-density **two-key** walk: per-pair weight keys
+    /// `w_p` from `dmax`, pairs re-ranked by `s_p = Q_p·w_p` for the
+    /// segment-B ket order, a prefix-max of `s` for the O(1) live-task
+    /// test, and the active task order as a linear filter of the
+    /// precomputed (i, j) template — the template itself is never
+    /// re-sorted.
+    pub fn weighted(&self, dmax: &PairDensityMax) -> PairWalk<'_> {
+        let m = self.entries.len();
+        let mut w = Vec::with_capacity(m);
+        let mut s = Vec::with_capacity(m);
+        for e in &self.entries {
+            let wp = dmax.pair_weight(e.i as usize, e.j as usize);
+            w.push(wp);
+            s.push(e.q * wp);
+        }
+        // Per-build re-rank by Q·w (descending; static-rank tie-break
+        // keeps the B segment deterministic).
+        let mut s_order: Vec<u32> = (0..m as u32).collect();
+        s_order.sort_by(|&a, &b| {
+            s[b as usize]
+                .partial_cmp(&s[a as usize])
+                .expect("pair keys are finite")
+                .then_with(|| a.cmp(&b))
+        });
+        let s_sorted: Vec<f64> = s_order.iter().map(|&r| s[r as usize]).collect();
+        // Prefix max of s over the *static* order: smax[r] bounds every
+        // ket key a bra at rank r can meet (kets have rank ≤ r).
+        let mut smax = Vec::with_capacity(m);
+        let mut run = 0.0f64;
+        for &sv in &s {
+            run = run.max(sv);
+            smax.push(run);
+        }
+        let q0 = self.qs.first().copied().unwrap_or(0.0);
+        let tau = self.tau;
         let tasks: Vec<u32> = self
             .ij_order
             .iter()
             .copied()
-            .filter(|&r| (r as usize) < n_active)
+            .filter(|&r| {
+                let r = r as usize;
+                // Live ⟺ some ket rank ≤ r survives either key:
+                //   ∃ lo ≤ r: s_r·Q_lo > τ  ∨  Q_r·s_lo > τ
+                // with both maxima O(1) (Q_0 and the s prefix max).
+                s[r] * q0 > tau || self.qs[r] * smax[r] > tau
+            })
             .collect();
-        PairWalk { list: self, weight, n_active, tasks }
+        PairWalk {
+            list: self,
+            weight: dmax.global,
+            w,
+            s,
+            s_order,
+            s_sorted,
+            tasks,
+        }
     }
 }
 
 /// A density-weighted early-exit view over a [`SortedPairList`] — one
-/// Fock build's iteration space. Screening is a *loop bound* here: the
-/// surviving ket range of bra rank `r` is `0..kl_limit(r)`, with no
-/// per-quartet test inside.
+/// Fock build's iteration space, under the two-key bound
+/// `Q_ij·Q_kl·max(w_ij, w_kl) > τ`. Screening stays a *loop bound*:
+/// each bra's surviving kets are two binary-searched segments
+/// ([`PairWalk::kets`]); the bound is never evaluated per quartet.
 #[derive(Debug, Clone)]
 pub struct PairWalk<'a> {
     list: &'a SortedPairList,
-    /// Density weight folded into the bound: max |D| over shell blocks
-    /// (bounds every Häser–Ahlrichs quartet weight from above).
+    /// Global density weight max|D| — the scalar ceiling of every
+    /// per-pair key (`w[r] ≤ weight`). Sharding prefixes sized at this
+    /// weight stay a sound resident superset of the two-key walk.
     weight: f64,
-    /// Ranks [0, n_active) have a nonempty ket range; everything at or
-    /// beyond n_active is dead against *every* partner — dead bra tasks
-    /// are impossible by construction.
-    n_active: usize,
-    /// The active ranks in (i, j)-grouped order — what the DLB hands
-    /// out. `tasks.len() == n_active`.
+    /// Per-pair two-key weights by static rank
+    /// ([`PairDensityMax::pair_weight`]).
+    w: Vec<f64>,
+    /// s[r] = Q_r · w_r by static rank.
+    s: Vec<f64>,
+    /// Static ranks re-ranked descending by `s` — the per-build segment-B
+    /// ket order.
+    s_order: Vec<u32>,
+    /// `s_sorted[t] = s[s_order[t]]` — dense copy for the segment-B
+    /// binary search.
+    s_sorted: Vec<f64>,
+    /// The live ranks in (i, j)-grouped order — what the DLB hands
+    /// out. Every task has at least one surviving ket (prefix-max
+    /// test), so dead bra tasks are impossible by construction.
     tasks: Vec<u32>,
+}
+
+/// One bra task's surviving-ket iteration space: segment A (a prefix of
+/// the static Q order) followed by segment B (a prefix of the per-build
+/// `s` re-rank, filtered to the ranks A did not cover). Iteration
+/// ordinals `0..len()` map to ket ranks via [`KetWalk::ket`]; `None`
+/// means a rejected segment-B candidate (integer rank comparison — not
+/// a bound evaluation), which engines simply skip.
+///
+/// The `Some` kets are pairwise distinct and are *exactly* the two-key
+/// survivors `{rkl ≤ rij : Q_ij·Q_kl·max(w_ij, w_kl) > τ}`: segment A
+/// is `{rkl < a_full}` (bra key carries), segment B is
+/// `{rkl ≥ a_full : Q_ij·s_kl > τ}` (ket key carries), disjoint by the
+/// `a_full` split.
+#[derive(Debug, Clone, Copy)]
+pub struct KetWalk<'w> {
+    /// Segment-A length: min(a_full, rij + 1).
+    a_len: usize,
+    /// Uncapped segment-A threshold: static ranks < a_full survive via
+    /// the bra's key and are excluded from segment B.
+    a_full: usize,
+    /// Segment-B candidate count (prefix of `s_order`).
+    b_len: usize,
+    rij: usize,
+    s_order: &'w [u32],
+}
+
+impl KetWalk<'_> {
+    /// Total iteration ordinals (segment A + segment-B candidates).
+    /// This is the loop bound engines distribute; it can exceed the
+    /// number of computed quartets by the rejected B candidates.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.a_len + self.b_len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Ket rank of iteration ordinal `t`, or `None` for a rejected
+    /// segment-B candidate (already covered by segment A, or above the
+    /// triangular limit).
+    #[inline]
+    pub fn ket(&self, t: usize) -> Option<usize> {
+        if t < self.a_len {
+            Some(t)
+        } else {
+            let q = self.s_order[t - self.a_len] as usize;
+            (q >= self.a_full && q <= self.rij).then_some(q)
+        }
+    }
+
+    /// Surviving kets (the `Some` ordinals), in iteration order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.len()).filter_map(|t| self.ket(t))
+    }
 }
 
 impl<'a> PairWalk<'a> {
@@ -251,16 +396,23 @@ impl<'a> PairWalk<'a> {
         self.list
     }
 
-    /// The density weight folded into the bound.
+    /// The build's global density weight max|D| (ceiling of every
+    /// per-pair key).
     pub fn weight(&self) -> f64 {
         self.weight
     }
 
-    /// Number of bra tasks (= active ranks). The DLB distributes
+    /// The two-key weight of the pair at static rank `r`.
+    #[inline]
+    pub fn pair_weight(&self, r: usize) -> f64 {
+        self.w[r]
+    }
+
+    /// Number of bra tasks (= live ranks). The DLB distributes
     /// ordinals in `0..n_tasks()`; every task has work.
     #[inline]
     pub fn n_tasks(&self) -> usize {
-        self.n_active
+        self.tasks.len()
     }
 
     /// The q-rank of task ordinal `t` (tasks are (i, j)-grouped so the
@@ -270,26 +422,54 @@ impl<'a> PairWalk<'a> {
         self.tasks[t] as usize
     }
 
-    /// Early-exit loop bound of bra rank `rij`: the number of leading
-    /// ket ranks surviving `q_ij·q_kl·w > τ`, capped by the triangular
-    /// constraint `rkl ≤ rij`. Binary search over the descending-q
-    /// prefix ([`SortedPairList::kl_limit_at`] at the walk's weight).
+    /// The surviving-ket iteration space of bra rank `rij`: two binary
+    /// searches (one per key), O(log P). Cheap enough that every worker
+    /// thread derives it locally from the claimed rank.
     #[inline]
-    pub fn kl_limit(&self, rij: usize) -> usize {
-        self.list.kl_limit_at(rij, self.weight)
+    pub fn kets(&self, rij: usize) -> KetWalk<'_> {
+        let tau = self.list.tau;
+        let sb = self.s[rij];
+        let qb = self.list.qs[rij];
+        // Segment A: kets whose survival the bra's key s_b carries.
+        let a_full = self.list.qs.partition_point(|&q| sb * q > tau);
+        let a_len = a_full.min(rij + 1);
+        // Segment B: kets carrying their own key s_kl. When segment A
+        // already spans the whole triangular range, no candidate can
+        // pass the `≥ a_full` filter — skip the segment outright.
+        let b_len = if a_full > rij {
+            0
+        } else {
+            self.s_sorted.partition_point(|&sv| qb * sv > tau)
+        };
+        KetWalk { a_len, a_full, b_len, rij, s_order: &self.s_order }
     }
 
     /// Does the walk visit the rank pair {ra, rb}? (Order-free; for
-    /// property tests.)
+    /// property tests.) Evaluates the two-key bound directly — by
+    /// construction of [`PairWalk::kets`] this is exactly membership in
+    /// some task's surviving-ket set.
     pub fn visits(&self, ra: usize, rb: usize) -> bool {
         let (hi, lo) = if ra >= rb { (ra, rb) } else { (rb, ra) };
-        hi < self.n_active && lo < self.kl_limit(hi)
+        let tau = self.list.tau;
+        self.s[hi] * self.list.qs[lo] > tau || self.list.qs[hi] * self.s[lo] > tau
     }
 
     /// Total quartets the walk visits (= every engine's
-    /// `quartets_computed` for this build).
+    /// `quartets_computed` for this build). O(candidates).
     pub fn n_visited(&self) -> u64 {
-        (0..self.n_active).map(|r| self.kl_limit(r) as u64).sum()
+        self.tasks
+            .iter()
+            .map(|&r| self.kets(r as usize).iter().count() as u64)
+            .sum()
+    }
+
+    /// Total iteration ordinals across all tasks — visited quartets
+    /// plus rejected segment-B candidates. The gap to
+    /// [`PairWalk::n_visited`] is the (integer-compare-only) overhead
+    /// the two-key exactness costs; `BuildStats.walk_candidates`
+    /// reports it per build.
+    pub fn n_candidates(&self) -> u64 {
+        self.tasks.iter().map(|&r| self.kets(r as usize).len() as u64).sum()
     }
 }
 
@@ -324,6 +504,11 @@ pub fn balanced_bounds(bytes: &[u64], n_shards: usize) -> Vec<usize> {
 #[derive(Debug, Clone)]
 pub struct ShardingReport {
     pub n_shards: usize,
+    /// The weight ceiling the resident ket prefixes are sized at. The
+    /// SCF driver ratchets this up (re-deriving the prefixes) whenever
+    /// a build's density weight exceeds it, so prefix undersizing can
+    /// never masquerade as work-stealing traffic in `remote_fetches`.
+    pub weight: f64,
     /// Largest private per-rank shard footprint (owned bra tables +
     /// slot remap) — the number the acceptance gate compares against
     /// the replicated store.
@@ -362,8 +547,12 @@ pub struct ShardingReport {
 /// window per node while every rank owns only its private bra shard.
 ///
 /// Built once per SCF next to the list; walks with weights at or below
-/// the sharding weight stay fully resident, larger ones (a ΔD spike)
-/// spill into counted remote fetches without affecting correctness.
+/// the sharding weight stay fully resident (the two-key walk's visited
+/// kets nest inside the scalar-weight prefix, since every per-pair key
+/// is ≤ the global weight), larger ones (a later full rebuild or a ΔD
+/// spike) are handled by the driver re-deriving the prefixes at the new
+/// weight ceiling ([`StoreSharding::rebuilt_at`]); anything that still
+/// spills is a counted remote fetch, never a wrong result.
 #[derive(Debug)]
 pub struct StoreSharding<'a> {
     list: &'a SortedPairList,
@@ -375,6 +564,10 @@ pub struct StoreSharding<'a> {
     /// always ≤ `bounds[s]`).
     prefix: Vec<usize>,
     shards: Vec<StoreShard<'a>>,
+    /// Remote fetches accumulated by predecessor shardings this one
+    /// replaced (weight-ceiling rebuilds), folded into
+    /// [`StoreSharding::report`] so run totals survive the rebuild.
+    carried_remote_fetches: u64,
 }
 
 impl<'a> StoreSharding<'a> {
@@ -403,13 +596,20 @@ impl<'a> StoreSharding<'a> {
         let bounds = balanced_bounds(&bytes, n_shards);
 
         // Resident ket prefix per shard: the furthest ket any owned bra
-        // walks at the sharding weight, clipped to the range start.
+        // walks at the sharding weight, clipped to the range start. The
+        // relative pad absorbs the float-association difference between
+        // this scalar bound ((q·q)·w) and the walk's factorized per-pair
+        // products ((q·w_p)·q, w_p ≤ w): each product carries ≤ ~2 ulp
+        // of rounding, so a τ-boundary quartet the walk visits can never
+        // land one rank past the sized prefix. 1e-12 ≫ 4·ε with rooms to
+        // spare, and at most admits a boundary rank or two extra.
+        let pad = weight * (1.0 + 1e-12);
         let mut prefix = Vec::with_capacity(n_shards);
         for s in 0..n_shards {
             let (lo, hi) = (bounds[s], bounds[s + 1]);
             let mut p = 0usize;
             for rank in lo..hi {
-                p = p.max(list.kl_limit_at(rank, weight).min(lo));
+                p = p.max(list.kl_limit_at(rank, pad).min(lo));
             }
             prefix.push(p);
         }
@@ -424,7 +624,38 @@ impl<'a> StoreSharding<'a> {
             })
             .collect();
 
-        StoreSharding { list, store, weight, bounds, prefix, shards }
+        StoreSharding {
+            list,
+            store,
+            weight,
+            bounds,
+            prefix,
+            shards,
+            carried_remote_fetches: 0,
+        }
+    }
+
+    /// Re-derive the sharding at a (usually larger) weight ceiling:
+    /// same list, same store, and — because [`balanced_bounds`] depends
+    /// only on table bytes — the *same ownership ranges*, so DLB task
+    /// partitions and per-shard claims stay comparable across the
+    /// rebuild. Only the resident ket prefixes change (they grow
+    /// monotonically with the weight). Remote fetches served so far are
+    /// carried into the new sharding's [`StoreSharding::report`].
+    ///
+    /// The SCF driver calls this whenever a build's density weight
+    /// exceeds the current ceiling — the fix for prefixes sized at the
+    /// core-guess weight silently spilling on later full rebuilds with
+    /// a larger `max|D|`.
+    pub fn rebuilt_at(&self, weight: f64) -> StoreSharding<'a> {
+        let mut next = StoreSharding::build(
+            self.list,
+            self.store,
+            self.n_shards(),
+            weight.max(self.weight),
+        );
+        next.carried_remote_fetches = self.report().remote_fetches;
+        next
     }
 
     pub fn n_shards(&self) -> usize {
@@ -493,9 +724,11 @@ impl<'a> StoreSharding<'a> {
         let prefix_bytes = (0..prefix_len)
             .map(|rank| self.store.table_bytes_at(self.list.slot(rank)))
             .sum();
-        let remote_fetches = self.shards.iter().map(|s| s.remote_fetches()).sum();
+        let remote_fetches = self.carried_remote_fetches
+            + self.shards.iter().map(|s| s.remote_fetches()).sum::<u64>();
         ShardingReport {
             n_shards: n,
+            weight: self.weight,
             max_shard_bytes,
             mean_shard_bytes,
             prefix_len,
@@ -583,40 +816,65 @@ mod tests {
         for t in 0..walk.n_tasks() {
             let r = walk.task(t);
             // Every handed-out task has work: dead bra tasks are
-            // impossible by construction.
-            assert!(walk.kl_limit(r) > 0, "task {t} (rank {r}) is dead");
+            // impossible by construction (the prefix-max live test).
+            assert!(
+                walk.kets(r).iter().next().is_some(),
+                "task {t} (rank {r}) is dead"
+            );
             let ij = list.pair(r);
             if t > 0 {
                 assert!(ij >= prev, "tasks not (i,j)-grouped at {t}");
             }
             prev = ij;
         }
+        // And conversely: ranks outside the task list have no kets.
+        let live: std::collections::HashSet<usize> =
+            (0..walk.n_tasks()).map(|t| walk.task(t)).collect();
+        for r in 0..list.len() {
+            if !live.contains(&r) {
+                assert!(
+                    walk.kets(r).iter().next().is_none(),
+                    "rank {r} has work but was not handed out"
+                );
+            }
+        }
     }
 
     #[test]
-    fn kl_limit_matches_linear_scan() {
+    fn ket_segments_match_linear_scan() {
+        // Each bra's Some-kets must equal the brute-force two-key
+        // survivor set over its triangular range, with no duplicates.
         let (basis, store, screen) = setup(&molecules::benzene(), 1e-9);
         let list = SortedPairList::build(&screen, &store);
         let d = random_density(basis.n_bf, 23);
         let dmax = PairDensityMax::build(&basis, &d);
         let walk = list.weighted(&dmax);
-        let w = walk.weight();
         for rij in (0..list.len()).step_by(7) {
-            let mut expect = 0usize;
-            for rkl in 0..=rij {
-                if list.q(rij) * list.q(rkl) * w > list.tau() {
-                    expect += 1;
-                } else {
-                    break; // descending q: nothing later survives
-                }
-            }
-            assert_eq!(walk.kl_limit(rij), expect, "rij={rij}");
+            let kw = walk.kets(rij);
+            let mut got: Vec<usize> = kw.iter().collect();
+            let n_got = got.len();
+            got.sort_unstable();
+            got.dedup();
+            assert_eq!(got.len(), n_got, "rij={rij}: duplicate ket");
+            // Oracle in the walk's own factorized form (s·q with
+            // s = q·w precomputed) so boundary quartets can't flip on
+            // a rounding-order difference.
+            let s_ij = list.q(rij) * walk.pair_weight(rij);
+            let expect: Vec<usize> = (0..=rij)
+                .filter(|&rkl| {
+                    let s_kl = list.q(rkl) * walk.pair_weight(rkl);
+                    s_ij * list.q(rkl) > list.tau() || list.q(rij) * s_kl > list.tau()
+                })
+                .collect();
+            assert_eq!(got, expect, "rij={rij}");
+            assert!(kw.len() >= n_got, "candidates below survivors");
         }
     }
 
     #[test]
     fn visited_set_is_exact_bound_set() {
-        // Brute force over every rank pair: visited ⟺ bound survives.
+        // Brute force over every rank pair: visited ⟺ the two-key
+        // bound survives — exactly, not as a superset.
         let (basis, store, screen) = setup(&molecules::water(), 1e-10);
         let list = SortedPairList::build(&screen, &store);
         let d = random_density(basis.n_bf, 5);
@@ -625,7 +883,11 @@ mod tests {
         let mut visited = 0u64;
         for ra in 0..list.len() {
             for rb in 0..=ra {
-                let expect = list.q(ra) * list.q(rb) * walk.weight() > list.tau();
+                // Factorized oracle (same rounding as the walk).
+                let sa = list.q(ra) * walk.pair_weight(ra);
+                let sb = list.q(rb) * walk.pair_weight(rb);
+                let expect =
+                    sa * list.q(rb) > list.tau() || list.q(ra) * sb > list.tau();
                 assert_eq!(walk.visits(ra, rb), expect, "({ra},{rb})");
                 if expect {
                     visited += 1;
@@ -634,6 +896,45 @@ mod tests {
         }
         assert_eq!(walk.n_visited(), visited);
         assert!(visited <= list.n_list_quartets());
+        assert!(walk.n_candidates() >= walk.n_visited());
+    }
+
+    #[test]
+    fn two_key_walk_nests_inside_global_weight_walk() {
+        // Every two-key visit passes the global-weight bound (w_p ≤
+        // max|D|), so the visited count is bounded by the PR 2 walk's —
+        // and a density with an uneven block structure makes it
+        // strictly smaller.
+        let (basis, store, screen) = setup(&molecules::benzene(), 1e-10);
+        let list = SortedPairList::build(&screen, &store);
+        let d = random_density(basis.n_bf, 47);
+        let dmax = PairDensityMax::build(&basis, &d);
+        let walk = list.weighted(&dmax);
+        for ra in 0..list.len() {
+            for rb in 0..=ra {
+                if walk.visits(ra, rb) {
+                    assert!(
+                        list.q(ra) * list.q(rb) * dmax.global > list.tau(),
+                        "({ra},{rb}): two-key visit outside the global set"
+                    );
+                }
+            }
+        }
+        assert!(walk.n_visited() <= list.n_visited_at(dmax.global));
+
+        // A single-block density: only quartets touching that block's
+        // shells carry weight, so the two-key walk must drop strictly
+        // below the global-weight walk.
+        let mut d1 = Matrix::zeros(basis.n_bf, basis.n_bf);
+        d1.set(0, 0, 1.0);
+        let dm1 = PairDensityMax::build(&basis, &d1);
+        let w1 = list.weighted(&dm1);
+        assert!(
+            w1.n_visited() < list.n_visited_at(dm1.global),
+            "localized density: two-key {} vs global {}",
+            w1.n_visited(),
+            list.n_visited_at(dm1.global)
+        );
     }
 
     #[test]
@@ -697,7 +998,9 @@ mod tests {
             let (lo, hi) = sh.rank_range(s);
             for rij in lo..hi {
                 assert!(shard.is_resident(list.slot(rij)), "own bra {rij}");
-                for rkl in 0..walk.kl_limit(rij) {
+                // The two-key walk's visited kets nest inside the
+                // scalar-weight prefix the shard was sized with.
+                for rkl in walk.kets(rij).iter() {
                     assert!(
                         shard.is_resident(list.slot(rkl)),
                         "shard {s}: bra {rij} touches non-resident ket {rkl}"
@@ -705,6 +1008,62 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn rebuilt_sharding_keeps_ownership_and_carries_fetches() {
+        // A weight-ceiling rebuild must not move ownership (bounds
+        // depend only on table bytes), must grow the resident prefixes
+        // monotonically, and must carry the remote-fetch total.
+        let (basis, store, screen) = setup(&molecules::benzene(), 1e-9);
+        let list = SortedPairList::build(&screen, &store);
+        // Shard at a deliberately tiny weight: the prefixes are sized
+        // for almost nothing.
+        let sh = StoreSharding::build(&list, &store, 4, 1e-8);
+        // A full-density walk later in the SCF: larger weight.
+        let d = random_density(basis.n_bf, 53);
+        let dmax = PairDensityMax::build(&basis, &d);
+        assert!(dmax.global > 1e-8);
+        let walk = list.weighted(&dmax);
+        // The undersized prefixes must actually spill somewhere —
+        // this is the PR 3 bug the ceiling fix closes.
+        let mut spilled = 0u64;
+        for s in 0..sh.n_shards() {
+            let (lo, hi) = sh.rank_range(s);
+            for rij in lo..hi {
+                for rkl in walk.kets(rij).iter() {
+                    if !sh.shard(s).is_resident(list.slot(rkl)) {
+                        // Count it the way an engine would (the view
+                        // fetch increments the shard's counter).
+                        let _ = sh.shard(s).view_by_slot(list.slot(rkl), false);
+                        spilled += 1;
+                    }
+                }
+            }
+        }
+        assert!(spilled > 0, "undersized prefixes should spill");
+        assert_eq!(sh.report().remote_fetches, spilled);
+
+        let sh2 = sh.rebuilt_at(dmax.global);
+        assert_eq!(sh2.weight(), dmax.global);
+        for s in 0..sh.n_shards() {
+            assert_eq!(sh2.rank_range(s), sh.rank_range(s), "ownership moved");
+            assert!(sh2.prefix_len(s) >= sh.prefix_len(s), "prefix shrank");
+        }
+        // At the new ceiling every visited ket is resident again…
+        for s in 0..sh2.n_shards() {
+            let (lo, hi) = sh2.rank_range(s);
+            for rij in lo..hi {
+                for rkl in walk.kets(rij).iter() {
+                    assert!(
+                        sh2.shard(s).is_resident(list.slot(rkl)),
+                        "shard {s}: ket {rkl} still non-resident after rebuild"
+                    );
+                }
+            }
+        }
+        // …and the spill history survives the rebuild.
+        assert_eq!(sh2.report().remote_fetches, spilled);
     }
 
     #[test]

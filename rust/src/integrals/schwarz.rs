@@ -207,6 +207,10 @@ fn diagonal_max(basis: &BasisSet, i: usize, j: usize, buf: &[f64]) -> f64 {
 pub struct PairDensityMax {
     /// m[pair_index(i,j)] = max |D_ab| over the (i,j) shell block.
     m: Vec<f64>,
+    /// row[i] = max over partner shells c of the (i,c) block max — the
+    /// density "row" of shell i in shell-pair space. Feeds the per-pair
+    /// two-key weights ([`PairDensityMax::pair_weight`]).
+    row: Vec<f64>,
     /// Global max over all blocks.
     pub global: f64,
     n_shells: usize,
@@ -216,6 +220,7 @@ impl PairDensityMax {
     pub fn build(basis: &BasisSet, d: &Matrix) -> PairDensityMax {
         let n = basis.n_shells();
         let mut m = vec![0.0f64; n * (n + 1) / 2];
+        let mut row = vec![0.0f64; n];
         let mut global = 0.0f64;
         for i in 0..n {
             let ri = basis.shell_bf_range(i);
@@ -228,10 +233,12 @@ impl PairDensityMax {
                     }
                 }
                 m[pair_index(i, j)] = mx;
+                row[i] = row[i].max(mx);
+                row[j] = row[j].max(mx);
                 global = global.max(mx);
             }
         }
-        PairDensityMax { m, global, n_shells: n }
+        PairDensityMax { m, row, global, n_shells: n }
     }
 
     /// Max |D| over the (i,j) shell block, any index order.
@@ -255,6 +262,36 @@ impl PairDensityMax {
             .max(self.get(j, k))
             .max(self.get(j, l));
         coul.max(0.5 * exch)
+    }
+
+    /// Density row max of shell `i`: max over partner shells of the
+    /// block max.
+    #[inline]
+    pub fn row(&self, i: usize) -> f64 {
+        self.row[i]
+    }
+
+    /// Per-pair *two-key* weight
+    ///
+    /// ```text
+    /// w_ij = max( |D|_ij , ½·max(row_i, row_j) )
+    /// ```
+    ///
+    /// chosen so the Häser–Ahlrichs quartet weight factorizes over the
+    /// two pairs of any quartet:
+    ///
+    /// ```text
+    /// quartet_weight(i,j,k,l) ≤ max(w_ij, w_kl) ≤ global
+    /// ```
+    ///
+    /// (the Coulomb blocks |D|_ij, |D|_kl sit inside their own pair's
+    /// key, and every ½-weighted exchange block |D|_xy has one shell in
+    /// each pair, so it is bounded by both rows). This is the key the
+    /// two-key [`PairWalk`](super::pairlist::PairWalk) folds into the
+    /// Schwarz bound per *pair* instead of the single global max.
+    #[inline]
+    pub fn pair_weight(&self, i: usize, j: usize) -> f64 {
+        self.get(i, j).max(0.5 * self.row[i].max(self.row[j]))
     }
 }
 
@@ -383,6 +420,42 @@ mod tests {
             assert!(w >= dm.get(i, j).max(dm.get(k, l)));
             assert!(w >= 0.5 * dm.get(i, k));
         }
+    }
+
+    #[test]
+    fn pair_weight_factorizes_quartet_weight() {
+        // The two-key invariant the sorted walk's exactness rests on:
+        // quartet_weight(i,j,k,l) ≤ max(w_ij, w_kl) ≤ global, for every
+        // canonical quartet of a random density.
+        let m = molecules::water();
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let n = b.n_bf;
+        let mut d = Matrix::zeros(n, n);
+        let mut rng = crate::util::prng::Rng::new(71);
+        for i in 0..n {
+            for j in 0..=i {
+                let x = rng.range(-0.9, 0.9);
+                d.set(i, j, x);
+                d.set(j, i, x);
+            }
+        }
+        let dm = PairDensityMax::build(&b, &d);
+        let ns = b.n_shells();
+        for i in 0..ns {
+            // Row maxima dominate their own blocks, symmetrically.
+            for j in 0..ns {
+                assert!(dm.row(i) >= dm.get(i, j) - 1e-15);
+                assert_eq!(dm.pair_weight(i, j), dm.pair_weight(j, i));
+                assert!(dm.pair_weight(i, j) <= dm.global + 1e-15);
+            }
+        }
+        crate::hf::quartets::for_each_canonical(ns, |(i, j, k, l)| {
+            let two_key = dm.pair_weight(i, j).max(dm.pair_weight(k, l));
+            assert!(
+                dm.quartet_weight(i, j, k, l) <= two_key + 1e-15,
+                "({i}{j}|{k}{l}): HA weight above the two-key bound"
+            );
+        });
     }
 
     #[test]

@@ -152,13 +152,14 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
     if let Some(sh) = &res.sharding {
         println!(
             "  sharded store: {} shards, max {} / mean {} per shard ({:.2}x replicated), \
-             shared ket prefix {} pairs ({}), {} remote fetches",
+             shared ket prefix {} pairs ({}) at weight ceiling {:.2e}, {} remote fetches",
             sh.n_shards,
             human_bytes(sh.max_shard_bytes as f64),
             human_bytes(sh.mean_shard_bytes as f64),
             sh.max_shard_bytes as f64 / res.store_bytes as f64,
             sh.prefix_len,
             human_bytes(sh.prefix_bytes as f64),
+            sh.weight,
             sh.remote_fetches,
         );
         if let Some(sb) = res.build_stats.last().and_then(|s| s.shard) {
@@ -198,6 +199,16 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
         println!(
             "  skipped by early exit: {} (first iter) -> {} (final iter)",
             first.skipped_by_early_exit, last.skipped_by_early_exit,
+        );
+        // Two-key walk observability: candidates enumerated vs quartets
+        // computed. The gap is the integer-compare-only segment-B
+        // rejection overhead that buys the exact weighted survivor set.
+        println!(
+            "  two-key walk: {} candidates / {} computed (first iter) -> {} / {} (final iter)",
+            first.walk_candidates,
+            first.quartets_computed,
+            last.walk_candidates,
+            last.quartets_computed,
         );
     }
     Ok(())

@@ -21,7 +21,7 @@ use crate::chem::Molecule;
 use crate::hf::{BuildStats, FockBuilder, FockContext};
 use crate::integrals::oneint::{core_hamiltonian, overlap_matrix};
 use crate::integrals::{
-    PairDensityMax, SchwarzScreen, ShardingReport, ShellPairStore, SortedPairList, StoreSharding,
+    SchwarzScreen, ShardingReport, ShellPairStore, SortedPairList, StoreSharding,
 };
 use crate::linalg::{eigen, Matrix};
 
@@ -163,13 +163,17 @@ impl RhfDriver {
         let mut d = self.new_density(&h, &x, n_occ).1;
         // Sharded store: partition the Q-sorted bra ranks across the
         // virtual ranks once per SCF, sizing each shard's resident ket
-        // prefix at the first (full-density) build's weight — the
-        // largest walk of the run; later ΔD walks only shrink. A rare
-        // larger walk spills into counted remote fetches, never into
-        // wrong results.
-        let sharding: Option<StoreSharding<'_>> = (self.shard_store > 0).then(|| {
-            let w0 = PairDensityMax::build(basis, &d).global;
-            StoreSharding::build(&pairs, &store, self.shard_store, w0)
+        // prefix at the core-guess build's weight. That weight is NOT a
+        // ceiling for the whole run — converging densities (and DIIS
+        // extrapolation) can push later full rebuilds' max|D| above it
+        // — so the loop below ratchets: any build whose density weight
+        // exceeds the current sharding weight re-derives the prefixes
+        // (same ownership bounds, carried fetch counts) before the
+        // build runs. Un-stolen work therefore never spills into
+        // remote fetches; stealing traffic remains the only source.
+        let mut sharding: Option<StoreSharding<'_>> = (self.shard_store > 0).then(|| {
+            // max_abs == PairDensityMax::global for a symmetric density.
+            StoreSharding::build(&pairs, &store, self.shard_store, d.max_abs())
         });
         let mut diis = Diis::new(8);
         let mut history = Vec::new();
@@ -197,23 +201,40 @@ impl RhfDriver {
                 || d_of_g.is_none()
                 || (self.rebuild_every > 0 && it % self.rebuild_every == 0);
             let t0 = std::time::Instant::now();
-            if full_rebuild {
-                let ctx = match &sharding {
-                    Some(sh) => FockContext::with_sharding(basis, &store, &screen, &pairs, &d, sh),
-                    None => FockContext::new(basis, &store, &screen, &pairs, &d),
-                };
-                g_total = builder.build_2e(&ctx);
-            } else {
+            // Density this build contracts: the full D or ΔD.
+            let delta = (!full_rebuild).then(|| {
                 let mut delta = d.clone();
                 delta.sub_assign(d_of_g.as_ref().unwrap());
-                let ctx = match &sharding {
-                    Some(sh) => {
-                        FockContext::with_sharding(basis, &store, &screen, &pairs, &delta, sh)
-                    }
-                    None => FockContext::new(basis, &store, &screen, &pairs, &delta),
-                };
-                let g_delta = builder.build_2e(&ctx);
-                g_total.add_assign(&g_delta);
+                delta
+            });
+            let bd: &Matrix = delta.as_ref().unwrap_or(&d);
+            // Weight-ceiling ratchet for the sharded store (see the
+            // sharding comment above): re-derive the resident prefixes
+            // before any build whose weight exceeds the current ceiling.
+            // max_abs of a symmetric density equals PairDensityMax's
+            // global (the block maxima tile the matrix), so the check
+            // costs one matrix scan, not a second PairDensityMax build.
+            if let Some(w) = sharding.as_ref().and_then(|sh| {
+                let w = bd.max_abs();
+                (w > sh.weight()).then_some(w)
+            }) {
+                let prev = sharding.take().expect("checked above");
+                log::debug!(
+                    "iter {it}: density weight {w:.3e} exceeds shard prefix weight {:.3e}; re-deriving resident prefixes",
+                    prev.weight()
+                );
+                sharding = Some(prev.rebuilt_at(w));
+            }
+            let ctx = match &sharding {
+                Some(sh) => FockContext::with_sharding(basis, &store, &screen, &pairs, bd, sh),
+                None => FockContext::new(basis, &store, &screen, &pairs, bd),
+            };
+            let g_build = builder.build_2e(&ctx);
+            drop(ctx);
+            if full_rebuild {
+                g_total = g_build;
+            } else {
+                g_total.add_assign(&g_build);
             }
             fock_seconds += t0.elapsed().as_secs_f64();
             build_stats.push(builder.last_stats());
@@ -439,6 +460,86 @@ mod tests {
             rep.max_shard_bytes < sharded.store_bytes,
             "a shard must be smaller than the replicated store"
         );
+    }
+
+    #[test]
+    fn sharded_prefix_tracks_weight_ceiling_across_full_rebuilds() {
+        // Regression for the PR 3 sizing bug: the resident ket prefixes
+        // were sized once at the core-guess weight, so later periodic
+        // *full* rebuilds carrying a larger max|D| pushed visited kets
+        // past the prefix and silently inflated remote_fetches. With
+        // the ratchet, every build's visited kets must be resident in
+        // their bra's own shard — zero remote ket fetches on un-stolen
+        // work, asserted per build by a probing builder (stealing, the
+        // legitimate fetch source, is not exercised: the probe's inner
+        // serial engine never claims through the sharded DLB).
+        struct ResidencyProbe {
+            inner: SerialFock,
+            kets_checked: u64,
+            builds_probed: u64,
+        }
+        impl crate::hf::FockBuilder for ResidencyProbe {
+            fn build_2e(&mut self, ctx: &crate::hf::FockContext) -> Matrix {
+                let sh = ctx.sharding.expect("probe requires a sharded context");
+                assert!(
+                    ctx.dmax.global <= sh.weight(),
+                    "driver ran a build above the sharding weight ceiling"
+                );
+                for s in 0..sh.n_shards() {
+                    let (lo, hi) = sh.rank_range(s);
+                    let shard = sh.shard(s);
+                    for t in 0..ctx.walk.n_tasks() {
+                        let rij = ctx.walk.task(t);
+                        if rij < lo || rij >= hi {
+                            continue;
+                        }
+                        for rkl in ctx.walk.kets(rij).iter() {
+                            assert!(
+                                shard.is_resident(ctx.pairs.slot(rkl)),
+                                "shard {s}: bra {rij} ket {rkl} non-resident"
+                            );
+                            self.kets_checked += 1;
+                        }
+                    }
+                }
+                self.builds_probed += 1;
+                self.inner.build_2e(ctx)
+            }
+            fn name(&self) -> &'static str {
+                "residency-probe"
+            }
+            fn last_stats(&self) -> crate::hf::BuildStats {
+                self.inner.last_stats()
+            }
+        }
+
+        // rebuild_every: 1 forces a full rebuild at every iteration, so
+        // the converging density's growing weight hits the ceiling path
+        // repeatedly.
+        let mut probe = ResidencyProbe {
+            inner: SerialFock::new(),
+            kets_checked: 0,
+            builds_probed: 0,
+        };
+        let r = RhfDriver { shard_store: 4, rebuild_every: 1, ..Default::default() }
+            .run(&molecules::water(), BasisName::Sto3g, &mut probe)
+            .unwrap();
+        assert!(r.converged);
+        assert!(probe.builds_probed as usize == r.iterations);
+        assert!(probe.kets_checked > 0);
+        let rep = r.sharding.as_ref().unwrap();
+        // The serial engine never fetches through shard views and the
+        // probe only tests residency, so the run-level fetch counter
+        // must stay at zero — under the old sizing it drifted up on
+        // every post-core-guess full rebuild.
+        assert_eq!(rep.remote_fetches, 0);
+        // The reported ceiling covers the converged density too.
+        let w_final = crate::integrals::PairDensityMax::build(
+            &BasisSet::assemble(&molecules::water(), BasisName::Sto3g).unwrap(),
+            &r.density,
+        )
+        .global;
+        assert!(rep.weight >= 0.99 * w_final, "ceiling {} vs final weight {w_final}", rep.weight);
     }
 
     #[test]

@@ -1,13 +1,18 @@
-//! The sorted early-exit walk's contract, end to end:
+//! The two-key sorted early-exit walk's contract, end to end:
 //!
-//! 1. the walk visits *exactly* the quartet set passing the weighted
-//!    bound Q_ij·Q_kl·max|D| > τ (brute-force enumeration oracle on
-//!    water and a random-density benzene);
-//! 2. that set is a superset of the legacy per-quartet Häser–Ahlrichs
-//!    survivors (so dropping the per-quartet test cannot lose physics);
+//! 1. the walk visits *exactly* the quartet set passing the factorized
+//!    per-quartet weighted bound Q_ij·Q_kl·max(w_ij, w_kl) > τ with
+//!    per-pair row-max weights — not a superset (brute-force
+//!    enumeration oracle on water and a random-density benzene);
+//! 2. that set is sandwiched: it contains every per-quartet
+//!    Häser–Ahlrichs survivor (dropping the per-quartet test cannot
+//!    lose physics) and nests inside the PR 2 global-weight walk's set
+//!    (the tightening is free of new quartets), strictly below it on
+//!    densities with uneven block structure;
 //! 3. all four engines still land on the serial full-rebuild energy at
 //!    1e-8 through the incremental ΔD driver (see also
-//!    `engines_agree.rs`).
+//!    `engines_agree.rs`, and `sharding.rs` for the sharded-store
+//!    variant on the re-ranked task template).
 
 use std::collections::HashSet;
 
@@ -59,7 +64,6 @@ fn walk_visits_exactly_the_weighted_bound_set() {
         let pairs = SortedPairList::build(&screen, &store);
         let d = random_density(basis.n_bf, seed);
         let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
-        let weight = ctx.dmax.global;
 
         // Walk side: the quartets the engines will compute.
         let mut visited = HashSet::new();
@@ -74,34 +78,92 @@ fn walk_visits_exactly_the_weighted_bound_set() {
         });
 
         // Oracle side: brute-force enumeration of the whole canonical
-        // space, testing the weighted bound per quartet.
+        // space, testing the factorized two-key weighted bound per
+        // quartet.
         let mut expected = HashSet::new();
         let mut legacy_survivors = 0u64;
         for_each_canonical(basis.n_shells(), |(i, j, k, l)| {
-            let passes = screen.q(i, j) * screen.q(k, l) * weight > tau;
+            // Factorized oracle — the same s·q rounding the walk's
+            // binary searches use, so boundary quartets can't flip.
+            let s_ij = screen.q(i, j) * ctx.dmax.pair_weight(i, j);
+            let s_kl = screen.q(k, l) * ctx.dmax.pair_weight(k, l);
+            let passes =
+                s_ij * screen.q(k, l) > tau || screen.q(i, j) * s_kl > tau;
             if passes {
                 expected.insert(quartet_key(i, j, k, l));
+                // Sandwich, upper side: every two-key survivor also
+                // passes the PR 2 global-weight bound.
+                assert!(
+                    screen.q(i, j) * screen.q(k, l) * ctx.dmax.global > tau,
+                    "{}: ({i}{j}|{k}{l}) outside the global-weight set",
+                    mol.name
+                );
             }
             if !ctx.screened(i, j, k, l) {
                 legacy_survivors += 1;
-                // Superset property: every legacy (block-weighted)
-                // survivor must be in the walk's visited set.
+                // Sandwich, lower side: every legacy per-quartet
+                // Häser–Ahlrichs survivor must stay in the visited set.
                 assert!(
                     passes,
-                    "{}: legacy survivor ({i}{j}|{k}{l}) missed by the bound",
+                    "{}: HA survivor ({i}{j}|{k}{l}) missed by the two-key bound",
                     mol.name
                 );
             }
         });
 
-        assert_eq!(visited, expected, "{}: visited ≠ bound set", mol.name);
+        assert_eq!(visited, expected, "{}: visited ≠ two-key bound set", mol.name);
         assert_eq!(visited.len() as u64, ctx.walk.n_visited(), "{}", mol.name);
         assert!(
             visited.len() as u64 >= legacy_survivors,
-            "{}: superset violated",
+            "{}: HA superset violated",
+            mol.name
+        );
+        assert!(
+            visited.len() as u64 <= pairs.n_visited_at(ctx.dmax.global),
+            "{}: global-weight nesting violated",
             mol.name
         );
     }
+}
+
+#[test]
+fn two_key_walk_strictly_tighter_on_uneven_density() {
+    // The acceptance claim: on a ΔD-like density whose weight lives in
+    // a few shell blocks, the two-key walk computes strictly fewer
+    // quartets than the global-weight walk at the same τ — while still
+    // containing every per-quartet Häser–Ahlrichs survivor.
+    let mol = molecules::benzene();
+    let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+    let store = ShellPairStore::build(&basis);
+    let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+    let pairs = SortedPairList::build(&screen, &store);
+    // Localized "ΔD": one strong block plus a weak band — the late-SCF
+    // shape where per-pair keys beat the single global max.
+    let n = basis.n_bf;
+    let mut d = Matrix::zeros(n, n);
+    d.set(0, 0, 0.8);
+    for a in 0..n {
+        d.add(a, a, 1e-7);
+    }
+    let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
+    let two_key = ctx.walk.n_visited();
+    let global = pairs.n_visited_at(ctx.dmax.global);
+    assert!(
+        two_key < global,
+        "two-key {two_key} must be strictly below global {global}"
+    );
+    let mut ha_survivors = 0u64;
+    for_each_canonical(basis.n_shells(), |(i, j, k, l)| {
+        if !ctx.screened(i, j, k, l) {
+            ha_survivors += 1;
+        }
+    });
+    assert!(two_key >= ha_survivors, "lost HA survivors");
+    // And the engines compute exactly that set.
+    let mut eng = SerialFock::new();
+    let _ = eng.build_2e(&ctx);
+    assert_eq!(eng.stats.quartets_computed, two_key);
+    assert_eq!(eng.stats.walk_candidates, ctx.walk.n_candidates());
 }
 
 #[test]

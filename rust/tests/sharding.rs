@@ -76,25 +76,46 @@ fn sharded_engines_reproduce_serial_scf_energy() {
 #[test]
 fn sharded_build_matches_unsharded_fock_matrix() {
     // One Fock build, same context modulo sharding: identical physics.
+    // Two densities: a dense random one (segment A dominates the
+    // two-key walk) and a localized one (uneven weights push work into
+    // the s-reranked segment B, which must fetch correctly through the
+    // shard views too).
     let mol = molecules::benzene();
     let (basis, store, screen) = setup(&mol);
     let pairs = SortedPairList::build(&screen, &store);
-    let d = random_density(basis.n_bf, 97);
-    let plain = FockContext::new(&basis, &store, &screen, &pairs, &d);
-    let want = SerialFock::new().build_2e(&plain);
-    let sharding = StoreSharding::build(&pairs, &store, 4, plain.walk.weight());
-    let ctx = FockContext::with_sharding(&basis, &store, &screen, &pairs, &d, &sharding);
-    for (name, builder) in [
-        ("mpi", &mut MpiOnlyFock::new(4) as &mut dyn FockBuilder),
-        ("private", &mut PrivateFock::new(4, 2)),
-        ("shared", &mut SharedFock::new(4, 3)),
+    let localized = {
+        let mut d = Matrix::zeros(basis.n_bf, basis.n_bf);
+        d.set(0, 0, 0.9);
+        for a in 0..basis.n_bf {
+            d.add(a, a, 1e-6);
+        }
+        d
+    };
+    for (case, d) in [
+        ("random", random_density(basis.n_bf, 97)),
+        ("localized", localized),
     ] {
-        let got = builder.build_2e(&ctx);
-        assert!(
-            got.max_abs_diff(&want) < 1e-11,
-            "{name}: diff {}",
-            got.max_abs_diff(&want)
-        );
+        let plain = FockContext::new(&basis, &store, &screen, &pairs, &d);
+        let want = SerialFock::new().build_2e(&plain);
+        let sharding = StoreSharding::build(&pairs, &store, 4, plain.walk.weight());
+        let ctx = FockContext::with_sharding(&basis, &store, &screen, &pairs, &d, &sharding);
+        for (name, builder) in [
+            ("mpi", &mut MpiOnlyFock::new(4) as &mut dyn FockBuilder),
+            ("private", &mut PrivateFock::new(4, 2)),
+            ("shared", &mut SharedFock::new(4, 3)),
+        ] {
+            let got = builder.build_2e(&ctx);
+            assert!(
+                got.max_abs_diff(&want) < 1e-11,
+                "{case}/{name}: diff {}",
+                got.max_abs_diff(&want)
+            );
+            assert_eq!(
+                builder.last_stats().quartets_computed,
+                ctx.walk.n_visited(),
+                "{case}/{name}: sharded build must compute exactly the walk"
+            );
+        }
     }
 }
 
