@@ -57,17 +57,21 @@ fn main() {
     }
     print!("{}", report::table(&rows));
 
-    println!("\n== Shell-pair store: replicated vs sharded (MPI-only, 256 ranks/node) ==");
+    println!("\n== Shell-pair store: replicated vs sharded vs ring (MPI-only, 256 ranks/node) ==");
     println!("   sharded gate figures: max shard at 1.5x the even split, shared ket");
-    println!("   prefix window at 0.3x one copy (held once per node)\n");
+    println!("   prefix window at 0.3x one copy (held once per node); ring: own +");
+    println!("   visiting block per rank, no window, traffic = (N-1) copies/build\n");
     let mut rows = vec![vec![
         "system".into(),
         "store/copy".into(),
         "replicated/node".into(),
         "sharded/node".into(),
+        "ring/node".into(),
         "total repl.".into(),
         "total sharded".into(),
-        "feasible (repl/shard)".into(),
+        "total ring".into(),
+        "ring traffic/build".into(),
+        "feasible (repl/shard/ring)".into(),
     ]];
     for sys in PaperSystem::ALL {
         let n = sys.n_bf();
@@ -80,6 +84,7 @@ fn main() {
         let repl_store = memmodel::shared_scf_bytes_per_node(sb, pl, 256);
         let shard_store =
             memmodel::sharded_scf_bytes_per_node(sb / 256.0 * 1.5, 0.3 * sb, pl, 256);
+        let ring_store = memmodel::ring_scf_bytes_per_node(sb / 256.0 * 1.5, pl, 256);
         let total_repl =
             memmodel::exact_bytes_with_store(EngineKind::MpiOnly, n, 15, 256, 1, sb, pl);
         let total_shard = memmodel::exact_bytes_with_sharded_store(
@@ -92,17 +97,33 @@ fn main() {
             0.3 * sb,
             pl,
         );
+        let total_ring = memmodel::exact_bytes_with_ring_store(
+            EngineKind::MpiOnly,
+            n,
+            15,
+            256,
+            1,
+            sb / 256.0 * 1.5,
+            pl,
+        );
+        // One-node sweep: each of the 256 ranks receives the other 255
+        // blocks once per build.
+        let ring_traffic = 255.0 * sb;
         rows.push(vec![
             sys.label().into(),
             gb(sb),
             gb(repl_store),
             gb(shard_store),
+            gb(ring_store),
             gb(total_repl),
             gb(total_shard),
+            gb(total_ring),
+            gb(ring_traffic),
             format!(
-                "{}/{}",
+                "{}/{}/{}",
                 memmodel::feasible(total_repl, false),
-                memmodel::feasible(total_shard, false)
+                memmodel::feasible(total_shard, false),
+                memmodel::feasible(total_ring, false)
             ),
         ]);
     }

@@ -32,8 +32,9 @@ pub struct PairTask {
     /// Surviving quartets in this task.
     pub n_quartets: u64,
     /// Estimated Hermite-table bytes the shell-pair store would hold
-    /// for this pair ([`ShellPairStore::estimate_pair_bytes`]) — the
-    /// unit the sharded-store model partitions.
+    /// for this pair
+    /// ([`ShellPairStore::estimate_pair_bytes`](crate::integrals::ShellPairStore::estimate_pair_bytes))
+    /// — the unit the sharded-store model partitions.
     pub store_bytes: f64,
 }
 

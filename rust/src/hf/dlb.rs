@@ -9,12 +9,27 @@
 //! semantics the paper's Algorithms 1–3 rely on: tasks are handed out
 //! in order, first-come-first-served, with no idle slot going unserved
 //! while work remains. Task ordinals index the per-build
-//! [`PairWalk`](crate::integrals::PairWalk) task list (or a shard's
+//! [`PairWalk`] task list (or a shard's
 //! slice of it); the walk's per-build `Q·w` re-ranking only changes the
 //! *ket* traversal inside a task, so shard ownership of bra ranks — and
 //! therefore [`ShardedDlb`]'s task partition — is stable across builds.
+//!
+//! Three hand-out disciplines share the counter, unified behind
+//! [`WalkDlb`] so the engines have one claim loop:
+//! * flat — one global counter over the walk's task list (replicated
+//!   store);
+//! * [`ShardedDlb`] — per-shard lists with cyclic work stealing
+//!   (bra-sharded store with a node-shared ket prefix);
+//! * [`RingDlb`] — per-(shard, round) hand-out for the ring exchange:
+//!   the same bra lists are re-issued every round (each round computes
+//!   a different clipped ket block), with stealing confined to the
+//!   current round so the systolic pass stays synchronized.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::integrals::{PairWalk, StoreSharding};
+
+use super::{FockContext, ShardBuildStats};
 
 /// Shared task counter (the `ddi_dlbnext` equivalent).
 #[derive(Debug, Default)]
@@ -36,7 +51,7 @@ impl DlbCounter {
 
     /// Claim the next ordinal of a bounded task space, or `None` once
     /// `n_tasks` have been handed out. The engines pass
-    /// [`PairWalk::n_tasks`](crate::integrals::PairWalk::n_tasks) here:
+    /// [`PairWalk::n_tasks`] here:
     /// the DLB distributes *surviving-pair ranks*, so every claim is a
     /// live task — dead bra pairs never enter the counter's range and
     /// never cost a claim (or, in the shared-Fock engine, a barrier
@@ -78,7 +93,7 @@ impl DlbCounter {
 
 /// Per-shard DLB with work-stealing fallback — the task hand-out for a
 /// sharded shell-pair store
-/// ([`StoreSharding`](crate::integrals::StoreSharding)).
+/// ([`StoreSharding`]).
 ///
 /// Each virtual rank first drains its *home* shard's counter (its bra
 /// tasks are the pairs whose Hermite tables it owns), then falls back to
@@ -101,7 +116,7 @@ pub struct ShardedDlb {
 
 impl ShardedDlb {
     /// Build from per-shard task lists (one entry per shard; see
-    /// [`StoreSharding::partition_tasks`](crate::integrals::StoreSharding::partition_tasks)).
+    /// [`StoreSharding::partition_tasks`]).
     pub fn new(tasks: Vec<Vec<u32>>) -> ShardedDlb {
         assert!(!tasks.is_empty());
         let counters = tasks.iter().map(|_| DlbCounter::new()).collect();
@@ -142,6 +157,191 @@ impl ShardedDlb {
             .zip(&self.counters)
             .map(|(ts, c)| c.claimed().min(ts.len()))
             .collect()
+    }
+}
+
+/// Round-structured DLB for the ring exchange
+/// ([`StoreSharding::build_ring`]).
+///
+/// A ring sweep re-issues every shard's bra-task list once per round —
+/// round `t` computes the tasks' kets clipped to the block visiting
+/// their home shard ([`StoreSharding::ring_ket_range`]) — so the work
+/// unit is a *(bra task, round)* pair and each unit is handed out
+/// exactly once (one saturating [`DlbCounter`] per (shard, round)
+/// cell). Stealing stays **within the current round**: a thief may
+/// drain a neighbor's round-`t` list, but never reach into round
+/// `t + 1`, whose ket blocks have not been shipped yet — the engines
+/// barrier between rounds to model the systolic pass.
+///
+/// Shards with provably no work in a round are skipped up front: a ket
+/// rank never exceeds its bra rank, so shard `s`'s round-`t` visitor
+/// `(s − t) mod n` carries work only when `t ≤ s` (the triangular
+/// constraint at shard granularity). Skipped cells cost nothing and
+/// hand out nothing.
+#[derive(Debug)]
+pub struct RingDlb {
+    /// Per-shard bra tasks, identical to [`ShardedDlb`]'s partition.
+    tasks: Vec<Vec<u32>>,
+    /// One counter per (round, shard) cell, round-major.
+    counters: Vec<DlbCounter>,
+}
+
+impl RingDlb {
+    /// Build from per-shard task lists (see
+    /// [`StoreSharding::partition_tasks`]).
+    pub fn new(tasks: Vec<Vec<u32>>) -> RingDlb {
+        let n = tasks.len();
+        assert!(n > 0);
+        RingDlb { counters: (0..n * n).map(|_| DlbCounter::new()).collect(), tasks }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Rounds per sweep (= shard count).
+    pub fn n_rounds(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Claim the next (bra task, round) unit of `round` for the rank
+    /// whose home shard is `home`: the home shard's round list first,
+    /// then neighbor shards cyclically. Returns the claimed pair rank
+    /// and the shard whose list it came from (the task's *home* shard —
+    /// its ket clip is that shard's round-`round` visitor, regardless
+    /// of who executes it), or `None` once the round is drained.
+    pub fn claim(&self, home: usize, round: usize) -> Option<(usize, usize)> {
+        let n = self.tasks.len();
+        debug_assert!(home < n && round < n);
+        for k in 0..n {
+            let s = (home + k) % n;
+            if round > s {
+                // Shard s's round-`round` visitor ranks above it: every
+                // clip is empty by the triangular constraint.
+                continue;
+            }
+            if let Some(t) = self.counters[round * n + s].next_task(self.tasks[s].len())
+            {
+                return Some((self.tasks[s][t] as usize, s));
+            }
+        }
+        None
+    }
+
+    /// Units handed out from each shard's lists, summed over rounds
+    /// (exact under saturation, as for [`ShardedDlb`]).
+    pub fn claimed_per_shard(&self) -> Vec<usize> {
+        let n = self.tasks.len();
+        (0..n)
+            .map(|s| {
+                (0..n)
+                    .map(|t| self.counters[t * n + s].claimed().min(self.tasks[s].len()))
+                    .sum()
+            })
+            .collect()
+    }
+}
+
+/// The one claim interface the engines program against — flat,
+/// bra-sharded, or ring, chosen from the context's sharding mode
+/// ([`WalkDlb::new`]). Multi-round disciplines report
+/// [`WalkDlb::n_rounds`] > 1; engines loop rounds and barrier between
+/// them (the systolic pass), which is a no-op loop for the
+/// single-round disciplines.
+#[derive(Debug)]
+pub enum WalkDlb<'a> {
+    /// Replicated store: one global counter over the walk's task list.
+    Flat { tasks: &'a [u32], counter: DlbCounter },
+    /// Bra-sharded store (node-shared ket prefix): work stealing.
+    Sharded(ShardedDlb),
+    /// Ring exchange: (bra task, round) units, steal-within-round.
+    Ring(RingDlb),
+}
+
+impl<'a> WalkDlb<'a> {
+    /// Pick the hand-out discipline for this build: ring or bra-sharded
+    /// when a [`StoreSharding`] is present (per its mode), flat
+    /// otherwise.
+    pub fn new(walk: &'a PairWalk<'a>, sharding: Option<&StoreSharding>) -> WalkDlb<'a> {
+        match sharding {
+            Some(sh) if sh.is_ring() => WalkDlb::Ring(RingDlb::new(sh.partition_tasks(walk))),
+            Some(sh) => WalkDlb::Sharded(ShardedDlb::new(sh.partition_tasks(walk))),
+            None => WalkDlb::Flat { tasks: walk.task_list(), counter: DlbCounter::new() },
+        }
+    }
+
+    /// Build rounds: `n_shards` for the ring, 1 otherwise.
+    pub fn n_rounds(&self) -> usize {
+        match self {
+            WalkDlb::Ring(rd) => rd.n_rounds(),
+            _ => 1,
+        }
+    }
+
+    /// Claim the next (bra task, home shard) unit for `home` in
+    /// `round`. Flat hand-outs report the claimer as home (nothing is
+    /// ever stolen); `round` is ignored by the single-round
+    /// disciplines.
+    #[inline]
+    pub fn claim(&self, home: usize, round: usize) -> Option<(usize, usize)> {
+        match self {
+            WalkDlb::Flat { tasks, counter } => {
+                counter.next_task(tasks.len()).map(|t| (tasks[t] as usize, home))
+            }
+            WalkDlb::Sharded(sd) => sd.claim(home),
+            WalkDlb::Ring(rd) => rd.claim(home, round),
+        }
+    }
+
+    /// Claim the next unit **with work** for `home` in `round` — the
+    /// one claim-loop policy every engine shares. Returns the bra
+    /// rank, its home shard (`!= home` ⟹ the caller is stealing), and
+    /// the round-clipped ket walk's iteration-ordinal count (the loop
+    /// bound to distribute across threads).
+    ///
+    /// Units whose clipped walk has **no surviving ket** are skipped
+    /// here, before any steal accounting or (in the hybrid engines)
+    /// broadcast + barrier round. The emptiness test scans candidate
+    /// ordinals until the first survivor — integer compares only, and
+    /// O(1) for any unit with segment-A work — so it also catches
+    /// ring units whose segment-B candidates all fall outside the
+    /// visiting block (a candidate *count* alone would not). Dead
+    /// units still advance their (shard, round) counter, so
+    /// `claimed_per_shard` keeps counting hand-outs, not work.
+    /// Flat and bra-sharded claims are never empty (the walk's
+    /// prefix-max live test), so this is pure ring policy in a shared
+    /// home.
+    pub fn claim_nonempty(
+        &self,
+        ctx: &FockContext,
+        home: usize,
+        round: usize,
+    ) -> Option<(usize, usize, usize)> {
+        loop {
+            let (rij, from) = self.claim(home, round)?;
+            let (lo, hi) = ctx.ket_clip(from, round);
+            let kw = ctx.walk.kets(rij).clipped(lo, hi);
+            if kw.iter().next().is_none() {
+                continue;
+            }
+            return Some((rij, from, kw.len()));
+        }
+    }
+
+    /// Per-build shard summary for [`BuildStats`](super::BuildStats),
+    /// or `None` for the flat discipline.
+    pub fn shard_stats(&self, tasks_stolen: u64) -> Option<ShardBuildStats> {
+        match self {
+            WalkDlb::Flat { .. } => None,
+            WalkDlb::Sharded(sd) => {
+                Some(ShardBuildStats::collect(&sd.claimed_per_shard(), tasks_stolen, 1))
+            }
+            WalkDlb::Ring(rd) => Some(ShardBuildStats::collect(
+                &rd.claimed_per_shard(),
+                tasks_stolen,
+                rd.n_rounds(),
+            )),
+        }
     }
 }
 
@@ -239,6 +439,68 @@ mod tests {
         let (r, from) = dlb.claim(1).unwrap();
         assert_eq!(from, 0, "steal only after home drains");
         assert_eq!(r, 0);
+    }
+
+    #[test]
+    fn ring_claims_reissue_every_task_once_per_active_round() {
+        // 3 shards: shard s has work in rounds t ≤ s only, and within
+        // an active round every task of every shard is handed out
+        // exactly once.
+        let dlb = RingDlb::new(vec![vec![0, 1], vec![10], vec![20, 21, 22]]);
+        assert_eq!(dlb.n_shards(), 3);
+        assert_eq!(dlb.n_rounds(), 3);
+        for round in 0..3 {
+            let mut got = Vec::new();
+            while let Some((r, from)) = dlb.claim(0, round) {
+                // The reported home shard owns the task.
+                let want_home = match r {
+                    0 | 1 => 0,
+                    10 => 1,
+                    _ => 2,
+                };
+                assert_eq!(from, want_home, "round {round} task {r}");
+                got.push(r);
+            }
+            got.sort_unstable();
+            let want: Vec<usize> = match round {
+                0 => vec![0, 1, 10, 20, 21, 22], // every shard active
+                1 => vec![10, 20, 21, 22],       // shards 1, 2
+                _ => vec![20, 21, 22],           // shard 2 only
+            };
+            assert_eq!(got, want, "round {round}");
+            assert_eq!(dlb.claim(1, round), None, "round {round} must be drained");
+        }
+        // Totals: shard s's list re-issued in its s+1 active rounds.
+        assert_eq!(dlb.claimed_per_shard(), vec![2, 2, 9]);
+    }
+
+    #[test]
+    fn ring_steals_within_round_only() {
+        let dlb = RingDlb::new(vec![vec![0], vec![5]]);
+        // Round 1: shard 0 is provably empty — rank 0's claim must
+        // steal from shard 1's round-1 list, not dip into round 0.
+        let (r, from) = dlb.claim(0, 1).unwrap();
+        assert_eq!((r, from), (5, 1));
+        assert_eq!(dlb.claim(0, 1), None);
+        // Round 0 is untouched by the round-1 drain.
+        let mut got: Vec<usize> = Vec::new();
+        while let Some((r, _)) = dlb.claim(1, 0) {
+            got.push(r);
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 5]);
+    }
+
+    #[test]
+    fn walkdlb_flat_reports_no_shards() {
+        let tasks: Vec<u32> = vec![3, 1, 4];
+        let dlb = WalkDlb::Flat { tasks: &tasks, counter: DlbCounter::new() };
+        assert_eq!(dlb.n_rounds(), 1);
+        assert_eq!(dlb.claim(0, 0), Some((3, 0)));
+        assert_eq!(dlb.claim(2, 0), Some((1, 2)), "flat home = claimer");
+        assert_eq!(dlb.claim(0, 0), Some((4, 0)));
+        assert_eq!(dlb.claim(0, 0), None);
+        assert!(dlb.shard_stats(0).is_none());
     }
 
     #[test]

@@ -161,6 +161,46 @@ pub fn exact_bytes_with_sharded_store(
         + sharded_scf_bytes_per_node(shard_bytes, prefix_bytes, pairlist_bytes, ranks_per_node)
 }
 
+/// *Ring-exchange* store accounting, bytes per node
+/// (`--shard-store --ring-exchange`).
+///
+/// The ket-prefix window term of [`sharded_scf_bytes_per_node`] is gone
+/// — that is the mode's whole point: the window was held once per node
+/// and did **not** shrink with the rank count, so it floored the
+/// per-node footprint at a fixed fraction of one store copy no matter
+/// how many nodes joined. Under the ring, each rank holds exactly two
+/// blocks — its own bra shard and the ket block currently visiting it
+/// (the modeled pass is synchronous and in-place: blocks shift at the
+/// round barrier, so no third receive buffer is charged; an overlapped
+/// double-buffered pass would add one more `shard_bytes` per rank) —
+/// so the per-rank resident store is `2·shard_bytes = O(total/N_ranks)`
+/// and the per-node total
+/// scales down with the node count, at the cost of the per-build ring
+/// traffic ([`StoreSharding::ring_traffic_bytes`](crate::integrals::StoreSharding::ring_traffic_bytes)).
+/// The pair list (tiny) is still shared once per node.
+pub fn ring_scf_bytes_per_node(
+    shard_bytes: f64,
+    pairlist_bytes: f64,
+    ranks_per_node: usize,
+) -> f64 {
+    2.0 * shard_bytes * ranks_per_node as f64 + pairlist_bytes
+}
+
+/// [`exact_bytes_with_store`] with the ring-exchange store accounting
+/// of [`ring_scf_bytes_per_node`] in place of the replicated one.
+pub fn exact_bytes_with_ring_store(
+    engine: EngineKind,
+    n_bf: usize,
+    max_shell_bf: usize,
+    ranks_per_node: usize,
+    threads_per_rank: usize,
+    shard_bytes: f64,
+    pairlist_bytes: f64,
+) -> f64 {
+    exact_bytes(engine, n_bf, max_shell_bf, ranks_per_node, threads_per_rank)
+        + ring_scf_bytes_per_node(shard_bytes, pairlist_bytes, ranks_per_node)
+}
+
 /// KNL MCDRAM capacity (bytes, decimal as marketed) — the single-node
 /// feasibility gate behind Figure 4's "MPI-only restricted to 128
 /// hardware threads" (eq. 3a at 256 ranks on the 1.0 nm system is
@@ -349,6 +389,73 @@ mod tests {
                 sys.label()
             );
         }
+    }
+
+    #[test]
+    fn ring_store_fits_where_prefix_window_does_not() {
+        // The tentpole's payoff over PR 3: the node-shared ket-prefix
+        // window is sized by the density weight, not the node count —
+        // at full weight it spans nearly the whole Q-sorted list, so
+        // bra-sharding's per-node bytes are floored near one replicated
+        // copy no matter how many nodes join. Ring sharding has no
+        // window term at all: per-node bytes are 2·shard·R = O(total/N)
+        // and keep shrinking. Real benzene data, 64 virtual ranks at 4
+        // ranks/node, capacity set at half a replicated store copy:
+        // ring fits, prefix sharding does not.
+        use crate::basis::{BasisName, BasisSet};
+        use crate::chem::molecules;
+        use crate::integrals::{SchwarzScreen, ShellPairStore, SortedPairList, StoreSharding};
+        let basis = BasisSet::assemble(&molecules::benzene(), BasisName::Sto3g).unwrap();
+        let store = ShellPairStore::build(&basis);
+        let screen =
+            SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+        let list = SortedPairList::build(&screen, &store);
+        let pl = list.bytes() as f64;
+        let (n_total, ranks_per_node) = (64usize, 4usize);
+        let prefixed = StoreSharding::build(&list, &store, n_total, 1.0).report();
+        let ring = StoreSharding::build_ring(&list, &store, n_total).report();
+        // Same ownership split, so the private-shard figures agree.
+        assert_eq!(ring.max_shard_bytes, prefixed.max_shard_bytes);
+        // At full weight the prefix window spans most of the store.
+        assert!(
+            prefixed.prefix_bytes as f64 > 0.5 * store.bytes() as f64,
+            "prefix window {} vs store {}",
+            prefixed.prefix_bytes,
+            store.bytes()
+        );
+        let prefix_node = sharded_scf_bytes_per_node(
+            prefixed.max_shard_bytes as f64,
+            prefixed.prefix_bytes as f64,
+            pl,
+            ranks_per_node,
+        );
+        let ring_node =
+            ring_scf_bytes_per_node(ring.max_shard_bytes as f64, pl, ranks_per_node);
+        let cap = store.bytes() as f64 / 2.0;
+        assert!(
+            ring_node <= cap && prefix_node > cap,
+            "ring {ring_node} vs prefix {prefix_node} at cap {cap}"
+        );
+        // And the scaling shape: doubling the node count (same
+        // ranks/node) roughly halves the ring figure, while the prefix
+        // figure stays floored by the window.
+        let prefixed32 = StoreSharding::build(&list, &store, 32, 1.0).report();
+        let ring32 = StoreSharding::build_ring(&list, &store, 32).report();
+        let prefix_node32 = sharded_scf_bytes_per_node(
+            prefixed32.max_shard_bytes as f64,
+            prefixed32.prefix_bytes as f64,
+            pl,
+            ranks_per_node,
+        );
+        let ring_node32 =
+            ring_scf_bytes_per_node(ring32.max_shard_bytes as f64, pl, ranks_per_node);
+        // (Not a strict halving: balanced_bounds grants each shard one
+        // pair of slack and the pair-list term is constant.)
+        assert!(ring_node < 0.85 * ring_node32, "ring must scale with shards");
+        assert!(
+            prefix_node > 0.8 * prefix_node32,
+            "prefix mode must stay floored by the window"
+        );
     }
 
     #[test]

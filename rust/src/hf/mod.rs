@@ -31,10 +31,13 @@
 //! enumerator, [`scatter`] the six-element update of eqs. (2a)–(2f),
 //! [`dlb`] the shared-counter dynamic load balancer (`ddi_dlbnext`)
 //! handing out walk tasks — plus its sharded, work-stealing variant
-//! ([`dlb::ShardedDlb`]) used when the store is partitioned across
-//! virtual ranks ([`crate::integrals::StoreSharding`]) — and
-//! [`memmodel`] the footprint model of eqs. (3a)–(3c) extended with
-//! the pair store and list, replicated or sharded.
+//! ([`dlb::ShardedDlb`]) and the round-structured [`dlb::RingDlb`]
+//! used when the store is partitioned across virtual ranks
+//! ([`crate::integrals::StoreSharding`], prefix or ring-exchange
+//! mode; every engine runs the same claim loop via [`dlb::WalkDlb`])
+//! — and [`memmodel`] the footprint model of eqs. (3a)–(3c) extended
+//! with the pair store and list, replicated, bra-sharded, or
+//! ring-sharded.
 
 pub mod dlb;
 pub mod memmodel;
@@ -76,8 +79,13 @@ pub struct FockContext<'a> {
     /// When set, the store is sharded across virtual ranks: the
     /// parallel engines claim bra tasks from their own shard's range
     /// (stealing from neighbors once it drains) and fetch pair tables
-    /// through their shard's resident view. `None` (the default)
-    /// preserves the replicated-store behavior bit for bit.
+    /// through their shard's resident view. A *ring* sharding
+    /// ([`StoreSharding::is_ring`]) additionally turns the build into
+    /// `n_shards` systolic rounds — every engine loops rounds, clips
+    /// each task's ket walk to the round's visiting block
+    /// ([`FockContext::ket_clip`]), and barriers between rounds. `None`
+    /// (the default) preserves the replicated-store behavior bit for
+    /// bit.
     pub sharding: Option<&'a StoreSharding<'a>>,
 }
 
@@ -128,6 +136,21 @@ impl<'a> FockContext<'a> {
         ctx
     }
 
+    /// The ket rank range a bra task homed in shard `home` walks in
+    /// `round` — the clip every engine applies via
+    /// [`KetWalk::clipped`](crate::integrals::KetWalk::clipped). The
+    /// full list under the replicated store and the bra-sharded
+    /// (prefix) mode; the visiting ket block's range under the ring
+    /// exchange. Clipping to the full range reproduces the unclipped
+    /// walk exactly, so engines run one loop for all three modes.
+    #[inline]
+    pub fn ket_clip(&self, home: usize, round: usize) -> (usize, usize) {
+        match self.sharding {
+            Some(sh) if sh.is_ring() => sh.ring_ket_range(home, round),
+            _ => (0, self.pairs.len()),
+        }
+    }
+
     /// Legacy per-quartet density-weighted screen (Häser–Ahlrichs block
     /// weights). The engines no longer call this on their hot paths —
     /// the sorted walk's bound is a loop limit, not a per-iteration
@@ -173,21 +196,31 @@ pub trait FockBuilder {
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ShardBuildStats {
     pub n_shards: usize,
-    /// Tasks executed by a rank other than the shard's home rank (the
-    /// work-stealing fallback that preserves Algorithms 1–3 balance
-    /// when a shard drains early).
+    /// Build rounds: 1 for the bra-sharded (prefix) mode, `n_shards`
+    /// for the ring exchange (each round walks one visiting ket block).
+    pub rounds: usize,
+    /// Task units executed by a rank other than the unit's home rank
+    /// (the work-stealing fallback that preserves Algorithms 1–3
+    /// balance when a shard drains early; ring units steal within
+    /// their round only).
     pub tasks_stolen: u64,
-    /// Fewest / most bra tasks drawn from any one shard's list this
-    /// build — the raw imbalance the stealing had to cover.
+    /// Fewest / most task units drawn from any one shard's list this
+    /// build (summed over rounds for the ring) — the raw imbalance the
+    /// stealing had to cover.
     pub min_shard_tasks: u64,
     pub max_shard_tasks: u64,
 }
 
 impl ShardBuildStats {
     /// Summarize a build's per-shard claim counts.
-    pub fn collect(claimed_per_shard: &[usize], tasks_stolen: u64) -> ShardBuildStats {
+    pub fn collect(
+        claimed_per_shard: &[usize],
+        tasks_stolen: u64,
+        rounds: usize,
+    ) -> ShardBuildStats {
         ShardBuildStats {
             n_shards: claimed_per_shard.len(),
+            rounds,
             tasks_stolen,
             min_shard_tasks: claimed_per_shard.iter().copied().min().unwrap_or(0) as u64,
             max_shard_tasks: claimed_per_shard.iter().copied().max().unwrap_or(0) as u64,
@@ -228,7 +261,10 @@ pub struct BuildStats {
     /// quartets_computed` is the enumeration overhead the exact two-key
     /// set costs; it is bounded by ~2x the *global-weight* walk's
     /// visited count (segment A plus an uncapped-ordered-pair B
-    /// prefix), while the computed count can drop far below it.
+    /// prefix), while the computed count can drop far below it. This is
+    /// the walk's single-pass figure; ring-exchange builds re-enumerate
+    /// each task's segment-B candidates once per active round, so their
+    /// true enumeration count is higher (by integer compares only).
     pub walk_candidates: u64,
     /// Wall-clock seconds of the build.
     pub seconds: f64,

@@ -15,13 +15,15 @@
 //! model, which is exactly the replication the hybrid engines
 //! eliminate.
 
+use std::sync::Barrier;
+
 use crate::integrals::EriEngine;
 use crate::linalg::Matrix;
 
-use super::dlb::{DlbCounter, ShardedDlb};
+use super::dlb::WalkDlb;
 use super::scatter::{fold_symmetric, scatter_block};
 use super::threadpool::parallel_region;
-use super::{BuildStats, FockBuilder, FockContext, ShardBuildStats};
+use super::{BuildStats, FockBuilder, FockContext};
 
 /// MPI-only engine with `n_ranks` virtual ranks.
 pub struct MpiOnlyFock {
@@ -42,8 +44,6 @@ impl FockBuilder for MpiOnlyFock {
         let basis = ctx.basis;
         let n = basis.n_bf;
         let (walk, pairs) = (&ctx.walk, ctx.pairs);
-        let n_tasks = walk.n_tasks();
-        let dlb = DlbCounter::new();
         let sharding = ctx.sharding;
         if let Some(sh) = sharding {
             assert_eq!(
@@ -54,67 +54,74 @@ impl FockBuilder for MpiOnlyFock {
                 self.n_ranks
             );
         }
-        // Sharded hand-out: each rank drains its own shard's bra tasks,
-        // then steals from neighbors (Algorithms 1–3 balance preserved).
-        let sdlb = sharding.map(|sh| ShardedDlb::new(sh.partition_tasks(walk)));
+        // One claim discipline for all three store modes: flat counter,
+        // bra-sharded work stealing, or (bra task, round) ring units.
+        let dlb = WalkDlb::new(walk, sharding);
+        let n_rounds = dlb.n_rounds();
+        // Round boundary of the simulated systolic pass: every rank
+        // must finish round t before the ket blocks shift.
+        let ring_barrier = Barrier::new(self.n_ranks);
 
         // Each virtual rank: replicated G, DLB over surviving bra
-        // ranks, early-exit ket prefix per task.
+        // ranks, early-exit (round-clipped) ket walk per task.
         let per_rank: Vec<(Matrix, u64, u64)> = parallel_region(self.n_ranks, |rank| {
             let mut g = Matrix::zeros(n, n);
             let mut eng = EriEngine::new();
             let mut block = vec![0.0; 6 * 6 * 6 * 6];
             let mut computed = 0u64;
             let mut stolen = 0u64;
-            loop {
-                let rij = match &sdlb {
-                    Some(sd) => match sd.claim(rank) {
-                        Some((rij, from)) => {
-                            if from != rank {
-                                stolen += 1;
-                            }
-                            rij
-                        }
-                        None => break,
-                    },
-                    None => match dlb.next_task(n_tasks) {
-                        Some(t) => walk.task(t),
-                        None => break,
-                    },
-                };
-                let bra = pairs.entry(rij);
-                let (i, j) = (bra.i as usize, bra.j as usize);
-                // Sharded: fetch through the rank's resident shard
-                // view. The bra is fetched once per task (a stolen
-                // task pays one remote get, not one per ket); spilled
-                // kets count per lookup below.
-                let shard = sharding.map(|sh| sh.shard(rank));
-                let bra_view = shard.map(|s| s.view_by_slot(bra.slot, i < j));
-                // Two-key ket walk: segment A then the segment-B
-                // candidates; rejected candidates skip on an integer
-                // compare (no bound is evaluated per quartet).
-                for rkl in walk.kets(rij).iter() {
-                    let ket = pairs.entry(rkl);
-                    let (k, l) = (ket.i as usize, ket.j as usize);
-                    computed += 1;
-                    match (shard, bra_view) {
-                        (Some(shard), Some(bv)) => eng.shell_quartet_with_views(
-                            basis,
-                            i,
-                            j,
-                            k,
-                            l,
-                            bv,
-                            shard.view_by_slot(ket.slot, k < l),
-                            &mut block,
-                        ),
-                        _ => eng.shell_quartet_slots(
-                            basis, ctx.store, i, j, k, l, bra.slot, ket.slot, &mut block,
-                        ),
+            for round in 0..n_rounds {
+                // Resident store surface this round (prefix mode: the
+                // rank's shard; ring mode: own block + visiting block).
+                let view = sharding.map(|sh| sh.round_view(rank, round));
+                while let Some((rij, from, _)) = dlb.claim_nonempty(ctx, rank, round) {
+                    // Two-key ket walk clipped to this round's block
+                    // (the full list in single-round modes): segment A
+                    // then the segment-B candidates; rejected
+                    // candidates skip on an integer compare (no bound
+                    // is evaluated per quartet). claim_nonempty already
+                    // dropped zero-work ring units — before the steal
+                    // accounting, so tasks_stolen counts executed work
+                    // identically in every engine.
+                    let (klo, khi) = ctx.ket_clip(from, round);
+                    let kw = walk.kets(rij).clipped(klo, khi);
+                    if from != rank {
+                        stolen += 1;
                     }
-                    scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| {
-                        g.add(a, b, v)
-                    });
+                    let bra = pairs.entry(rij);
+                    let (i, j) = (bra.i as usize, bra.j as usize);
+                    // Sharded: fetch through the round view. The bra is
+                    // fetched once per task (a stolen task pays one
+                    // remote get, not one per ket); non-resident kets
+                    // count per lookup below.
+                    let bra_view = view.map(|v| v.view_by_slot(bra.slot, i < j));
+                    for rkl in kw.iter() {
+                        let ket = pairs.entry(rkl);
+                        let (k, l) = (ket.i as usize, ket.j as usize);
+                        computed += 1;
+                        match (view, bra_view) {
+                            (Some(v), Some(bv)) => eng.shell_quartet_with_views(
+                                basis,
+                                i,
+                                j,
+                                k,
+                                l,
+                                bv,
+                                v.view_by_slot(ket.slot, k < l),
+                                &mut block,
+                            ),
+                            _ => eng.shell_quartet_slots(
+                                basis, ctx.store, i, j, k, l, bra.slot, ket.slot,
+                                &mut block,
+                            ),
+                        }
+                        scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| {
+                            g.add(a, b, v)
+                        });
+                    }
+                }
+                if n_rounds > 1 {
+                    ring_barrier.wait();
                 }
             }
             (g, computed, stolen)
@@ -131,9 +138,7 @@ impl FockBuilder for MpiOnlyFock {
         }
         fold_symmetric(&mut total);
         self.stats = BuildStats::from_walk(computed, ctx, t0.elapsed().as_secs_f64());
-        if let Some(sd) = &sdlb {
-            self.stats.shard = Some(ShardBuildStats::collect(&sd.claimed_per_shard(), stolen));
-        }
+        self.stats.shard = dlb.shard_stats(stolen);
         total
     }
 

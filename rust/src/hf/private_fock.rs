@@ -23,10 +23,10 @@ use std::sync::Barrier;
 use crate::integrals::EriEngine;
 use crate::linalg::Matrix;
 
-use super::dlb::{DlbCounter, ShardedDlb};
+use super::dlb::WalkDlb;
 use super::scatter::{fold_symmetric, scatter_block};
 use super::threadpool::parallel_region;
-use super::{BuildStats, FockBuilder, FockContext, ShardBuildStats};
+use super::{BuildStats, FockBuilder, FockContext};
 
 /// Private-Fock hybrid engine: `n_ranks` virtual ranks × `n_threads`
 /// OpenMP-style threads per rank.
@@ -49,8 +49,6 @@ impl FockBuilder for PrivateFock {
         let basis = ctx.basis;
         let n = basis.n_bf;
         let (walk, pairs) = (&ctx.walk, ctx.pairs);
-        let n_tasks = walk.n_tasks();
-        let dlb = DlbCounter::new(); // MPI-level DLB over bra tasks
         let sharding = ctx.sharding;
         if let Some(sh) = sharding {
             assert_eq!(
@@ -61,11 +59,18 @@ impl FockBuilder for PrivateFock {
                 self.n_ranks
             );
         }
-        let sdlb = sharding.map(|sh| ShardedDlb::new(sh.partition_tasks(walk)));
+        // One claim discipline for all three store modes (MPI-level DLB
+        // over bra tasks; ring mode re-issues them per round).
+        let dlb = WalkDlb::new(walk, sharding);
+        let n_rounds = dlb.n_rounds();
+        // Round boundary of the simulated systolic pass (one waiter per
+        // rank: the master thread).
+        let ring_barrier = Barrier::new(self.n_ranks);
 
         let per_rank: Vec<(Matrix, u64, u64)> = parallel_region(self.n_ranks, |rank| {
             let nt = self.n_threads;
             let rij_cur = AtomicUsize::new(usize::MAX);
+            let from_cur = AtomicUsize::new(0);
             let limit_cur = AtomicUsize::new(0);
             let chunk = AtomicUsize::new(0);
             let stolen = AtomicU64::new(0);
@@ -77,83 +82,96 @@ impl FockBuilder for PrivateFock {
                 let mut eng = EriEngine::new();
                 let mut block = vec![0.0; 6 * 6 * 6 * 6];
                 let mut computed = 0u64;
-                loop {
-                    // !$omp master: fetch the next bra task; barriers on
-                    // both sides. Every handed-out task has work by
-                    // construction of the walk. Sharded runs claim from
-                    // the rank's own shard first, stealing once drained.
-                    if tid == 0 {
-                        let claim = match &sdlb {
-                            Some(sd) => sd.claim(rank).map(|(rij, from)| {
-                                if from != rank {
-                                    stolen.fetch_add(1, Ordering::Relaxed);
-                                }
-                                rij
-                            }),
-                            None => dlb.next_task(n_tasks).map(|t| walk.task(t)),
-                        };
-                        match claim {
-                            Some(rij) => {
-                                rij_cur.store(rij, Ordering::SeqCst);
-                                limit_cur.store(walk.kets(rij).len(), Ordering::SeqCst);
-                            }
-                            None => rij_cur.store(usize::MAX, Ordering::SeqCst),
-                        }
-                        chunk.store(0, Ordering::SeqCst);
-                    }
-                    barrier.wait();
-                    let rij = rij_cur.load(Ordering::SeqCst);
-                    if rij == usize::MAX {
-                        break;
-                    }
-                    let bra = pairs.entry(rij);
-                    let (i, j) = (bra.i as usize, bra.j as usize);
-                    let limit = limit_cur.load(Ordering::SeqCst);
-                    // Each thread derives the task's two-key ket walk
-                    // locally (two binary searches); `limit` is its
-                    // iteration-ordinal count, shared so every thread
-                    // agrees on the loop bound.
-                    let kw = walk.kets(rij);
-                    debug_assert_eq!(kw.len(), limit);
-                    // Sharded: one bra fetch per thread per task (a
-                    // stolen task pays per-thread remote gets, not one
-                    // per ket); spilled kets count per lookup below.
-                    let shard = sharding.map(|sh| sh.shard(rank));
-                    let bra_view = shard.map(|s| s.view_by_slot(bra.slot, i < j));
-                    // !$omp do schedule(dynamic,1) over the surviving
-                    // ket segments — the early exit is the loop bound;
-                    // rejected segment-B candidates skip on an integer
-                    // compare.
+                for round in 0..n_rounds {
+                    let view = sharding.map(|sh| sh.round_view(rank, round));
                     loop {
-                        let t = chunk.fetch_add(1, Ordering::Relaxed);
-                        if t >= limit {
+                        // !$omp master: fetch the next bra task; barriers
+                        // on both sides. Single-round tasks always have
+                        // work by construction of the walk; zero-work
+                        // ring units (no surviving ket in this round's
+                        // block) are dropped inside claim_nonempty —
+                        // they cost neither a steal count nor a
+                        // broadcast + barrier round.
+                        if tid == 0 {
+                            match dlb.claim_nonempty(ctx, rank, round) {
+                                Some((rij, from, len)) => {
+                                    if from != rank {
+                                        stolen.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                    rij_cur.store(rij, Ordering::SeqCst);
+                                    from_cur.store(from, Ordering::SeqCst);
+                                    limit_cur.store(len, Ordering::SeqCst);
+                                }
+                                None => rij_cur.store(usize::MAX, Ordering::SeqCst),
+                            }
+                            chunk.store(0, Ordering::SeqCst);
+                        }
+                        barrier.wait();
+                        let rij = rij_cur.load(Ordering::SeqCst);
+                        if rij == usize::MAX {
                             break;
                         }
-                        let Some(rkl) = kw.ket(t) else { continue };
-                        let ket = pairs.entry(rkl);
-                        let (k, l) = (ket.i as usize, ket.j as usize);
-                        computed += 1;
-                        match (shard, bra_view) {
-                            (Some(shard), Some(bv)) => eng.shell_quartet_with_views(
-                                basis,
-                                i,
-                                j,
-                                k,
-                                l,
-                                bv,
-                                shard.view_by_slot(ket.slot, k < l),
-                                &mut block,
-                            ),
-                            _ => eng.shell_quartet_slots(
-                                basis, ctx.store, i, j, k, l, bra.slot, ket.slot, &mut block,
-                            ),
+                        let bra = pairs.entry(rij);
+                        let (i, j) = (bra.i as usize, bra.j as usize);
+                        let limit = limit_cur.load(Ordering::SeqCst);
+                        // Each thread derives the task's (round-clipped)
+                        // two-key ket walk locally (two binary
+                        // searches); `limit` is its iteration-ordinal
+                        // count, shared so every thread agrees on the
+                        // loop bound.
+                        let (lo, hi) = ctx.ket_clip(from_cur.load(Ordering::SeqCst), round);
+                        let kw = walk.kets(rij).clipped(lo, hi);
+                        debug_assert_eq!(kw.len(), limit);
+                        // Sharded: one bra fetch per thread per task (a
+                        // stolen task pays per-thread remote gets, not
+                        // one per ket); non-resident kets count per
+                        // lookup below.
+                        let bra_view = view.map(|v| v.view_by_slot(bra.slot, i < j));
+                        // !$omp do schedule(dynamic,1) over the
+                        // surviving ket segments — the early exit is the
+                        // loop bound; rejected segment-B candidates skip
+                        // on an integer compare.
+                        loop {
+                            let t = chunk.fetch_add(1, Ordering::Relaxed);
+                            if t >= limit {
+                                break;
+                            }
+                            let Some(rkl) = kw.ket(t) else { continue };
+                            let ket = pairs.entry(rkl);
+                            let (k, l) = (ket.i as usize, ket.j as usize);
+                            computed += 1;
+                            match (view, bra_view) {
+                                (Some(v), Some(bv)) => eng.shell_quartet_with_views(
+                                    basis,
+                                    i,
+                                    j,
+                                    k,
+                                    l,
+                                    bv,
+                                    v.view_by_slot(ket.slot, k < l),
+                                    &mut block,
+                                ),
+                                _ => eng.shell_quartet_slots(
+                                    basis, ctx.store, i, j, k, l, bra.slot, ket.slot,
+                                    &mut block,
+                                ),
+                            }
+                            scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| {
+                                g.add(a, b, v)
+                            });
                         }
-                        scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| {
-                            g.add(a, b, v)
-                        });
+                        // Implicit barrier at !$omp end do.
+                        barrier.wait();
                     }
-                    // Implicit barrier at !$omp end do.
-                    barrier.wait();
+                    if n_rounds > 1 {
+                        // Systolic round boundary: the master joins the
+                        // cross-rank barrier; teammates hold at the
+                        // thread barrier until the blocks have shifted.
+                        if tid == 0 {
+                            ring_barrier.wait();
+                        }
+                        barrier.wait();
+                    }
                 }
                 (g, computed)
             });
@@ -179,9 +197,7 @@ impl FockBuilder for PrivateFock {
         }
         fold_symmetric(&mut total);
         self.stats = BuildStats::from_walk(computed, ctx, t0.elapsed().as_secs_f64());
-        if let Some(sd) = &sdlb {
-            self.stats.shard = Some(ShardBuildStats::collect(&sd.claimed_per_shard(), stolen));
-        }
+        self.stats.shard = dlb.shard_stats(stolen);
         total
     }
 

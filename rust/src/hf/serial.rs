@@ -4,6 +4,15 @@
 //! The loop is the sorted early-exit walk: bra tasks come from the
 //! context's [`crate::integrals::PairWalk`] and each ket range is the
 //! walk's precomputed loop bound — no quartet is tested individually.
+//!
+//! Under a *ring-exchange* sharding the serial engine plays every
+//! virtual rank's rounds in order — each task's kets clipped to the
+//! block visiting its home shard, fetched through the home rank's
+//! round view — so it doubles as the residency oracle: un-stolen ring
+//! work must never fetch remotely, and the per-round clips must
+//! partition the walk's visited set (each quartet computed in exactly
+//! one round). Prefix-mode shardings are ignored here, as before: the
+//! serial engine reads the replicated store directly.
 
 use crate::linalg::Matrix;
 
@@ -35,19 +44,64 @@ impl FockBuilder for SerialFock {
         let mut block = vec![0.0; 6 * 6 * 6 * 6];
         let mut computed = 0u64;
         let pairs = ctx.pairs;
-        for_each_surviving(&ctx.walk, |rij, rkl| {
-            let bra = pairs.entry(rij);
-            let ket = pairs.entry(rkl);
-            let (i, j) = (bra.i as usize, bra.j as usize);
-            let (k, l) = (ket.i as usize, ket.j as usize);
-            computed += 1;
-            self.eng.shell_quartet_slots(
-                basis, ctx.store, i, j, k, l, bra.slot, ket.slot, &mut block,
-            );
-            scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| {
-                g.add(a, b, v)
-            });
-        });
+        match ctx.sharding.filter(|sh| sh.is_ring()) {
+            Some(sh) => {
+                // Ring exchange: play the rounds. Every task executes
+                // at its home rank (nothing is stolen serially), so
+                // every fetch resolves in the home block or the round's
+                // visiting block — zero remote fetches by construction.
+                let walk = &ctx.walk;
+                for round in 0..sh.n_rounds() {
+                    for t in 0..walk.n_tasks() {
+                        let rij = walk.task(t);
+                        let home = sh.shard_of(rij);
+                        if round > home {
+                            // The visiting block ranks above the bra:
+                            // provably empty clip (ket rank ≤ bra rank).
+                            continue;
+                        }
+                        let view = sh.round_view(home, round);
+                        let (klo, khi) = sh.ring_ket_range(home, round);
+                        let bra = pairs.entry(rij);
+                        let (i, j) = (bra.i as usize, bra.j as usize);
+                        let bra_view = view.view_by_slot(bra.slot, i < j);
+                        for rkl in walk.kets(rij).clipped(klo, khi).iter() {
+                            let ket = pairs.entry(rkl);
+                            let (k, l) = (ket.i as usize, ket.j as usize);
+                            computed += 1;
+                            self.eng.shell_quartet_with_views(
+                                basis,
+                                i,
+                                j,
+                                k,
+                                l,
+                                bra_view,
+                                view.view_by_slot(ket.slot, k < l),
+                                &mut block,
+                            );
+                            scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| {
+                                g.add(a, b, v)
+                            });
+                        }
+                    }
+                }
+            }
+            None => {
+                for_each_surviving(&ctx.walk, |rij, rkl| {
+                    let bra = pairs.entry(rij);
+                    let ket = pairs.entry(rkl);
+                    let (i, j) = (bra.i as usize, bra.j as usize);
+                    let (k, l) = (ket.i as usize, ket.j as usize);
+                    computed += 1;
+                    self.eng.shell_quartet_slots(
+                        basis, ctx.store, i, j, k, l, bra.slot, ket.slot, &mut block,
+                    );
+                    scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| {
+                        g.add(a, b, v)
+                    });
+                });
+            }
+        }
         mirror(&mut g);
         self.stats = BuildStats::from_walk(computed, ctx, t0.elapsed().as_secs_f64());
         g

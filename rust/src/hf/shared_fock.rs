@@ -31,10 +31,10 @@ use std::sync::Barrier;
 use crate::integrals::EriEngine;
 use crate::linalg::Matrix;
 
-use super::dlb::{DlbCounter, ShardedDlb};
+use super::dlb::WalkDlb;
 use super::scatter::{fold_symmetric, scatter_block};
 use super::threadpool::{parallel_region, ColumnBuffers, SharedMatrix};
-use super::{BuildStats, FockBuilder, FockContext, ShardBuildStats};
+use super::{BuildStats, FockBuilder, FockContext};
 
 /// Shared-Fock hybrid engine: `n_ranks` virtual ranks × `n_threads`
 /// threads per rank sharing one Fock accumulator.
@@ -67,8 +67,6 @@ impl FockBuilder for SharedFock {
         let basis = ctx.basis;
         let n = basis.n_bf;
         let (walk, pairs) = (&ctx.walk, ctx.pairs);
-        let n_tasks = walk.n_tasks();
-        let dlb = DlbCounter::new();
         let width = basis.max_shell_bf;
         let sharding = ctx.sharding;
         if let Some(sh) = sharding {
@@ -80,7 +78,13 @@ impl FockBuilder for SharedFock {
                 self.n_ranks
             );
         }
-        let sdlb = sharding.map(|sh| ShardedDlb::new(sh.partition_tasks(walk)));
+        // One claim discipline for all three store modes; ring mode
+        // re-issues the bra tasks once per round with clipped kets.
+        let dlb = WalkDlb::new(walk, sharding);
+        let n_rounds = dlb.n_rounds();
+        // Round boundary of the simulated systolic pass (one waiter per
+        // rank: the master thread).
+        let ring_barrier = Barrier::new(self.n_ranks);
 
         let per_rank: Vec<(Matrix, u64, u64, u64)> = parallel_region(self.n_ranks, |rank| {
             let nt = self.n_threads;
@@ -89,6 +93,7 @@ impl FockBuilder for SharedFock {
             let f_i = ColumnBuffers::new(n, width, nt);
             let f_j = ColumnBuffers::new(n, width, nt);
             let rij_cur = AtomicUsize::new(0);
+            let from_cur = AtomicUsize::new(0);
             let nkl_cur = AtomicUsize::new(0);
             let kl_counter = AtomicUsize::new(0);
             let i_old = AtomicUsize::new(usize::MAX);
@@ -100,147 +105,176 @@ impl FockBuilder for SharedFock {
                 let mut eng = EriEngine::new();
                 let mut block = vec![0.0; 6 * 6 * 6 * 6];
                 let mut computed = 0u64;
-                loop {
-                    if tid == 0 {
-                        // The DLB hands out surviving-pair ranks: the
-                        // legacy per-task I/J prescreen (Algorithm 3
-                        // line 12) — and the full barrier round every
-                        // dead ij task cost — is gone, because the walk
-                        // contains no dead tasks to prescreen. Sharded
-                        // runs drain the rank's own shard first, then
-                        // steal; a stolen task's `i` may repeat an
-                        // earlier shell, which just re-arms the lazy
-                        // F_I flush (the buffers drain on every flush).
-                        let claim = match &sdlb {
-                            Some(sd) => sd.claim(rank).map(|(rij, from)| {
-                                if from != rank {
-                                    stolen.fetch_add(1, Ordering::Relaxed);
-                                }
-                                rij
-                            }),
-                            None => dlb.next_task(n_tasks).map(|t| walk.task(t)),
-                        };
-                        match claim {
-                            Some(rij) => {
-                                rij_cur.store(rij, Ordering::SeqCst);
-                                nkl_cur.store(walk.kets(rij).len(), Ordering::SeqCst);
-                            }
-                            None => rij_cur.store(usize::MAX, Ordering::SeqCst),
-                        }
-                        kl_counter.store(0, Ordering::SeqCst);
-                    }
-                    barrier.wait();
-                    let rij = rij_cur.load(Ordering::SeqCst);
-                    if rij == usize::MAX {
-                        // Final F_I flush (Algorithm 3 line 36).
-                        let iold = i_old.load(Ordering::SeqCst);
-                        if iold != usize::MAX {
-                            let (r0, r1) = chunk_of(n, nt, tid);
-                            let col0 = basis.shells[iold].bf_first;
-                            unsafe { f_i.flush_rows(&shared, col0, r0, r1) };
-                        }
-                        barrier.wait();
-                        break;
-                    }
-                    let bra = pairs.entry(rij);
-                    let (i, j) = (bra.i as usize, bra.j as usize);
-                    let n_kl = nkl_cur.load(Ordering::SeqCst);
-                    // Each thread derives the task's two-key ket walk
-                    // locally; n_kl is its iteration-ordinal count.
-                    let kw = walk.kets(rij);
-                    debug_assert_eq!(kw.len(), n_kl);
-                    // Dead tasks are impossible by construction of the
-                    // walk (the prefix-max live test ⇒ ≥ 1 surviving
-                    // ket, hence ≥ 1 iteration ordinal).
-                    debug_assert!(n_kl > 0, "DLB handed out a dead ij task");
-
-                    // Lazy F_I flush on i change (lines 14–17). Tasks
-                    // are (i, j)-grouped by the walk precisely so `i`
-                    // stays monotone here and this fires once per
-                    // distinct i, not once per task. NB the buffer holds
-                    // contributions of the *previous* i, so the flush
-                    // targets i_old's column block (the paper's listing
-                    // writes "Fock(:,i)" but line 33 stores i_old for
-                    // exactly this purpose).
-                    let iold = i_old.load(Ordering::SeqCst);
-                    if iold != i {
-                        if iold != usize::MAX {
-                            let (r0, r1) = chunk_of(n, nt, tid);
-                            let col0 = basis.shells[iold].bf_first;
-                            unsafe { f_i.flush_rows(&shared, col0, r0, r1) };
-                        }
-                        barrier.wait();
-                        if tid == 0 {
-                            i_old.store(i, Ordering::SeqCst);
-                            flush_count.fetch_add(1, Ordering::Relaxed);
-                        }
-                        barrier.wait();
-                    }
-
-                    let i_range = basis.shell_bf_range(i);
-                    let j_range = basis.shell_bf_range(j);
-                    let (i0, j0) = (i_range.start, j_range.start);
-
-                    // Sharded: one bra fetch per thread per task (a
-                    // stolen task pays per-thread remote gets, not one
-                    // per ket); spilled kets count per lookup below.
-                    let shard = sharding.map(|sh| sh.shard(rank));
-                    let bra_view = shard.map(|s| s.view_by_slot(bra.slot, i < j));
-
-                    // !$omp do schedule(dynamic,1) over the surviving
-                    // ket segments — the early exit is the loop bound;
-                    // the Schwarz bound is never evaluated per quartet
-                    // (rejected segment-B candidates skip on an integer
-                    // compare). Distinct ordinals map to distinct ket
-                    // pairs, so the kl-ownership race argument is
-                    // unchanged.
+                for round in 0..n_rounds {
+                    let view = sharding.map(|sh| sh.round_view(rank, round));
                     loop {
-                        let t = kl_counter.fetch_add(1, Ordering::Relaxed);
-                        if t >= n_kl {
+                        if tid == 0 {
+                            // The DLB hands out surviving-pair ranks:
+                            // the legacy per-task I/J prescreen
+                            // (Algorithm 3 line 12) — and the full
+                            // barrier round every dead ij task cost —
+                            // is gone, because the walk contains no
+                            // dead tasks to prescreen; zero-work ring
+                            // units (no surviving ket in this round's
+                            // block) are dropped inside claim_nonempty,
+                            // before any broadcast, so they cost no
+                            // barrier round either. Sharded runs drain
+                            // the rank's own shard first, then steal; a
+                            // stolen task's `i` may repeat an earlier
+                            // shell, which just re-arms the lazy F_I
+                            // flush (the buffers drain on every flush).
+                            match dlb.claim_nonempty(ctx, rank, round) {
+                                Some((rij, from, len)) => {
+                                    if from != rank {
+                                        stolen.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                    rij_cur.store(rij, Ordering::SeqCst);
+                                    from_cur.store(from, Ordering::SeqCst);
+                                    nkl_cur.store(len, Ordering::SeqCst);
+                                }
+                                None => rij_cur.store(usize::MAX, Ordering::SeqCst),
+                            }
+                            kl_counter.store(0, Ordering::SeqCst);
+                        }
+                        barrier.wait();
+                        let rij = rij_cur.load(Ordering::SeqCst);
+                        if rij == usize::MAX {
+                            // Round-final F_I flush (Algorithm 3 line
+                            // 36; under the ring this fires at every
+                            // round boundary — the next round restarts
+                            // the (i, j)-grouped task order, so the
+                            // lazy flush must not carry a stale i
+                            // across the block shift).
+                            let iold = i_old.load(Ordering::SeqCst);
+                            if iold != usize::MAX {
+                                let (r0, r1) = chunk_of(n, nt, tid);
+                                let col0 = basis.shells[iold].bf_first;
+                                unsafe { f_i.flush_rows(&shared, col0, r0, r1) };
+                            }
+                            barrier.wait();
+                            if tid == 0 {
+                                i_old.store(usize::MAX, Ordering::SeqCst);
+                            }
                             break;
                         }
-                        let Some(rkl) = kw.ket(t) else { continue };
-                        let ket = pairs.entry(rkl);
-                        let (k, l) = (ket.i as usize, ket.j as usize);
-                        computed += 1;
-                        match (shard, bra_view) {
-                            (Some(shard), Some(bv)) => eng.shell_quartet_with_views(
-                                basis,
-                                i,
-                                j,
-                                k,
-                                l,
-                                bv,
-                                shard.view_by_slot(ket.slot, k < l),
-                                &mut block,
-                            ),
-                            _ => eng.shell_quartet_slots(
-                                basis, ctx.store, i, j, k, l, bra.slot, ket.slot, &mut block,
-                            ),
-                        }
-                        scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| {
-                            // Route by shell membership (lines 25–27).
-                            if i_range.contains(&a) {
-                                unsafe { f_i.add(tid, b, a - i0, v) };
-                            } else if i_range.contains(&b) {
-                                unsafe { f_i.add(tid, a, b - i0, v) };
-                            } else if j_range.contains(&a) {
-                                unsafe { f_j.add(tid, b, a - j0, v) };
-                            } else if j_range.contains(&b) {
-                                unsafe { f_j.add(tid, a, b - j0, v) };
-                            } else {
-                                // Pure-kl Coulomb element: this thread
-                                // owns the kl pair — direct shared write.
-                                unsafe { shared.add(a, b, v) };
+                        let bra = pairs.entry(rij);
+                        let (i, j) = (bra.i as usize, bra.j as usize);
+                        let n_kl = nkl_cur.load(Ordering::SeqCst);
+                        // Each thread derives the task's (round-clipped)
+                        // two-key ket walk locally; n_kl is its
+                        // iteration-ordinal count.
+                        let (lo, hi) = ctx.ket_clip(from_cur.load(Ordering::SeqCst), round);
+                        let kw = walk.kets(rij).clipped(lo, hi);
+                        debug_assert_eq!(kw.len(), n_kl);
+                        // Dead units are impossible here: flat/prefix
+                        // walks have no dead tasks by construction (the
+                        // prefix-max live test), and empty ring clips
+                        // were skipped at claim time.
+                        debug_assert!(n_kl > 0, "DLB handed out a dead ij unit");
+
+                        // Lazy F_I flush on i change (lines 14–17).
+                        // Tasks are (i, j)-grouped by the walk precisely
+                        // so `i` stays monotone here and this fires once
+                        // per distinct i, not once per task. NB the
+                        // buffer holds contributions of the *previous*
+                        // i, so the flush targets i_old's column block
+                        // (the paper's listing writes "Fock(:,i)" but
+                        // line 33 stores i_old for exactly this
+                        // purpose).
+                        let iold = i_old.load(Ordering::SeqCst);
+                        if iold != i {
+                            if iold != usize::MAX {
+                                let (r0, r1) = chunk_of(n, nt, tid);
+                                let col0 = basis.shells[iold].bf_first;
+                                unsafe { f_i.flush_rows(&shared, col0, r0, r1) };
                             }
-                        });
+                            barrier.wait();
+                            if tid == 0 {
+                                i_old.store(i, Ordering::SeqCst);
+                                flush_count.fetch_add(1, Ordering::Relaxed);
+                            }
+                            barrier.wait();
+                        }
+
+                        let i_range = basis.shell_bf_range(i);
+                        let j_range = basis.shell_bf_range(j);
+                        let (i0, j0) = (i_range.start, j_range.start);
+
+                        // Sharded: one bra fetch per thread per task (a
+                        // stolen task pays per-thread remote gets, not
+                        // one per ket); non-resident kets count per
+                        // lookup below.
+                        let bra_view = view.map(|v| v.view_by_slot(bra.slot, i < j));
+
+                        // !$omp do schedule(dynamic,1) over the
+                        // surviving ket segments — the early exit is the
+                        // loop bound; the Schwarz bound is never
+                        // evaluated per quartet (rejected segment-B
+                        // candidates skip on an integer compare).
+                        // Distinct ordinals map to distinct ket pairs,
+                        // so the kl-ownership race argument is
+                        // unchanged.
+                        loop {
+                            let t = kl_counter.fetch_add(1, Ordering::Relaxed);
+                            if t >= n_kl {
+                                break;
+                            }
+                            let Some(rkl) = kw.ket(t) else { continue };
+                            let ket = pairs.entry(rkl);
+                            let (k, l) = (ket.i as usize, ket.j as usize);
+                            computed += 1;
+                            match (view, bra_view) {
+                                (Some(v), Some(bv)) => eng.shell_quartet_with_views(
+                                    basis,
+                                    i,
+                                    j,
+                                    k,
+                                    l,
+                                    bv,
+                                    v.view_by_slot(ket.slot, k < l),
+                                    &mut block,
+                                ),
+                                _ => eng.shell_quartet_slots(
+                                    basis, ctx.store, i, j, k, l, bra.slot, ket.slot,
+                                    &mut block,
+                                ),
+                            }
+                            scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| {
+                                // Route by shell membership (lines 25–27).
+                                if i_range.contains(&a) {
+                                    unsafe { f_i.add(tid, b, a - i0, v) };
+                                } else if i_range.contains(&b) {
+                                    unsafe { f_i.add(tid, a, b - i0, v) };
+                                } else if j_range.contains(&a) {
+                                    unsafe { f_j.add(tid, b, a - j0, v) };
+                                } else if j_range.contains(&b) {
+                                    unsafe { f_j.add(tid, a, b - j0, v) };
+                                } else {
+                                    // Pure-kl Coulomb element: this
+                                    // thread owns the kl pair — direct
+                                    // shared write.
+                                    unsafe { shared.add(a, b, v) };
+                                }
+                            });
+                        }
+                        // Implicit barrier at !$omp end do, then F_J
+                        // flush (line 31) — every kl loop.
+                        barrier.wait();
+                        let (r0, r1) = chunk_of(n, nt, tid);
+                        unsafe { f_j.flush_rows(&shared, j0, r0, r1) };
+                        barrier.wait();
                     }
-                    // Implicit barrier at !$omp end do, then F_J flush
-                    // (line 31) — every kl loop.
-                    barrier.wait();
-                    let (r0, r1) = chunk_of(n, nt, tid);
-                    unsafe { f_j.flush_rows(&shared, j0, r0, r1) };
-                    barrier.wait();
+                    if n_rounds > 1 {
+                        // Systolic round boundary: F_I was flushed and
+                        // re-armed by the drain branch above; the master
+                        // joins the cross-rank barrier while teammates
+                        // hold at the thread barrier until the ket
+                        // blocks have shifted.
+                        if tid == 0 {
+                            ring_barrier.wait();
+                        }
+                        barrier.wait();
+                    }
                 }
                 computed
             });
@@ -268,9 +302,7 @@ impl FockBuilder for SharedFock {
         fold_symmetric(&mut total);
         self.fi_flushes = flushes;
         self.stats = BuildStats::from_walk(computed, ctx, t0.elapsed().as_secs_f64());
-        if let Some(sd) = &sdlb {
-            self.stats.shard = Some(ShardBuildStats::collect(&sd.claimed_per_shard(), stolen));
-        }
+        self.stats.shard = dlb.shard_stats(stolen);
         total
     }
 

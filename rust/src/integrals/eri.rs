@@ -12,7 +12,7 @@
 //!   to 16 segment quartets which all share the same primitive-pair
 //!   Hermite tables (they differ only in contraction coefficients).
 //! * Both bra and ket tables come from the SCF-lifetime
-//!   [`ShellPairStore`](super::shellpair::ShellPairStore): every
+//!   [`ShellPairStore`]: every
 //!   surviving pair's tables are computed **once per SCF** and shared
 //!   (read-only) by all engine threads — no per-call bra cache, no
 //!   per-quartet ket rebuild.
@@ -20,7 +20,7 @@
 //!   build time.
 //! * l_total = 0 primitive quartets skip the R recursion entirely.
 //! * The component contraction is factored through the ket-Hermite
-//!   intermediate H[q][tuv], removing the bra-component redundancy.
+//!   intermediate `H[q][tuv]`, removing the bra-component redundancy.
 //! * The Hermite-Coulomb recursion runs in caller-owned scratch with no
 //!   per-quartet zeroing or copies.
 
@@ -40,7 +40,7 @@ pub struct EriEngine {
     seg_buf: Vec<f64>,
     /// Reusable Hermite-Coulomb recursion scratch.
     rscratch: RScratch,
-    /// Ket-Hermite intermediate H[q][tuv] (see `segment_quartet`).
+    /// Ket-Hermite intermediate `H[q][tuv]` (see `segment_quartet`).
     hket: Vec<f64>,
     /// Reusable resolved-prim buffers (see `ResolvedPrim`).
     bra_scratch: Vec<ResolvedPrim>,

@@ -19,6 +19,9 @@ pub mod schwarz;
 pub mod shellpair;
 
 pub use eri::EriEngine;
-pub use pairlist::{KetWalk, PairWalk, ShardingReport, SortedPairList, StoreSharding};
+pub use pairlist::{
+    ClippedKetWalk, KetWalk, PairWalk, RoundView, ShardingReport, SortedPairList,
+    StoreSharding,
+};
 pub use schwarz::{PairDensityMax, SchwarzScreen};
 pub use shellpair::{ShellPairStore, StoreShard};

@@ -55,9 +55,20 @@
 //! template, and bra ranks keep their static Q-rank identity, which is
 //! what keeps [`StoreSharding::partition_tasks`] ownership stable under
 //! the per-build `Q·w` re-ranking of the *ket* side.
+//!
+//! [`StoreSharding`] partitions the listed pairs across virtual ranks in
+//! one of two modes: **bra-sharded** (owned bra ranges plus one
+//! node-shared hot ket-prefix window, PR 3) or **ring exchange**
+//! (owned ranges only; Fock builds run in `n_shards` systolic rounds,
+//! each bra shard walking the one ket block currently visiting it —
+//! see [`StoreSharding::build_ring`]). Ring mode clips every bra's ket
+//! walk to the visiting block's rank range ([`KetWalk::clipped`]);
+//! because the owned ranges partition the rank space, the clipped
+//! segments partition each bra's two-key survivor set — every quartet
+//! is computed in exactly one round.
 
 use super::schwarz::{PairDensityMax, SchwarzScreen};
-use super::shellpair::{ShellPairStore, StoreShard};
+use super::shellpair::{PairView, ShellPairStore, StoreShard};
 
 /// One surviving shell pair: canonical indices (i ≥ j), its Schwarz
 /// bound, and its precomputed-table slot in the [`ShellPairStore`].
@@ -74,6 +85,20 @@ pub struct PairEntry {
 /// SCF-lifetime list of surviving shell pairs sorted descending by
 /// Schwarz bound. Built once per SCF alongside the [`ShellPairStore`];
 /// shared read-only by every engine thread.
+///
+/// # Invariants
+///
+/// * **Descending order**: `q(r) ≥ q(r + 1)` for every rank, with a
+///   deterministic (i, j) tie-break — so every engine derives the same
+///   rank space and the same visited sets.
+/// * **Prefix nesting** (the property the sharded store's one-window-
+///   per-node accounting rests on): because a walk's ket ranks never
+///   exceed the bra rank, `kl_limit_at(r, w) ≤ r + 1` for every rank
+///   and weight, so the resident ket prefixes of consecutive bra
+///   ranges all start at rank 0 and nest.
+/// * **Slot validity**: every listed rank carries a live
+///   [`ShellPairStore`] slot ([`ShellPairStore::slot`] stability) —
+///   unlisted pairs contribute only identically-negligible quartets.
 #[derive(Debug, Clone)]
 pub struct SortedPairList {
     n_shells: usize,
@@ -317,7 +342,7 @@ pub struct PairWalk<'a> {
     /// Per-pair two-key weights by static rank
     /// ([`PairDensityMax::pair_weight`]).
     w: Vec<f64>,
-    /// s[r] = Q_r · w_r by static rank.
+    /// `s[r] = Q_r · w_r` by static rank.
     s: Vec<f64>,
     /// Static ranks re-ranked descending by `s` — the per-build segment-B
     /// ket order.
@@ -356,7 +381,7 @@ pub struct KetWalk<'w> {
     s_order: &'w [u32],
 }
 
-impl KetWalk<'_> {
+impl<'w> KetWalk<'w> {
     /// Total iteration ordinals (segment A + segment-B candidates).
     /// This is the loop bound engines distribute; it can exceed the
     /// number of computed quartets by the rejected B candidates.
@@ -380,6 +405,90 @@ impl KetWalk<'_> {
         } else {
             let q = self.s_order[t - self.a_len] as usize;
             (q >= self.a_full && q <= self.rij).then_some(q)
+        }
+    }
+
+    /// Surviving kets (the `Some` ordinals), in iteration order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.len()).filter_map(|t| self.ket(t))
+    }
+
+    /// Clip this walk to the ket rank range `[lo, hi)` — the per-round
+    /// iteration space of a ring-exchange build, where a bra task may
+    /// only touch the ket block currently visiting its shard.
+    ///
+    /// Invariant (pinned by `clipped_segments_partition_the_walk`): for
+    /// any family of disjoint ranges covering `[0, len-of-list)`, the
+    /// clipped walks' `Some`-kets partition this walk's `Some`-kets —
+    /// each surviving ket rank falls in exactly one range. Clipping to
+    /// the full range reproduces this walk ordinal-for-ordinal. Segment
+    /// A clips to an index subrange (the ordinal→rank map is the
+    /// identity there); segment-B candidates are re-enumerated per clip
+    /// and rejected out-of-range on the same integer compares that
+    /// already police the `a_full`/triangular limits.
+    ///
+    /// Takes `self` by value (`KetWalk` is `Copy`) so the clip can be
+    /// chained off `PairWalk::kets` without borrowing a temporary.
+    #[inline]
+    pub fn clipped(self, lo: usize, hi: usize) -> ClippedKetWalk<'w> {
+        debug_assert!(lo <= hi);
+        ClippedKetWalk {
+            a_lo: lo.min(self.a_len),
+            a_hi: hi.min(self.a_len),
+            a_full: self.a_full,
+            b_len: self.b_len,
+            rij: self.rij,
+            lo,
+            hi,
+            s_order: self.s_order,
+        }
+    }
+}
+
+/// A [`KetWalk`] restricted to ket ranks in `[lo, hi)` — one
+/// ring-exchange round's share of a bra task's surviving kets. Same
+/// iteration contract as [`KetWalk`]: ordinals `0..len()` map to ket
+/// ranks via [`ClippedKetWalk::ket`], `None` ordinals are integer-
+/// compare-rejected candidates the engines skip.
+#[derive(Debug, Clone, Copy)]
+pub struct ClippedKetWalk<'w> {
+    /// Clipped segment-A rank range `[a_lo, a_hi)` (segment-A ordinals
+    /// map to ranks by identity, so the clip is an index subrange).
+    a_lo: usize,
+    a_hi: usize,
+    a_full: usize,
+    b_len: usize,
+    rij: usize,
+    lo: usize,
+    hi: usize,
+    s_order: &'w [u32],
+}
+
+impl ClippedKetWalk<'_> {
+    /// Iteration ordinals this round (clipped segment A plus all
+    /// segment-B candidates; the B clip is a per-candidate compare).
+    #[inline]
+    pub fn len(&self) -> usize {
+        (self.a_hi - self.a_lo) + self.b_len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Ket rank of iteration ordinal `t`, or `None` for a rejected
+    /// segment-B candidate (covered by segment A, above the triangular
+    /// limit, or outside this round's `[lo, hi)` block).
+    #[inline]
+    pub fn ket(&self, t: usize) -> Option<usize> {
+        let na = self.a_hi - self.a_lo;
+        if t < na {
+            Some(self.a_lo + t)
+        } else {
+            let q = self.s_order[t - na] as usize;
+            (q >= self.a_full && q <= self.rij && q >= self.lo && q < self.hi)
+                .then_some(q)
         }
     }
 
@@ -420,6 +529,14 @@ impl<'a> PairWalk<'a> {
     #[inline]
     pub fn task(&self, t: usize) -> usize {
         self.tasks[t] as usize
+    }
+
+    /// The full task list (live bra ranks in (i, j)-grouped order) —
+    /// what a flat [`DlbCounter`](crate::hf::dlb::DlbCounter) hand-out
+    /// indexes.
+    #[inline]
+    pub fn task_list(&self) -> &[u32] {
+        &self.tasks
     }
 
     /// The surviving-ket iteration space of bra rank `rij`: two binary
@@ -504,10 +621,19 @@ pub fn balanced_bounds(bytes: &[u64], n_shards: usize) -> Vec<usize> {
 #[derive(Debug, Clone)]
 pub struct ShardingReport {
     pub n_shards: usize,
+    /// Ring-exchange mode: no ket-prefix window; Fock builds run in
+    /// `n_rounds` systolic rounds instead.
+    pub ring: bool,
+    /// Fock-build rounds per sweep: `n_shards` under ring exchange,
+    /// 1 otherwise.
+    pub n_rounds: usize,
     /// The weight ceiling the resident ket prefixes are sized at. The
     /// SCF driver ratchets this up (re-deriving the prefixes) whenever
     /// a build's density weight exceeds it, so prefix undersizing can
     /// never masquerade as work-stealing traffic in `remote_fetches`.
+    /// `f64::INFINITY` under ring exchange: every visited ket lives in
+    /// exactly one owned block, so residency holds at *any* weight and
+    /// the driver's ratchet never fires.
     pub weight: f64,
     /// Largest private per-rank shard footprint (owned bra tables +
     /// slot remap) — the number the acceptance gate compares against
@@ -517,10 +643,15 @@ pub struct ShardingReport {
     pub mean_shard_bytes: usize,
     /// Length (pairs) of the union of all shards' resident ket
     /// prefixes. Prefixes nest (all start at rank 0), so this window,
-    /// held **once per node**, serves every shard.
+    /// held **once per node**, serves every shard. Always 0 under ring
+    /// exchange — dropping this term is the mode's whole point.
     pub prefix_len: usize,
-    /// Bytes of that shared prefix window's tables.
+    /// Bytes of that shared prefix window's tables (0 under ring).
     pub prefix_bytes: usize,
+    /// Ring-pass traffic per Fock build, summed over ranks: each rank
+    /// receives every other shard's ket block once per sweep, so this
+    /// is `(n_shards − 1) · Σ owned table bytes`. 0 in prefix mode.
+    pub ring_traffic_bytes: u64,
     /// Non-resident lookups served so far across all shards
     /// (work-stealing traffic).
     pub remote_fetches: u64,
@@ -553,17 +684,39 @@ pub struct ShardingReport {
 /// spike) are handled by the driver re-deriving the prefixes at the new
 /// weight ceiling ([`StoreSharding::rebuilt_at`]); anything that still
 /// spills is a counted remote fetch, never a wrong result.
+///
+/// # Ring exchange
+///
+/// [`StoreSharding::build_ring`] drops the prefix window entirely: each
+/// rank holds only its owned bra block, and a Fock build runs in
+/// `n_shards` systolic rounds. The ket blocks travel *forward* around
+/// the ring — in round `t` rank `s` holds (besides its own block) the
+/// ket block of shard `(s − t) mod n_shards` — so over one sweep every
+/// (bra shard, ket shard) pair meets exactly once. A bra's per-round
+/// kets are its two-key walk clipped to the visiting block's rank range
+/// ([`KetWalk::clipped`]); since the owned ranges partition the rank
+/// space, each visited quartet is computed in exactly one round, and —
+/// unlike the prefix mode — residency holds at **any** density weight
+/// (no ceiling, no ratcheting, no spill path for un-stolen work).
+/// Because a ket rank never exceeds its bra rank, shard `s` only has
+/// work in rounds `t ≤ s`; provably-empty (shard, round) units are
+/// skipped by the [`RingDlb`](crate::hf::dlb::RingDlb) up front.
 #[derive(Debug)]
 pub struct StoreSharding<'a> {
     list: &'a SortedPairList,
     store: &'a ShellPairStore,
     weight: f64,
+    /// Ring-exchange mode (no ket prefixes; round-based walks).
+    ring: bool,
     /// Shard `s` owns ranks `[bounds[s], bounds[s+1])`.
     bounds: Vec<usize>,
     /// Per-shard resident ket prefix lengths (ranks `[0, prefix[s])`,
-    /// always ≤ `bounds[s]`).
+    /// always ≤ `bounds[s]`; all zero under ring exchange).
     prefix: Vec<usize>,
     shards: Vec<StoreShard<'a>>,
+    /// Σ owned table bytes across all shards (one logical store copy) —
+    /// the unit of the ring-pass traffic accounting.
+    table_bytes_total: usize,
     /// Remote fetches accumulated by predecessor shardings this one
     /// replaced (weight-ceiling rebuilds), folded into
     /// [`StoreSharding::report`] so run totals survive the rebuild.
@@ -581,6 +734,30 @@ impl<'a> StoreSharding<'a> {
         n_shards: usize,
         weight: f64,
     ) -> StoreSharding<'a> {
+        Self::build_impl(list, store, n_shards, weight, false)
+    }
+
+    /// Shard `list`'s ranks over `n_shards` virtual ranks in **ring
+    /// exchange** mode: owned bra blocks only, no resident ket prefix,
+    /// Fock builds in `n_shards` rounds (see the type-level docs). The
+    /// ownership bounds are identical to [`StoreSharding::build`]'s —
+    /// [`balanced_bounds`] depends only on table bytes — so DLB task
+    /// partitions are comparable across the two modes.
+    pub fn build_ring(
+        list: &'a SortedPairList,
+        store: &'a ShellPairStore,
+        n_shards: usize,
+    ) -> StoreSharding<'a> {
+        Self::build_impl(list, store, n_shards, f64::INFINITY, true)
+    }
+
+    fn build_impl(
+        list: &'a SortedPairList,
+        store: &'a ShellPairStore,
+        n_shards: usize,
+        weight: f64,
+        ring: bool,
+    ) -> StoreSharding<'a> {
         assert!(n_shards > 0, "need at least one shard");
         assert_eq!(
             list.n_shells(),
@@ -590,6 +767,7 @@ impl<'a> StoreSharding<'a> {
         let m = list.len();
         let bytes: Vec<u64> =
             (0..m).map(|r| store.table_bytes_at(list.slot(r)) as u64).collect();
+        let table_bytes_total = bytes.iter().map(|&b| b as usize).sum();
 
         // Contiguous split balanced by cumulative table bytes — the
         // shared rule, also used by the simulator's shard model.
@@ -603,16 +781,23 @@ impl<'a> StoreSharding<'a> {
         // of rounding, so a τ-boundary quartet the walk visits can never
         // land one rank past the sized prefix. 1e-12 ≫ 4·ε with rooms to
         // spare, and at most admits a boundary rank or two extra.
-        let pad = weight * (1.0 + 1e-12);
-        let mut prefix = Vec::with_capacity(n_shards);
-        for s in 0..n_shards {
-            let (lo, hi) = (bounds[s], bounds[s + 1]);
-            let mut p = 0usize;
-            for rank in lo..hi {
-                p = p.max(list.kl_limit_at(rank, pad).min(lo));
+        // Ring mode holds no prefix at all: non-owned kets arrive with
+        // the visiting block, whatever the build's weight.
+        let prefix = if ring {
+            vec![0usize; n_shards]
+        } else {
+            let pad = weight * (1.0 + 1e-12);
+            let mut prefix = Vec::with_capacity(n_shards);
+            for s in 0..n_shards {
+                let (lo, hi) = (bounds[s], bounds[s + 1]);
+                let mut p = 0usize;
+                for rank in lo..hi {
+                    p = p.max(list.kl_limit_at(rank, pad).min(lo));
+                }
+                prefix.push(p);
             }
-            prefix.push(p);
-        }
+            prefix
+        };
 
         let shards = (0..n_shards)
             .map(|s| {
@@ -628,9 +813,11 @@ impl<'a> StoreSharding<'a> {
             list,
             store,
             weight,
+            ring,
             bounds,
             prefix,
             shards,
+            table_bytes_total,
             carried_remote_fetches: 0,
         }
     }
@@ -646,13 +833,16 @@ impl<'a> StoreSharding<'a> {
     /// The SCF driver calls this whenever a build's density weight
     /// exceeds the current ceiling — the fix for prefixes sized at the
     /// core-guess weight silently spilling on later full rebuilds with
-    /// a larger `max|D|`.
+    /// a larger `max|D|`. Ring shardings are returned unchanged in
+    /// structure (their weight is already `INFINITY`, so the driver's
+    /// ratchet never reaches here; the mode is preserved regardless).
     pub fn rebuilt_at(&self, weight: f64) -> StoreSharding<'a> {
-        let mut next = StoreSharding::build(
+        let mut next = StoreSharding::build_impl(
             self.list,
             self.store,
             self.n_shards(),
             weight.max(self.weight),
+            self.ring,
         );
         next.carried_remote_fetches = self.report().remote_fetches;
         next
@@ -660,6 +850,42 @@ impl<'a> StoreSharding<'a> {
 
     pub fn n_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Is this a ring-exchange sharding (round-based builds, no ket
+    /// prefix)?
+    pub fn is_ring(&self) -> bool {
+        self.ring
+    }
+
+    /// Fock-build rounds per sweep: `n_shards` under ring exchange,
+    /// 1 otherwise (prefix-mode builds are single-pass).
+    pub fn n_rounds(&self) -> usize {
+        if self.ring {
+            self.n_shards()
+        } else {
+            1
+        }
+    }
+
+    /// The ket shard whose block is resident at rank `s` in round
+    /// `round` of a ring sweep: blocks travel forward around the ring,
+    /// so rank `s` holds shard `(s − round) mod n`. In round 0 every
+    /// rank pairs with itself; over `n_rounds` rounds each (bra, ket)
+    /// shard pair meets exactly once.
+    #[inline]
+    pub fn ring_ket_shard(&self, s: usize, round: usize) -> usize {
+        let n = self.n_shards();
+        debug_assert!(s < n && round < n);
+        (s + n - round) % n
+    }
+
+    /// The ket rank range a bra task homed in shard `home` may walk in
+    /// round `round` of a ring sweep — the visiting block's owned
+    /// range. Clip bra walks with [`KetWalk::clipped`] to this range.
+    #[inline]
+    pub fn ring_ket_range(&self, home: usize, round: usize) -> (usize, usize) {
+        self.rank_range(self.ring_ket_shard(home, round))
     }
 
     /// The list this sharding partitions.
@@ -695,6 +921,25 @@ impl<'a> StoreSharding<'a> {
         &self.shards[s]
     }
 
+    /// The store surface resident at rank `exec` during `round` — what
+    /// the engines fetch pair tables through. Prefix mode: the rank's
+    /// own shard (owned block + shared ket prefix), identical to
+    /// [`StoreSharding::shard`] lookups. Ring mode: the rank's owned
+    /// block plus the ket block visiting it this round
+    /// ([`StoreSharding::ring_ket_shard`]); fetches outside both — a
+    /// stolen task's bra, or a stolen task's kets, which pair with the
+    /// *victim's* visitor, not the thief's — count as remote on the
+    /// executing shard.
+    #[inline]
+    pub fn round_view<'b>(&'b self, exec: usize, round: usize) -> RoundView<'a, 'b> {
+        RoundView {
+            exec: &self.shards[exec],
+            guest: self
+                .ring
+                .then(|| &self.shards[self.ring_ket_shard(exec, round)]),
+        }
+    }
+
     /// Split a walk's bra tasks by shard ownership, preserving the
     /// (i, j)-grouped task order inside each shard (a filter of the
     /// walk's order). The lists partition the walk's tasks: feeding
@@ -713,6 +958,19 @@ impl<'a> StoreSharding<'a> {
         out
     }
 
+    /// Ring-pass bytes per Fock build, summed over all ranks: each rank
+    /// receives every other shard's ket block once per sweep, so the
+    /// total is `(n_shards − 1) · Σ owned table bytes`. 0 in prefix
+    /// mode (nothing travels; the prefix window is resident for the
+    /// whole SCF).
+    pub fn ring_traffic_bytes(&self) -> u64 {
+        if self.ring {
+            (self.n_shards() as u64 - 1) * self.table_bytes_total as u64
+        } else {
+            0
+        }
+    }
+
     /// Run-level accounting summary.
     pub fn report(&self) -> ShardingReport {
         let n = self.n_shards();
@@ -728,13 +986,54 @@ impl<'a> StoreSharding<'a> {
             + self.shards.iter().map(|s| s.remote_fetches()).sum::<u64>();
         ShardingReport {
             n_shards: n,
+            ring: self.ring,
+            n_rounds: self.n_rounds(),
             weight: self.weight,
             max_shard_bytes,
             mean_shard_bytes,
             prefix_len,
             prefix_bytes,
+            ring_traffic_bytes: self.ring_traffic_bytes(),
             remote_fetches,
         }
+    }
+}
+
+/// One rank's resident store surface for one build round — the fetch
+/// path of every sharded engine ([`StoreSharding::round_view`]).
+///
+/// Prefix mode (`guest: None`) delegates straight to the executing
+/// shard: resident lookups are free, non-resident ones count as remote
+/// fetches on it. Ring mode adds the visiting ket block as a second
+/// free surface — its tables were shipped by the systolic pass, so
+/// reading them is local this round; anything outside both surfaces
+/// (stolen work) still counts as remote on the executing shard.
+#[derive(Clone, Copy)]
+pub struct RoundView<'a, 'b> {
+    exec: &'b StoreShard<'a>,
+    guest: Option<&'b StoreShard<'a>>,
+}
+
+impl<'a> RoundView<'a, '_> {
+    /// View the tables at a global store slot through this round's
+    /// resident surfaces (see the type-level docs for what counts as a
+    /// remote fetch).
+    #[inline]
+    pub fn view_by_slot(&self, slot: u32, swap: bool) -> PairView<'a> {
+        if let Some(guest) = self.guest {
+            if !self.exec.is_resident(slot) && guest.is_resident(slot) {
+                return guest.view_by_slot(slot, swap);
+            }
+        }
+        self.exec.view_by_slot(slot, swap)
+    }
+
+    /// Is the slot resident this round (owned block, shared prefix, or
+    /// the ring's visiting block)?
+    #[inline]
+    pub fn is_resident(&self, slot: u32) -> bool {
+        self.exec.is_resident(slot)
+            || self.guest.is_some_and(|g| g.is_resident(slot))
     }
 }
 
@@ -1103,6 +1402,140 @@ mod tests {
         assert_eq!(rep.prefix_len, 0);
         assert_eq!(rep.prefix_bytes, 0);
         assert_eq!(rep.max_shard_bytes, rep.mean_shard_bytes);
+    }
+
+    #[test]
+    fn clipped_full_range_matches_ketwalk() {
+        // clipped(0, m) must reproduce the unclipped walk ordinal for
+        // ordinal — the engines run the clipped form unconditionally.
+        let (basis, store, screen) = setup(&molecules::benzene(), 1e-9);
+        let list = SortedPairList::build(&screen, &store);
+        let d = random_density(basis.n_bf, 61);
+        let dmax = PairDensityMax::build(&basis, &d);
+        let walk = list.weighted(&dmax);
+        for rij in (0..list.len()).step_by(5) {
+            let kw = walk.kets(rij);
+            let cl = kw.clipped(0, list.len());
+            assert_eq!(cl.len(), kw.len(), "rij={rij}");
+            for t in 0..kw.len() {
+                assert_eq!(cl.ket(t), kw.ket(t), "rij={rij} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn clipped_segments_partition_the_walk() {
+        // For disjoint covering ranges (a sharding's ownership bounds),
+        // the clipped walks' kets must partition the full walk's kets —
+        // the exactly-one-round guarantee of the ring exchange.
+        let (basis, store, screen) = setup(&molecules::benzene(), 1e-9);
+        let list = SortedPairList::build(&screen, &store);
+        let d = random_density(basis.n_bf, 71);
+        let dmax = PairDensityMax::build(&basis, &d);
+        let walk = list.weighted(&dmax);
+        let sh = StoreSharding::build_ring(&list, &store, 5);
+        for rij in (0..list.len()).step_by(3) {
+            let mut union: Vec<usize> = Vec::new();
+            for s in 0..sh.n_shards() {
+                let (lo, hi) = sh.rank_range(s);
+                union.extend(walk.kets(rij).clipped(lo, hi).iter());
+            }
+            let n_union = union.len();
+            union.sort_unstable();
+            union.dedup();
+            assert_eq!(union.len(), n_union, "rij={rij}: a ket in two clips");
+            let mut want: Vec<usize> = walk.kets(rij).iter().collect();
+            want.sort_unstable();
+            assert_eq!(union, want, "rij={rij}: clips miss or invent kets");
+        }
+    }
+
+    #[test]
+    fn ring_schedule_meets_every_shard_pair_once() {
+        let (_, store, screen) = setup(&molecules::benzene(), 1e-10);
+        let list = SortedPairList::build(&screen, &store);
+        let n = 6;
+        let sh = StoreSharding::build_ring(&list, &store, n);
+        assert_eq!(sh.n_rounds(), n);
+        for s in 0..n {
+            let mut met: Vec<usize> =
+                (0..n).map(|t| sh.ring_ket_shard(s, t)).collect();
+            // Round 0 is the self-pairing; work-bearing rounds are
+            // exactly t ≤ s (ket ranks never exceed bra ranks).
+            assert_eq!(met[0], s);
+            for (t, &v) in met.iter().enumerate() {
+                assert_eq!(v <= s, t <= s, "shard {s} round {t} ket {v}");
+            }
+            met.sort_unstable();
+            let want: Vec<usize> = (0..n).collect();
+            assert_eq!(met, want, "shard {s}: sweep must meet every shard once");
+        }
+    }
+
+    #[test]
+    fn ring_sharding_drops_prefix_and_stays_resident_at_any_weight() {
+        let (basis, store, screen) = setup(&molecules::benzene(), 1e-9);
+        let list = SortedPairList::build(&screen, &store);
+        let n = 4;
+        let ring = StoreSharding::build_ring(&list, &store, n);
+        let prefixed = StoreSharding::build(&list, &store, n, 1.0);
+        assert!(ring.is_ring() && !prefixed.is_ring());
+        assert_eq!(prefixed.n_rounds(), 1);
+        // Same ownership bounds (byte-balance only) — task partitions
+        // are comparable across modes.
+        for s in 0..n {
+            assert_eq!(ring.rank_range(s), prefixed.rank_range(s));
+            assert_eq!(ring.prefix_len(s), 0, "ring holds no ket prefix");
+        }
+        let rep = ring.report();
+        assert!(rep.ring);
+        assert_eq!(rep.n_rounds, n);
+        assert_eq!(rep.prefix_len, 0);
+        assert_eq!(rep.prefix_bytes, 0);
+        assert_eq!(rep.weight, f64::INFINITY, "ring residency has no ceiling");
+        // Traffic: every rank receives each other block once per sweep.
+        let table_total: usize =
+            (0..list.len()).map(|r| store.table_bytes_at(list.slot(r))).sum();
+        assert_eq!(rep.ring_traffic_bytes, (n as u64 - 1) * table_total as u64);
+        assert_eq!(prefixed.report().ring_traffic_bytes, 0);
+
+        // Residency: at a *full-density* weight (which would have
+        // spilled a core-guess-sized prefix), every clipped ket of
+        // every un-stolen task is resident in its round's view.
+        let d = random_density(basis.n_bf, 83);
+        let dmax = PairDensityMax::build(&basis, &d);
+        let walk = list.weighted(&dmax);
+        for s in 0..n {
+            let (lo, hi) = ring.rank_range(s);
+            for round in 0..=s {
+                let view = ring.round_view(s, round);
+                let (klo, khi) = ring.ring_ket_range(s, round);
+                for rij in lo..hi {
+                    assert!(view.is_resident(list.slot(rij)), "own bra {rij}");
+                    for rkl in walk.kets(rij).clipped(klo, khi).iter() {
+                        assert!(
+                            view.is_resident(list.slot(rkl)),
+                            "shard {s} round {round}: ket {rkl} not resident"
+                        );
+                    }
+                }
+            }
+            // Rounds past s pair with higher-ranked ket blocks: the
+            // clip is provably empty (ket rank ≤ bra rank).
+            for round in (s + 1)..n {
+                let (klo, khi) = ring.ring_ket_range(s, round);
+                for rij in lo..hi {
+                    assert_eq!(
+                        walk.kets(rij).clipped(klo, khi).iter().count(),
+                        0,
+                        "shard {s} round {round}: unexpected work"
+                    );
+                }
+            }
+        }
+        // No fetch above went remote, and a rebuild preserves the mode.
+        assert_eq!(ring.report().remote_fetches, 0);
+        assert!(ring.rebuilt_at(123.0).is_ring());
     }
 
     #[test]

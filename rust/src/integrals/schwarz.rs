@@ -207,7 +207,7 @@ fn diagonal_max(basis: &BasisSet, i: usize, j: usize, buf: &[f64]) -> f64 {
 pub struct PairDensityMax {
     /// m[pair_index(i,j)] = max |D_ab| over the (i,j) shell block.
     m: Vec<f64>,
-    /// row[i] = max over partner shells c of the (i,c) block max — the
+    /// `row[i]` = max over partner shells c of the (i,c) block max — the
     /// density "row" of shell i in shell-pair space. Feeds the per-pair
     /// two-key weights ([`PairDensityMax::pair_weight`]).
     row: Vec<f64>,

@@ -11,7 +11,7 @@ use super::matrix::Matrix;
 #[derive(Debug, Clone)]
 pub struct Eigh {
     pub values: Vec<f64>,
-    /// Column-eigenvector matrix: vectors[i][k] = component i of vector k.
+    /// Column-eigenvector matrix: `vectors[i][k]` = component i of vector k.
     pub vectors: Matrix,
 }
 

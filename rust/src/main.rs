@@ -51,14 +51,24 @@ fn print_help() {
          usage: khf <command> [options]\n\n\
          commands:\n\
            info                              paper system inventory\n\
-           scf --mol <h2|h2o|ch4|c6h6> [--basis sto-3g] [--engine serial|mpi|private|shared|xla]\n\
+           scf --mol <h2|h2o|ch4|c6h6> [--basis <sto-3g|6-31g|6-31g*>]\n\
+               [--engine serial|mpi|private|shared|xla]\n\
                [--ranks N] [--threads N]     run RHF\n\
                [--no-incremental] [--rebuild-every N] [--tau T]\n\
                                              incremental (ΔD) Fock-build controls\n\
-               [--shard-store]               shard the shell-pair store across the\n\
-                                             virtual ranks (per-shard bytes reported)\n\
+               [--shard-store [N]]           shard the shell-pair store across the\n\
+                                             virtual ranks (default N = --ranks;\n\
+                                             per-shard bytes + DLB stats reported)\n\
+               [--ring-exchange]             with --shard-store: drop the shared\n\
+                                             ket-prefix window and run each Fock\n\
+                                             build as N systolic rounds (per-node\n\
+                                             store bytes O(total/N); ring traffic\n\
+                                             reported)\n\
            footprint                         Table 2 memory footprints\n\
            simulate --system <0.5|1.0|1.5|2.0|5.0> [--nodes 4,16,...]\n\
+               [--shard-store]               gate memory on the sharded store\n\
+               [--ring-exchange]             gate on ring sharding (+ ring traffic\n\
+                                             in the simulated Fock time)\n\
            calibrate [--out artifacts/calibration.toml] [--budget N]\n\
            artifacts-check                   verify XLA artifacts"
     );
@@ -107,12 +117,18 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
             "--shard-store {shard_store} must equal --ranks {ranks} for the {engine} engine"
         );
     }
+    let ring_exchange = args.flag("ring-exchange");
+    anyhow::ensure!(
+        !ring_exchange || shard_store > 0,
+        "--ring-exchange requires --shard-store"
+    );
 
     let driver = RhfDriver {
         incremental: !args.flag("no-incremental"),
         rebuild_every: args.parse_or("rebuild-every", 8)?,
         schwarz_tau: args.parse_or("tau", khf::integrals::SchwarzScreen::DEFAULT_TAU)?,
         shard_store,
+        ring_exchange,
         ..RhfDriver::default()
     };
     let res = match engine {
@@ -150,22 +166,40 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
         human_bytes(res.pairlist_bytes as f64),
     );
     if let Some(sh) = &res.sharding {
-        println!(
-            "  sharded store: {} shards, max {} / mean {} per shard ({:.2}x replicated), \
-             shared ket prefix {} pairs ({}) at weight ceiling {:.2e}, {} remote fetches",
-            sh.n_shards,
-            human_bytes(sh.max_shard_bytes as f64),
-            human_bytes(sh.mean_shard_bytes as f64),
-            sh.max_shard_bytes as f64 / res.store_bytes as f64,
-            sh.prefix_len,
-            human_bytes(sh.prefix_bytes as f64),
-            sh.weight,
-            sh.remote_fetches,
-        );
+        if sh.ring {
+            let builds = res.build_stats.len() as u64;
+            println!(
+                "  ring exchange: {} shards x {} rounds, max {} / mean {} per shard \
+                 ({:.2}x replicated; resident/rank = own + visiting block), \
+                 ring traffic {}/build ({} over {} builds), {} remote fetches",
+                sh.n_shards,
+                sh.n_rounds,
+                human_bytes(sh.max_shard_bytes as f64),
+                human_bytes(sh.mean_shard_bytes as f64),
+                sh.max_shard_bytes as f64 / res.store_bytes as f64,
+                human_bytes(sh.ring_traffic_bytes as f64),
+                human_bytes((sh.ring_traffic_bytes * builds) as f64),
+                builds,
+                sh.remote_fetches,
+            );
+        } else {
+            println!(
+                "  sharded store: {} shards, max {} / mean {} per shard ({:.2}x replicated), \
+                 shared ket prefix {} pairs ({}) at weight ceiling {:.2e}, {} remote fetches",
+                sh.n_shards,
+                human_bytes(sh.max_shard_bytes as f64),
+                human_bytes(sh.mean_shard_bytes as f64),
+                sh.max_shard_bytes as f64 / res.store_bytes as f64,
+                sh.prefix_len,
+                human_bytes(sh.prefix_bytes as f64),
+                sh.weight,
+                sh.remote_fetches,
+            );
+        }
         if let Some(sb) = res.build_stats.last().and_then(|s| s.shard) {
             println!(
-                "  shard DLB (final build): {}..{} tasks/shard, {} stolen",
-                sb.min_shard_tasks, sb.max_shard_tasks, sb.tasks_stolen,
+                "  shard DLB (final build): {}..{} task units/shard over {} round(s), {} stolen",
+                sb.min_shard_tasks, sb.max_shard_tasks, sb.rounds, sb.tasks_stolen,
             );
         }
     }
@@ -290,6 +324,14 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         .unwrap_or_else(|| vec![4, 16, 64, 128, 256, 512]);
     let cost = CostModel::load_or_fallback("artifacts/calibration.toml");
     let stats = stats_for_system(sys, &cost)?;
+    let ring_exchange = args.flag("ring-exchange");
+    // Accept both the bare-flag and `--shard-store N` forms the scf
+    // subcommand takes; the simulator always shards across the
+    // machine's full rank count, so an explicit N only switches the
+    // mode on.
+    let shard_store = ring_exchange
+        || args.flag("shard-store")
+        || args.parse_or("shard-store", 0usize)? > 0;
 
     let mut rows = vec![vec![
         "nodes".into(),
@@ -298,9 +340,24 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         "Sh.F (s)".into(),
     ]];
     for &n in &nodes {
-        let mpi = simulate(EngineKind::MpiOnly, &stats, &Machine::theta_mpi(n), &cost);
-        let prf = simulate(EngineKind::PrivateFock, &stats, &Machine::theta_hybrid(n), &cost);
-        let shf = simulate(EngineKind::SharedFock, &stats, &Machine::theta_hybrid(n), &cost);
+        let machine = |mut m: Machine| {
+            m.shard_store = shard_store;
+            m.ring_exchange = ring_exchange;
+            m
+        };
+        let mpi = simulate(EngineKind::MpiOnly, &stats, &machine(Machine::theta_mpi(n)), &cost);
+        let prf = simulate(
+            EngineKind::PrivateFock,
+            &stats,
+            &machine(Machine::theta_hybrid(n)),
+            &cost,
+        );
+        let shf = simulate(
+            EngineKind::SharedFock,
+            &stats,
+            &machine(Machine::theta_hybrid(n)),
+            &cost,
+        );
         rows.push(vec![
             n.to_string(),
             report::secs(mpi.fock_seconds * 15.0),
@@ -308,7 +365,17 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             report::secs(shf.fock_seconds * 15.0),
         ]);
     }
-    println!("{} — simulated Fock time (15 SCF iterations):", sys.label());
+    println!(
+        "{} — simulated Fock time (15 SCF iterations{}):",
+        sys.label(),
+        if ring_exchange {
+            ", ring-sharded store"
+        } else if shard_store {
+            ", sharded store"
+        } else {
+            ""
+        }
+    );
     print!("{}", report::table(&rows));
     Ok(())
 }

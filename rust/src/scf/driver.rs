@@ -48,6 +48,14 @@ pub struct RhfDriver {
     /// steals neighbor tasks once its shard drains. `ScfResult::sharding`
     /// reports the per-shard bytes.
     pub shard_store: usize,
+    /// Ring-exchange sharding (requires `shard_store > 0`): drop the
+    /// node-shared ket-prefix window entirely and run every Fock build
+    /// in `shard_store` systolic rounds, each bra shard walking the ket
+    /// block visiting it that round. Per-rank resident store bytes
+    /// become O(total/N) with no weight ceiling — residency holds for
+    /// any density, so the prefix ratchet below never fires — at the
+    /// cost of the per-build ring traffic `ScfResult::sharding` reports.
+    pub ring_exchange: bool,
 }
 
 impl Default for RhfDriver {
@@ -60,6 +68,7 @@ impl Default for RhfDriver {
             incremental: true,
             rebuild_every: 8,
             shard_store: 0,
+            ring_exchange: false,
         }
     }
 }
@@ -89,7 +98,8 @@ pub struct ScfResult {
     /// Heap bytes of the shared sorted pair list.
     pub pairlist_bytes: usize,
     /// Per-shard store accounting when `shard_store` was on: max/mean
-    /// private shard bytes, the node-shared ket prefix window, and the
+    /// private shard bytes, the node-shared ket prefix window (prefix
+    /// mode) or the per-build ring traffic (`ring_exchange`), and the
     /// remote fetches work-stealing paid over the whole run.
     pub sharding: Option<ShardingReport>,
 }
@@ -159,21 +169,34 @@ impl RhfDriver {
         // so run them in plain direct-SCF mode.
         let incremental = self.incremental && builder.screens();
 
+        anyhow::ensure!(
+            !self.ring_exchange || self.shard_store > 0,
+            "ring_exchange requires shard_store > 0 (the ring passes owned shards around)"
+        );
+
         // Core guess.
         let mut d = self.new_density(&h, &x, n_occ).1;
         // Sharded store: partition the Q-sorted bra ranks across the
-        // virtual ranks once per SCF, sizing each shard's resident ket
-        // prefix at the core-guess build's weight. That weight is NOT a
-        // ceiling for the whole run — converging densities (and DIIS
-        // extrapolation) can push later full rebuilds' max|D| above it
-        // — so the loop below ratchets: any build whose density weight
-        // exceeds the current sharding weight re-derives the prefixes
-        // (same ownership bounds, carried fetch counts) before the
-        // build runs. Un-stolen work therefore never spills into
-        // remote fetches; stealing traffic remains the only source.
+        // virtual ranks once per SCF. In prefix mode each shard's
+        // resident ket prefix is sized at the core-guess build's
+        // weight. That weight is NOT a ceiling for the whole run —
+        // converging densities (and DIIS extrapolation) can push later
+        // full rebuilds' max|D| above it — so the loop below ratchets:
+        // any build whose density weight exceeds the current sharding
+        // weight re-derives the prefixes (same ownership bounds,
+        // carried fetch counts) before the build runs. Un-stolen work
+        // therefore never spills into remote fetches; stealing traffic
+        // remains the only source. Ring mode has no prefix to size:
+        // its weight is INFINITY, so the ratchet below never fires and
+        // residency holds for every build unconditionally.
         let mut sharding: Option<StoreSharding<'_>> = (self.shard_store > 0).then(|| {
-            // max_abs == PairDensityMax::global for a symmetric density.
-            StoreSharding::build(&pairs, &store, self.shard_store, d.max_abs())
+            if self.ring_exchange {
+                StoreSharding::build_ring(&pairs, &store, self.shard_store)
+            } else {
+                // max_abs == PairDensityMax::global for a symmetric
+                // density.
+                StoreSharding::build(&pairs, &store, self.shard_store, d.max_abs())
+            }
         });
         let mut diis = Diis::new(8);
         let mut history = Vec::new();
@@ -540,6 +563,51 @@ mod tests {
         )
         .global;
         assert!(rep.weight >= 0.99 * w_final, "ceiling {} vs final weight {w_final}", rep.weight);
+    }
+
+    #[test]
+    fn ring_exchange_matches_and_never_fetches_remotely() {
+        // Ring mode with the serial engine (every task executes at its
+        // home rank): the energy must match the plain run and the
+        // fetch counter must stay at zero across the whole SCF — ring
+        // residency has no weight ceiling, so not even the converged
+        // density's full rebuilds can spill.
+        let mol = molecules::water();
+        let mut b1 = SerialFock::new();
+        let plain = RhfDriver::default().run(&mol, BasisName::Sto3g, &mut b1).unwrap();
+        let mut b2 = SerialFock::new();
+        let ring = RhfDriver {
+            shard_store: 4,
+            ring_exchange: true,
+            rebuild_every: 1,
+            ..Default::default()
+        }
+        .run(&mol, BasisName::Sto3g, &mut b2)
+        .unwrap();
+        assert!(ring.converged);
+        assert!(
+            (ring.energy - plain.energy).abs() < 1e-10,
+            "{} vs {}",
+            ring.energy,
+            plain.energy
+        );
+        let rep = ring.sharding.as_ref().expect("ring report missing");
+        assert!(rep.ring);
+        assert_eq!(rep.n_shards, 4);
+        assert_eq!(rep.n_rounds, 4);
+        assert_eq!(rep.prefix_len, 0, "ring holds no ket-prefix window");
+        assert_eq!(rep.prefix_bytes, 0);
+        assert_eq!(rep.remote_fetches, 0, "un-stolen ring work must stay resident");
+        assert!(rep.ring_traffic_bytes > 0);
+        assert_eq!(rep.weight, f64::INFINITY);
+    }
+
+    #[test]
+    fn ring_exchange_requires_sharding() {
+        let err = RhfDriver { ring_exchange: true, ..Default::default() }
+            .run(&molecules::h2(), BasisName::Sto3g, &mut SerialFock::new())
+            .unwrap_err();
+        assert!(err.to_string().contains("shard_store"), "{err}");
     }
 
     #[test]
