@@ -8,12 +8,13 @@
 use khf::chem::graphene::PaperSystem;
 use khf::cluster::knl::{ClusterMode, MemoryMode};
 use khf::cluster::{simulate, CostModel, Machine};
-use khf::coordinator::{report, stats_for_system};
+use khf::coordinator::{report, stats_for_system, BenchJson};
 use khf::hf::memmodel::EngineKind;
 
 fn main() {
     khf::util::logging::init();
     let cost = CostModel::load_or_fallback("artifacts/calibration.toml");
+    let mut json = BenchJson::new("fig5_modes");
 
     for sys in [PaperSystem::Nm05, PaperSystem::Nm20] {
         let stats = stats_for_system(sys, &cost).expect("stats");
@@ -39,6 +40,10 @@ fn main() {
                 let mpi = simulate(EngineKind::MpiOnly, &stats, &mpi_m, &cost);
                 let prf = simulate(EngineKind::PrivateFock, &stats, &hybrid, &cost);
                 let shf = simulate(EngineKind::SharedFock, &stats, &hybrid, &cost);
+                let config = format!("{}/{}-{}", sys.label(), cl.label(), mem.label());
+                json.row(&config, "mpi_fock_seconds", mpi.fock_seconds);
+                json.row(&config, "private_fock_seconds", prf.fock_seconds);
+                json.row(&config, "shared_fock_seconds", shf.fock_seconds);
                 rows.push(vec![
                     format!("{}-{}", cl.label(), mem.label()),
                     report::secs(mpi.fock_seconds),
@@ -53,4 +58,5 @@ fn main() {
              all modes except all-to-all (small system), where they flip; quad-cache best.\n"
         );
     }
+    json.write();
 }

@@ -5,13 +5,14 @@
 
 use khf::chem::graphene::PaperSystem;
 use khf::cluster::{simulate, CostModel, Machine};
-use khf::coordinator::{report, stats_for_system};
+use khf::coordinator::{report, stats_for_system, BenchJson};
 use khf::hf::memmodel::EngineKind;
 
 fn main() {
     khf::util::logging::init();
     let cost = CostModel::load_or_fallback("artifacts/calibration.toml");
     let stats = stats_for_system(PaperSystem::Nm20, &cost).expect("stats");
+    let mut json = BenchJson::new("fig6_scaling");
 
     println!("== Fig 6: multi-node speedup, 2.0 nm (relative to 4 nodes) ==\n");
     let nodes = [4usize, 8, 16, 32, 64, 128, 256, 512];
@@ -31,6 +32,13 @@ fn main() {
         let prf = simulate(EngineKind::PrivateFock, &stats, &Machine::theta_hybrid(n), &cost);
         let shf = simulate(EngineKind::SharedFock, &stats, &Machine::theta_hybrid(n), &cost);
         let b = *base.get_or_insert((mpi.fock_seconds, prf.fock_seconds, shf.fock_seconds));
+        let config = format!("2.0nm/{n}nodes");
+        json.row(&config, "mpi_fock_seconds", mpi.fock_seconds);
+        json.row(&config, "mpi_speedup", b.0 / mpi.fock_seconds);
+        json.row(&config, "private_fock_seconds", prf.fock_seconds);
+        json.row(&config, "private_speedup", b.1 / prf.fock_seconds);
+        json.row(&config, "shared_fock_seconds", shf.fock_seconds);
+        json.row(&config, "shared_speedup", b.2 / shf.fock_seconds);
         rows.push(vec![
             n.to_string(),
             report::secs(mpi.fock_seconds * 15.0),
@@ -48,4 +56,5 @@ fn main() {
          private Fock saturates first (only NShells i-tasks for the rank-level DLB);\n\
          MPI-only in between but slowest in absolute time."
     );
+    json.write();
 }

@@ -6,7 +6,7 @@
 
 use khf::basis::{BasisName, BasisSet};
 use khf::chem::graphene::PaperSystem;
-use khf::coordinator::report;
+use khf::coordinator::{report, BenchJson};
 use khf::hf::memmodel::{self, EngineKind};
 use khf::integrals::{ShellPairStore, SortedPairList};
 
@@ -15,6 +15,7 @@ fn gb(b: f64) -> String {
 }
 
 fn main() {
+    let mut json = BenchJson::new("table2_memory");
     // Paper Table 2 (GB): (system, MPI, PrF, ShF).
     let paper: [(&str, f64, f64, f64); 5] = [
         ("0.5 nm", 7.0, 0.13, 0.03),
@@ -41,17 +42,23 @@ fn main() {
     ]];
     for (k, sys) in PaperSystem::ALL.iter().enumerate() {
         let n = sys.n_bf();
+        let mpi = memmodel::exact_bytes(EngineKind::MpiOnly, n, 15, 256, 1);
+        let prf = memmodel::exact_bytes(EngineKind::PrivateFock, n, 15, 4, 64);
+        let shf = memmodel::exact_bytes(EngineKind::SharedFock, n, 15, 4, 64);
+        json.row(sys.label(), "mpi_exact_bytes", mpi);
+        json.row(sys.label(), "private_exact_bytes", prf);
+        json.row(sys.label(), "shared_exact_bytes", shf);
         rows.push(vec![
             sys.label().into(),
             n.to_string(),
             format!("{}", paper[k].1),
-            gb(memmodel::exact_bytes(EngineKind::MpiOnly, n, 15, 256, 1)),
+            gb(mpi),
             gb(memmodel::eq3a_mpi(n, 256)),
             format!("{}", paper[k].2),
-            gb(memmodel::exact_bytes(EngineKind::PrivateFock, n, 15, 4, 64)),
+            gb(prf),
             gb(memmodel::eq3b_private(n, 64, 4)),
             format!("{}", paper[k].3),
-            gb(memmodel::exact_bytes(EngineKind::SharedFock, n, 15, 4, 64)),
+            gb(shf),
             gb(memmodel::eq3c_shared(n, 4)),
         ]);
     }
@@ -60,17 +67,20 @@ fn main() {
     println!("\n== Shell-pair store: replicated vs sharded vs ring (MPI-only, 256 ranks/node) ==");
     println!("   sharded gate figures: max shard at 1.5x the even split, shared ket");
     println!("   prefix window at 0.3x one copy (held once per node); ring: own +");
-    println!("   visiting block per rank, no window, traffic = (N-1) copies/build\n");
+    println!("   visiting block per rank, no window; overlapped ring (--ring-overlap)");
+    println!("   adds a prefetch block (3 resident); ring bytes/build = the (N-1)");
+    println!("   block copies each rank receives per rebuild (bytes moved, not time)\n");
     let mut rows = vec![vec![
         "system".into(),
         "store/copy".into(),
         "replicated/node".into(),
         "sharded/node".into(),
         "ring/node".into(),
+        "ovl ring/node".into(),
         "total repl.".into(),
         "total sharded".into(),
         "total ring".into(),
-        "ring traffic/build".into(),
+        "ring bytes/build".into(),
         "feasible (repl/shard/ring)".into(),
     ]];
     for sys in PaperSystem::ALL {
@@ -85,6 +95,8 @@ fn main() {
         let shard_store =
             memmodel::sharded_scf_bytes_per_node(sb / 256.0 * 1.5, 0.3 * sb, pl, 256);
         let ring_store = memmodel::ring_scf_bytes_per_node(sb / 256.0 * 1.5, pl, 256);
+        let ovl_store =
+            memmodel::ring_overlap_scf_bytes_per_node(sb / 256.0 * 1.5, pl, 256);
         let total_repl =
             memmodel::exact_bytes_with_store(EngineKind::MpiOnly, n, 15, 256, 1, sb, pl);
         let total_shard = memmodel::exact_bytes_with_sharded_store(
@@ -107,18 +119,26 @@ fn main() {
             pl,
         );
         // One-node sweep: each of the 256 ranks receives the other 255
-        // blocks once per build.
-        let ring_traffic = 255.0 * sb;
+        // blocks once per build. This column is bytes moved, not time —
+        // the simulator's `Breakdown::ring_pass_seconds` charges the
+        // time equivalent.
+        let ring_bytes = 255.0 * sb;
+        json.row(sys.label(), "replicated_store_bytes_per_node", repl_store);
+        json.row(sys.label(), "sharded_store_bytes_per_node", shard_store);
+        json.row(sys.label(), "ring_store_bytes_per_node", ring_store);
+        json.row(sys.label(), "ring_overlap_store_bytes_per_node", ovl_store);
+        json.row(sys.label(), "ring_bytes_per_build", ring_bytes);
         rows.push(vec![
             sys.label().into(),
             gb(sb),
             gb(repl_store),
             gb(shard_store),
             gb(ring_store),
+            gb(ovl_store),
             gb(total_repl),
             gb(total_shard),
             gb(total_ring),
-            gb(ring_traffic),
+            gb(ring_bytes),
             format!(
                 "{}/{}/{}",
                 memmodel::feasible(total_repl, false),
@@ -149,4 +169,5 @@ fn main() {
         ]);
     }
     print!("{}", report::table(&rows));
+    json.write();
 }

@@ -17,6 +17,23 @@ pub fn n_pair_classes(n: usize) -> usize {
     n * (n + 1) / 2
 }
 
+/// Wall-clock of the *overlapped* (double-buffered) ring pass, seconds.
+///
+/// The serial charge of the synchronous pass is
+/// `rounds · comm_round` stacked on top of compute. With the exchange
+/// double-buffered behind the compute of each round, every steady-state
+/// round costs `max(compute_round, comm_round)`; the excess over pure
+/// compute — what the ring still *adds* to the build — is
+/// `max(0, comm_round − compute_round)` per round, plus one pipeline
+/// fill (`comm_round`: the first block must arrive before it can hide
+/// behind anything). Elision of provably-empty cells does not shorten
+/// this critical path — some rank receives a block every round — it
+/// only cuts the *traffic byte* count, so `comm_round` here stays the
+/// full per-round block time.
+pub fn overlapped_ring_pass(comm_round: f64, compute_round: f64, rounds: usize) -> f64 {
+    comm_round + rounds as f64 * (comm_round - compute_round).max(0.0)
+}
+
 /// The calibrated cost model.
 #[derive(Debug, Clone)]
 pub struct CostModel {
@@ -136,6 +153,24 @@ mod tests {
         assert_eq!(pair_class(0, 1), 1);
         assert_eq!(pair_class(3, 3), 9);
         assert_eq!(n_pair_classes(4), 10);
+    }
+
+    #[test]
+    fn overlapped_pass_hides_comm_under_compute() {
+        // Compute-bound rounds: the whole pass collapses to one
+        // pipeline fill, strictly below the serial charge.
+        let serial = 8.0 * 0.01;
+        let hidden = overlapped_ring_pass(0.01, 0.05, 8);
+        assert!((hidden - 0.01).abs() < 1e-15);
+        assert!(hidden < serial);
+        // Comm-bound rounds: only the compute-sized slice hides; the
+        // pass still undercuts the serial charge by rounds·compute.
+        let bound = overlapped_ring_pass(0.05, 0.01, 8);
+        assert!((bound - (0.05 + 8.0 * 0.04)).abs() < 1e-12);
+        assert!(bound < 8.0 * 0.05 + 0.05);
+        // Zero compute degenerates to fill + full serial rounds.
+        let degen = overlapped_ring_pass(0.05, 0.0, 8);
+        assert!((degen - 9.0 * 0.05).abs() < 1e-12);
     }
 
     #[test]

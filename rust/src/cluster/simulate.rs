@@ -13,7 +13,7 @@ use std::collections::BinaryHeap;
 use crate::hf::memmodel::{self, EngineKind};
 
 use super::comm::{allreduce_seconds, thread_reduce_seconds, NetParams};
-use super::costmodel::CostModel;
+use super::costmodel::{overlapped_ring_pass, CostModel};
 use super::knl::{self, Affinity, ClusterMode, MemoryMode};
 use super::workload::SystemStats;
 
@@ -67,6 +67,14 @@ pub struct Machine {
     /// per rank per build, costed against the injection bandwidth plus
     /// a per-round latency.
     pub ring_exchange: bool,
+    /// Double-buffered overlapped ring (implies `ring_exchange`): the
+    /// memory gate charges each rank **three** blocks — own + current +
+    /// prefetch ([`memmodel::ring_overlap_scf_bytes_per_node`]) — and
+    /// the pass is modeled as `max(compute, comm)` per round with one
+    /// pipeline-fill term
+    /// ([`overlapped_ring_pass`](super::costmodel::overlapped_ring_pass))
+    /// instead of the serial `(n_ranks − 1)·comm` charge.
+    pub ring_overlap: bool,
 }
 
 impl Machine {
@@ -84,6 +92,7 @@ impl Machine {
             mcdram_only: false,
             shard_store: false,
             ring_exchange: false,
+            ring_overlap: false,
         }
     }
 
@@ -120,9 +129,15 @@ pub struct Breakdown {
     pub reduce_threads: f64,
     pub reduce_ranks: f64,
     pub imbalance: f64,
-    /// Systolic ring pass (ket-block shipping) under
-    /// [`Machine::ring_exchange`]; 0 otherwise.
-    pub ring_traffic: f64,
+    /// Wall seconds of the systolic ring pass (ket-block shipping)
+    /// under [`Machine::ring_exchange`]; 0 otherwise. This is a *time*,
+    /// not a byte count — the shipped bytes live in
+    /// [`ShardingReport::ring_traffic_bytes`](crate::integrals::ShardingReport::ring_traffic_bytes).
+    pub ring_pass_seconds: f64,
+    /// Fraction of the serial ring charge hidden under compute by the
+    /// double buffer: `(serial − pass) / serial`, clamped at 0. Zero
+    /// unless [`Machine::ring_overlap`] is set on a multi-rank ring.
+    pub ring_overlap_efficiency: f64,
 }
 
 /// Simulation result.
@@ -187,12 +202,14 @@ pub fn simulate(
 
     // Store + pair-list share of the per-node footprint: replicated per
     // rank by default, with `shard_store` one private bra shard per
-    // rank plus a node-shared hot ket prefix window, and with
+    // rank plus a node-shared hot ket prefix window, with
     // `ring_exchange` two blocks per rank (own + visiting) and no
-    // window at all. The Q-sorted shard order is built once; the
-    // memory gate's halving loop below only re-derives the cheap
+    // window at all, and with `ring_overlap` a third block (the staged
+    // prefetch). The Q-sorted shard order is built once; the memory
+    // gate's halving loop below only re-derives the cheap
     // per-rank-count partition.
-    let ring = m.ring_exchange;
+    let overlap = m.ring_overlap;
+    let ring = m.ring_exchange || overlap;
     let pairlist_bytes = crate::integrals::SortedPairList::estimate_bytes_for(
         stats.pairs.len(),
     ) as f64;
@@ -201,7 +218,13 @@ pub fn simulate(
         match &shard_order {
             Some(order) => {
                 let model = order.model((nodes * ranks_per_node).max(1));
-                if ring {
+                if ring && overlap {
+                    memmodel::ring_overlap_scf_bytes_per_node(
+                        model.max_shard_bytes,
+                        pairlist_bytes,
+                        ranks_per_node,
+                    )
+                } else if ring {
                     memmodel::ring_scf_bytes_per_node(
                         model.max_shard_bytes,
                         pairlist_bytes,
@@ -273,11 +296,13 @@ pub fn simulate(
     // (ranks − 1) ket blocks per sweep, one per round, costed at the
     // injection bandwidth plus a per-round latency. (The blocks move
     // concurrently — each rank sends one and receives one per round —
-    // so wall time is per-rank traffic, not the summed total.)
-    let ring_seconds = match &shard_order {
+    // so wall time is per-rank traffic, not the summed total.) The
+    // per-round block time; the serial-vs-overlapped charge is applied
+    // after the engine model, once the compute time is known.
+    let ring_comm_round = match &shard_order {
         Some(order) if ring && ranks > 1 => {
             let model = order.model(ranks);
-            (ranks - 1) as f64 * (model.mean_shard_bytes / m.net.bandwidth + m.net.latency)
+            model.mean_shard_bytes / m.net.bandwidth + m.net.latency
         }
         _ => 0.0,
     };
@@ -391,7 +416,24 @@ pub fn simulate(
 
     let mean_busy = rank_busy.iter().sum::<f64>() / rank_busy.len() as f64;
     let max_busy = rank_busy.iter().cloned().fold(0.0, f64::max);
-    bd.ring_traffic = ring_seconds;
+    // Charge the ring pass. Synchronous: the serial (ranks − 1)·comm
+    // stack. Overlapped: each round's exchange hides under that round's
+    // compute slice (fock_seconds / rounds), leaving one pipeline fill
+    // plus only the comm excess — max(compute, comm) per round.
+    let ring_seconds = if ring_comm_round > 0.0 {
+        let serial = (ranks - 1) as f64 * ring_comm_round;
+        if overlap {
+            let compute_round = fock_seconds / ranks as f64;
+            let pass = overlapped_ring_pass(ring_comm_round, compute_round, ranks - 1);
+            bd.ring_overlap_efficiency = ((serial - pass) / serial).max(0.0);
+            pass
+        } else {
+            serial
+        }
+    } else {
+        0.0
+    };
+    bd.ring_pass_seconds = ring_seconds;
     SimResult {
         engine,
         fock_seconds: fock_seconds + ring_seconds,
@@ -529,7 +571,7 @@ mod tests {
         let r = simulate(EngineKind::SharedFock, &stats, &Machine::theta_hybrid(2), &cost);
         let b = r.breakdown;
         let sum = b.compute + b.screen_tests + b.sync + b.flush + b.dlb + b.imbalance
-            + b.reduce_ranks + b.reduce_threads + b.ring_traffic;
+            + b.reduce_ranks + b.reduce_threads + b.ring_pass_seconds;
         assert!(sum >= r.fock_seconds * 0.5 && sum <= r.fock_seconds * 2.0);
     }
 
@@ -557,13 +599,50 @@ mod tests {
         // and is folded into the total. (No ordering assertion against
         // the prefix run's total: the smaller resident set also eases
         // the KNL cache-mode penalty, which cuts the other way.)
-        assert_eq!(r_prefix.breakdown.ring_traffic, 0.0);
-        assert!(r_ring.breakdown.ring_traffic > 0.0);
-        assert!(r_ring.fock_seconds >= r_ring.breakdown.ring_traffic);
+        assert_eq!(r_prefix.breakdown.ring_pass_seconds, 0.0);
+        assert!(r_ring.breakdown.ring_pass_seconds > 0.0);
+        assert!(r_ring.fock_seconds >= r_ring.breakdown.ring_pass_seconds);
         // ring_exchange alone implies sharding (no shard_store flag).
         let mut only_ring = Machine::theta_hybrid(8);
         only_ring.ring_exchange = true;
         let r_only = simulate(EngineKind::SharedFock, &stats, &only_ring, &cost);
         assert_eq!(r_only.store_bytes_per_node, r_ring.store_bytes_per_node);
+    }
+
+    #[test]
+    fn overlap_beats_serial_ring_charge() {
+        // Acceptance pin: on a multi-rank ring config the overlapped
+        // pass must land fock_seconds strictly below the serial-charge
+        // model, with the hidden fraction surfaced in the breakdown.
+        let stats = small_stats();
+        let cost = CostModel::fallback_631gd();
+        let mut ringed = Machine::theta_hybrid(8);
+        ringed.ring_exchange = true;
+        let mut ovl = ringed.clone();
+        ovl.ring_overlap = true;
+        let r_ring = simulate(EngineKind::SharedFock, &stats, &ringed, &cost);
+        let r_ovl = simulate(EngineKind::SharedFock, &stats, &ovl, &cost);
+        assert!(
+            r_ovl.breakdown.ring_pass_seconds < r_ring.breakdown.ring_pass_seconds,
+            "overlapped pass {} !< serial charge {}",
+            r_ovl.breakdown.ring_pass_seconds,
+            r_ring.breakdown.ring_pass_seconds
+        );
+        assert!(
+            r_ovl.fock_seconds < r_ring.fock_seconds,
+            "overlap {} !< serial {}",
+            r_ovl.fock_seconds,
+            r_ring.fock_seconds
+        );
+        assert!(r_ovl.breakdown.ring_overlap_efficiency > 0.0);
+        assert!(r_ovl.breakdown.ring_overlap_efficiency <= 1.0);
+        assert_eq!(r_ring.breakdown.ring_overlap_efficiency, 0.0);
+        // The double buffer is paid for in residency: a third block per
+        // rank, and ring_overlap alone implies the ring store split.
+        assert!(r_ovl.store_bytes_per_node > r_ring.store_bytes_per_node);
+        let mut only_ovl = Machine::theta_hybrid(8);
+        only_ovl.ring_overlap = true;
+        let r_only = simulate(EngineKind::SharedFock, &stats, &only_ovl, &cost);
+        assert_eq!(r_only.store_bytes_per_node, r_ovl.store_bytes_per_node);
     }
 }

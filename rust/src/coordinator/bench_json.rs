@@ -1,0 +1,122 @@
+//! Machine-readable bench output: `BENCH_<name>.json` row files.
+//!
+//! The paper-figure benches print human tables; this sidecar serializer
+//! additionally records each reported metric as a flat
+//! `{bench, config, metric, value}` row so a later session (or CI) can
+//! read the perf trajectory without scraping stats lines. The format is
+//! deliberately minimal — a JSON array of four-field objects — and the
+//! writer is std-only (no serde in the offline vendor set).
+
+use std::io::Write as _;
+
+/// Collects rows for one bench run and writes `BENCH_<bench>.json`.
+pub struct BenchJson {
+    bench: String,
+    rows: Vec<(String, String, f64)>,
+}
+
+/// Escape a string for a JSON string literal (control characters in
+/// bench/config/metric names are not expected, but must not corrupt the
+/// file if they appear).
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render an f64 as a JSON number (JSON has no NaN/Infinity — clamp
+/// them to null-safe sentinels rather than emit an unparseable file).
+fn number(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+impl BenchJson {
+    pub fn new(bench: &str) -> BenchJson {
+        BenchJson { bench: bench.to_string(), rows: Vec::new() }
+    }
+
+    /// Record one metric row.
+    pub fn row(&mut self, config: &str, metric: &str, value: f64) {
+        self.rows.push((config.to_string(), metric.to_string(), value));
+    }
+
+    /// Serialize the collected rows as a JSON array.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("[\n");
+        for (i, (config, metric, value)) in self.rows.iter().enumerate() {
+            out.push_str(&format!(
+                "  {{\"bench\": \"{}\", \"config\": \"{}\", \"metric\": \"{}\", \"value\": {}}}{}\n",
+                escape(&self.bench),
+                escape(config),
+                escape(metric),
+                number(*value),
+                if i + 1 < self.rows.len() { "," } else { "" },
+            ));
+        }
+        out.push(']');
+        out.push('\n');
+        out
+    }
+
+    /// Write `BENCH_<bench>.json` in the current directory and report
+    /// the path. Benches call this at the end of `main` — a write
+    /// failure is reported, not fatal (the human table already
+    /// printed).
+    pub fn write(&self) {
+        let path = format!("BENCH_{}.json", self.bench);
+        let res = std::fs::File::create(&path)
+            .and_then(|mut f| f.write_all(self.to_json().as_bytes()));
+        match res {
+            Ok(()) => println!("\nwrote {path} ({} rows)", self.rows.len()),
+            Err(e) => eprintln!("warning: could not write {path}: {e}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_serialize_flat_and_escaped() {
+        let mut b = BenchJson::new("fig5_modes");
+        b.row("quad-cache", "mpi_fock_seconds", 12.5);
+        b.row("snc4-\"flat\"", "shf_fock_seconds", 0.25);
+        let j = b.to_json();
+        assert!(j.starts_with("[\n"));
+        assert!(j.trim_end().ends_with(']'));
+        assert!(j.contains("\"bench\": \"fig5_modes\""));
+        assert!(j.contains("\"metric\": \"mpi_fock_seconds\""));
+        assert!(j.contains("\"value\": 12.5"));
+        // Quote in a config name must be escaped, not break the file.
+        assert!(j.contains("snc4-\\\"flat\\\""));
+        // Exactly one comma separator for two rows.
+        assert_eq!(j.matches("},\n").count(), 1);
+    }
+
+    #[test]
+    fn non_finite_values_stay_parseable() {
+        let mut b = BenchJson::new("t");
+        b.row("c", "m", f64::INFINITY);
+        assert!(b.to_json().contains("\"value\": 0"));
+    }
+
+    #[test]
+    fn empty_bench_is_an_empty_array() {
+        assert_eq!(BenchJson::new("x").to_json(), "[\n]\n");
+    }
+}

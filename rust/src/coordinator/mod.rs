@@ -1,7 +1,9 @@
 //! Coordinator: job configuration, the experiment registry mapping the
 //! paper's tables/figures to runnable jobs, and report printers.
 
+pub mod bench_json;
 pub mod experiments;
 pub mod report;
 
+pub use bench_json::BenchJson;
 pub use experiments::{paper_stats, stats_for_system};

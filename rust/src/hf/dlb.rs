@@ -240,6 +240,80 @@ impl RingDlb {
             })
             .collect()
     }
+
+    /// Has every unit of `round` been handed out? True once each live
+    /// (shard, round) cell's counter has reached its list length (dead
+    /// cells — `round > s` — hold no units and are vacuously drained).
+    /// A drained round means the next round is *claimable*: no thief
+    /// can still be pulling round-`round` units while peers move on.
+    /// The masters' side of the [`RingHandoff`] — claim-drain says the
+    /// round's hand-out is over; the handoff says every peer has also
+    /// finished computing and staged its outgoing block.
+    pub fn round_drained(&self, round: usize) -> bool {
+        let n = self.tasks.len();
+        debug_assert!(round < n);
+        (round..n).all(|s| self.counters[round * n + s].claimed() >= self.tasks[s].len())
+    }
+}
+
+/// The double-buffer round handoff of the overlapped ring — what
+/// replaces the engines' per-round `Barrier` under
+/// [`StoreSharding::build_ring_overlapped`].
+///
+/// Each rank-master, once its share of round `t` has drained and its
+/// outgoing block is staged, **publishes** the round; when every rank
+/// has published — [`RingHandoff::next_round_ready`] — the staged
+/// prefetch buffers become the current blocks and round `t + 1` may
+/// start. [`RingHandoff::swap`] spins on that flag. Splitting
+/// publish-then-swap out of a monolithic `Barrier::wait` is the point:
+/// between the two calls a master *produces* — stages its buffer flip,
+/// flushes straggling accumulator columns (the shared-Fock engine's
+/// lazy `F_I` flush lives exactly there) — instead of idling, and the
+/// publish itself is the "next-round ready" signal a peer's swap
+/// consumes. One publish slot per (rank, round); a rank must publish
+/// each round exactly once.
+#[derive(Debug)]
+pub struct RingHandoff {
+    n_ranks: usize,
+    /// Per-round publish counts (index = round).
+    published: Vec<AtomicUsize>,
+}
+
+impl RingHandoff {
+    pub fn new(n_ranks: usize, n_rounds: usize) -> RingHandoff {
+        assert!(n_ranks > 0 && n_rounds > 0);
+        RingHandoff {
+            n_ranks,
+            published: (0..n_rounds).map(|_| AtomicUsize::new(0)).collect(),
+        }
+    }
+
+    pub fn n_rounds(&self) -> usize {
+        self.published.len()
+    }
+
+    /// Producer half: this rank's round-`round` compute has drained and
+    /// its outgoing block is staged in the double buffer.
+    pub fn publish(&self, round: usize) {
+        let prev = self.published[round].fetch_add(1, Ordering::AcqRel);
+        debug_assert!(prev < self.n_ranks, "rank published round {round} twice");
+    }
+
+    /// Is every rank's round-`round` block staged — i.e. may the
+    /// buffers flip and round `round + 1` begin?
+    #[inline]
+    pub fn next_round_ready(&self, round: usize) -> bool {
+        self.published[round].load(Ordering::Acquire) >= self.n_ranks
+    }
+
+    /// Consumer half: wait until every peer has published `round`, then
+    /// flip to the prefetched buffers. Callers publish first; the
+    /// produce-while-waiting window lives between the two calls.
+    pub fn swap(&self, round: usize) {
+        while !self.next_round_ready(round) {
+            std::thread::yield_now();
+        }
+    }
 }
 
 /// The one claim interface the engines program against — flat,
@@ -325,6 +399,30 @@ impl<'a> WalkDlb<'a> {
                 continue;
             }
             return Some((rij, from, kw.len()));
+        }
+    }
+
+    /// Build the per-round [`RingHandoff`] the overlapped-ring engines
+    /// swap through at round boundaries, or `None` for the single-round
+    /// disciplines (nothing to hand off — prefix/flat builds have no
+    /// block in flight).
+    pub fn handoff(&self, n_ranks: usize) -> Option<RingHandoff> {
+        match self {
+            WalkDlb::Ring(rd) => Some(RingHandoff::new(n_ranks, rd.n_rounds())),
+            _ => None,
+        }
+    }
+
+    /// Has every unit of `round` been handed out? Single-round
+    /// disciplines report their one round drained exactly when the
+    /// counters are exhausted; see [`RingDlb::round_drained`].
+    pub fn round_drained(&self, round: usize) -> bool {
+        match self {
+            WalkDlb::Flat { tasks, counter } => counter.claimed() >= tasks.len(),
+            WalkDlb::Sharded(sd) => {
+                sd.tasks.iter().zip(&sd.counters).all(|(ts, c)| c.claimed() >= ts.len())
+            }
+            WalkDlb::Ring(rd) => rd.round_drained(round),
         }
     }
 
@@ -489,6 +587,77 @@ mod tests {
         }
         got.sort_unstable();
         assert_eq!(got, vec![0, 5]);
+    }
+
+    #[test]
+    fn ring_round_drain_tracks_handouts() {
+        let dlb = RingDlb::new(vec![vec![0, 1], vec![10], vec![20, 21]]);
+        // Round 2: only shard 2 is live (2 units).
+        assert!(!dlb.round_drained(2));
+        let _ = dlb.claim(2, 2).unwrap();
+        assert!(!dlb.round_drained(2), "one unit still out");
+        let _ = dlb.claim(2, 2).unwrap();
+        assert!(dlb.round_drained(2), "dead cells are vacuously drained");
+        // Draining round 2 says nothing about the others.
+        assert!(!dlb.round_drained(0));
+        assert!(!dlb.round_drained(1));
+        while dlb.claim(0, 0).is_some() {}
+        assert!(dlb.round_drained(0));
+    }
+
+    #[test]
+    fn handoff_publishes_once_per_rank_and_round() {
+        let h = RingHandoff::new(3, 2);
+        assert_eq!(h.n_rounds(), 2);
+        assert!(!h.next_round_ready(0));
+        h.publish(0);
+        h.publish(0);
+        assert!(!h.next_round_ready(0), "two of three ranks published");
+        h.publish(0);
+        assert!(h.next_round_ready(0));
+        h.swap(0); // must return immediately once ready
+        assert!(!h.next_round_ready(1), "rounds are independent slots");
+        h.publish(1);
+        h.publish(1);
+        h.publish(1);
+        assert!(h.next_round_ready(1));
+    }
+
+    #[test]
+    fn handoff_swap_waits_for_every_producer() {
+        // One lagging producer: the consumers' swap must not return
+        // until it publishes.
+        let h = Arc::new(RingHandoff::new(4, 1));
+        let mut consumers = Vec::new();
+        for _ in 0..3 {
+            let h = Arc::clone(&h);
+            consumers.push(std::thread::spawn(move || {
+                h.publish(0);
+                h.swap(0);
+            }));
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(!h.next_round_ready(0), "swap must be gated on the laggard");
+        h.publish(0);
+        h.swap(0);
+        for c in consumers {
+            c.join().unwrap();
+        }
+        assert!(h.next_round_ready(0));
+    }
+
+    #[test]
+    fn walkdlb_handoff_is_ring_only() {
+        let tasks: Vec<u32> = vec![1, 2];
+        let flat = WalkDlb::Flat { tasks: &tasks, counter: DlbCounter::new() };
+        assert!(flat.handoff(2).is_none());
+        assert!(!flat.round_drained(0));
+        let _ = flat.claim(0, 0);
+        let _ = flat.claim(0, 0);
+        assert!(flat.round_drained(0));
+        let ring = WalkDlb::Ring(RingDlb::new(vec![vec![0], vec![5]]));
+        let h = ring.handoff(2).expect("ring builds hand off rounds");
+        assert_eq!(h.n_rounds(), 2);
     }
 
     #[test]

@@ -171,9 +171,10 @@ pub fn exact_bytes_with_sharded_store(
 /// how many nodes joined. Under the ring, each rank holds exactly two
 /// blocks — its own bra shard and the ket block currently visiting it
 /// (the modeled pass is synchronous and in-place: blocks shift at the
-/// round barrier, so no third receive buffer is charged; an overlapped
-/// double-buffered pass would add one more `shard_bytes` per rank) —
-/// so the per-rank resident store is `2·shard_bytes = O(total/N_ranks)`
+/// round barrier, so no third receive buffer is charged; the
+/// double-buffered `--ring-overlap` pass charges exactly that third
+/// block — see [`ring_overlap_scf_bytes_per_node`]) — so the per-rank
+/// resident store is `2·shard_bytes = O(total/N_ranks)`
 /// and the per-node total
 /// scales down with the node count, at the cost of the per-build ring
 /// traffic ([`StoreSharding::ring_traffic_bytes`](crate::integrals::StoreSharding::ring_traffic_bytes)).
@@ -199,6 +200,44 @@ pub fn exact_bytes_with_ring_store(
 ) -> f64 {
     exact_bytes(engine, n_bf, max_shell_bf, ranks_per_node, threads_per_rank)
         + ring_scf_bytes_per_node(shard_bytes, pairlist_bytes, ranks_per_node)
+}
+
+/// *Overlapped* (double-buffered) ring store accounting, bytes per node
+/// (`--shard-store --ring-exchange --ring-overlap`).
+///
+/// The overlapped pass prefetches round t+1's incoming ket block while
+/// round t computes, so each rank holds **three** blocks at steady
+/// state — its own bra shard, the ket block it is computing against,
+/// and the staged prefetch ([`RoundView::n_resident_blocks`][rv]
+/// verifies this at the view layer). The cost of hiding the ring pass
+/// under compute is thus exactly one more `shard_bytes` per rank:
+/// `3·shard_bytes·R + pairlist`, still `O(total/N_ranks)` per rank —
+/// the scaling story of [`ring_scf_bytes_per_node`] survives the
+/// double buffer.
+///
+/// [rv]: crate::integrals::RoundView::n_resident_blocks
+pub fn ring_overlap_scf_bytes_per_node(
+    shard_bytes: f64,
+    pairlist_bytes: f64,
+    ranks_per_node: usize,
+) -> f64 {
+    3.0 * shard_bytes * ranks_per_node as f64 + pairlist_bytes
+}
+
+/// [`exact_bytes_with_store`] with the overlapped-ring store accounting
+/// of [`ring_overlap_scf_bytes_per_node`] in place of the replicated
+/// one.
+pub fn exact_bytes_with_overlapped_ring_store(
+    engine: EngineKind,
+    n_bf: usize,
+    max_shell_bf: usize,
+    ranks_per_node: usize,
+    threads_per_rank: usize,
+    shard_bytes: f64,
+    pairlist_bytes: f64,
+) -> f64 {
+    exact_bytes(engine, n_bf, max_shell_bf, ranks_per_node, threads_per_rank)
+        + ring_overlap_scf_bytes_per_node(shard_bytes, pairlist_bytes, ranks_per_node)
 }
 
 /// KNL MCDRAM capacity (bytes, decimal as marketed) — the single-node
@@ -456,6 +495,43 @@ mod tests {
             prefix_node > 0.8 * prefix_node32,
             "prefix mode must stay floored by the window"
         );
+    }
+
+    #[test]
+    fn overlap_third_block_keeps_ring_scaling() {
+        // The double buffer costs exactly one more shard per rank: the
+        // overlapped figure is 1.5x the plain-ring store term, still
+        // fits the same half-a-store cap at 64 shards the pin test
+        // above uses, and keeps the O(total/N) scaling shape.
+        use crate::basis::{BasisName, BasisSet};
+        use crate::chem::molecules;
+        use crate::integrals::{SchwarzScreen, ShellPairStore, SortedPairList, StoreSharding};
+        let basis = BasisSet::assemble(&molecules::benzene(), BasisName::Sto3g).unwrap();
+        let store = ShellPairStore::build(&basis);
+        let screen =
+            SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+        let list = SortedPairList::build(&screen, &store);
+        let pl = list.bytes() as f64;
+        let ranks_per_node = 4usize;
+        let ring = StoreSharding::build_ring(&list, &store, 64).report();
+        let ovl = StoreSharding::build_ring_overlapped(&list, &store, 64).report();
+        // Ownership split is identical; only the residency charge grows.
+        assert_eq!(ring.max_shard_bytes, ovl.max_shard_bytes);
+        let sb = ovl.max_shard_bytes as f64;
+        let two = ring_scf_bytes_per_node(sb, pl, ranks_per_node);
+        let three = ring_overlap_scf_bytes_per_node(sb, pl, ranks_per_node);
+        assert!(three > two);
+        let store_term3 = three - pl;
+        let store_term2 = two - pl;
+        assert!((store_term3 / store_term2 - 1.5).abs() < 1e-12);
+        // Still inside the cap that excluded prefix sharding.
+        let cap = store.bytes() as f64 / 2.0;
+        assert!(three <= cap, "overlapped ring {three} vs cap {cap}");
+        // And the scaling shape survives: more shards, smaller blocks.
+        let ovl32 = StoreSharding::build_ring_overlapped(&list, &store, 32).report();
+        let three32 =
+            ring_overlap_scf_bytes_per_node(ovl32.max_shard_bytes as f64, pl, ranks_per_node);
+        assert!(three < 0.85 * three32, "overlapped ring must scale with shards");
     }
 
     #[test]

@@ -61,6 +61,13 @@ impl FockBuilder for MpiOnlyFock {
         // Round boundary of the simulated systolic pass: every rank
         // must finish round t before the ket blocks shift.
         let ring_barrier = Barrier::new(self.n_ranks);
+        // Overlapped ring: the boundary is a producer/consumer swap
+        // instead — each rank publishes its drained round (outgoing
+        // block staged, next block already prefetched) and consumes the
+        // peers' publishes; no rank idles in a monolithic barrier.
+        let handoff = sharding
+            .filter(|sh| sh.is_overlapped())
+            .and_then(|_| dlb.handoff(self.n_ranks));
 
         // Each virtual rank: replicated G, DLB over surviving bra
         // ranks, early-exit (round-clipped) ket walk per task.
@@ -120,7 +127,13 @@ impl FockBuilder for MpiOnlyFock {
                         });
                     }
                 }
-                if n_rounds > 1 {
+                if let Some(h) = &handoff {
+                    // Double-buffer flip: announce this rank's staged
+                    // block, then consume the peers' — the prefetched
+                    // block becomes round t+1's visitor.
+                    h.publish(round);
+                    h.swap(round);
+                } else if n_rounds > 1 {
                     ring_barrier.wait();
                 }
             }

@@ -66,6 +66,12 @@ impl FockBuilder for PrivateFock {
         // Round boundary of the simulated systolic pass (one waiter per
         // rank: the master thread).
         let ring_barrier = Barrier::new(self.n_ranks);
+        // Overlapped ring: the masters run a producer/consumer swap
+        // instead — publish the drained round (outgoing block staged,
+        // next block prefetched), then consume the peers' publishes.
+        let handoff = sharding
+            .filter(|sh| sh.is_overlapped())
+            .and_then(|_| dlb.handoff(self.n_ranks));
 
         let per_rank: Vec<(Matrix, u64, u64)> = parallel_region(self.n_ranks, |rank| {
             let nt = self.n_threads;
@@ -163,7 +169,17 @@ impl FockBuilder for PrivateFock {
                         // Implicit barrier at !$omp end do.
                         barrier.wait();
                     }
-                    if n_rounds > 1 {
+                    if let Some(h) = &handoff {
+                        // Double-buffer flip: the master announces the
+                        // drained round and consumes the peers' staged
+                        // blocks; teammates hold only at the thread
+                        // barrier — no rank-wide idle barrier.
+                        if tid == 0 {
+                            h.publish(round);
+                            h.swap(round);
+                        }
+                        barrier.wait();
+                    } else if n_rounds > 1 {
                         // Systolic round boundary: the master joins the
                         // cross-rank barrier; teammates hold at the
                         // thread barrier until the blocks have shifted.

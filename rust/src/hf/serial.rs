@@ -18,6 +18,7 @@ use crate::linalg::Matrix;
 
 use crate::integrals::EriEngine;
 
+use super::dlb::RingHandoff;
 use super::quartets::for_each_surviving;
 use super::scatter::{mirror, scatter_block};
 use super::{BuildStats, FockBuilder, FockContext};
@@ -51,6 +52,11 @@ impl FockBuilder for SerialFock {
                 // every fetch resolves in the home block or the round's
                 // visiting block — zero remote fetches by construction.
                 let walk = &ctx.walk;
+                // Overlapped ring: one (serial) rank still runs the
+                // publish/swap round flip so the double-buffered round
+                // structure matches the parallel engines exactly.
+                let handoff =
+                    sh.is_overlapped().then(|| RingHandoff::new(1, sh.n_rounds()));
                 for round in 0..sh.n_rounds() {
                     for t in 0..walk.n_tasks() {
                         let rij = walk.task(t);
@@ -83,6 +89,13 @@ impl FockBuilder for SerialFock {
                                 g.add(a, b, v)
                             });
                         }
+                    }
+                    // Producer/consumer swap: publish this round's
+                    // drain (the staged next block flips in), then
+                    // consume — with one rank the swap is immediate.
+                    if let Some(h) = &handoff {
+                        h.publish(round);
+                        h.swap(round);
                     }
                 }
             }

@@ -85,6 +85,13 @@ impl FockBuilder for SharedFock {
         // Round boundary of the simulated systolic pass (one waiter per
         // rank: the master thread).
         let ring_barrier = Barrier::new(self.n_ranks);
+        // Overlapped ring: the boundary is a producer/consumer swap and
+        // the round-final lazy F_I flush moves into it — the flush *is*
+        // the useful work the master does instead of idling in the
+        // rank-wide barrier.
+        let handoff = sharding
+            .filter(|sh| sh.is_overlapped())
+            .and_then(|_| dlb.handoff(self.n_ranks));
 
         let per_rank: Vec<(Matrix, u64, u64, u64)> = parallel_region(self.n_ranks, |rank| {
             let nt = self.n_threads;
@@ -144,16 +151,21 @@ impl FockBuilder for SharedFock {
                             // round boundary — the next round restarts
                             // the (i, j)-grouped task order, so the
                             // lazy flush must not carry a stale i
-                            // across the block shift).
-                            let iold = i_old.load(Ordering::SeqCst);
-                            if iold != usize::MAX {
-                                let (r0, r1) = chunk_of(n, nt, tid);
-                                let col0 = basis.shells[iold].bf_first;
-                                unsafe { f_i.flush_rows(&shared, col0, r0, r1) };
-                            }
-                            barrier.wait();
-                            if tid == 0 {
-                                i_old.store(usize::MAX, Ordering::SeqCst);
+                            // across the block shift). Overlapped runs
+                            // defer it to the swap point below: it is
+                            // the producer-side work that replaces the
+                            // barrier idle.
+                            if handoff.is_none() {
+                                let iold = i_old.load(Ordering::SeqCst);
+                                if iold != usize::MAX {
+                                    let (r0, r1) = chunk_of(n, nt, tid);
+                                    let col0 = basis.shells[iold].bf_first;
+                                    unsafe { f_i.flush_rows(&shared, col0, r0, r1) };
+                                }
+                                barrier.wait();
+                                if tid == 0 {
+                                    i_old.store(usize::MAX, Ordering::SeqCst);
+                                }
                             }
                             break;
                         }
@@ -264,7 +276,25 @@ impl FockBuilder for SharedFock {
                         unsafe { f_j.flush_rows(&shared, j0, r0, r1) };
                         barrier.wait();
                     }
-                    if n_rounds > 1 {
+                    if let Some(h) = &handoff {
+                        // Swap point: the round-final lazy F_I flush
+                        // lands here (moved out of the drain branch),
+                        // overlapping with the peers' block staging;
+                        // only then does the master flip buffers.
+                        let iold = i_old.load(Ordering::SeqCst);
+                        if iold != usize::MAX {
+                            let (r0, r1) = chunk_of(n, nt, tid);
+                            let col0 = basis.shells[iold].bf_first;
+                            unsafe { f_i.flush_rows(&shared, col0, r0, r1) };
+                        }
+                        barrier.wait();
+                        if tid == 0 {
+                            i_old.store(usize::MAX, Ordering::SeqCst);
+                            h.publish(round);
+                            h.swap(round);
+                        }
+                        barrier.wait();
+                    } else if n_rounds > 1 {
                         // Systolic round boundary: F_I was flushed and
                         // re-armed by the drain branch above; the master
                         // joins the cross-rank barrier while teammates

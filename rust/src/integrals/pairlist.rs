@@ -648,10 +648,31 @@ pub struct ShardingReport {
     pub prefix_len: usize,
     /// Bytes of that shared prefix window's tables (0 under ring).
     pub prefix_bytes: usize,
-    /// Ring-pass traffic per Fock build, summed over ranks: each rank
-    /// receives every other shard's ket block once per sweep, so this
-    /// is `(n_shards − 1) · Σ owned table bytes`. 0 in prefix mode.
+    /// Ring-pass traffic per Fock build, summed over ranks. Dense ring:
+    /// each rank receives every other shard's ket block once per sweep,
+    /// `(n_shards − 1) · Σ owned table bytes`. Overlapped ring: sends
+    /// into provably-empty (shard, round) cells are elided, so only the
+    /// staged (prefetched) bytes travel. 0 in prefix mode.
     pub ring_traffic_bytes: u64,
+    /// Double-buffered (overlapped) ring mode: round `t + 1`'s ket
+    /// block is prefetched into a staging buffer while round `t`
+    /// computes, and dead-cell sends are elided from the schedule.
+    pub overlap: bool,
+    /// Block deliveries elided per sweep under overlap: sends into
+    /// (shard `s`, round `t`) cells with `t > s`, which the triangular
+    /// constraint proves empty. Exactly `n(n−1)/2` of the dense
+    /// schedule's `n(n−1)` deliveries. 0 without overlap.
+    pub blocks_elided: u64,
+    /// Bytes copied into the prefetch staging buffers per sweep under
+    /// overlap (the simulated double-buffer copy). Equals
+    /// `ring_traffic_bytes` there — what is shipped is exactly what is
+    /// staged. 0 without overlap.
+    pub staged_bytes: u64,
+    /// Bytes the elided deliveries would have shipped per sweep:
+    /// `staged_bytes + elided_bytes` is the dense pass's
+    /// `(n−1)·Σ block bytes`, so `elided / (staged + elided)` is the
+    /// traffic fraction elision saves. 0 without overlap.
+    pub elided_bytes: u64,
     /// Non-resident lookups served so far across all shards
     /// (work-stealing traffic).
     pub remote_fetches: u64,
@@ -701,6 +722,25 @@ pub struct ShardingReport {
 /// Because a ket rank never exceeds its bra rank, shard `s` only has
 /// work in rounds `t ≤ s`; provably-empty (shard, round) units are
 /// skipped by the [`RingDlb`](crate::hf::dlb::RingDlb) up front.
+///
+/// # Overlapped (double-buffered) ring
+///
+/// [`StoreSharding::build_ring_overlapped`] turns the systolic pass
+/// into a pipeline: while round `t` computes, round `t + 1`'s incoming
+/// ket block is prefetched into a third resident buffer (own block +
+/// current visiting block + prefetch — the staged copy is simulated and
+/// its bytes counted in [`ShardingReport::staged_bytes`]), and the
+/// schedule *elides* block deliveries into provably-empty cells: the
+/// triangular constraint makes every (shard `s`, round `t > s`) cell
+/// dead, and deadness propagates down the ring (the cell a block moves
+/// to next is dead exactly when the current one is), so an elided block
+/// never has to be revived for a downstream shard. Per-build density
+/// emptiness beyond the triangle is handled at claim time by
+/// [`WalkDlb::claim_nonempty`](crate::hf::dlb::WalkDlb::claim_nonempty)
+/// — the survivor scan skips the unit, but the block (already proven
+/// live for *some* weight) still travels. The visited set is untouched:
+/// elision only removes deliveries whose clipped walks are empty for
+/// every bra at any weight.
 #[derive(Debug)]
 pub struct StoreSharding<'a> {
     list: &'a SortedPairList,
@@ -708,6 +748,8 @@ pub struct StoreSharding<'a> {
     weight: f64,
     /// Ring-exchange mode (no ket prefixes; round-based walks).
     ring: bool,
+    /// Double-buffered ring: prefetch staging + dead-cell send elision.
+    overlap: bool,
     /// Shard `s` owns ranks `[bounds[s], bounds[s+1])`.
     bounds: Vec<usize>,
     /// Per-shard resident ket prefix lengths (ranks `[0, prefix[s])`,
@@ -748,7 +790,22 @@ impl<'a> StoreSharding<'a> {
         store: &'a ShellPairStore,
         n_shards: usize,
     ) -> StoreSharding<'a> {
-        Self::build_impl(list, store, n_shards, f64::INFINITY, true)
+        Self::build_impl(list, store, n_shards, f64::INFINITY, true, false)
+    }
+
+    /// Ring exchange with the **double-buffered overlap pipeline**:
+    /// identical ownership, residency and visited-set semantics to
+    /// [`StoreSharding::build_ring`], plus round `t + 1`'s ket block
+    /// prefetched while round `t` computes
+    /// ([`StoreSharding::round_view`] stages it) and dead-cell sends
+    /// elided from the schedule (see the type-level docs). Costs one
+    /// extra resident block per rank — own + current + prefetch.
+    pub fn build_ring_overlapped(
+        list: &'a SortedPairList,
+        store: &'a ShellPairStore,
+        n_shards: usize,
+    ) -> StoreSharding<'a> {
+        Self::build_impl(list, store, n_shards, f64::INFINITY, true, true)
     }
 
     fn build_impl(
@@ -757,7 +814,9 @@ impl<'a> StoreSharding<'a> {
         n_shards: usize,
         weight: f64,
         ring: bool,
+        overlap: bool,
     ) -> StoreSharding<'a> {
+        debug_assert!(ring || !overlap, "overlap is a ring-mode refinement");
         assert!(n_shards > 0, "need at least one shard");
         assert_eq!(
             list.n_shells(),
@@ -814,6 +873,7 @@ impl<'a> StoreSharding<'a> {
             store,
             weight,
             ring,
+            overlap,
             bounds,
             prefix,
             shards,
@@ -843,6 +903,7 @@ impl<'a> StoreSharding<'a> {
             self.n_shards(),
             weight.max(self.weight),
             self.ring,
+            self.overlap,
         );
         next.carried_remote_fetches = self.report().remote_fetches;
         next
@@ -856,6 +917,12 @@ impl<'a> StoreSharding<'a> {
     /// prefix)?
     pub fn is_ring(&self) -> bool {
         self.ring
+    }
+
+    /// Is this the double-buffered (overlapped) ring: next-round block
+    /// prefetch plus dead-cell send elision?
+    pub fn is_overlapped(&self) -> bool {
+        self.overlap
     }
 
     /// Fock-build rounds per sweep: `n_shards` under ring exchange,
@@ -930,6 +997,13 @@ impl<'a> StoreSharding<'a> {
     /// stolen task's bra, or a stolen task's kets, which pair with the
     /// *victim's* visitor, not the thief's — count as remote on the
     /// executing shard.
+    /// Under overlap the view additionally carries the *prefetch*: the
+    /// block that will visit `exec` in round `round + 1`, staged while
+    /// this round computes. It is never a lookup surface this round —
+    /// [`RoundView::view_by_slot`] ignores it — it only models (and
+    /// lets tests pin) the third resident block of the double buffer.
+    /// No block is staged past the last round or into a dead cell
+    /// (round `round + 1 > exec` has no work; the send is elided).
     #[inline]
     pub fn round_view<'b>(&'b self, exec: usize, round: usize) -> RoundView<'a, 'b> {
         RoundView {
@@ -937,6 +1011,10 @@ impl<'a> StoreSharding<'a> {
             guest: self
                 .ring
                 .then(|| &self.shards[self.ring_ket_shard(exec, round)]),
+            prefetch: (self.overlap
+                && round + 1 < self.n_rounds()
+                && round + 1 <= exec)
+                .then(|| &self.shards[self.ring_ket_shard(exec, round + 1)]),
         }
     }
 
@@ -964,11 +1042,66 @@ impl<'a> StoreSharding<'a> {
     /// mode (nothing travels; the prefix window is resident for the
     /// whole SCF).
     pub fn ring_traffic_bytes(&self) -> u64 {
-        if self.ring {
-            (self.n_shards() as u64 - 1) * self.table_bytes_total as u64
-        } else {
+        if !self.ring {
             0
+        } else if self.overlap {
+            // Elided schedule: only live deliveries travel (= what the
+            // prefetch stages).
+            self.staged_bytes()
+        } else {
+            (self.n_shards() as u64 - 1) * self.table_bytes_total as u64
         }
+    }
+
+    /// Owned table bytes of shard `v`'s ket block (the unit the ring
+    /// ships).
+    fn block_bytes(&self, v: usize) -> u64 {
+        (self.bounds[v]..self.bounds[v + 1])
+            .map(|r| self.store.table_bytes_at(self.list.slot(r)) as u64)
+            .sum()
+    }
+
+    /// Block deliveries elided per sweep under overlap: the dense
+    /// schedule delivers a block to every shard in each of the
+    /// `n − 1` exchange rounds (`n(n−1)` deliveries); the triangular
+    /// constraint kills every (shard `s`, round `t`) cell with `t > s`,
+    /// and deadness propagates down the ring, so exactly `n(n−1)/2`
+    /// deliveries are elided. 0 without overlap (and for `n = 1`,
+    /// where no exchange round exists).
+    pub fn blocks_elided(&self) -> u64 {
+        if !(self.ring && self.overlap) {
+            return 0;
+        }
+        let n = self.n_shards() as u64;
+        n * (n - 1) / 2
+    }
+
+    /// Bytes copied into the prefetch staging buffers per sweep under
+    /// overlap: block `v` is delivered only into live cells — shard `s`
+    /// receives it in round `s − v`, live iff `v < s` — so it ships
+    /// `n − 1 − v` times and the total is `Σ_v (n−1−v)·bytes(v)`.
+    /// Together with the elided bytes (`Σ_v v·bytes(v)`) this
+    /// partitions the dense pass's `(n−1)·Σ bytes(v)`. 0 without
+    /// overlap.
+    pub fn staged_bytes(&self) -> u64 {
+        if !(self.ring && self.overlap) {
+            return 0;
+        }
+        let n = self.n_shards();
+        (0..n).map(|v| (n - 1 - v) as u64 * self.block_bytes(v)).sum()
+    }
+
+    /// Bytes the elided dead-cell deliveries would have shipped per
+    /// sweep: block `v` is dead in the `v` rounds that would land it on
+    /// shards `s < v`, so the total is `Σ_v v·bytes(v)` — the
+    /// complement of [`StoreSharding::staged_bytes`] within the dense
+    /// pass. 0 without overlap.
+    pub fn elided_bytes(&self) -> u64 {
+        if !(self.ring && self.overlap) {
+            return 0;
+        }
+        let n = self.n_shards();
+        (0..n).map(|v| v as u64 * self.block_bytes(v)).sum()
     }
 
     /// Run-level accounting summary.
@@ -994,6 +1127,10 @@ impl<'a> StoreSharding<'a> {
             prefix_len,
             prefix_bytes,
             ring_traffic_bytes: self.ring_traffic_bytes(),
+            overlap: self.overlap,
+            blocks_elided: self.blocks_elided(),
+            staged_bytes: self.staged_bytes(),
+            elided_bytes: self.elided_bytes(),
             remote_fetches,
         }
     }
@@ -1012,6 +1149,10 @@ impl<'a> StoreSharding<'a> {
 pub struct RoundView<'a, 'b> {
     exec: &'b StoreShard<'a>,
     guest: Option<&'b StoreShard<'a>>,
+    /// Overlapped ring only: the next round's ket block, staged by the
+    /// double-buffer prefetch while this round computes. Not a lookup
+    /// surface for *this* round's fetches.
+    prefetch: Option<&'b StoreShard<'a>>,
 }
 
 impl<'a> RoundView<'a, '_> {
@@ -1034,6 +1175,34 @@ impl<'a> RoundView<'a, '_> {
     pub fn is_resident(&self, slot: u32) -> bool {
         self.exec.is_resident(slot)
             || self.guest.is_some_and(|g| g.is_resident(slot))
+    }
+
+    /// The next round's ket block staged by the overlap prefetch, if
+    /// one is in flight (overlapped ring, a live next-round cell).
+    #[inline]
+    pub fn prefetched(&self) -> Option<&StoreShard<'a>> {
+        self.prefetch
+    }
+
+    /// Number of *distinct* shard blocks live on this rank this round:
+    /// the own block, the visiting ket block when it differs from the
+    /// own one (round 0 pairs a shard with itself), and the staged
+    /// prefetch. The overlapped ring's steady state is exactly 3 — the
+    /// figure charged per rank by
+    /// [`ring_overlap_scf_bytes_per_node`][overlap-bytes].
+    ///
+    /// [overlap-bytes]: crate::hf::memmodel::ring_overlap_scf_bytes_per_node
+    pub fn n_resident_blocks(&self) -> usize {
+        let mut n = 1;
+        if let Some(g) = self.guest {
+            if !std::ptr::eq(g, self.exec) {
+                n += 1;
+            }
+        }
+        if self.prefetch.is_some() {
+            n += 1;
+        }
+        n
     }
 }
 
@@ -1536,6 +1705,110 @@ mod tests {
         // No fetch above went remote, and a rebuild preserves the mode.
         assert_eq!(ring.report().remote_fetches, 0);
         assert!(ring.rebuilt_at(123.0).is_ring());
+    }
+
+    #[test]
+    fn overlapped_ring_stages_exactly_three_blocks() {
+        // The double buffer's residency contract: at any live round a
+        // rank holds its own block, the visiting ket block, and —
+        // whenever the next round's cell is live — the staged prefetch;
+        // never a fourth block, and the prefetch is exactly the block
+        // that becomes the guest one round later.
+        let (_, store, screen) = setup(&molecules::benzene(), 1e-9);
+        let list = SortedPairList::build(&screen, &store);
+        let n = 5;
+        let sh = StoreSharding::build_ring_overlapped(&list, &store, n);
+        assert!(sh.is_ring() && sh.is_overlapped());
+        for s in 0..n {
+            for round in 0..=s {
+                let view = sh.round_view(s, round);
+                let next_live = round + 1 <= s && round + 1 < n;
+                assert_eq!(
+                    view.prefetched().is_some(),
+                    next_live,
+                    "shard {s} round {round}: prefetch staged iff next cell live"
+                );
+                if let Some(pf) = view.prefetched() {
+                    // The staged block is round t+1's guest surface.
+                    let next_guest = sh.shard(sh.ring_ket_shard(s, round + 1));
+                    assert!(std::ptr::eq(pf, next_guest));
+                }
+                // own + guest (distinct past round 0) + prefetch ≤ 3,
+                // and exactly 3 in the pipeline's steady state.
+                let want = 1
+                    + usize::from(round > 0)
+                    + usize::from(next_live);
+                assert_eq!(
+                    view.n_resident_blocks(),
+                    want,
+                    "shard {s} round {round}"
+                );
+                assert!(view.n_resident_blocks() <= 3);
+                if round > 0 && next_live {
+                    assert_eq!(view.n_resident_blocks(), 3);
+                }
+            }
+            // Dead cells stage nothing at all.
+            for round in (s + 1)..n {
+                let view = sh.round_view(s, round);
+                assert!(view.prefetched().is_none(), "shard {s} round {round}");
+            }
+        }
+        // The plain ring never stages a prefetch.
+        let plain = StoreSharding::build_ring(&list, &store, n);
+        for s in 0..n {
+            for round in 0..n {
+                assert!(plain.round_view(s, round).prefetched().is_none());
+                assert!(plain.round_view(s, round).n_resident_blocks() <= 2);
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_elides_dead_deliveries_and_partitions_traffic() {
+        // Elision accounting: staged + elided bytes must partition the
+        // dense pass, blocks_elided is exactly the triangle, and the
+        // ownership/residency semantics are untouched by overlap.
+        let (_, store, screen) = setup(&molecules::benzene(), 1e-9);
+        let list = SortedPairList::build(&screen, &store);
+        let n = 4;
+        let plain = StoreSharding::build_ring(&list, &store, n);
+        let ovl = StoreSharding::build_ring_overlapped(&list, &store, n);
+        for s in 0..n {
+            assert_eq!(ovl.rank_range(s), plain.rank_range(s));
+            assert_eq!(ovl.prefix_len(s), 0);
+        }
+        let rep = ovl.report();
+        assert!(rep.ring && rep.overlap);
+        assert_eq!(rep.n_rounds, n);
+        assert_eq!(rep.blocks_elided, (n * (n - 1) / 2) as u64);
+        assert_eq!(rep.staged_bytes, rep.ring_traffic_bytes);
+        assert!(rep.staged_bytes > 0);
+        // Dense = staged + elided: per-block, v ships (n−1−v) times
+        // live and is elided v times.
+        let dense = plain.report().ring_traffic_bytes;
+        let elided_bytes: u64 = (0..n)
+            .map(|v| {
+                let (lo, hi) = ovl.rank_range(v);
+                let block: u64 = (lo..hi)
+                    .map(|r| store.table_bytes_at(list.slot(r)) as u64)
+                    .sum();
+                v as u64 * block
+            })
+            .sum();
+        assert_eq!(rep.staged_bytes + elided_bytes, dense);
+        assert_eq!(rep.elided_bytes, elided_bytes);
+        assert!(rep.staged_bytes < dense, "elision must drop real traffic");
+        // The plain report holds the PR 5 invariants unchanged.
+        let prep = plain.report();
+        assert!(!prep.overlap);
+        assert_eq!(prep.blocks_elided, 0);
+        assert_eq!(prep.staged_bytes, 0);
+        assert_eq!(prep.elided_bytes, 0);
+        // A weight-ceiling rebuild preserves the overlap mode.
+        let rb = ovl.rebuilt_at(42.0);
+        assert!(rb.is_ring() && rb.is_overlapped());
+        assert_eq!(rb.report().blocks_elided, rep.blocks_elided);
     }
 
     #[test]

@@ -64,11 +64,20 @@ fn print_help() {
                                              build as N systolic rounds (per-node\n\
                                              store bytes O(total/N); ring traffic\n\
                                              reported)\n\
+               [--ring-overlap]              with --ring-exchange: double-buffer\n\
+                                             the ring — prefetch round t+1's ket\n\
+                                             block while round t computes, elide\n\
+                                             provably-empty deliveries (rounds,\n\
+                                             elided blocks + staged traffic\n\
+                                             reported)\n\
            footprint                         Table 2 memory footprints\n\
            simulate --system <0.5|1.0|1.5|2.0|5.0> [--nodes 4,16,...]\n\
                [--shard-store]               gate memory on the sharded store\n\
                [--ring-exchange]             gate on ring sharding (+ ring traffic\n\
                                              in the simulated Fock time)\n\
+               [--ring-overlap]              overlapped ring: hide the pass under\n\
+                                             compute (max(comm, compute)/round +\n\
+                                             pipeline fill; 3 resident blocks/rank)\n\
            calibrate [--out artifacts/calibration.toml] [--budget N]\n\
            artifacts-check                   verify XLA artifacts"
     );
@@ -122,6 +131,11 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
         !ring_exchange || shard_store > 0,
         "--ring-exchange requires --shard-store"
     );
+    let ring_overlap = args.flag("ring-overlap");
+    anyhow::ensure!(
+        !ring_overlap || ring_exchange,
+        "--ring-overlap requires --ring-exchange"
+    );
 
     let driver = RhfDriver {
         incremental: !args.flag("no-incremental"),
@@ -129,6 +143,7 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
         schwarz_tau: args.parse_or("tau", khf::integrals::SchwarzScreen::DEFAULT_TAU)?,
         shard_store,
         ring_exchange,
+        ring_overlap,
         ..RhfDriver::default()
     };
     let res = match engine {
@@ -182,6 +197,19 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
                 builds,
                 sh.remote_fetches,
             );
+            if sh.overlap {
+                let dense = sh.staged_bytes + sh.elided_bytes;
+                println!(
+                    "  ring overlap: {} rounds double-buffered (own + visiting + prefetch \
+                     resident), {} blocks elided/sweep of {} dense deliveries, \
+                     staged {}/build, traffic elision {:.0}%",
+                    sh.n_rounds,
+                    sh.blocks_elided,
+                    sh.n_shards * (sh.n_shards - 1),
+                    human_bytes(sh.staged_bytes as f64),
+                    if dense > 0 { 100.0 * sh.elided_bytes as f64 / dense as f64 } else { 0.0 },
+                );
+            }
         } else {
             println!(
                 "  sharded store: {} shards, max {} / mean {} per shard ({:.2}x replicated), \
@@ -312,6 +340,16 @@ fn cmd_footprint() -> anyhow::Result<()> {
             )),
             human_bytes(pl),
         );
+        // Ring-store residency at the same point (max shard at 1.5x the
+        // even 256-way split, the table2_memory bench's heuristic): the
+        // overlap prefetch charges a third block per rank.
+        let shard = sb / 256.0 * 1.5;
+        println!(
+            "ring store/node at 256 ranks: {} (own + visiting block) vs {} overlapped\n\
+             (own + visiting + prefetch)",
+            human_bytes(memmodel::ring_scf_bytes_per_node(shard, pl, 256)),
+            human_bytes(memmodel::ring_overlap_scf_bytes_per_node(shard, pl, 256)),
+        );
     }
     Ok(())
 }
@@ -324,7 +362,8 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         .unwrap_or_else(|| vec![4, 16, 64, 128, 256, 512]);
     let cost = CostModel::load_or_fallback("artifacts/calibration.toml");
     let stats = stats_for_system(sys, &cost)?;
-    let ring_exchange = args.flag("ring-exchange");
+    let ring_overlap = args.flag("ring-overlap");
+    let ring_exchange = ring_overlap || args.flag("ring-exchange");
     // Accept both the bare-flag and `--shard-store N` forms the scf
     // subcommand takes; the simulator always shards across the
     // machine's full rank count, so an explicit N only switches the
@@ -333,16 +372,21 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         || args.flag("shard-store")
         || args.parse_or("shard-store", 0usize)? > 0;
 
-    let mut rows = vec![vec![
-        "nodes".into(),
-        "MPI (s)".into(),
-        "Pr.F (s)".into(),
-        "Sh.F (s)".into(),
-    ]];
+    let mut header = vec![
+        "nodes".to_string(),
+        "MPI (s)".to_string(),
+        "Pr.F (s)".to_string(),
+        "Sh.F (s)".to_string(),
+    ];
+    if ring_overlap {
+        header.push("overlap eff (Sh.F)".to_string());
+    }
+    let mut rows = vec![header];
     for &n in &nodes {
         let machine = |mut m: Machine| {
             m.shard_store = shard_store;
             m.ring_exchange = ring_exchange;
+            m.ring_overlap = ring_overlap;
             m
         };
         let mpi = simulate(EngineKind::MpiOnly, &stats, &machine(Machine::theta_mpi(n)), &cost);
@@ -358,17 +402,26 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             &machine(Machine::theta_hybrid(n)),
             &cost,
         );
-        rows.push(vec![
+        let mut row = vec![
             n.to_string(),
             report::secs(mpi.fock_seconds * 15.0),
             report::secs(prf.fock_seconds * 15.0),
             report::secs(shf.fock_seconds * 15.0),
-        ]);
+        ];
+        if ring_overlap {
+            row.push(format!(
+                "{:.0}%",
+                100.0 * shf.breakdown.ring_overlap_efficiency
+            ));
+        }
+        rows.push(row);
     }
     println!(
         "{} — simulated Fock time (15 SCF iterations{}):",
         sys.label(),
-        if ring_exchange {
+        if ring_overlap {
+            ", overlapped ring store"
+        } else if ring_exchange {
             ", ring-sharded store"
         } else if shard_store {
             ", sharded store"

@@ -56,6 +56,15 @@ pub struct RhfDriver {
     /// any density, so the prefix ratchet below never fires — at the
     /// cost of the per-build ring traffic `ScfResult::sharding` reports.
     pub ring_exchange: bool,
+    /// Double-buffered overlapped ring (requires `ring_exchange`):
+    /// round t+1's incoming ket block is staged while round t computes
+    /// — [`StoreSharding::round_view`] exposes it as the prefetch and
+    /// the engines replace the per-round barrier with a
+    /// producer/consumer swap — and provably-empty (shard, round)
+    /// deliveries are elided from the counted traffic.
+    /// `ScfResult::sharding` then reports `blocks_elided` and the
+    /// staged (elision-reduced) `ring_traffic_bytes`.
+    pub ring_overlap: bool,
 }
 
 impl Default for RhfDriver {
@@ -69,6 +78,7 @@ impl Default for RhfDriver {
             rebuild_every: 8,
             shard_store: 0,
             ring_exchange: false,
+            ring_overlap: false,
         }
     }
 }
@@ -173,6 +183,10 @@ impl RhfDriver {
             !self.ring_exchange || self.shard_store > 0,
             "ring_exchange requires shard_store > 0 (the ring passes owned shards around)"
         );
+        anyhow::ensure!(
+            !self.ring_overlap || self.ring_exchange,
+            "ring_overlap requires ring_exchange (the double buffer stages ring blocks)"
+        );
 
         // Core guess.
         let mut d = self.new_density(&h, &x, n_occ).1;
@@ -190,7 +204,9 @@ impl RhfDriver {
         // its weight is INFINITY, so the ratchet below never fires and
         // residency holds for every build unconditionally.
         let mut sharding: Option<StoreSharding<'_>> = (self.shard_store > 0).then(|| {
-            if self.ring_exchange {
+            if self.ring_overlap {
+                StoreSharding::build_ring_overlapped(&pairs, &store, self.shard_store)
+            } else if self.ring_exchange {
                 StoreSharding::build_ring(&pairs, &store, self.shard_store)
             } else {
                 // max_abs == PairDensityMax::global for a symmetric
@@ -608,6 +624,49 @@ mod tests {
             .run(&molecules::h2(), BasisName::Sto3g, &mut SerialFock::new())
             .unwrap_err();
         assert!(err.to_string().contains("shard_store"), "{err}");
+    }
+
+    #[test]
+    fn ring_overlap_requires_ring_exchange() {
+        let err = RhfDriver { shard_store: 4, ring_overlap: true, ..Default::default() }
+            .run(&molecules::h2(), BasisName::Sto3g, &mut SerialFock::new())
+            .unwrap_err();
+        assert!(err.to_string().contains("ring_exchange"), "{err}");
+    }
+
+    #[test]
+    fn ring_overlap_matches_and_reports_elision() {
+        // The double-buffered serial replay must land on the plain
+        // energy, stay fully resident, and report the elided triangle:
+        // n(n−1)/2 dead deliveries skipped, staged traffic strictly
+        // below the dense (n−1)·store pass.
+        let mol = molecules::water();
+        let mut b1 = SerialFock::new();
+        let plain = RhfDriver::default().run(&mol, BasisName::Sto3g, &mut b1).unwrap();
+        let mut b2 = SerialFock::new();
+        let ovl = RhfDriver {
+            shard_store: 4,
+            ring_exchange: true,
+            ring_overlap: true,
+            rebuild_every: 1,
+            ..Default::default()
+        }
+        .run(&mol, BasisName::Sto3g, &mut b2)
+        .unwrap();
+        assert!(ovl.converged);
+        assert!(
+            (ovl.energy - plain.energy).abs() < 1e-10,
+            "{} vs {}",
+            ovl.energy,
+            plain.energy
+        );
+        let rep = ovl.sharding.as_ref().expect("overlap report missing");
+        assert!(rep.ring && rep.overlap);
+        assert_eq!(rep.blocks_elided, 4 * 3 / 2);
+        assert!(rep.staged_bytes > 0);
+        assert_eq!(rep.staged_bytes, rep.ring_traffic_bytes);
+        assert!(rep.ring_traffic_bytes < 3 * ovl.store_bytes as u64);
+        assert_eq!(rep.remote_fetches, 0, "overlapped ring work must stay resident");
     }
 
     #[test]

@@ -79,6 +79,57 @@ fn ring_engines_reproduce_serial_scf_energy() {
 }
 
 #[test]
+fn overlapped_ring_engines_reproduce_serial_scf_energy() {
+    // Tentpole acceptance: the double-buffered ring (`--ring-overlap`)
+    // must be a pure scheduling change — every engine's full SCF lands
+    // on the serial full-rebuild energy to 1e-8, and the report carries
+    // the overlap counters (all n(n-1)/2 triangular-dead deliveries
+    // elided, positive staged traffic).
+    for mol in [molecules::water(), molecules::benzene()] {
+        let reference = RhfDriver { incremental: false, ..Default::default() }
+            .run(&mol, BasisName::Sto3g, &mut SerialFock::new())
+            .unwrap();
+        assert!(reference.converged, "{}: reference did not converge", mol.name);
+
+        let driver = RhfDriver {
+            shard_store: 4,
+            ring_exchange: true,
+            ring_overlap: true,
+            ..Default::default()
+        };
+        let mut engines: Vec<(&str, Box<dyn FockBuilder>)> = vec![
+            ("serial", Box::new(SerialFock::new())),
+            ("mpi", Box::new(MpiOnlyFock::new(4))),
+            ("private", Box::new(PrivateFock::new(4, 2))),
+            ("shared", Box::new(SharedFock::new(4, 2))),
+        ];
+        for (name, builder) in engines.iter_mut() {
+            let r = driver.run(&mol, BasisName::Sto3g, builder.as_mut()).unwrap();
+            assert!(r.converged, "{}/{name}: did not converge", mol.name);
+            assert!(
+                (r.energy - reference.energy).abs() < 1e-8,
+                "{}/{name}: overlapped ring {} vs serial {}",
+                mol.name,
+                r.energy,
+                reference.energy
+            );
+            let rep = r.sharding.as_ref().expect("missing sharding report");
+            assert!(rep.ring, "{}/{name}: overlap implies ring", mol.name);
+            assert!(rep.overlap, "{}/{name}: report must flag overlap", mol.name);
+            assert_eq!(rep.n_shards, 4);
+            assert_eq!(rep.n_rounds, 4);
+            assert_eq!(rep.blocks_elided, 4 * 3 / 2, "{}/{name}", mol.name);
+            assert!(rep.staged_bytes > 0, "{}/{name}", mol.name);
+            assert_eq!(
+                rep.ring_traffic_bytes, rep.staged_bytes,
+                "{}/{name}: overlapped traffic is the staged bytes",
+                mol.name
+            );
+        }
+    }
+}
+
+#[test]
 fn ring_build_matches_unsharded_fock_matrix() {
     // One Fock build, same context modulo ring sharding: identical
     // physics, and exactly the walk's visited count — no quartet lost
@@ -163,6 +214,60 @@ fn each_visited_quartet_lands_in_exactly_one_round() {
 }
 
 #[test]
+fn overlap_elision_never_drops_a_surviving_quartet() {
+    // The elided (shard, round) cells are exactly the triangular-dead
+    // ones (round > home shard): brute force, every such cell clips to
+    // an empty ket set — skipping its delivery loses nothing — and the
+    // per-quartet visit counters under the overlapped schedule are
+    // identical to the plain ring set (1 per visited quartet, 0 else).
+    let mol = molecules::benzene();
+    let (basis, store, screen) = setup(&mol);
+    let pairs = SortedPairList::build(&screen, &store);
+    let d = random_density(basis.n_bf, 29);
+    let dmax = khf::integrals::PairDensityMax::build(&basis, &d);
+    let walk = pairs.weighted(&dmax);
+    let n_shards = 5;
+    let sh = StoreSharding::build_ring_overlapped(&pairs, &store, n_shards);
+    assert!(sh.is_overlapped());
+    assert_eq!(
+        sh.report().blocks_elided,
+        (n_shards * (n_shards - 1) / 2) as u64,
+        "one dead cell per (shard, round) pair with round > shard"
+    );
+    let m = pairs.len();
+    let mut visits = vec![0u32; m * m];
+    for round in 0..sh.n_rounds() {
+        for t in 0..walk.n_tasks() {
+            let rij = walk.task(t);
+            let home = sh.shard_of(rij);
+            let (klo, khi) = sh.ring_ket_range(home, round);
+            let mut cell_hits = 0u32;
+            for rkl in walk.kets(rij).clipped(klo, khi).iter() {
+                visits[rij * m + rkl] += 1;
+                cell_hits += 1;
+            }
+            if round > home {
+                assert_eq!(
+                    cell_hits, 0,
+                    "elided cell (shard {home}, round {round}) had survivors"
+                );
+            }
+        }
+    }
+    for ra in 0..m {
+        for rb in 0..=ra {
+            let want = u32::from(walk.visits(ra, rb));
+            assert_eq!(
+                visits[ra * m + rb],
+                want,
+                "({ra},{rb}): computed in {} rounds, expected {want}",
+                visits[ra * m + rb]
+            );
+        }
+    }
+}
+
+#[test]
 fn ring_stats_partition_canonical_space_and_report_rounds() {
     // computed + screened + skipped_by_early_exit == n_canonical must
     // survive the round structure, with counters identical to the
@@ -194,6 +299,40 @@ fn ring_stats_partition_canonical_space_and_report_rounds() {
     assert_eq!(shard.n_shards, 4);
     assert_eq!(shard.rounds, 4);
     assert!(shard.min_shard_tasks <= shard.max_shard_tasks);
+}
+
+#[test]
+fn overlap_counters_still_partition_canonical_space() {
+    // Eliding the dead deliveries must not perturb the accounting:
+    // computed + screened + skipped_by_early_exit == n_canonical under
+    // the double-buffered schedule, with every counter identical to the
+    // unsharded serial build.
+    let mol = molecules::benzene();
+    let (basis, store, screen) = setup(&mol);
+    let pairs = SortedPairList::build(&screen, &store);
+    let d = random_density(basis.n_bf, 13);
+    let total = n_canonical(basis.n_shells());
+
+    let plain_ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
+    let mut serial = SerialFock::new();
+    serial.build_2e(&plain_ctx);
+
+    let sharding = StoreSharding::build_ring_overlapped(&pairs, &store, 4);
+    let ctx = FockContext::with_sharding(&basis, &store, &screen, &pairs, &d, &sharding);
+    let mut eng = MpiOnlyFock::new(4);
+    eng.build_2e(&ctx);
+    assert_eq!(
+        eng.stats.quartets_computed + eng.stats.quartets_screened
+            + eng.stats.skipped_by_early_exit,
+        total,
+        "overlapped ring counters must partition the canonical space"
+    );
+    assert_eq!(eng.stats.quartets_computed, serial.stats.quartets_computed);
+    assert_eq!(eng.stats.quartets_screened, serial.stats.quartets_screened);
+    assert_eq!(eng.stats.skipped_by_early_exit, serial.stats.skipped_by_early_exit);
+    let shard = eng.stats.shard.expect("overlapped build must report shard stats");
+    assert_eq!(shard.n_shards, 4);
+    assert_eq!(shard.rounds, 4);
 }
 
 #[test]
