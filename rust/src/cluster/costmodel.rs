@@ -4,6 +4,7 @@
 //! host→KNL-core translation factor.
 
 use crate::util::config::{Config, Value};
+use crate::util::prng::Rng;
 
 /// Canonical pair-class index for shell classes a, b (a ≥ b enforced).
 #[inline]
@@ -32,6 +33,60 @@ pub fn n_pair_classes(n: usize) -> usize {
 /// full per-round block time.
 pub fn overlapped_ring_pass(comm_round: f64, compute_round: f64, rounds: usize) -> f64 {
     comm_round + rounds as f64 * (comm_round - compute_round).max(0.0)
+}
+
+/// Straggler distribution: a multiplicative factor sampled per task on
+/// top of the calibrated per-quartet-class cost, modeling the per-core
+/// jitter (OS noise, turbo variation, tail latencies) that the
+/// closed-form model cannot express.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Straggler {
+    /// Factor 1.0 for every task, and — deliberately — **no** RNG draw,
+    /// so the straggler-off DES is bit-identical to the closed-form
+    /// list schedule and its event digest is seed-independent.
+    #[default]
+    Deterministic,
+    /// Uniform jitter on [0.75, 1.25): mean 1, bounded support.
+    UniformJitter,
+    /// Pareto-like right tail `0.9 + 0.1/√(1−u)` (α = 2, capped at
+    /// 20×): mean ≈ 1.1, occasional many-× stragglers — the regime
+    /// where barrier-synchronized rounds hurt most.
+    HeavyTail,
+}
+
+impl Straggler {
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> anyhow::Result<Straggler> {
+        match s {
+            "off" | "none" | "det" | "deterministic" => Ok(Straggler::Deterministic),
+            "uniform" | "jitter" => Ok(Straggler::UniformJitter),
+            "heavy" | "heavy-tail" | "pareto" => Ok(Straggler::HeavyTail),
+            other => anyhow::bail!(
+                "unknown straggler distribution '{other}' (expected off|uniform|heavy)"
+            ),
+        }
+    }
+
+    /// Canonical label for reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            Straggler::Deterministic => "off",
+            Straggler::UniformJitter => "uniform",
+            Straggler::HeavyTail => "heavy",
+        }
+    }
+
+    /// Sample the per-task slowdown factor.
+    pub fn factor(self, rng: &mut Rng) -> f64 {
+        match self {
+            Straggler::Deterministic => 1.0,
+            Straggler::UniformJitter => 0.75 + 0.5 * rng.f64(),
+            Straggler::HeavyTail => {
+                let u = rng.f64();
+                (0.9 + 0.1 / (1.0 - u).sqrt()).min(20.0)
+            }
+        }
+    }
 }
 
 /// The calibrated cost model.
@@ -197,5 +252,45 @@ mod tests {
     fn from_config_rejects_incomplete() {
         let cfg = Config::parse("[cost]\nn_classes = 2\n").unwrap();
         assert!(CostModel::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn straggler_distributions_sane() {
+        let mut rng = Rng::new(5);
+        // Deterministic: exactly 1.0, no RNG consumption.
+        let before = rng.next_u64();
+        let mut rng2 = Rng::new(5);
+        assert_eq!(Straggler::Deterministic.factor(&mut rng2), 1.0);
+        assert_eq!(rng2.next_u64(), before);
+        // Uniform: bounded, mean ≈ 1.
+        let mut rng = Rng::new(6);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let f = Straggler::UniformJitter.factor(&mut rng);
+            assert!((0.75..1.25).contains(&f));
+            sum += f;
+        }
+        assert!((sum / 10_000.0 - 1.0).abs() < 0.01);
+        // Heavy tail: floored at 0.9, capped, mean between the two.
+        let mut sum = 0.0;
+        let mut seen_tail = false;
+        for _ in 0..10_000 {
+            let f = Straggler::HeavyTail.factor(&mut rng);
+            assert!((0.9..=20.0).contains(&f));
+            seen_tail |= f > 1.5;
+            sum += f;
+        }
+        let mean = sum / 10_000.0;
+        assert!(mean > 1.0 && mean < 1.3, "heavy-tail mean {mean}");
+        assert!(seen_tail, "no straggler ever sampled past 1.5x");
+    }
+
+    #[test]
+    fn straggler_parse_roundtrip() {
+        for s in [Straggler::Deterministic, Straggler::UniformJitter, Straggler::HeavyTail] {
+            assert_eq!(Straggler::parse(s.label()).unwrap(), s);
+        }
+        assert_eq!(Straggler::parse("heavy-tail").unwrap(), Straggler::HeavyTail);
+        assert!(Straggler::parse("gamma").is_err());
     }
 }

@@ -13,7 +13,8 @@ use std::collections::BinaryHeap;
 use crate::hf::memmodel::{self, EngineKind};
 
 use super::comm::{allreduce_seconds, thread_reduce_seconds, NetParams};
-use super::costmodel::{overlapped_ring_pass, CostModel};
+use super::costmodel::{overlapped_ring_pass, CostModel, Straggler};
+use super::des::{self, DesOutcome, FailRank, RingSpec};
 use super::knl::{self, Affinity, ClusterMode, MemoryMode};
 use super::workload::SystemStats;
 
@@ -138,6 +139,10 @@ pub struct Breakdown {
     /// double buffer: `(serial − pass) / serial`, clamped at 0. Zero
     /// unless [`Machine::ring_overlap`] is set on a multi-rank ring.
     pub ring_overlap_efficiency: f64,
+    /// Ring self-healing cost under an injected [`FailRank`]: the
+    /// successor's block re-own transfer plus every replayed cell's
+    /// compute seconds. Zero outside the fault-injecting DES path.
+    pub recovery_seconds: f64,
 }
 
 /// Simulation result.
@@ -157,6 +162,33 @@ pub struct SimResult {
     pub feasible: bool,
     /// Busy-time imbalance factor max/mean across ranks.
     pub rank_imbalance: f64,
+    /// Event-core run summary, when scheduled through [`simulate_des`].
+    pub des: Option<DesSummary>,
+}
+
+/// Options for the discrete-event scheduling path.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DesOptions {
+    pub straggler: Straggler,
+    pub seed: u64,
+    /// Ring-mode rank failure to inject (requires a ring machine).
+    pub fail: Option<FailRank>,
+}
+
+/// What the event core observed, surfaced on [`SimResult::des`].
+#[derive(Debug, Clone, Copy)]
+pub struct DesSummary {
+    pub straggler: Straggler,
+    pub seed: u64,
+    /// The injected failure, normalized to the gated rank count.
+    pub fail: Option<FailRank>,
+    pub n_events: u64,
+    /// FNV-1a digest of the processed event trace — equal inputs give
+    /// equal digests, which is the CLI's determinism witness.
+    pub trace_digest: u64,
+    pub replayed_tasks: u64,
+    pub recovery_seconds: f64,
+    pub steal_seconds: f64,
 }
 
 /// Greedy list scheduling: makespan + per-worker busy time.
@@ -191,12 +223,69 @@ fn thread_slow(m: &Machine, cost: &CostModel, bytes_per_node: f64, shared_traffi
         * knl::mode_penalty(m.cluster_mode, m.memory_mode, bytes_per_node, shared_traffic)
 }
 
-/// Simulate one Fock-build iteration of `engine` on `machine`.
+/// Schedule one duration stream: closed-form list schedule, or the
+/// discrete-event core when DES options are present.
+fn schedule_tasks(
+    durations: Vec<f64>,
+    ranks: usize,
+    per_task: f64,
+    opts: Option<&DesOptions>,
+    ring: Option<RingSpec>,
+) -> (f64, Vec<f64>, Option<DesOutcome>) {
+    match opts {
+        None => {
+            let (mk, busy) = list_schedule(durations.into_iter(), ranks, per_task);
+            (mk, busy, None)
+        }
+        Some(o) => {
+            let out = des::run(&des::DesInput {
+                durations: &durations,
+                workers: ranks,
+                claim_cost: per_task,
+                steal_cost: per_task,
+                ring,
+                straggler: o.straggler,
+                seed: o.seed,
+                fail: o.fail,
+                collect_trace: false,
+            });
+            (out.makespan, out.busy.clone(), Some(out))
+        }
+    }
+}
+
+/// Simulate one Fock-build iteration of `engine` on `machine` with the
+/// closed-form scheduling model (deterministic, no event core).
 pub fn simulate(
     engine: EngineKind,
     stats: &SystemStats,
     machine: &Machine,
     cost: &CostModel,
+) -> SimResult {
+    simulate_inner(engine, stats, machine, cost, None)
+}
+
+/// Simulate one Fock-build iteration on the discrete-event core:
+/// sampled straggler factors, victim-lock steal contention, and (on a
+/// ring machine) round-structured claims with optional rank failure and
+/// self-healing. With `opts` all-default this reproduces [`simulate`]
+/// exactly on non-ring machines.
+pub fn simulate_des(
+    engine: EngineKind,
+    stats: &SystemStats,
+    machine: &Machine,
+    cost: &CostModel,
+    opts: DesOptions,
+) -> SimResult {
+    simulate_inner(engine, stats, machine, cost, Some(opts))
+}
+
+fn simulate_inner(
+    engine: EngineKind,
+    stats: &SystemStats,
+    machine: &Machine,
+    cost: &CostModel,
+    opts: Option<DesOptions>,
 ) -> SimResult {
     let mut m = machine.clone();
 
@@ -299,17 +388,37 @@ pub fn simulate(
     // so wall time is per-rank traffic, not the summed total.) The
     // per-round block time; the serial-vs-overlapped charge is applied
     // after the engine model, once the compute time is known.
-    let ring_comm_round = match &shard_order {
+    let (ring_comm_round, ring_reown_comm) = match &shard_order {
         Some(order) if ring && ranks > 1 => {
             let model = order.model(ranks);
-            model.mean_shard_bytes / m.net.bandwidth + m.net.latency
+            (
+                model.mean_shard_bytes / m.net.bandwidth + m.net.latency,
+                model.max_shard_bytes / m.net.bandwidth + m.net.latency,
+            )
         }
-        _ => 0.0,
+        _ => (0.0, 0.0),
     };
+    // DES plumbing: normalize the injected failure to the gated rank
+    // count (so `--fail-rank 2@1` means the same thing at any scale),
+    // and hand the ring structure to the event core so round stalls and
+    // recovery land *inside* the makespan instead of post-hoc.
+    let opts = opts.map(|o| DesOptions {
+        fail: o.fail.map(|f| FailRank {
+            rank: f.rank % ranks.max(1),
+            round: f.round.min(ranks.saturating_sub(1)),
+        }),
+        ..o
+    });
+    let ring_spec = (ring_comm_round > 0.0).then_some(RingSpec {
+        comm_round: ring_comm_round,
+        reown_comm: ring_reown_comm,
+        overlap,
+    });
 
     let mut bd = Breakdown::default();
-    let fock_seconds;
-    let mut rank_busy: Vec<f64>;
+    let mut fock_seconds;
+    let rank_busy: Vec<f64>;
+    let des_out: Option<DesOutcome>;
 
     match engine {
         EngineKind::MpiOnly => {
@@ -327,8 +436,10 @@ pub fn simulate(
                 let screen_cost = (ord + 1) as f64 * cost.screen_ns;
                 (w + screen_cost) * ns * slow
             });
-            let (mk, busy) = list_schedule(durations, ranks, m.net.dlb_rtt);
+            let (mk, busy, out) =
+                schedule_tasks(durations.collect(), ranks, m.net.dlb_rtt, opts.as_ref(), ring_spec);
             rank_busy = busy;
+            des_out = out;
             bd.compute = stats.total_cost_ns * ns * slow / ranks as f64;
             bd.screen_tests =
                 (stats.n_pairs_total as f64 + 1.0) * stats.n_pairs_total as f64 / 2.0
@@ -357,8 +468,10 @@ pub fn simulate(
                     + 2.0 * barrier
                     + (i + 1) as f64 * (i + 1) as f64 * m.sync.chunk_claim / t
             });
-            let (mk, busy) = list_schedule(durations, ranks, m.net.dlb_rtt);
+            let (mk, busy, out) =
+                schedule_tasks(durations.collect(), ranks, m.net.dlb_rtt, opts.as_ref(), ring_spec);
             rank_busy = busy;
+            des_out = out;
             bd.compute = stats.total_cost_ns * ns * slow / (ranks as f64 * t);
             bd.sync = 2.0 * barrier * stats.n_shells as f64 / ranks as f64;
             bd.dlb = stats.n_shells as f64 * m.net.dlb_rtt / ranks as f64;
@@ -399,8 +512,10 @@ pub fn simulate(
                     + fi_amort
                     + (p.ordinal + 1) as f64 * m.sync.chunk_claim / t
             });
-            let (mk, busy) = list_schedule(durations, ranks, m.net.dlb_rtt);
+            let (mk, busy, out) =
+                schedule_tasks(durations.collect(), ranks, m.net.dlb_rtt, opts.as_ref(), ring_spec);
             rank_busy = busy;
+            des_out = out;
             // Prescreened pairs cost one DLB pull each, spread evenly.
             let dead = (stats.n_pairs_total - stats.pairs.len()) as f64;
             let dead_cost = dead * m.net.dlb_rtt / ranks as f64;
@@ -416,33 +531,60 @@ pub fn simulate(
 
     let mean_busy = rank_busy.iter().sum::<f64>() / rank_busy.len() as f64;
     let max_busy = rank_busy.iter().cloned().fold(0.0, f64::max);
-    // Charge the ring pass. Synchronous: the serial (ranks − 1)·comm
-    // stack. Overlapped: each round's exchange hides under that round's
-    // compute slice (fock_seconds / rounds), leaving one pipeline fill
-    // plus only the comm excess — max(compute, comm) per round.
-    let ring_seconds = if ring_comm_round > 0.0 {
+    // Charge the ring pass. Closed form — synchronous: the serial
+    // (ranks − 1)·comm stack; overlapped: each round's exchange hides
+    // under that round's compute slice (fock_seconds / rounds), leaving
+    // one pipeline fill plus only the comm excess. DES — the event core
+    // already stalled each round boundary on the exchange *inside* the
+    // makespan, so only report what it observed, add nothing post-hoc.
+    if ring_comm_round > 0.0 {
         let serial = (ranks - 1) as f64 * ring_comm_round;
-        if overlap {
-            let compute_round = fock_seconds / ranks as f64;
-            let pass = overlapped_ring_pass(ring_comm_round, compute_round, ranks - 1);
-            bd.ring_overlap_efficiency = ((serial - pass) / serial).max(0.0);
-            pass
-        } else {
-            serial
+        match &des_out {
+            Some(out) => {
+                bd.ring_pass_seconds = out.ring_wait_seconds;
+                if overlap {
+                    bd.ring_overlap_efficiency =
+                        ((serial - out.ring_wait_seconds) / serial).max(0.0);
+                }
+            }
+            None => {
+                let pass = if overlap {
+                    let compute_round = fock_seconds / ranks as f64;
+                    let p = overlapped_ring_pass(ring_comm_round, compute_round, ranks - 1);
+                    bd.ring_overlap_efficiency = ((serial - p) / serial).max(0.0);
+                    p
+                } else {
+                    serial
+                };
+                bd.ring_pass_seconds = pass;
+                fock_seconds += pass;
+            }
         }
-    } else {
-        0.0
-    };
-    bd.ring_pass_seconds = ring_seconds;
+    }
+    let des_summary = des_out.as_ref().map(|out| {
+        bd.recovery_seconds = out.recovery_seconds;
+        let o = opts.unwrap_or_default();
+        DesSummary {
+            straggler: o.straggler,
+            seed: o.seed,
+            fail: o.fail,
+            n_events: out.n_events,
+            trace_digest: out.trace_digest,
+            replayed_tasks: out.replayed_tasks,
+            recovery_seconds: out.recovery_seconds,
+            steal_seconds: out.steal_seconds,
+        }
+    });
     SimResult {
         engine,
-        fock_seconds: fock_seconds + ring_seconds,
+        fock_seconds,
         breakdown: bd,
         ranks_per_node_used: m.ranks_per_node,
         bytes_per_node,
         store_bytes_per_node,
         feasible,
         rank_imbalance: if mean_busy > 0.0 { max_busy / mean_busy } else { 1.0 },
+        des: des_summary,
     }
 }
 
@@ -607,6 +749,117 @@ mod tests {
         only_ring.ring_exchange = true;
         let r_only = simulate(EngineKind::SharedFock, &stats, &only_ring, &cost);
         assert_eq!(r_only.store_bytes_per_node, r_ring.store_bytes_per_node);
+    }
+
+    #[test]
+    fn des_straggler_off_matches_closed_form() {
+        // Acceptance pin: the event core with stragglers disabled and
+        // no failure reproduces the closed-form model's fock_seconds on
+        // the 8-node theta_hybrid reference — exactly, because the flat
+        // DES replays list_schedule's heap order and floating-point
+        // accumulation bit-for-bit.
+        let stats = small_stats();
+        let cost = CostModel::fallback_631gd();
+        let opts = DesOptions::default();
+        let m = Machine::theta_hybrid(8);
+        for engine in [EngineKind::MpiOnly, EngineKind::PrivateFock, EngineKind::SharedFock] {
+            let closed = simulate(engine, &stats, &m, &cost);
+            let event = simulate_des(engine, &stats, &m, &cost, opts);
+            assert!(
+                (closed.fock_seconds - event.fock_seconds).abs()
+                    <= 1e-12 * closed.fock_seconds.max(1e-30),
+                "{engine:?}: closed {} vs DES {}",
+                closed.fock_seconds,
+                event.fock_seconds
+            );
+            assert!(event.des.is_some());
+            assert_eq!(event.breakdown.recovery_seconds, 0.0);
+        }
+    }
+
+    #[test]
+    fn des_is_deterministic_per_seed() {
+        let stats = small_stats();
+        let cost = CostModel::fallback_631gd();
+        let mut m = Machine::theta_hybrid(8);
+        m.ring_exchange = true;
+        let opts = DesOptions {
+            straggler: Straggler::HeavyTail,
+            seed: 7,
+            fail: Some(FailRank { rank: 2, round: 1 }),
+        };
+        let a = simulate_des(EngineKind::SharedFock, &stats, &m, &cost, opts);
+        let b = simulate_des(EngineKind::SharedFock, &stats, &m, &cost, opts);
+        let (da, db) = (a.des.unwrap(), b.des.unwrap());
+        assert_eq!(da.trace_digest, db.trace_digest);
+        assert_eq!(da.n_events, db.n_events);
+        assert_eq!(a.fock_seconds.to_bits(), b.fock_seconds.to_bits());
+        let c = simulate_des(
+            EngineKind::SharedFock,
+            &stats,
+            &m,
+            &cost,
+            DesOptions { seed: 8, ..opts },
+        );
+        assert_ne!(da.trace_digest, c.des.unwrap().trace_digest);
+    }
+
+    #[test]
+    fn des_ring_failure_reports_recovery() {
+        let stats = small_stats();
+        let cost = CostModel::fallback_631gd();
+        let mut m = Machine::theta_hybrid(8);
+        m.ring_exchange = true;
+        let healthy = simulate_des(
+            EngineKind::SharedFock,
+            &stats,
+            &m,
+            &cost,
+            DesOptions::default(),
+        );
+        let failed = simulate_des(
+            EngineKind::SharedFock,
+            &stats,
+            &m,
+            &cost,
+            DesOptions { fail: Some(FailRank { rank: 2, round: 1 }), ..DesOptions::default() },
+        );
+        let dh = healthy.des.unwrap();
+        let df = failed.des.unwrap();
+        assert_eq!(dh.replayed_tasks, 0);
+        assert_eq!(healthy.breakdown.recovery_seconds, 0.0);
+        assert!(df.replayed_tasks > 0, "no replayed cells");
+        assert!(df.recovery_seconds > 0.0);
+        assert_eq!(failed.breakdown.recovery_seconds, df.recovery_seconds);
+        // Losing a rank and paying the re-own cannot speed the build
+        // (tolerance absorbs greedy-scheduling repacking noise).
+        assert!(failed.fock_seconds >= healthy.fock_seconds * 0.999);
+        // Both runs still stall on the systolic exchange.
+        assert!(healthy.breakdown.ring_pass_seconds > 0.0);
+        assert!(failed.breakdown.ring_pass_seconds > 0.0);
+    }
+
+    #[test]
+    fn des_heavy_tail_hurts() {
+        let stats = small_stats();
+        let cost = CostModel::fallback_631gd();
+        let m = Machine::theta_hybrid(8);
+        let det = simulate_des(EngineKind::MpiOnly, &stats, &m, &cost, DesOptions::default());
+        let heavy = simulate_des(
+            EngineKind::MpiOnly,
+            &stats,
+            &m,
+            &cost,
+            DesOptions { straggler: Straggler::HeavyTail, seed: 7, fail: None },
+        );
+        // Mean factor ≈ 1.1 with a fat right tail over thousands of
+        // tasks: the straggling run cannot beat the deterministic one.
+        assert!(
+            heavy.fock_seconds > det.fock_seconds,
+            "heavy {} !> det {}",
+            heavy.fock_seconds,
+            det.fock_seconds
+        );
     }
 
     #[test]

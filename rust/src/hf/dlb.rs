@@ -25,11 +25,33 @@
 //!   a different clipped ket block), with stealing confined to the
 //!   current round so the systolic pass stays synchronized.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use crate::integrals::{PairWalk, StoreSharding};
 
 use super::{FockContext, ShardBuildStats};
+
+/// A rank failure injected into a ring build: rank `rank` dies at the
+/// start of round `round` (it computed rounds `< round` normally, then
+/// stops claiming forever). Its ring successor `(rank + 1) mod n`
+/// re-owns the dead shard's bra block and **replays** every still-
+/// undrained (dead shard, round ≥ `round`) cell against the dead home's
+/// ket clips, so the visited-set round partition — and therefore the
+/// Fock matrix — is exactly what the fault-free sweep produces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RingFailure {
+    /// The shard/rank that dies.
+    pub rank: usize,
+    /// First round the dead rank no longer participates in.
+    pub round: usize,
+}
+
+impl RingFailure {
+    /// The ring successor that adopts the dead shard's block and work.
+    pub fn successor(&self, n: usize) -> usize {
+        (self.rank + 1) % n
+    }
+}
 
 /// Shared task counter (the `ddi_dlbnext` equivalent).
 #[derive(Debug, Default)]
@@ -184,15 +206,52 @@ pub struct RingDlb {
     tasks: Vec<Vec<u32>>,
     /// One counter per (round, shard) cell, round-major.
     counters: Vec<DlbCounter>,
+    /// Injected rank failure, if any (ring self-healing exercise).
+    fail: Option<RingFailure>,
+    /// Units handed out from the dead shard's cells at rounds ≥ the
+    /// fail round — the cells the self-healing protocol *replays*.
+    replayed: AtomicU64,
 }
 
 impl RingDlb {
     /// Build from per-shard task lists (see
     /// [`StoreSharding::partition_tasks`]).
     pub fn new(tasks: Vec<Vec<u32>>) -> RingDlb {
+        Self::with_failure(tasks, None)
+    }
+
+    /// Build with an injected rank failure. The failure is normalized
+    /// into range (`rank mod n`, `round ≤ n − 1`) so any CLI spelling
+    /// exercises a live cell.
+    pub fn with_failure(tasks: Vec<Vec<u32>>, fail: Option<RingFailure>) -> RingDlb {
         let n = tasks.len();
         assert!(n > 0);
-        RingDlb { counters: (0..n * n).map(|_| DlbCounter::new()).collect(), tasks }
+        let fail = fail.map(|f| RingFailure {
+            rank: f.rank % n,
+            round: f.round.min(n - 1),
+        });
+        RingDlb {
+            counters: (0..n * n).map(|_| DlbCounter::new()).collect(),
+            tasks,
+            fail,
+            replayed: AtomicU64::new(0),
+        }
+    }
+
+    /// The injected failure (normalized), if any.
+    pub fn failure(&self) -> Option<RingFailure> {
+        self.fail
+    }
+
+    /// Is `home` dead at `round` — i.e. must it sit out the claim loop?
+    #[inline]
+    pub fn is_dead(&self, home: usize, round: usize) -> bool {
+        matches!(self.fail, Some(f) if f.rank == home && round >= f.round)
+    }
+
+    /// Units replayed from the dead shard so far (0 without a failure).
+    pub fn replayed(&self) -> u64 {
+        self.replayed.load(Ordering::Relaxed)
     }
 
     pub fn n_shards(&self) -> usize {
@@ -213,8 +272,22 @@ impl RingDlb {
     pub fn claim(&self, home: usize, round: usize) -> Option<(usize, usize)> {
         let n = self.tasks.len();
         debug_assert!(home < n && round < n);
-        for k in 0..n {
-            let s = (home + k) % n;
+        // A dead rank claims nothing from its fail round on: the shared
+        // counters guarantee every unit is still handed out exactly once
+        // — just never to the dead rank — so the visited set is
+        // conserved without any reassignment bookkeeping.
+        if self.is_dead(home, round) {
+            return None;
+        }
+        let dead = self.fail.filter(|f| round >= f.round).map(|f| f.rank);
+        // Claim order: own shard first; if this rank is the successor,
+        // the adopted dead shard next (its block is re-owned locally, so
+        // replayed cells are *not* steals); then the cyclic rest.
+        let adopted = dead.filter(|&d| home == (d + 1) % n);
+        let order = std::iter::once(home)
+            .chain(adopted)
+            .chain((1..n).map(|k| (home + k) % n).filter(|&s| Some(s) != adopted));
+        for s in order {
             if round > s {
                 // Shard s's round-`round` visitor ranks above it: every
                 // clip is empty by the triangular constraint.
@@ -222,6 +295,9 @@ impl RingDlb {
             }
             if let Some(t) = self.counters[round * n + s].next_task(self.tasks[s].len())
             {
+                if dead == Some(s) {
+                    self.replayed.fetch_add(1, Ordering::Relaxed);
+                }
                 return Some((self.tasks[s][t] as usize, s));
             }
         }
@@ -337,10 +413,30 @@ impl<'a> WalkDlb<'a> {
     /// when a [`StoreSharding`] is present (per its mode), flat
     /// otherwise.
     pub fn new(walk: &'a PairWalk<'a>, sharding: Option<&StoreSharding>) -> WalkDlb<'a> {
+        Self::with_failure(walk, sharding, None)
+    }
+
+    /// Like [`WalkDlb::new`] with an injected rank failure for the ring
+    /// discipline (ignored — there is no ring to heal — otherwise).
+    pub fn with_failure(
+        walk: &'a PairWalk<'a>,
+        sharding: Option<&StoreSharding>,
+        fail: Option<RingFailure>,
+    ) -> WalkDlb<'a> {
         match sharding {
-            Some(sh) if sh.is_ring() => WalkDlb::Ring(RingDlb::new(sh.partition_tasks(walk))),
+            Some(sh) if sh.is_ring() => {
+                WalkDlb::Ring(RingDlb::with_failure(sh.partition_tasks(walk), fail))
+            }
             Some(sh) => WalkDlb::Sharded(ShardedDlb::new(sh.partition_tasks(walk))),
             None => WalkDlb::Flat { tasks: walk.task_list(), counter: DlbCounter::new() },
+        }
+    }
+
+    /// The ring discipline's injected failure (normalized), if any.
+    pub fn failure(&self) -> Option<RingFailure> {
+        match self {
+            WalkDlb::Ring(rd) => rd.failure(),
+            _ => None,
         }
     }
 
@@ -432,12 +528,13 @@ impl<'a> WalkDlb<'a> {
         match self {
             WalkDlb::Flat { .. } => None,
             WalkDlb::Sharded(sd) => {
-                Some(ShardBuildStats::collect(&sd.claimed_per_shard(), tasks_stolen, 1))
+                Some(ShardBuildStats::collect(&sd.claimed_per_shard(), tasks_stolen, 1, 0))
             }
             WalkDlb::Ring(rd) => Some(ShardBuildStats::collect(
                 &rd.claimed_per_shard(),
                 tasks_stolen,
                 rd.n_rounds(),
+                rd.replayed(),
             )),
         }
     }

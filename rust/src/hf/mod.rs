@@ -49,6 +49,8 @@ pub mod serial;
 pub mod shared_fock;
 pub mod threadpool;
 
+pub use dlb::RingFailure;
+
 use crate::basis::BasisSet;
 use crate::integrals::{
     PairDensityMax, PairWalk, SchwarzScreen, ShellPairStore, SortedPairList, StoreSharding,
@@ -87,6 +89,17 @@ pub struct FockContext<'a> {
     /// (the default) preserves the replicated-store behavior bit for
     /// bit.
     pub sharding: Option<&'a StoreSharding<'a>>,
+    /// Injected rank failure for ring builds ([`FockContext::inject_failure`];
+    /// `None` — the default — is the fault-free build). When set, every
+    /// engine runs the self-healing protocol: the dead rank claims and
+    /// computes nothing from its fail round on (but keeps its barrier /
+    /// handoff participation so the systolic pass stays synchronized),
+    /// its ring successor re-owns the dead bra block, and the dead
+    /// shard's un-drained (shard, round) cells are *replayed* by the
+    /// live ranks against the dead home's ket clips — reproducing the
+    /// fault-free visited set, and therefore the fault-free Fock
+    /// matrix, exactly.
+    pub fail: Option<RingFailure>,
 }
 
 impl<'a> FockContext<'a> {
@@ -113,7 +126,7 @@ impl<'a> FockContext<'a> {
         );
         let dmax = PairDensityMax::build(basis, d);
         let walk = pairs.weighted(&dmax);
-        FockContext { basis, store, screen, pairs, d, dmax, walk, sharding: None }
+        FockContext { basis, store, screen, pairs, d, dmax, walk, sharding: None, fail: None }
     }
 
     /// Like [`FockContext::new`] with a sharded store: the parallel
@@ -134,6 +147,21 @@ impl<'a> FockContext<'a> {
         let mut ctx = FockContext::new(basis, store, screen, pairs, d);
         ctx.sharding = Some(sharding);
         ctx
+    }
+
+    /// Inject a rank failure into a ring build: rank `rank` dies at the
+    /// start of round `round`. Requires a ring sharding (there is no
+    /// systolic pass to heal otherwise). The spelling is normalized
+    /// into range — `rank mod n_shards`, `round` clamped to the last
+    /// round — so any CLI value exercises a live cell.
+    pub fn inject_failure(mut self, rank: usize, round: usize) -> FockContext<'a> {
+        let sh = self
+            .sharding
+            .expect("failure injection requires a sharded (ring) store");
+        assert!(sh.is_ring(), "failure injection requires --ring-exchange");
+        let n = sh.n_shards();
+        self.fail = Some(RingFailure { rank: rank % n, round: round.min(n - 1) });
+        self
     }
 
     /// The ket rank range a bra task homed in shard `home` walks in
@@ -209,6 +237,12 @@ pub struct ShardBuildStats {
     /// stealing had to cover.
     pub min_shard_tasks: u64,
     pub max_shard_tasks: u64,
+    /// Ring units *replayed* under an injected rank failure: hand-outs
+    /// from the dead shard's (shard, round ≥ fail round) cells, served
+    /// by the live ranks (successor first) against the dead home's ket
+    /// clips. Zero without a failure. Replayed units are counted in
+    /// the claim totals too — the partition invariant is unchanged.
+    pub tasks_replayed: u64,
 }
 
 impl ShardBuildStats {
@@ -217,6 +251,7 @@ impl ShardBuildStats {
         claimed_per_shard: &[usize],
         tasks_stolen: u64,
         rounds: usize,
+        tasks_replayed: u64,
     ) -> ShardBuildStats {
         ShardBuildStats {
             n_shards: claimed_per_shard.len(),
@@ -224,6 +259,7 @@ impl ShardBuildStats {
             tasks_stolen,
             min_shard_tasks: claimed_per_shard.iter().copied().min().unwrap_or(0) as u64,
             max_shard_tasks: claimed_per_shard.iter().copied().max().unwrap_or(0) as u64,
+            tasks_replayed,
         }
     }
 }

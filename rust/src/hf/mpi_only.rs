@@ -56,7 +56,12 @@ impl FockBuilder for MpiOnlyFock {
         }
         // One claim discipline for all three store modes: flat counter,
         // bra-sharded work stealing, or (bra task, round) ring units.
-        let dlb = WalkDlb::new(walk, sharding);
+        // An injected rank failure (ring only) makes the dead rank
+        // claim nothing from its fail round on; the shared counters
+        // hand its cells to the live ranks (successor first), so the
+        // visited set — and the reduced Fock — is conserved.
+        let dlb = WalkDlb::with_failure(walk, sharding, ctx.fail);
+        let fail = dlb.failure();
         let n_rounds = dlb.n_rounds();
         // Round boundary of the simulated systolic pass: every rank
         // must finish round t before the ket blocks shift.
@@ -79,8 +84,16 @@ impl FockBuilder for MpiOnlyFock {
             let mut stolen = 0u64;
             for round in 0..n_rounds {
                 // Resident store surface this round (prefix mode: the
-                // rank's shard; ring mode: own block + visiting block).
-                let view = sharding.map(|sh| sh.round_view(rank, round));
+                // rank's shard; ring mode: own block + visiting block;
+                // the dead rank's successor additionally re-owns the
+                // dead bra block and its round visitor, so replayed
+                // cells stay fetch-free).
+                let view = sharding.map(|sh| match fail {
+                    Some(f) if round >= f.round && rank == f.successor(sh.n_shards()) => {
+                        sh.round_view_reown(rank, round, f.rank)
+                    }
+                    _ => sh.round_view(rank, round),
+                });
                 while let Some((rij, from, _)) = dlb.claim_nonempty(ctx, rank, round) {
                     // Two-key ket walk clipped to this round's block
                     // (the full list in single-round modes): segment A

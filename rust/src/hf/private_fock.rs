@@ -60,8 +60,14 @@ impl FockBuilder for PrivateFock {
             );
         }
         // One claim discipline for all three store modes (MPI-level DLB
-        // over bra tasks; ring mode re-issues them per round).
-        let dlb = WalkDlb::new(walk, sharding);
+        // over bra tasks; ring mode re-issues them per round). An
+        // injected rank failure (ring only) makes the dead rank's
+        // master claim nothing from its fail round on — its threads
+        // idle through the rounds but keep their barrier slots, so the
+        // systolic pass stays synchronized while the live ranks replay
+        // the dead shard's cells.
+        let dlb = WalkDlb::with_failure(walk, sharding, ctx.fail);
+        let fail = dlb.failure();
         let n_rounds = dlb.n_rounds();
         // Round boundary of the simulated systolic pass (one waiter per
         // rank: the master thread).
@@ -89,7 +95,18 @@ impl FockBuilder for PrivateFock {
                 let mut block = vec![0.0; 6 * 6 * 6 * 6];
                 let mut computed = 0u64;
                 for round in 0..n_rounds {
-                    let view = sharding.map(|sh| sh.round_view(rank, round));
+                    // The dead rank's successor re-owns the dead bra
+                    // block and its round visitor, keeping replayed
+                    // cells fetch-free.
+                    let view = sharding.map(|sh| match fail {
+                        Some(f)
+                            if round >= f.round
+                                && rank == f.successor(sh.n_shards()) =>
+                        {
+                            sh.round_view_reown(rank, round, f.rank)
+                        }
+                        _ => sh.round_view(rank, round),
+                    });
                     loop {
                         // !$omp master: fetch the next bra task; barriers
                         // on both sides. Single-round tasks always have

@@ -51,7 +51,14 @@ impl FockBuilder for SerialFock {
                 // at its home rank (nothing is stolen serially), so
                 // every fetch resolves in the home block or the round's
                 // visiting block — zero remote fetches by construction.
+                // Under an injected failure the dead rank's rounds are
+                // replayed by its ring successor through the re-own
+                // view — same loop positions, same ket clips, so the
+                // Fock matrix is bit-identical to the fault-free build
+                // (and still fetch-free: the re-own view carries the
+                // adopted bra block and the dead home's round visitor).
                 let walk = &ctx.walk;
+                let fail = ctx.fail;
                 // Overlapped ring: one (serial) rank still runs the
                 // publish/swap round flip so the double-buffered round
                 // structure matches the parallel engines exactly.
@@ -66,7 +73,12 @@ impl FockBuilder for SerialFock {
                             // provably empty clip (ket rank ≤ bra rank).
                             continue;
                         }
-                        let view = sh.round_view(home, round);
+                        let view = match fail {
+                            Some(f) if f.rank == home && round >= f.round => {
+                                sh.round_view_reown(f.successor(sh.n_shards()), round, home)
+                            }
+                            _ => sh.round_view(home, round),
+                        };
                         let (klo, khi) = sh.ring_ket_range(home, round);
                         let bra = pairs.entry(rij);
                         let (i, j) = (bra.i as usize, bra.j as usize);

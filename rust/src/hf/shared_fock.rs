@@ -79,8 +79,13 @@ impl FockBuilder for SharedFock {
             );
         }
         // One claim discipline for all three store modes; ring mode
-        // re-issues the bra tasks once per round with clipped kets.
-        let dlb = WalkDlb::new(walk, sharding);
+        // re-issues the bra tasks once per round with clipped kets. An
+        // injected rank failure (ring only) makes the dead rank claim
+        // nothing from its fail round on — it keeps its barrier and
+        // handoff slots so the systolic pass stays synchronized while
+        // the live ranks replay the dead shard's cells.
+        let dlb = WalkDlb::with_failure(walk, sharding, ctx.fail);
+        let fail = dlb.failure();
         let n_rounds = dlb.n_rounds();
         // Round boundary of the simulated systolic pass (one waiter per
         // rank: the master thread).
@@ -113,7 +118,18 @@ impl FockBuilder for SharedFock {
                 let mut block = vec![0.0; 6 * 6 * 6 * 6];
                 let mut computed = 0u64;
                 for round in 0..n_rounds {
-                    let view = sharding.map(|sh| sh.round_view(rank, round));
+                    // The dead rank's successor re-owns the dead bra
+                    // block and its round visitor, keeping replayed
+                    // cells fetch-free.
+                    let view = sharding.map(|sh| match fail {
+                        Some(f)
+                            if round >= f.round
+                                && rank == f.successor(sh.n_shards()) =>
+                        {
+                            sh.round_view_reown(rank, round, f.rank)
+                        }
+                        _ => sh.round_view(rank, round),
+                    });
                     loop {
                         if tid == 0 {
                             // The DLB hands out surviving-pair ranks:

@@ -776,7 +776,7 @@ impl<'a> StoreSharding<'a> {
         n_shards: usize,
         weight: f64,
     ) -> StoreSharding<'a> {
-        Self::build_impl(list, store, n_shards, weight, false)
+        Self::build_impl(list, store, n_shards, weight, false, false)
     }
 
     /// Shard `list`'s ranks over `n_shards` virtual ranks in **ring
@@ -1015,7 +1015,34 @@ impl<'a> StoreSharding<'a> {
                 && round + 1 < self.n_rounds()
                 && round + 1 <= exec)
                 .then(|| &self.shards[self.ring_ket_shard(exec, round + 1)]),
+            adopted_bra: None,
+            adopted_guest: None,
         }
+    }
+
+    /// The self-healing store surface of the rank covering for a dead
+    /// ring member: everything [`StoreSharding::round_view`] gives
+    /// `exec`, plus two *adopted* surfaces — the dead rank's re-owned
+    /// bra block, and the ket block that is visiting the dead position
+    /// this round ([`StoreSharding::ring_ket_shard`]`(dead, round)`).
+    /// The adopted ket surface is what keeps a replayed cell's clipped
+    /// walk ([`StoreSharding::ring_ket_range`]`(dead, round)`) fully
+    /// resident: replayed cells keep the *dead* home's clip, so the
+    /// visited-set partition across rounds is untouched and the healed
+    /// build computes bit-identical Fock contributions with zero remote
+    /// fetches on the re-owning rank.
+    pub fn round_view_reown<'b>(
+        &'b self,
+        exec: usize,
+        round: usize,
+        dead: usize,
+    ) -> RoundView<'a, 'b> {
+        debug_assert!(self.ring, "re-own is a ring-mode recovery path");
+        debug_assert_ne!(exec, dead, "a rank cannot adopt itself");
+        let mut view = self.round_view(exec, round);
+        view.adopted_bra = Some(&self.shards[dead]);
+        view.adopted_guest = Some(&self.shards[self.ring_ket_shard(dead, round)]);
+        view
     }
 
     /// Split a walk's bra tasks by shard ownership, preserving the
@@ -1153,6 +1180,13 @@ pub struct RoundView<'a, 'b> {
     /// double-buffer prefetch while this round computes. Not a lookup
     /// surface for *this* round's fetches.
     prefetch: Option<&'b StoreShard<'a>>,
+    /// Ring self-healing only ([`StoreSharding::round_view_reown`]):
+    /// the dead rank's re-owned bra block, a free lookup surface for
+    /// replayed cells.
+    adopted_bra: Option<&'b StoreShard<'a>>,
+    /// Ring self-healing only: the ket block visiting the dead position
+    /// this round — keeps replayed cells' dead-home ket clips resident.
+    adopted_guest: Option<&'b StoreShard<'a>>,
 }
 
 impl<'a> RoundView<'a, '_> {
@@ -1161,20 +1195,29 @@ impl<'a> RoundView<'a, '_> {
     /// remote fetch).
     #[inline]
     pub fn view_by_slot(&self, slot: u32, swap: bool) -> PairView<'a> {
-        if let Some(guest) = self.guest {
-            if !self.exec.is_resident(slot) && guest.is_resident(slot) {
-                return guest.view_by_slot(slot, swap);
+        if self.exec.is_resident(slot) {
+            return self.exec.view_by_slot(slot, swap);
+        }
+        for surface in [self.guest, self.adopted_bra, self.adopted_guest]
+            .into_iter()
+            .flatten()
+        {
+            if surface.is_resident(slot) {
+                return surface.view_by_slot(slot, swap);
             }
         }
         self.exec.view_by_slot(slot, swap)
     }
 
-    /// Is the slot resident this round (owned block, shared prefix, or
-    /// the ring's visiting block)?
+    /// Is the slot resident this round (owned block, shared prefix, the
+    /// ring's visiting block, or an adopted recovery surface)?
     #[inline]
     pub fn is_resident(&self, slot: u32) -> bool {
         self.exec.is_resident(slot)
-            || self.guest.is_some_and(|g| g.is_resident(slot))
+            || [self.guest, self.adopted_bra, self.adopted_guest]
+                .into_iter()
+                .flatten()
+                .any(|s| s.is_resident(slot))
     }
 
     /// The next round's ket block staged by the overlap prefetch, if
@@ -1193,16 +1236,19 @@ impl<'a> RoundView<'a, '_> {
     ///
     /// [overlap-bytes]: crate::hf::memmodel::ring_overlap_scf_bytes_per_node
     pub fn n_resident_blocks(&self) -> usize {
-        let mut n = 1;
-        if let Some(g) = self.guest {
-            if !std::ptr::eq(g, self.exec) {
+        let surfaces =
+            [Some(self.exec), self.guest, self.adopted_bra, self.adopted_guest];
+        let mut n = 0;
+        for (i, s) in surfaces.iter().enumerate() {
+            let Some(s) = s else { continue };
+            let dup = surfaces[..i]
+                .iter()
+                .any(|p| p.is_some_and(|p| std::ptr::eq(p, *s)));
+            if !dup {
                 n += 1;
             }
         }
-        if self.prefetch.is_some() {
-            n += 1;
-        }
-        n
+        n + usize::from(self.prefetch.is_some())
     }
 }
 
@@ -1705,6 +1751,60 @@ mod tests {
         // No fetch above went remote, and a rebuild preserves the mode.
         assert_eq!(ring.report().remote_fetches, 0);
         assert!(ring.rebuilt_at(123.0).is_ring());
+    }
+
+    #[test]
+    fn reown_view_keeps_replayed_cells_resident() {
+        // Ring self-healing residency: after rank `dead` fails, its
+        // successor's re-own view must serve every replayed (dead,
+        // round) cell — dead bra block AND the dead home's round clip —
+        // without a single remote fetch, for all rounds the dead shard
+        // still owed.
+        let (basis, store, screen) = setup(&molecules::benzene(), 1e-9);
+        let list = SortedPairList::build(&screen, &store);
+        let n = 4;
+        let ring = StoreSharding::build_ring(&list, &store, n);
+        let d = random_density(basis.n_bf, 84);
+        let dmax = PairDensityMax::build(&basis, &d);
+        let walk = list.weighted(&dmax);
+        let (dead, fail_round) = (2usize, 1usize);
+        let succ = (dead + 1) % n;
+        let (dlo, dhi) = ring.rank_range(dead);
+        for round in fail_round..=dead {
+            let view = ring.round_view_reown(succ, round, dead);
+            // Replayed cells keep the dead home's ket clip, so the
+            // round partition of the visited set is unchanged.
+            let (klo, khi) = ring.ring_ket_range(dead, round);
+            for rij in dlo..dhi {
+                assert!(view.is_resident(list.slot(rij)), "adopted bra {rij}");
+                for rkl in walk.kets(rij).clipped(klo, khi).iter() {
+                    assert!(
+                        view.is_resident(list.slot(rkl)),
+                        "round {round}: replayed ket {rkl} not resident"
+                    );
+                }
+            }
+            // The successor's own cell this round stays resident too.
+            let (slo, shi) = ring.rank_range(succ);
+            let (oklo, okhi) = ring.ring_ket_range(succ, round);
+            for rij in slo..shi {
+                assert!(view.is_resident(list.slot(rij)));
+                for rkl in walk.kets(rij).clipped(oklo, okhi).iter() {
+                    assert!(view.is_resident(list.slot(rkl)));
+                }
+            }
+        }
+        // Every lookup above was served locally — zero remote fetches
+        // is the healed-run invariant the SCF test pins end to end.
+        assert_eq!(ring.report().remote_fetches, 0);
+        // Without adoption the dead shard's block is NOT resident on
+        // the successor (disjoint rank range). Probe round 2: at round
+        // 1 the dead block happens to be the successor's regular guest
+        // ((succ − 1) mod n = dead), which is not the case one round
+        // later.
+        assert_eq!(ring.ring_ket_shard(succ, 1), dead);
+        let plain = ring.round_view(succ, 2);
+        assert!((dlo..dhi).any(|r| !plain.is_resident(list.slot(r))));
     }
 
     #[test]

@@ -11,8 +11,11 @@
 use khf::basis::BasisName;
 use khf::chem::graphene::PaperSystem;
 use khf::chem::molecules;
-use khf::cluster::{calibrate, simulate, CostModel, Machine};
-use khf::coordinator::{report, stats_for_system};
+use khf::cluster::{
+    calibrate, simulate, simulate_des, CostModel, DesOptions, FailRank, Machine, SimResult,
+    Straggler,
+};
+use khf::coordinator::{mini_stats, report, stats_for_system};
 use khf::hf::memmodel::{self, EngineKind};
 use khf::hf::mpi_only::MpiOnlyFock;
 use khf::hf::private_fock::PrivateFock;
@@ -70,17 +73,48 @@ fn print_help() {
                                              provably-empty deliveries (rounds,\n\
                                              elided blocks + staged traffic\n\
                                              reported)\n\
+               [--inject-fail [R@T]]         with --ring-exchange: rank R dies at\n\
+                                             round T of every build (default 2@1);\n\
+                                             the ring self-heals — successor\n\
+                                             re-owns the dead block and replays\n\
+                                             its cells; energy matches fault-free\n\
            footprint                         Table 2 memory footprints\n\
-           simulate --system <0.5|1.0|1.5|2.0|5.0> [--nodes 4,16,...]\n\
+           simulate --system <mini|0.5|1.0|1.5|2.0|5.0> [--nodes 4,16,...]\n\
                [--shard-store]               gate memory on the sharded store\n\
                [--ring-exchange]             gate on ring sharding (+ ring traffic\n\
                                              in the simulated Fock time)\n\
                [--ring-overlap]              overlapped ring: hide the pass under\n\
                                              compute (max(comm, compute)/round +\n\
                                              pipeline fill; 3 resident blocks/rank)\n\
+               [--straggler off|uniform|heavy] per-task jitter distribution (event\n\
+                                             core; off reproduces the closed form)\n\
+               [--fail-rank [R@T]] [--seed S] inject a rank failure (implies the\n\
+                                             ring); prints replayed cells, the\n\
+                                             recovery charge and the event digest\n\
+                                             (same seed => identical output)\n\
            calibrate [--out artifacts/calibration.toml] [--budget N]\n\
            artifacts-check                   verify XLA artifacts"
     );
+}
+
+/// Parse a `--NAME R@T` rank-failure spec (rank R dies at the start of
+/// round T). A bare `--NAME` flag means the default spec. Values are
+/// normalized into range downstream (rank mod n, round clamped).
+fn fail_spec(
+    args: &Args,
+    name: &str,
+    default: (usize, usize),
+) -> anyhow::Result<Option<(usize, usize)>> {
+    if let Some(s) = args.get(name) {
+        let (r, t) = s.split_once('@').ok_or_else(|| {
+            anyhow::anyhow!("--{name} expects R@T (rank@round), got {s:?}")
+        })?;
+        Ok(Some((r.trim().parse()?, t.trim().parse()?)))
+    } else if args.flag(name) {
+        Ok(Some(default))
+    } else {
+        Ok(None)
+    }
 }
 
 fn cmd_info() -> anyhow::Result<()> {
@@ -136,6 +170,14 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
         !ring_overlap || ring_exchange,
         "--ring-overlap requires --ring-exchange"
     );
+    // `--inject-fail [R@T]`: kill rank R at the start of round T of
+    // every ring Fock build and let the ring self-heal (bare flag:
+    // rank 2 at round 1).
+    let inject_fail = fail_spec(args, "inject-fail", (2, 1))?;
+    anyhow::ensure!(
+        inject_fail.is_none() || ring_exchange,
+        "--inject-fail requires --ring-exchange (only the systolic ring self-heals)"
+    );
 
     let driver = RhfDriver {
         incremental: !args.flag("no-incremental"),
@@ -144,6 +186,7 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
         shard_store,
         ring_exchange,
         ring_overlap,
+        inject_fail,
         ..RhfDriver::default()
     };
     let res = match engine {
@@ -228,6 +271,21 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
             println!(
                 "  shard DLB (final build): {}..{} task units/shard over {} round(s), {} stolen",
                 sb.min_shard_tasks, sb.max_shard_tasks, sb.rounds, sb.tasks_stolen,
+            );
+        }
+        if let Some((rank, round)) = inject_fail {
+            let replayed: u64 = res
+                .build_stats
+                .iter()
+                .filter_map(|s| s.shard)
+                .map(|sb| sb.tasks_replayed)
+                .sum();
+            println!(
+                "  fault injection: rank {rank} died at round {round} of every build; \
+                 ring self-healed — successor re-owned the dead block and the live \
+                 ranks replayed {replayed} task units over {} builds (energy matches \
+                 the fault-free run)",
+                res.build_stats.len(),
             );
         }
     }
@@ -355,15 +413,34 @@ fn cmd_footprint() -> anyhow::Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
-    let sys = PaperSystem::parse(args.get_or("system", "2.0"))
-        .ok_or_else(|| anyhow::anyhow!("unknown system (use 0.5|1.0|1.5|2.0|5.0)"))?;
+    let cost = CostModel::load_or_fallback("artifacts/calibration.toml");
+    // `--system mini` is the scaled-down CI workload (built on the fly,
+    // no stats cache); the paper systems go through the cached path.
+    let sys_name = args.get_or("system", "2.0");
+    let stats = if sys_name == "mini" {
+        mini_stats(6, &cost)?
+    } else {
+        let sys = PaperSystem::parse(sys_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown system (use mini|0.5|1.0|1.5|2.0|5.0)"))?;
+        stats_for_system(sys, &cost)?
+    };
     let nodes: Vec<usize> = args
         .parse_list("nodes")?
         .unwrap_or_else(|| vec![4, 16, 64, 128, 256, 512]);
-    let cost = CostModel::load_or_fallback("artifacts/calibration.toml");
-    let stats = stats_for_system(sys, &cost)?;
+    // Event-core options: a straggler distribution, an injected rank
+    // failure, and the seed that makes both reproducible. Any of them
+    // routes the run through the DES scheduler; `--fail-rank` implies
+    // the ring (only the systolic ring self-heals).
+    let straggler = Straggler::parse(args.get_or("straggler", "off"))?;
+    let fail = fail_spec(args, "fail-rank", (2, 1))?
+        .map(|(rank, round)| FailRank { rank, round });
+    let seed: u64 = args.parse_or("seed", 0)?;
+    let use_des =
+        args.get("straggler").is_some() || fail.is_some() || args.get("seed").is_some();
+    let des_opts = DesOptions { straggler, seed, fail };
+
     let ring_overlap = args.flag("ring-overlap");
-    let ring_exchange = ring_overlap || args.flag("ring-exchange");
+    let ring_exchange = ring_overlap || args.flag("ring-exchange") || fail.is_some();
     // Accept both the bare-flag and `--shard-store N` forms the scf
     // subcommand takes; the simulator always shards across the
     // machine's full rank count, so an explicit N only switches the
@@ -382,6 +459,8 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         header.push("overlap eff (Sh.F)".to_string());
     }
     let mut rows = vec![header];
+    let mut recovery_lines: Vec<String> = Vec::new();
+    let mut infeasible: Vec<String> = Vec::new();
     for &n in &nodes {
         let machine = |mut m: Machine| {
             m.shard_store = shard_store;
@@ -389,19 +468,21 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             m.ring_overlap = ring_overlap;
             m
         };
-        let mpi = simulate(EngineKind::MpiOnly, &stats, &machine(Machine::theta_mpi(n)), &cost);
-        let prf = simulate(
-            EngineKind::PrivateFock,
-            &stats,
-            &machine(Machine::theta_hybrid(n)),
-            &cost,
-        );
-        let shf = simulate(
-            EngineKind::SharedFock,
-            &stats,
-            &machine(Machine::theta_hybrid(n)),
-            &cost,
-        );
+        let run = |engine: EngineKind, m: Machine| -> SimResult {
+            if use_des {
+                simulate_des(engine, &stats, &machine(m), &cost, des_opts)
+            } else {
+                simulate(engine, &stats, &machine(m), &cost)
+            }
+        };
+        let mpi = run(EngineKind::MpiOnly, Machine::theta_mpi(n));
+        let prf = run(EngineKind::PrivateFock, Machine::theta_hybrid(n));
+        let shf = run(EngineKind::SharedFock, Machine::theta_hybrid(n));
+        for r in [&mpi, &prf, &shf] {
+            if !r.feasible {
+                infeasible.push(format!("{} at {n} nodes", r.engine.label()));
+            }
+        }
         let mut row = vec![
             n.to_string(),
             report::secs(mpi.fock_seconds * 15.0),
@@ -415,10 +496,27 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             ));
         }
         rows.push(row);
+        // Self-healing observability (shared-Fock machine): replayed
+        // cells and the recovery charge, plus the event-trace digest —
+        // two runs with identical inputs must print identical lines.
+        if let Some(des) = &shf.des {
+            if let Some(f) = des.fail {
+                recovery_lines.push(format!(
+                    "recovery: nodes={n} rank={} round={} replayed={} cells, \
+                     {} recovery, {} events, digest={:016x}",
+                    f.rank,
+                    f.round,
+                    des.replayed_tasks,
+                    report::secs(des.recovery_seconds),
+                    des.n_events,
+                    des.trace_digest,
+                ));
+            }
+        }
     }
     println!(
-        "{} — simulated Fock time (15 SCF iterations{}):",
-        sys.label(),
+        "{} — simulated Fock time (15 SCF iterations{}{}):",
+        stats.label,
         if ring_overlap {
             ", overlapped ring store"
         } else if ring_exchange {
@@ -427,9 +525,25 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             ", sharded store"
         } else {
             ""
-        }
+        },
+        if use_des {
+            format!(", event core: straggler={} seed={seed}", straggler.label())
+        } else {
+            String::new()
+        },
     );
     print!("{}", report::table(&rows));
+    for line in &recovery_lines {
+        println!("{line}");
+    }
+    // Memory-gate failures are an error, not a footnote: a rejected
+    // configuration means the requested machine cannot hold the
+    // workload, and scripts keying on exit status must see that.
+    anyhow::ensure!(
+        infeasible.is_empty(),
+        "memory-infeasible configurations: {}",
+        infeasible.join(", ")
+    );
     Ok(())
 }
 

@@ -65,6 +65,14 @@ pub struct RhfDriver {
     /// `ScfResult::sharding` then reports `blocks_elided` and the
     /// staged (elision-reduced) `ring_traffic_bytes`.
     pub ring_overlap: bool,
+    /// Inject a rank failure `(rank, round)` into every ring Fock
+    /// build (requires `ring_exchange`): the rank dies at the start of
+    /// that round of each build and the ring self-heals — the
+    /// successor re-owns the dead bra block and the live ranks replay
+    /// the dead shard's un-drained cells — reproducing the fault-free
+    /// energy exactly. The spelling is normalized into range (`rank
+    /// mod n`, `round` clamped to the last round).
+    pub inject_fail: Option<(usize, usize)>,
 }
 
 impl Default for RhfDriver {
@@ -79,6 +87,7 @@ impl Default for RhfDriver {
             shard_store: 0,
             ring_exchange: false,
             ring_overlap: false,
+            inject_fail: None,
         }
     }
 }
@@ -187,6 +196,10 @@ impl RhfDriver {
             !self.ring_overlap || self.ring_exchange,
             "ring_overlap requires ring_exchange (the double buffer stages ring blocks)"
         );
+        anyhow::ensure!(
+            self.inject_fail.is_none() || self.ring_exchange,
+            "inject_fail requires ring_exchange (only the systolic ring self-heals)"
+        );
 
         // Core guess.
         let mut d = self.new_density(&h, &x, n_occ).1;
@@ -265,7 +278,14 @@ impl RhfDriver {
                 sharding = Some(prev.rebuilt_at(w));
             }
             let ctx = match &sharding {
-                Some(sh) => FockContext::with_sharding(basis, &store, &screen, &pairs, bd, sh),
+                Some(sh) => {
+                    let ctx =
+                        FockContext::with_sharding(basis, &store, &screen, &pairs, bd, sh);
+                    match self.inject_fail {
+                        Some((rank, round)) => ctx.inject_failure(rank, round),
+                        None => ctx,
+                    }
+                }
                 None => FockContext::new(basis, &store, &screen, &pairs, bd),
             };
             let g_build = builder.build_2e(&ctx);

@@ -1,0 +1,209 @@
+//! Ring self-healing, end to end: with a rank failure injected into
+//! the systolic ring, every engine must reproduce the fault-free
+//! physics exactly — the successor re-owns the dead bra block and the
+//! live ranks replay the dead shard's un-drained (shard, round) cells
+//! against the dead home's ket clips, so the visited-set round
+//! partition (and therefore the Fock matrix) is unchanged. The
+//! counters must keep partitioning the canonical quartet space, with
+//! the replayed units reported on the shard stats.
+
+use khf::basis::{BasisName, BasisSet};
+use khf::chem::molecules;
+use khf::hf::mpi_only::MpiOnlyFock;
+use khf::hf::private_fock::PrivateFock;
+use khf::hf::quartets::n_canonical;
+use khf::hf::serial::SerialFock;
+use khf::hf::shared_fock::SharedFock;
+use khf::hf::{FockBuilder, FockContext};
+use khf::integrals::{SchwarzScreen, ShellPairStore, SortedPairList, StoreSharding};
+use khf::linalg::Matrix;
+use khf::scf::RhfDriver;
+use khf::util::prng::Rng;
+
+fn setup(mol: &khf::chem::Molecule) -> (BasisSet, ShellPairStore, SchwarzScreen) {
+    let basis = BasisSet::assemble(mol, BasisName::Sto3g).unwrap();
+    let store = ShellPairStore::build(&basis);
+    let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+    (basis, store, screen)
+}
+
+fn random_density(n: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let mut d = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let x = rng.range(-0.4, 0.4);
+            d.set(i, j, x);
+            d.set(j, i, x);
+        }
+    }
+    d
+}
+
+#[test]
+fn injected_fault_serial_fock_is_bit_identical_and_fetch_free() {
+    // The serial engine replays a dead rank's cells at the *same loop
+    // positions* through the successor's re-own view, so the healed
+    // Fock matrix must equal the fault-free one bit for bit — and the
+    // re-own view must keep every replayed fetch resident (the run
+    // counter stays at zero). Failure positions cover mid-ring, die-at-
+    // round-0, and the wrap-around successor (dead = n−1 → succ = 0).
+    let mol = molecules::benzene();
+    let (basis, store, screen) = setup(&mol);
+    let pairs = SortedPairList::build(&screen, &store);
+    let d = random_density(basis.n_bf, 41);
+
+    let clean_sh = StoreSharding::build_ring(&pairs, &store, 4);
+    let clean_ctx =
+        FockContext::with_sharding(&basis, &store, &screen, &pairs, &d, &clean_sh);
+    let want = SerialFock::new().build_2e(&clean_ctx);
+
+    for (rank, round) in [(2, 1), (0, 0), (3, 2)] {
+        let sh = StoreSharding::build_ring(&pairs, &store, 4);
+        let ctx = FockContext::with_sharding(&basis, &store, &screen, &pairs, &d, &sh)
+            .inject_failure(rank, round);
+        let mut eng = SerialFock::new();
+        let got = eng.build_2e(&ctx);
+        assert_eq!(
+            got.max_abs_diff(&want),
+            0.0,
+            "fail {rank}@{round}: healed serial Fock must be bit-identical"
+        );
+        assert_eq!(
+            eng.stats.quartets_computed,
+            ctx.walk.n_visited(),
+            "fail {rank}@{round}: replay must conserve the visited set"
+        );
+        assert_eq!(
+            sh.report().remote_fetches,
+            0,
+            "fail {rank}@{round}: replayed cells must stay resident via the re-own view"
+        );
+    }
+}
+
+#[test]
+fn injected_fault_engines_match_fault_free_build() {
+    // One Fock build per engine with rank 2 dying at round 1: the
+    // healed matrix must match the fault-free serial build, the
+    // counters must still partition the canonical space, and the
+    // shard stats must report exactly the dead shard's replayed units
+    // (its task list re-issued once per failed active round).
+    let mol = molecules::benzene();
+    let (basis, store, screen) = setup(&mol);
+    let pairs = SortedPairList::build(&screen, &store);
+    let d = random_density(basis.n_bf, 97);
+    let total = n_canonical(basis.n_shells());
+
+    let plain = FockContext::new(&basis, &store, &screen, &pairs, &d);
+    let want = SerialFock::new().build_2e(&plain);
+
+    let sharding = StoreSharding::build_ring(&pairs, &store, 4);
+    let ctx = FockContext::with_sharding(&basis, &store, &screen, &pairs, &d, &sharding)
+        .inject_failure(2, 1);
+    // Dead shard 2 has work in rounds 0..=2; it dies at round 1, so its
+    // list is replayed in rounds 1 and 2 — every unit claimed by a live
+    // rank, exactly once (the DLB counters don't care who claims).
+    let dead_tasks = sharding.partition_tasks(&ctx.walk)[2].len() as u64;
+    let expect_replayed = 2 * dead_tasks;
+
+    for (name, builder) in [
+        ("serial", &mut SerialFock::new() as &mut dyn FockBuilder),
+        ("mpi", &mut MpiOnlyFock::new(4)),
+        ("private", &mut PrivateFock::new(4, 2)),
+        ("shared", &mut SharedFock::new(4, 3)),
+    ] {
+        let got = builder.build_2e(&ctx);
+        assert!(
+            got.max_abs_diff(&want) < 1e-11,
+            "{name}: healed diff {}",
+            got.max_abs_diff(&want)
+        );
+        let stats = builder.last_stats();
+        assert_eq!(
+            stats.quartets_computed + stats.quartets_screened + stats.skipped_by_early_exit,
+            total,
+            "{name}: healed counters must partition the canonical space"
+        );
+        assert_eq!(
+            stats.quartets_computed,
+            ctx.walk.n_visited(),
+            "{name}: replay must conserve the visited set"
+        );
+        if name != "serial" {
+            let shard = stats.shard.expect("parallel ring build must report shard stats");
+            assert_eq!(
+                shard.tasks_replayed, expect_replayed,
+                "{name}: replayed units must be the dead shard's failed-round hand-outs"
+            );
+            assert!(dead_tasks > 0, "dead shard must actually carry work");
+        }
+    }
+}
+
+#[test]
+fn injected_fault_scf_reproduces_fault_free_energy() {
+    // The acceptance bar: full SCF on water and benzene with a rank
+    // failure injected into every ring build, all four engines — the
+    // converged energy must match the fault-free serial reference to
+    // 1e-8, with replayed units reported by the parallel engines.
+    for mol in [molecules::water(), molecules::benzene()] {
+        let reference = RhfDriver { incremental: false, ..Default::default() }
+            .run(&mol, BasisName::Sto3g, &mut SerialFock::new())
+            .unwrap();
+        assert!(reference.converged, "{}: reference did not converge", mol.name);
+
+        let driver = RhfDriver {
+            shard_store: 4,
+            ring_exchange: true,
+            inject_fail: Some((2, 1)),
+            ..Default::default()
+        };
+        let mut engines: Vec<(&str, Box<dyn FockBuilder>)> = vec![
+            ("serial", Box::new(SerialFock::new())),
+            ("mpi", Box::new(MpiOnlyFock::new(4))),
+            ("private", Box::new(PrivateFock::new(4, 2))),
+            ("shared", Box::new(SharedFock::new(4, 2))),
+        ];
+        for (name, builder) in engines.iter_mut() {
+            let r = driver.run(&mol, BasisName::Sto3g, builder.as_mut()).unwrap();
+            assert!(r.converged, "{}/{name}: did not converge under failure", mol.name);
+            assert!(
+                (r.energy - reference.energy).abs() < 1e-8,
+                "{}/{name}: healed {} vs fault-free {}",
+                mol.name,
+                r.energy,
+                reference.energy
+            );
+            let rep = r.sharding.as_ref().expect("missing sharding report");
+            assert!(rep.ring, "{}/{name}: failure injection is ring-only", mol.name);
+            if *name != "serial" {
+                let replayed: u64 = r
+                    .build_stats
+                    .iter()
+                    .filter_map(|s| s.shard)
+                    .map(|sb| sb.tasks_replayed)
+                    .sum();
+                assert!(
+                    replayed > 0,
+                    "{}/{name}: the dead shard's cells must be replayed",
+                    mol.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn injection_requires_ring_exchange() {
+    // Prefix-mode sharding has no systolic pass to heal: the driver
+    // must reject the combination up front.
+    let err = RhfDriver {
+        shard_store: 4,
+        inject_fail: Some((1, 0)),
+        ..Default::default()
+    }
+    .run(&molecules::h2(), BasisName::Sto3g, &mut SerialFock::new())
+    .unwrap_err();
+    assert!(err.to_string().contains("ring_exchange"), "{err}");
+}
