@@ -27,6 +27,9 @@ from . import model  # noqa: E402
 SIZE_GRID = [8, 16, 32, 40, 64]
 # Column-buffer flush artifact shape (mxsize x nthreads).
 COLREDUCE_SHAPE = (4096, 64)
+# Blocked J/K batch shape (batch x padded shell width). Must match the
+# Rust defaults: hf::DEFAULT_BATCH_SIZE and the cartesian d-shell width.
+BLOCKJK_SHAPE = (32, 6)
 DTYPE = jnp.float64
 
 
@@ -52,6 +55,10 @@ def lower_artifacts(sizes):
     m, t = COLREDUCE_SHAPE
     buf = jax.ShapeDtypeStruct((m, t), DTYPE)
     yield f"colreduce_{m}_{t}", to_hlo_text(jax.jit(model.colreduce_flush).lower(buf))
+    b, w = BLOCKJK_SHAPE
+    blocks = jax.ShapeDtypeStruct((b, w, w, w, w), DTYPE)
+    dstack = jax.ShapeDtypeStruct((6, b, w, w), DTYPE)
+    yield f"blockjk_{b}_{w}", to_hlo_text(jax.jit(model.blockjk_planes).lower(blocks, dstack))
 
 
 def main() -> None:

@@ -7,6 +7,7 @@ and the Rust side unpacks tuples uniformly.
 
 import jax.numpy as jnp
 
+from .kernels.blockjk import blockjk
 from .kernels.colreduce import colreduce
 from .kernels.fock_jk import fock_jk
 
@@ -35,6 +36,14 @@ def fock_energy(eri, d, h):
     f = h + g
     e = 0.5 * jnp.sum(d * (h + f))
     return (f, e.reshape(()))
+
+
+def blockjk_planes(eri, dstack):
+    """Blocked J/K planes for one same-class quartet batch (the
+    heterogeneous engine's offload unit). Returns the six planes as a
+    tuple so the Rust side unpacks them positionally."""
+    out = blockjk(eri, dstack)
+    return (out[0], out[1], out[2], out[3], out[4], out[5])
 
 
 def colreduce_flush(buffers):

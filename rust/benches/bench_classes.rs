@@ -1,0 +1,205 @@
+//! Class-batched quartet pipeline — population histograms and the
+//! scalar-vs-batched drain measurement (the `EriEngine` scratch-reuse
+//! win: one bra resolution per same-bra run instead of one per
+//! quartet). Emits BENCH_classes.json.
+//!
+//! Run: cargo bench --bench bench_classes
+
+use std::time::Instant;
+
+use khf::basis::{BasisName, BasisSet};
+use khf::chem::molecules;
+use khf::coordinator::{report, BenchJson};
+use khf::hf::hetero_fock::HeteroFock;
+use khf::hf::quartets::for_each_surviving;
+use khf::hf::{FockBuilder, FockContext};
+use khf::integrals::{
+    EriEngine, QuartetSite, SchwarzScreen, ShellPairStore, SortedPairList,
+};
+use khf::linalg::Matrix;
+use khf::scf::RhfDriver;
+
+fn main() {
+    khf::util::logging::init();
+    let mut json = BenchJson::new("classes");
+
+    // == 1. Pair- and quartet-class populations ==
+    // The split policy's input: listed-pair counts per angular-momentum
+    // class, and the quartet-class histogram an actual build records.
+    println!("== Class populations (Q-sorted surviving pairs) ==\n");
+    for (mol, basis_name) in [
+        (molecules::water(), BasisName::Sto3g),
+        (molecules::benzene(), BasisName::Sto3g),
+        (molecules::benzene(), BasisName::SixThirtyOneG),
+    ] {
+        let basis = BasisSet::assemble(&mol, basis_name).expect("basis");
+        let store = ShellPairStore::build(&basis);
+        let screen =
+            SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+        let pairs = SortedPairList::build(&screen, &store);
+        let config = format!("{}/{}", mol.name, basis_name.label());
+        let m = pairs.n_pair_classes();
+        let counts = pairs.class_counts();
+        let mut rows = vec![vec!["pair class".into(), "listed pairs".into()]];
+        for c in 0..m {
+            let (ka, kb) = pairs.class_kinds(c);
+            let label = format!("{ka:?}{kb:?}");
+            json.row(&config, &format!("pairs_class_{label}"), counts[c] as f64);
+            rows.push(vec![label, counts[c].to_string()]);
+        }
+        println!("{config}: {} pairs in {m} classes", pairs.len());
+        print!("{}", report::table(&rows));
+
+        // Quartet histogram from a real build (the drain counters).
+        let d = Matrix::identity(basis.n_bf);
+        let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
+        let mut eng = khf::hf::serial::SerialFock::new();
+        let _ = eng.build_2e(&ctx);
+        let stats = eng.last_stats();
+        let total: u64 = stats.class_quartets.iter().sum();
+        for (c, &q) in stats.class_quartets.iter().enumerate() {
+            if q > 0 {
+                let (ba, bb) = pairs.class_kinds(c / m);
+                let (ka, kb) = pairs.class_kinds(c % m);
+                json.row(
+                    &config,
+                    &format!("quartets_class_{ba:?}{bb:?}_{ka:?}{kb:?}"),
+                    q as f64,
+                );
+            }
+        }
+        println!(
+            "quartets: {total} computed, {}/{} classes populated\n",
+            stats.class_quartets.iter().filter(|&&q| q > 0).count(),
+            stats.class_quartets.len(),
+        );
+    }
+
+    // == 2. Scalar vs batched drain (the satellite fix's measurement) ==
+    // Same surviving quartet set, same engine math; the batched path
+    // pays one scratch setup per run and one bra resolution per
+    // distinct bra instead of one per quartet.
+    println!("== Scalar vs batched ERI drain (benzene/STO-3G) ==\n");
+    let mol = molecules::benzene();
+    let basis = BasisSet::assemble(&mol, BasisName::Sto3g).expect("basis");
+    let store = ShellPairStore::build(&basis);
+    let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+    let pairs = SortedPairList::build(&screen, &store);
+    let d = Matrix::identity(basis.n_bf);
+    let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
+    let m = pairs.n_pair_classes();
+    // Bucket the full surviving set by quartet class, walk order kept
+    // inside each bucket (so batched runs see same-bra site runs).
+    let mut by_class: Vec<Vec<QuartetSite>> = vec![Vec::new(); m * m];
+    for_each_surviving(&ctx.walk, |rij, rkl| {
+        let c = khf::integrals::quartet_class(&pairs, rij, rkl);
+        let bra = pairs.entry(rij);
+        let ket = pairs.entry(rkl);
+        by_class[c].push(QuartetSite {
+            i: bra.i,
+            j: bra.j,
+            k: ket.i,
+            l: ket.j,
+            bra_slot: bra.slot,
+            ket_slot: ket.slot,
+        });
+    });
+    let n_quartets: usize = by_class.iter().map(|v| v.len()).sum();
+
+    let reps = 3;
+    let mut scalar_best = f64::INFINITY;
+    let mut scalar_resolves = 0u64;
+    let mut sink_scalar = 0.0f64;
+    for _ in 0..reps {
+        let mut eng = EriEngine::new();
+        let mut block = vec![0.0; 6 * 6 * 6 * 6];
+        let t0 = Instant::now();
+        for sites in &by_class {
+            for s in sites {
+                eng.shell_quartet_slots(
+                    &basis,
+                    &store,
+                    s.i as usize,
+                    s.j as usize,
+                    s.k as usize,
+                    s.l as usize,
+                    s.bra_slot,
+                    s.ket_slot,
+                    &mut block,
+                );
+                sink_scalar += block[0];
+            }
+        }
+        scalar_best = scalar_best.min(t0.elapsed().as_secs_f64());
+        scalar_resolves = eng.bra_resolves;
+    }
+
+    let batch_size = khf::hf::DEFAULT_BATCH_SIZE;
+    let mut batched_best = f64::INFINITY;
+    let mut batched_resolves = 0u64;
+    let mut sink_batched = 0.0f64;
+    for _ in 0..reps {
+        let mut eng = EriEngine::new();
+        let t0 = Instant::now();
+        for sites in &by_class {
+            for chunk in sites.chunks(batch_size) {
+                eng.shell_quartet_batch(
+                    &basis,
+                    |slot, swap| store.view_by_slot(slot, swap),
+                    chunk,
+                    |_, block| sink_batched += block[0],
+                );
+            }
+        }
+        batched_best = batched_best.min(t0.elapsed().as_secs_f64());
+        batched_resolves = eng.bra_resolves;
+    }
+    std::hint::black_box((sink_scalar, sink_batched));
+    println!(
+        "{n_quartets} quartets: scalar {:.1} ms ({scalar_resolves} bra resolves) vs \
+         batched {:.1} ms ({batched_resolves} bra resolves, batch {batch_size}) — \
+         {:.2}x, {:.1}x fewer resolves",
+        1e3 * scalar_best,
+        1e3 * batched_best,
+        scalar_best / batched_best,
+        scalar_resolves as f64 / batched_resolves.max(1) as f64,
+    );
+    json.row("benzene/STO-3G", "scalar_drain_seconds", scalar_best);
+    json.row("benzene/STO-3G", "batched_drain_seconds", batched_best);
+    json.row("benzene/STO-3G", "scalar_bra_resolves", scalar_resolves as f64);
+    json.row("benzene/STO-3G", "batched_bra_resolves", batched_resolves as f64);
+    json.row("benzene/STO-3G", "drain_quartets", n_quartets as f64);
+
+    // == 3. Heterogeneous engine end-to-end ==
+    // Full SCF through the class-split engine (host fallback when no
+    // blockjk artifact is installed) — the flush accounting and the
+    // populous/tail split at the default policy.
+    println!("\n== hetero engine SCF (benzene/STO-3G, 1 rank x 4 threads) ==\n");
+    let mut hetero = HeteroFock::new(1, 4);
+    let t0 = Instant::now();
+    let res = RhfDriver::default()
+        .run(&mol, BasisName::Sto3g, &mut hetero)
+        .expect("hetero scf");
+    let wall = t0.elapsed().as_secs_f64();
+    let first = res.build_stats.first().expect("stats");
+    println!(
+        "E = {:.8} Ha, converged={} in {} iterations ({:.2} s; Fock {:.2} s)\n\
+         first build: {} batches x {batch_size} + {} tail of {} quartets, \
+         {} accel batches",
+        res.energy,
+        res.converged,
+        res.iterations,
+        wall,
+        res.fock_build_seconds,
+        first.batches_flushed,
+        first.tail_quartets,
+        first.quartets_computed,
+        first.accel_batches,
+    );
+    json.row("benzene/STO-3G", "hetero_fock_seconds", res.fock_build_seconds);
+    json.row("benzene/STO-3G", "hetero_batches_flushed", first.batches_flushed as f64);
+    json.row("benzene/STO-3G", "hetero_tail_quartets", first.tail_quartets as f64);
+    json.row("benzene/STO-3G", "hetero_accel_batches", first.accel_batches as f64);
+
+    json.write();
+}

@@ -149,6 +149,32 @@ fn main() {
     }
     print!("{}", report::table(&rows));
 
+    println!("\n== Class-batch drain buffers (per node, hybrids: 4 ranks x 64 threads) ==");
+    println!("   Every engine thread owns one fill-and-flush QuartetBatch (classes^2");
+    println!("   buckets x batch sites); hetero owns two (offload + host split) plus");
+    println!("   a batch x maxShellBF^4 staged ERI slab per thread. All figures are");
+    println!("   N_BF-independent — the Table 2 matrix story is untouched.\n");
+    let (classes, batch, threads_node) = (3usize, 32usize, 4 * 64);
+    let one_set = memmodel::batch_buffer_bytes_per_node(classes, batch, 1, 4, 64);
+    let hetero_sets = memmodel::batch_buffer_bytes_per_node(classes, batch, 2, 4, 64);
+    let hetero_stage =
+        memmodel::hetero_stage_bytes_per_thread(batch, 15) * threads_node as f64;
+    json.row("hybrid-node", "batch_buffer_bytes_per_node", one_set);
+    json.row("hybrid-node", "hetero_batch_buffer_bytes_per_node", hetero_sets);
+    json.row("hybrid-node", "hetero_stage_bytes_per_node", hetero_stage);
+    let mut rows = vec![vec!["engine".into(), "buffers/node".into(), "stage/node".into()]];
+    rows.push(vec![
+        "mpi/private/shared (1 set)".into(),
+        format!("{:.2} MB", one_set / 1e6),
+        "-".into(),
+    ]);
+    rows.push(vec![
+        "hetero (2 sets + slab)".into(),
+        format!("{:.2} MB", hetero_sets / 1e6),
+        format!("{:.2} MB", hetero_stage / 1e6),
+    ]);
+    print!("{}", report::table(&rows));
+
     println!("\n== Headline reduction factors (exact accounting) ==");
     let mut rows = vec![vec![
         "system".into(),

@@ -1,0 +1,259 @@
+//! The shared fill-and-flush quartet drain — how every engine consumes
+//! its claimed quartets since the class-batched refactor.
+//!
+//! The scalar path evaluated and scattered each surviving quartet the
+//! moment the walk produced it. [`ClassBatcher`] interposes a
+//! [`QuartetBatch`]: claimed quartets are buffered into per-class
+//! buckets, a bucket that reaches the context's
+//! [`batch_size`](super::FockContext::batch_size) flushes immediately
+//! through [`EriEngine::shell_quartet_batch`] (one scratch setup, one
+//! bra resolution per run), and whatever remains at **task end** drains
+//! as the ragged tail. Batches therefore never span tasks: for a fixed
+//! claimed-task sequence, the evaluation-and-scatter order is a pure
+//! function of the walk — deterministic, so the ring fault-injection
+//! tests' bit-identical Fock property survives the refactor.
+//!
+//! The flush accounting partitions the visited set *exactly* (pinned by
+//! `tests/classbatch.rs`):
+//!
+//! ```text
+//! batches_flushed · batch_size + tail_quartets == quartets_computed
+//! ```
+//!
+//! One batcher per worker thread (it is plain mutable state, like the
+//! engine scratch); engines fold the counters into their
+//! [`BuildStats`](super::BuildStats) via [`ClassBatcher::merge_into`].
+
+use crate::integrals::{quartet_class, EriEngine, QuartetBatch, QuartetSite, RoundView};
+
+use super::scatter::scatter_block;
+use super::{BuildStats, FockContext};
+
+/// Evaluate `sites` (one same-class batch or tail run) and scatter each
+/// block, resolving pair tables through the round view when one is
+/// present (sharded builds) or the replicated store otherwise. Shared
+/// by [`ClassBatcher`] and the heterogeneous engine's host-side drain.
+pub fn drain_sites(
+    eng: &mut EriEngine,
+    ctx: &FockContext,
+    view: Option<&RoundView>,
+    sites: &[QuartetSite],
+    sink: &mut impl FnMut(usize, usize, f64),
+) {
+    let mut each = |n: usize, block: &[f64]| {
+        let s = sites[n];
+        scatter_block(
+            ctx.basis,
+            (s.i as usize, s.j as usize, s.k as usize, s.l as usize),
+            block,
+            ctx.d,
+            sink,
+        );
+    };
+    match view {
+        Some(v) => eng.shell_quartet_batch(
+            ctx.basis,
+            |slot, swap| v.view_by_slot(slot, swap),
+            sites,
+            &mut each,
+        ),
+        None => eng.shell_quartet_batch(
+            ctx.basis,
+            |slot, swap| ctx.store.view_by_slot(slot, swap),
+            sites,
+            &mut each,
+        ),
+    }
+}
+
+/// Per-thread fill-and-flush drain: per-class buckets sized at the
+/// context's batch size, flush-on-full, tail drain at task end.
+pub struct ClassBatcher {
+    batch: QuartetBatch,
+    /// Full-capacity flushes (mid-task).
+    pub batches_flushed: u64,
+    /// Quartets drained as task-end residue (partial buckets).
+    pub tail_quartets: u64,
+    /// Quartets pushed per dense quartet class.
+    pub class_quartets: Vec<u64>,
+}
+
+impl ClassBatcher {
+    /// A batcher for `ctx`'s pair list and batch size.
+    pub fn new(ctx: &FockContext) -> ClassBatcher {
+        let batch = QuartetBatch::for_list(ctx.pairs, ctx.batch_size);
+        let n = batch.n_classes();
+        ClassBatcher {
+            batch,
+            batches_flushed: 0,
+            tail_quartets: 0,
+            class_quartets: vec![0; n],
+        }
+    }
+
+    /// Buffer one claimed quartet; if its class bucket fills, flush it
+    /// through the batched evaluator immediately (so the buffer bound is
+    /// exactly `batch_size` sites per class).
+    #[allow(clippy::too_many_arguments)]
+    pub fn push(
+        &mut self,
+        ctx: &FockContext,
+        eng: &mut EriEngine,
+        view: Option<&RoundView>,
+        rij: usize,
+        rkl: usize,
+        sink: &mut impl FnMut(usize, usize, f64),
+    ) {
+        let c = quartet_class(ctx.pairs, rij, rkl);
+        let bra = ctx.pairs.entry(rij);
+        let ket = ctx.pairs.entry(rkl);
+        let site = QuartetSite {
+            i: bra.i,
+            j: bra.j,
+            k: ket.i,
+            l: ket.j,
+            bra_slot: bra.slot,
+            ket_slot: ket.slot,
+        };
+        self.class_quartets[c] += 1;
+        if self.batch.push(c, site) {
+            self.flush_class(c, ctx, eng, view, sink, true);
+        }
+    }
+
+    /// Drain every partial bucket — called at each task boundary (and
+    /// at end of build, where it is a no-op after the last task's
+    /// flush). Keeping the drain per-task is what makes the scatter
+    /// order a pure function of the claimed-task sequence.
+    pub fn flush_task(
+        &mut self,
+        ctx: &FockContext,
+        eng: &mut EriEngine,
+        view: Option<&RoundView>,
+        sink: &mut impl FnMut(usize, usize, f64),
+    ) {
+        for c in 0..self.batch.n_classes() {
+            if !self.batch.bucket(c).is_empty() {
+                self.flush_class(c, ctx, eng, view, sink, false);
+            }
+        }
+    }
+
+    fn flush_class(
+        &mut self,
+        c: usize,
+        ctx: &FockContext,
+        eng: &mut EriEngine,
+        view: Option<&RoundView>,
+        sink: &mut impl FnMut(usize, usize, f64),
+        full: bool,
+    ) {
+        let sites = self.batch.take_bucket(c);
+        if full {
+            self.batches_flushed += 1;
+        } else {
+            self.tail_quartets += sites.len() as u64;
+        }
+        drain_sites(eng, ctx, view, &sites, sink);
+        self.batch.restore_bucket(c, sites);
+    }
+
+    /// Sites still buffered (must be 0 after the final `flush_task` —
+    /// debug-asserted by the engines' accounting).
+    pub fn n_buffered(&self) -> usize {
+        self.batch.len_total()
+    }
+
+    /// Total quartets pushed through this batcher.
+    pub fn quartets_pushed(&self) -> u64 {
+        self.class_quartets.iter().sum()
+    }
+
+    /// Fold this thread's flush counters into the build's stats
+    /// (element-wise for the class histogram).
+    pub fn merge_into(&self, stats: &mut BuildStats) {
+        stats.batches_flushed += self.batches_flushed;
+        stats.tail_quartets += self.tail_quartets;
+        if stats.class_quartets.is_empty() {
+            stats.class_quartets = vec![0; self.class_quartets.len()];
+        }
+        debug_assert_eq!(stats.class_quartets.len(), self.class_quartets.len());
+        for (a, b) in stats.class_quartets.iter_mut().zip(&self.class_quartets) {
+            *a += b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basis::{BasisName, BasisSet};
+    use crate::chem::molecules;
+    use crate::hf::quartets::for_each_surviving;
+    use crate::hf::scatter::mirror;
+    use crate::integrals::{SchwarzScreen, ShellPairStore, SortedPairList};
+    use crate::linalg::Matrix;
+
+    #[test]
+    fn batched_drain_matches_scalar_scatter() {
+        let m = molecules::water();
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let store = ShellPairStore::build(&b);
+        let screen = SchwarzScreen::build_with_store(&b, &store, 1e-10);
+        let pairs = SortedPairList::build(&screen, &store);
+        let d = Matrix::identity(b.n_bf);
+        let ctx = FockContext::new(&b, &store, &screen, &pairs, &d).with_batch_size(4);
+
+        // Scalar reference: evaluate-and-scatter per quartet.
+        let mut eng = EriEngine::new();
+        let mut block = vec![0.0; 6 * 6 * 6 * 6];
+        let mut g_scalar = Matrix::zeros(b.n_bf, b.n_bf);
+        for_each_surviving(&ctx.walk, |rij, rkl| {
+            let (i, j) = pairs.pair(rij);
+            let (k, l) = pairs.pair(rkl);
+            eng.shell_quartet_slots(
+                &b,
+                &store,
+                i,
+                j,
+                k,
+                l,
+                pairs.slot(rij),
+                pairs.slot(rkl),
+                &mut block,
+            );
+            scatter_block(&b, (i, j, k, l), &block, &d, &mut |a, bb, v| {
+                g_scalar.add(a, bb, v)
+            });
+        });
+        mirror(&mut g_scalar);
+
+        // Batched drain with per-task flushes.
+        let mut eng2 = EriEngine::new();
+        let mut batcher = ClassBatcher::new(&ctx);
+        let mut g = Matrix::zeros(b.n_bf, b.n_bf);
+        let mut n_visited = 0u64;
+        for t in 0..ctx.walk.n_tasks() {
+            let rij = ctx.walk.task(t);
+            let mut sink = |a: usize, bb: usize, v: f64| g.add(a, bb, v);
+            for rkl in ctx.walk.kets(rij).iter() {
+                batcher.push(&ctx, &mut eng2, None, rij, rkl, &mut sink);
+                n_visited += 1;
+            }
+            batcher.flush_task(&ctx, &mut eng2, None, &mut sink);
+        }
+        mirror(&mut g);
+
+        assert_eq!(batcher.n_buffered(), 0, "tail must drain at task end");
+        assert_eq!(n_visited, ctx.walk.n_visited());
+        assert_eq!(batcher.quartets_pushed(), n_visited);
+        assert_eq!(
+            batcher.batches_flushed * ctx.batch_size as u64 + batcher.tail_quartets,
+            n_visited,
+            "flush accounting must partition the visited set"
+        );
+        assert!(batcher.batches_flushed > 0, "batch size 4 must fill buckets");
+        let diff = g.max_abs_diff(&g_scalar);
+        assert!(diff < 1e-12, "batched vs scalar G: max diff {diff}");
+    }
+}

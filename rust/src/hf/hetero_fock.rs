@@ -1,0 +1,505 @@
+//! The heterogeneous class-split engine: populous quartet classes flow
+//! as fixed-size batches into the blocked J/K path
+//! ([`crate::runtime::BlockJk`], artifact-gated with a host fallback)
+//! while the CPU threads drain rare classes and the ragged tail.
+//!
+//! Structure: the claim machinery is Algorithm 2's (virtual MPI ranks ×
+//! OpenMP-style threads, thread-private Fock replicas, the MPI-level
+//! DLB over bra tasks, `schedule(dynamic,1)` over each task's ket
+//! segments, ring rounds via [`super::rounds::RoundLoop`]). What
+//! changes is the consumption side: instead of one
+//! [`ClassBatcher`](super::classbatch::ClassBatcher), every thread
+//! keeps **two** per-class batch sets —
+//!
+//! * the *offload* set, fed by quartets whose class the split policy
+//!   marks populous **and** whose four shells are pairwise distinct
+//!   (the blocked contraction's precondition); full buckets are
+//!   evaluated through the batched ERI path, staged into a
+//!   [`BlockJk`](crate::runtime::BlockJk) unit and contracted there —
+//!   on the PJRT `blockjk` artifact when present, otherwise through the
+//!   unit's blocked host loops;
+//! * the *host* set, fed by everything else (rare classes, shell-
+//!   degenerate quartets); full buckets flush through the shared
+//!   [`drain_sites`](super::classbatch::drain_sites) scalar-scatter
+//!   drain.
+//!
+//! At every task boundary both sets' residues drain host-side as the
+//! ragged tail — batches never span tasks, and the CPU always owns the
+//! tail. The flush accounting therefore still partitions the visited
+//! set exactly: `batches_flushed · batch_size + tail_quartets ==
+//! quartets_computed`, with `accel_batches` counting the subset of full
+//! flushes that executed on the PJRT artifact (0 when no artifact is
+//! installed — the host fallback is bit-for-bit the same accounting).
+//!
+//! **Split policy**: class `(bc, kc)` is populous when
+//! `class_counts[bc] · class_counts[kc] ≥ threshold` — the dense
+//! quartet population of the class, the upper bound on how much
+//! same-shape work the build can ever bucket there. A threshold of
+//! `u64::MAX` turns the policy off entirely and the engine degrades to
+//! a pure host build (pinned by tests).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Barrier;
+
+use crate::integrals::{quartet_class, EriEngine, QuartetBatch, QuartetSite, RoundView};
+use crate::linalg::Matrix;
+use crate::runtime::BlockJk;
+
+use super::classbatch::drain_sites;
+use super::dlb::WalkDlb;
+use super::rounds::RoundLoop;
+use super::scatter::fold_symmetric;
+use super::threadpool::parallel_region;
+use super::{BuildStats, FockBuilder, FockContext};
+
+/// Default populous-class threshold: classes whose dense quartet
+/// population is below this cannot amortize the staging + offload
+/// overhead of the blocked path and stay host-side.
+pub const DEFAULT_POPULOUS_THRESHOLD: u64 = 1024;
+
+/// Heterogeneous class-split engine: `n_ranks` virtual ranks ×
+/// `n_threads` threads per rank, populous classes offloaded.
+pub struct HeteroFock {
+    pub n_ranks: usize,
+    pub n_threads: usize,
+    pub stats: BuildStats,
+    populous_threshold: u64,
+}
+
+impl HeteroFock {
+    pub fn new(n_ranks: usize, n_threads: usize) -> Self {
+        assert!(n_ranks > 0 && n_threads > 0);
+        HeteroFock {
+            n_ranks,
+            n_threads,
+            stats: BuildStats::default(),
+            populous_threshold: DEFAULT_POPULOUS_THRESHOLD,
+        }
+    }
+
+    /// Override the split policy's population threshold. `u64::MAX`
+    /// marks no class populous — the engine runs the pure host path.
+    pub fn with_populous_threshold(mut self, threshold: u64) -> Self {
+        self.populous_threshold = threshold;
+        self
+    }
+
+    /// The split policy: per dense quartet class, does its population
+    /// (product of the two pair-class listed-pair counts) reach the
+    /// threshold?
+    pub fn populous_classes(&self, ctx: &FockContext) -> Vec<bool> {
+        let m = ctx.pairs.n_pair_classes();
+        let counts = ctx.pairs.class_counts();
+        (0..m * m)
+            .map(|c| {
+                self.populous_threshold != u64::MAX
+                    && counts[c / m].saturating_mul(counts[c % m]) >= self.populous_threshold
+            })
+            .collect()
+    }
+}
+
+/// Per-thread two-way fill-and-flush drain (offload + host batch sets).
+struct SplitBatcher {
+    accel: QuartetBatch,
+    host: QuartetBatch,
+    jk: BlockJk,
+    populous: Vec<bool>,
+    batches_flushed: u64,
+    tail_quartets: u64,
+    accel_batches: u64,
+    class_quartets: Vec<u64>,
+}
+
+impl SplitBatcher {
+    fn new(ctx: &FockContext, populous: &[bool]) -> SplitBatcher {
+        let accel = QuartetBatch::for_list(ctx.pairs, ctx.batch_size);
+        let n = accel.n_classes();
+        debug_assert_eq!(n, populous.len());
+        SplitBatcher {
+            accel,
+            host: QuartetBatch::for_list(ctx.pairs, ctx.batch_size),
+            jk: BlockJk::new(ctx.batch_size, ctx.basis.max_shell_bf),
+            populous: populous.to_vec(),
+            batches_flushed: 0,
+            tail_quartets: 0,
+            accel_batches: 0,
+            class_quartets: vec![0; n],
+        }
+    }
+
+    /// Buffer one claimed quartet on the side the split policy picks;
+    /// a bucket reaching capacity flushes immediately.
+    #[allow(clippy::too_many_arguments)]
+    fn push(
+        &mut self,
+        ctx: &FockContext,
+        eng: &mut EriEngine,
+        view: Option<&RoundView>,
+        rij: usize,
+        rkl: usize,
+        sink: &mut impl FnMut(usize, usize, f64),
+    ) {
+        let c = quartet_class(ctx.pairs, rij, rkl);
+        let bra = ctx.pairs.entry(rij);
+        let ket = ctx.pairs.entry(rkl);
+        let site = QuartetSite {
+            i: bra.i,
+            j: bra.j,
+            k: ket.i,
+            l: ket.j,
+            bra_slot: bra.slot,
+            ket_slot: ket.slot,
+        };
+        self.class_quartets[c] += 1;
+        // The blocked contraction's six-update form needs all 8 index
+        // permutations distinct — degenerate quartets keep the scalar
+        // scatter (which owns the canonical-filter bookkeeping).
+        let distinct = bra.i != bra.j
+            && ket.i != ket.j
+            && bra.i != ket.i
+            && bra.i != ket.j
+            && bra.j != ket.i
+            && bra.j != ket.j;
+        if self.populous[c] && distinct {
+            if self.accel.push(c, site) {
+                self.flush_accel(c, ctx, eng, view, sink);
+            }
+        } else if self.host.push(c, site) {
+            let sites = self.host.take_bucket(c);
+            self.batches_flushed += 1;
+            drain_sites(eng, ctx, view, &sites, sink);
+            self.host.restore_bucket(c, sites);
+        }
+    }
+
+    /// One full offload bucket: evaluate the batch through the shared
+    /// batched ERI path, staging each block into the BlockJk unit, then
+    /// contract (PJRT artifact or the unit's blocked host loops).
+    fn flush_accel(
+        &mut self,
+        c: usize,
+        ctx: &FockContext,
+        eng: &mut EriEngine,
+        view: Option<&RoundView>,
+        sink: &mut impl FnMut(usize, usize, f64),
+    ) {
+        let sites = self.accel.take_bucket(c);
+        self.batches_flushed += 1;
+        let basis = ctx.basis;
+        let jk = &mut self.jk;
+        let mut stage = |n: usize, block: &[f64]| {
+            let s = sites[n];
+            let dims = (
+                basis.shells[s.i as usize].n_bf(),
+                basis.shells[s.j as usize].n_bf(),
+                basis.shells[s.k as usize].n_bf(),
+                basis.shells[s.l as usize].n_bf(),
+            );
+            jk.stage(n, dims, block);
+        };
+        match view {
+            Some(v) => eng.shell_quartet_batch(
+                basis,
+                |slot, swap| v.view_by_slot(slot, swap),
+                &sites,
+                &mut stage,
+            ),
+            None => eng.shell_quartet_batch(
+                basis,
+                |slot, swap| ctx.store.view_by_slot(slot, swap),
+                &sites,
+                &mut stage,
+            ),
+        }
+        if self.jk.contract(basis, &sites, ctx.d, sink) {
+            self.accel_batches += 1;
+        }
+        self.accel.restore_bucket(c, sites);
+    }
+
+    /// Task boundary: both sets' residues drain host-side as the ragged
+    /// tail (the CPU always owns partial buckets).
+    fn flush_task(
+        &mut self,
+        ctx: &FockContext,
+        eng: &mut EriEngine,
+        view: Option<&RoundView>,
+        sink: &mut impl FnMut(usize, usize, f64),
+    ) {
+        for c in 0..self.host.n_classes() {
+            for batch in [&mut self.host, &mut self.accel] {
+                if !batch.bucket(c).is_empty() {
+                    let sites = batch.take_bucket(c);
+                    self.tail_quartets += sites.len() as u64;
+                    drain_sites(eng, ctx, view, &sites, sink);
+                    batch.restore_bucket(c, sites);
+                }
+            }
+        }
+    }
+
+    fn n_buffered(&self) -> usize {
+        self.accel.len_total() + self.host.len_total()
+    }
+
+    /// Fold this thread's counters into a partial [`BuildStats`].
+    fn merge_into(&self, stats: &mut BuildStats) {
+        stats.batches_flushed += self.batches_flushed;
+        stats.tail_quartets += self.tail_quartets;
+        stats.accel_batches += self.accel_batches;
+        if stats.class_quartets.is_empty() {
+            stats.class_quartets = vec![0; self.class_quartets.len()];
+        }
+        debug_assert_eq!(stats.class_quartets.len(), self.class_quartets.len());
+        for (a, b) in stats.class_quartets.iter_mut().zip(&self.class_quartets) {
+            *a += b;
+        }
+    }
+}
+
+impl FockBuilder for HeteroFock {
+    fn build_2e(&mut self, ctx: &FockContext) -> Matrix {
+        let t0 = std::time::Instant::now();
+        let basis = ctx.basis;
+        let n = basis.n_bf;
+        let walk = &ctx.walk;
+        let sharding = ctx.sharding;
+        if let Some(sh) = sharding {
+            assert_eq!(
+                self.n_ranks,
+                sh.n_shards(),
+                "sharded store has {} shards but engine has {} ranks",
+                sh.n_shards(),
+                self.n_ranks
+            );
+        }
+        let populous = self.populous_classes(ctx);
+        // Same claim discipline and round sequencing as Algorithm 2.
+        let dlb = WalkDlb::with_failure(walk, sharding, ctx.fail);
+        let rounds = RoundLoop::new(ctx, &dlb, self.n_ranks);
+        let n_rounds = rounds.n_rounds();
+
+        let per_rank: Vec<(Matrix, u64, u64, BuildStats)> =
+            parallel_region(self.n_ranks, |rank| {
+                let nt = self.n_threads;
+                let rij_cur = AtomicUsize::new(usize::MAX);
+                let from_cur = AtomicUsize::new(0);
+                let limit_cur = AtomicUsize::new(0);
+                let chunk = AtomicUsize::new(0);
+                let stolen = AtomicU64::new(0);
+                let barrier = Barrier::new(nt);
+
+                // !$omp parallel private(...) reduction(+:Fock) — the
+                // BlockJk unit (and any PJRT client it holds) stays
+                // thread-local, so only the counters leave the region.
+                let thread_g: Vec<(Matrix, u64, BuildStats)> = parallel_region(nt, |tid| {
+                    let mut g = Matrix::zeros(n, n); // thread-private Fock
+                    let mut eng = EriEngine::new();
+                    let mut computed = 0u64;
+                    let mut batcher = SplitBatcher::new(ctx, &populous);
+                    let mut sink = |a: usize, b: usize, v: f64| g.add(a, b, v);
+                    for round in 0..n_rounds {
+                        let view = rounds.view(rank, round);
+                        loop {
+                            // !$omp master: fetch the next bra task;
+                            // barriers on both sides (see private_fock
+                            // for the claim-discipline commentary).
+                            if tid == 0 {
+                                match dlb.claim_nonempty(ctx, rank, round) {
+                                    Some((rij, from, len)) => {
+                                        if from != rank {
+                                            stolen.fetch_add(1, Ordering::Relaxed);
+                                        }
+                                        rij_cur.store(rij, Ordering::SeqCst);
+                                        from_cur.store(from, Ordering::SeqCst);
+                                        limit_cur.store(len, Ordering::SeqCst);
+                                    }
+                                    None => rij_cur.store(usize::MAX, Ordering::SeqCst),
+                                }
+                                chunk.store(0, Ordering::SeqCst);
+                            }
+                            barrier.wait();
+                            let rij = rij_cur.load(Ordering::SeqCst);
+                            if rij == usize::MAX {
+                                break;
+                            }
+                            let limit = limit_cur.load(Ordering::SeqCst);
+                            let (lo, hi) =
+                                ctx.ket_clip(from_cur.load(Ordering::SeqCst), round);
+                            let kw = walk.kets(rij).clipped(lo, hi);
+                            debug_assert_eq!(kw.len(), limit);
+                            // !$omp do schedule(dynamic,1) over the
+                            // surviving ket segments; claimed quartets
+                            // split between the offload and host batch
+                            // sets (full buckets flush mid-task).
+                            loop {
+                                let t = chunk.fetch_add(1, Ordering::Relaxed);
+                                if t >= limit {
+                                    break;
+                                }
+                                let Some(rkl) = kw.ket(t) else { continue };
+                                computed += 1;
+                                batcher.push(ctx, &mut eng, view.as_ref(), rij, rkl, &mut sink);
+                            }
+                            // Task boundary: the CPU drains both sets'
+                            // residues before the implicit barrier at
+                            // !$omp end do — batches never span tasks.
+                            batcher.flush_task(ctx, &mut eng, view.as_ref(), &mut sink);
+                            barrier.wait();
+                        }
+                        if rounds.handoff().is_some() || n_rounds > 1 {
+                            if tid == 0 {
+                                rounds.end_round(round);
+                            }
+                            barrier.wait();
+                        }
+                    }
+                    debug_assert_eq!(batcher.n_buffered(), 0, "tail must drain at task end");
+                    let mut bstats = BuildStats::default();
+                    batcher.merge_into(&mut bstats);
+                    (g, computed, bstats)
+                });
+
+                // reduction(+:Fock) over threads.
+                let mut g = Matrix::zeros(n, n);
+                let mut computed = 0;
+                let mut bstats = BuildStats::default();
+                for (tg, c, bs) in thread_g {
+                    g.add_assign(&tg);
+                    computed += c;
+                    bstats.absorb_batches(&bs);
+                }
+                (g, computed, stolen.load(Ordering::Relaxed), bstats)
+            });
+
+        // ddi_gsumf over ranks.
+        let mut total = Matrix::zeros(n, n);
+        let mut computed = 0;
+        let mut stolen = 0;
+        let mut bstats = BuildStats::default();
+        for (g, c, st, bs) in per_rank {
+            total.add_assign(&g);
+            computed += c;
+            stolen += st;
+            bstats.absorb_batches(&bs);
+        }
+        fold_symmetric(&mut total);
+        self.stats = BuildStats::from_walk(computed, ctx, t0.elapsed().as_secs_f64());
+        self.stats.absorb_batches(&bstats);
+        self.stats.shard = dlb.shard_stats(stolen);
+        total
+    }
+
+    fn name(&self) -> &'static str {
+        "hetero-fock"
+    }
+
+    fn last_stats(&self) -> BuildStats {
+        self.stats.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::basis::{BasisName, BasisSet};
+    use crate::chem::molecules;
+    use crate::hf::serial::SerialFock;
+    use crate::integrals::{SchwarzScreen, ShellPairStore, SortedPairList};
+    use crate::util::prng::Rng;
+
+    fn random_density(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut d = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let x = rng.range(-0.4, 0.4);
+                d.set(i, j, x);
+                d.set(j, i, x);
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn matches_serial_reference_across_thresholds() {
+        let mol = molecules::water();
+        let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+        let store = ShellPairStore::build(&basis);
+        let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+        let pairs = SortedPairList::build(&screen, &store);
+        let d = random_density(basis.n_bf, 53);
+        let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d).with_batch_size(8);
+        let want = SerialFock::new().build_2e(&ctx);
+        // Threshold 1: every class populous (the offload side carries
+        // all pairwise-distinct quartets); u64::MAX: pure host; default:
+        // in between. All must agree with the serial oracle.
+        for threshold in [1, DEFAULT_POPULOUS_THRESHOLD, u64::MAX] {
+            for (ranks, threads) in [(1, 1), (2, 2)] {
+                let mut eng =
+                    HeteroFock::new(ranks, threads).with_populous_threshold(threshold);
+                let got = eng.build_2e(&ctx);
+                assert!(
+                    got.max_abs_diff(&want) < 1e-11,
+                    "threshold={threshold} r={ranks} t={threads}: diff {}",
+                    got.max_abs_diff(&want)
+                );
+                // Flush accounting partitions the visited set exactly.
+                assert_eq!(
+                    eng.stats.batches_flushed * ctx.batch_size as u64
+                        + eng.stats.tail_quartets,
+                    eng.stats.quartets_computed
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn max_threshold_degrades_to_pure_host() {
+        let mol = molecules::water();
+        let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+        let store = ShellPairStore::build(&basis);
+        let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+        let pairs = SortedPairList::build(&screen, &store);
+        let d = random_density(basis.n_bf, 59);
+        let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
+        let mut eng = HeteroFock::new(1, 2).with_populous_threshold(u64::MAX);
+        assert!(eng.populous_classes(&ctx).iter().all(|&p| !p));
+        let _ = eng.build_2e(&ctx);
+        // No populous class → nothing ever reaches the offload unit.
+        assert_eq!(eng.stats.accel_batches, 0);
+        assert_eq!(
+            eng.stats.batches_flushed * ctx.batch_size as u64 + eng.stats.tail_quartets,
+            eng.stats.quartets_computed
+        );
+    }
+
+    #[test]
+    fn populous_split_routes_full_buckets() {
+        // Benzene has enough same-class quartets to fill offload
+        // buckets at a small batch size.
+        let mol = molecules::benzene();
+        let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+        let store = ShellPairStore::build(&basis);
+        let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+        let pairs = SortedPairList::build(&screen, &store);
+        let d = random_density(basis.n_bf, 61);
+        let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d).with_batch_size(8);
+        let want = SerialFock::new().build_2e(&ctx);
+        let mut eng = HeteroFock::new(1, 2).with_populous_threshold(1);
+        let got = eng.build_2e(&ctx);
+        assert!(got.max_abs_diff(&want) < 1e-11, "diff {}", got.max_abs_diff(&want));
+        assert!(
+            eng.stats.batches_flushed > 0,
+            "threshold 1 with batch 8 must fill offload buckets"
+        );
+        // No artifact installed in the test tree → host fallback only.
+        assert_eq!(eng.stats.accel_batches, 0);
+        // The class histogram covers every computed quartet.
+        assert_eq!(
+            eng.stats.class_quartets.iter().sum::<u64>(),
+            eng.stats.quartets_computed
+        );
+    }
+}

@@ -240,6 +240,49 @@ pub fn exact_bytes_with_overlapped_ring_store(
         + ring_overlap_scf_bytes_per_node(shard_bytes, pairlist_bytes, ranks_per_node)
 }
 
+/// Class-batch drain buffer bytes **per worker thread**.
+///
+/// Since the class-batched refactor every engine thread owns one
+/// fill-and-flush [`QuartetBatch`](crate::integrals::QuartetBatch):
+/// `n_pair_classes²` buckets of `batch_size` site quadruples each
+/// (24 B/site), allocated up front so the hot loop never grows a
+/// vector. The heterogeneous engine owns **two** sets per thread
+/// (offload + host split — pass `sets_per_thread = 2`) plus its staged
+/// ERI slab, accounted separately in
+/// [`hetero_stage_bytes_per_thread`].
+pub fn batch_buffer_bytes_per_thread(
+    n_pair_classes: usize,
+    batch_size: usize,
+    sets_per_thread: usize,
+) -> f64 {
+    crate::integrals::QuartetBatch::estimate_bytes(n_pair_classes * n_pair_classes, batch_size)
+        as f64
+        * sets_per_thread as f64
+}
+
+/// Class-batch buffer bytes per node: one set (or two for hetero) per
+/// thread of every resident rank. The term is O(classes²·batch) per
+/// thread — independent of N_BF — so it never perturbs the Table 2
+/// matrix-dominated story; the test below pins that.
+pub fn batch_buffer_bytes_per_node(
+    n_pair_classes: usize,
+    batch_size: usize,
+    sets_per_thread: usize,
+    ranks_per_node: usize,
+    threads_per_rank: usize,
+) -> f64 {
+    batch_buffer_bytes_per_thread(n_pair_classes, batch_size, sets_per_thread)
+        * (ranks_per_node * threads_per_rank) as f64
+}
+
+/// The heterogeneous engine's per-thread staged ERI slab: `batch_size`
+/// blocks zero-padded to `max_shell_bf⁴` words, held by the thread's
+/// [`BlockJk`](crate::runtime::BlockJk) unit for the blocked J/K
+/// contraction.
+pub fn hetero_stage_bytes_per_thread(batch_size: usize, max_shell_bf: usize) -> f64 {
+    batch_size as f64 * (max_shell_bf as f64).powi(4) * W
+}
+
 /// KNL MCDRAM capacity (bytes, decimal as marketed) — the single-node
 /// feasibility gate behind Figure 4's "MPI-only restricted to 128
 /// hardware threads" (eq. 3a at 256 ranks on the 1.0 nm system is
@@ -532,6 +575,34 @@ mod tests {
         let three32 =
             ring_overlap_scf_bytes_per_node(ovl32.max_shard_bytes as f64, pl, ranks_per_node);
         assert!(three < 0.85 * three32, "overlapped ring must scale with shards");
+    }
+
+    #[test]
+    fn batch_buffers_never_perturb_table2() {
+        // The drain buffers are per-thread and N_BF-independent: at the
+        // paper's shared-Fock point (4 ranks × 64 threads, 3 pair
+        // classes → 9 quartet classes, batch 32; hetero doubles the
+        // sets and adds the staged slab) the whole term must stay under
+        // one thousandth of the matrix working set on the 1.0 nm system.
+        let n = PaperSystem::Nm10.n_bf();
+        let matrices = exact_bytes(EngineKind::SharedFock, n, 15, 4, 64);
+        let buffers = batch_buffer_bytes_per_node(3, 32, 2, 4, 64)
+            + hetero_stage_bytes_per_thread(32, 15) * (4 * 64) as f64;
+        assert!(buffers > 0.0);
+        assert!(
+            buffers < 1e-3 * matrices,
+            "batch buffers {buffers} vs matrices {matrices}"
+        );
+        // Linear in threads and sets; the per-thread figure matches the
+        // QuartetBatch estimate exactly.
+        assert_eq!(
+            batch_buffer_bytes_per_node(3, 32, 1, 1, 8),
+            8.0 * batch_buffer_bytes_per_thread(3, 32, 1)
+        );
+        assert_eq!(
+            batch_buffer_bytes_per_thread(3, 32, 2),
+            2.0 * batch_buffer_bytes_per_thread(3, 32, 1)
+        );
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! The paper's contribution: parallel two-electron Fock-matrix
 //! construction.
 //!
-//! Three engines, mirroring the paper §4:
+//! Five engines, mirroring the paper §4 plus a heterogeneous split:
 //! * [`serial`] — single-threaded reference (correctness oracle);
 //! * [`mpi_only`] — Algorithm 1: virtual MPI ranks, everything
 //!   replicated, dynamic load balancing over surviving (i,j) pair
@@ -12,7 +12,19 @@
 //! * [`shared_fock`] — Algorithm 3: one shared Fock per rank; threads
 //!   own disjoint `kl` pairs, accumulate `i`/`j` shell-column
 //!   contributions in private column buffers (padded against false
-//!   sharing) and flush them with a chunked tree reduction.
+//!   sharing) and flush them with a chunked tree reduction;
+//! * [`hetero_fock`] — the class-batched heterogeneous split: populous
+//!   angular-momentum quartet classes flow as fixed-size batches into
+//!   the blocked J/K path ([`crate::runtime::fock_xla`], artifact-gated
+//!   with a host fallback) while the CPU threads drain rare classes
+//!   and the ragged tail.
+//!
+//! Since the class-batched refactor all engines consume quartets
+//! through the shared [`classbatch`] fill-and-flush drain (per-class
+//! [`QuartetBatch`](crate::integrals::QuartetBatch) buckets →
+//! [`EriEngine::shell_quartet_batch`](crate::integrals::EriEngine::shell_quartet_batch)),
+//! and the ring round sequencing (reown view / handoff / barrier) lives
+//! once in [`rounds`].
 //!
 //! Every engine consumes a [`FockContext`]: the immutable, SCF-lifetime
 //! [`ShellPairStore`] and Q-sorted [`SortedPairList`] (shared across
@@ -39,11 +51,14 @@
 //! with the pair store and list, replicated, bra-sharded, or
 //! ring-sharded.
 
+pub mod classbatch;
 pub mod dlb;
+pub mod hetero_fock;
 pub mod memmodel;
 pub mod mpi_only;
 pub mod private_fock;
 pub mod quartets;
+pub mod rounds;
 pub mod scatter;
 pub mod serial;
 pub mod shared_fock;
@@ -100,7 +115,16 @@ pub struct FockContext<'a> {
     /// fault-free visited set, and therefore the fault-free Fock
     /// matrix, exactly.
     pub fail: Option<RingFailure>,
+    /// Per-class bucket capacity of the engines' fill-and-flush quartet
+    /// batches ([`classbatch::ClassBatcher`]). Full buckets flush
+    /// mid-task; residue drains at task end, so batches never span
+    /// tasks and the per-task scatter sequence stays deterministic.
+    pub batch_size: usize,
 }
+
+/// Default per-class batch capacity (`FockContext::batch_size`,
+/// `RhfDriver::batch_size`, `khf scf --batch-size`).
+pub const DEFAULT_BATCH_SIZE: usize = 32;
 
 impl<'a> FockContext<'a> {
     pub fn new(
@@ -126,7 +150,25 @@ impl<'a> FockContext<'a> {
         );
         let dmax = PairDensityMax::build(basis, d);
         let walk = pairs.weighted(&dmax);
-        FockContext { basis, store, screen, pairs, d, dmax, walk, sharding: None, fail: None }
+        FockContext {
+            basis,
+            store,
+            screen,
+            pairs,
+            d,
+            dmax,
+            walk,
+            sharding: None,
+            fail: None,
+            batch_size: DEFAULT_BATCH_SIZE,
+        }
+    }
+
+    /// Override the per-class batch capacity (`--batch-size`).
+    pub fn with_batch_size(mut self, batch_size: usize) -> FockContext<'a> {
+        assert!(batch_size > 0, "batch size must be nonzero");
+        self.batch_size = batch_size;
+        self
     }
 
     /// Like [`FockContext::new`] with a sharded store: the parallel
@@ -220,7 +262,9 @@ pub trait FockBuilder {
 }
 
 /// Per-build shard summary (present when the build ran against a
-/// sharded store). Fixed-width so [`BuildStats`] stays `Copy`.
+/// sharded store). Fixed-width and `Copy` (unlike the owning
+/// [`BuildStats`], which carries per-class counters since the batched
+/// refactor).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ShardBuildStats {
     pub n_shards: usize,
@@ -281,7 +325,7 @@ impl ShardBuildStats {
 /// bound never reached. The identity holds for sharded builds too:
 /// the per-shard task lists partition the walk, so the shared ket
 /// prefix is never double-counted.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct BuildStats {
     /// Shell quartets visited (and computed) by the walk.
     pub quartets_computed: u64,
@@ -306,6 +350,28 @@ pub struct BuildStats {
     pub seconds: f64,
     /// Shard summary when the build ran against a sharded store.
     pub shard: Option<ShardBuildStats>,
+    /// Full-capacity class batches flushed through the batched drain
+    /// (host and blocked-J/K alike). Together with the tail counter
+    /// these partition the visited set *exactly*:
+    ///
+    /// ```text
+    /// batches_flushed · batch_size + tail_quartets == quartets_computed
+    /// ```
+    pub batches_flushed: u64,
+    /// Quartets drained as task-end residue (partial buckets) — the
+    /// ragged tail the CPU threads always own.
+    pub tail_quartets: u64,
+    /// Batches the heterogeneous engine executed through the PJRT
+    /// blocked-J/K artifact (0 for the host engines, and 0 whenever no
+    /// artifact is present — the host fallback keeps these in
+    /// `batches_flushed` only).
+    pub accel_batches: u64,
+    /// Quartets computed per dense quartet class
+    /// (`pair_class(bra) · n_pair_classes + pair_class(ket)`), the
+    /// class-population histogram behind the hetero split policy and
+    /// `BENCH_classes.json`. Empty when the engine predates batching
+    /// (e.g. the dense XLA builder).
+    pub class_quartets: Vec<u64>,
 }
 
 impl BuildStats {
@@ -325,6 +391,26 @@ impl BuildStats {
             walk_candidates: ctx.walk.n_candidates(),
             seconds,
             shard: None,
+            batches_flushed: 0,
+            tail_quartets: 0,
+            accel_batches: 0,
+            class_quartets: Vec::new(),
+        }
+    }
+
+    /// Fold another partial's batch counters into this one — how the
+    /// engines reduce per-thread / per-rank flush accounting (the class
+    /// histogram merges element-wise).
+    pub fn absorb_batches(&mut self, other: &BuildStats) {
+        self.batches_flushed += other.batches_flushed;
+        self.tail_quartets += other.tail_quartets;
+        self.accel_batches += other.accel_batches;
+        if self.class_quartets.is_empty() {
+            self.class_quartets = vec![0; other.class_quartets.len()];
+        }
+        debug_assert_eq!(self.class_quartets.len(), other.class_quartets.len());
+        for (a, b) in self.class_quartets.iter_mut().zip(&other.class_quartets) {
+            *a += b;
         }
     }
 }

@@ -4,8 +4,9 @@
 //! sandbox) each own a *replicated* Fock accumulator and claim bra
 //! tasks — surviving-pair ranks of the Q-sorted list — from the shared
 //! DLB counter (`ddi_dlbnext`), walking each task's early-exit ket
-//! prefix. The final Fock matrix is the `ddi_gsumf` reduction over rank
-//! replicas.
+//! prefix. Claimed quartets drain through the shared class-batched
+//! path ([`super::classbatch::ClassBatcher`]); the final Fock matrix is
+//! the `ddi_gsumf` reduction over rank replicas.
 //!
 //! Density replication: the real code replicates D per rank; execution
 //! here shares the read-only D (reads are bit-identical), while the
@@ -15,13 +16,13 @@
 //! model, which is exactly the replication the hybrid engines
 //! eliminate.
 
-use std::sync::Barrier;
-
 use crate::integrals::EriEngine;
 use crate::linalg::Matrix;
 
+use super::classbatch::ClassBatcher;
 use super::dlb::WalkDlb;
-use super::scatter::{fold_symmetric, scatter_block};
+use super::rounds::RoundLoop;
+use super::scatter::fold_symmetric;
 use super::threadpool::parallel_region;
 use super::{BuildStats, FockBuilder, FockContext};
 
@@ -43,7 +44,7 @@ impl FockBuilder for MpiOnlyFock {
         let t0 = std::time::Instant::now();
         let basis = ctx.basis;
         let n = basis.n_bf;
-        let (walk, pairs) = (&ctx.walk, ctx.pairs);
+        let walk = &ctx.walk;
         let sharding = ctx.sharding;
         if let Some(sh) = sharding {
             assert_eq!(
@@ -61,109 +62,76 @@ impl FockBuilder for MpiOnlyFock {
         // hand its cells to the live ranks (successor first), so the
         // visited set — and the reduced Fock — is conserved.
         let dlb = WalkDlb::with_failure(walk, sharding, ctx.fail);
-        let fail = dlb.failure();
-        let n_rounds = dlb.n_rounds();
-        // Round boundary of the simulated systolic pass: every rank
-        // must finish round t before the ket blocks shift.
-        let ring_barrier = Barrier::new(self.n_ranks);
-        // Overlapped ring: the boundary is a producer/consumer swap
-        // instead — each rank publishes its drained round (outgoing
-        // block staged, next block already prefetched) and consumes the
-        // peers' publishes; no rank idles in a monolithic barrier.
-        let handoff = sharding
-            .filter(|sh| sh.is_overlapped())
-            .and_then(|_| dlb.handoff(self.n_ranks));
+        // Round sequencing (reown views, barrier / overlapped handoff)
+        // lives in the shared RoundLoop.
+        let rounds = RoundLoop::new(ctx, &dlb, self.n_ranks);
+        let n_rounds = rounds.n_rounds();
 
         // Each virtual rank: replicated G, DLB over surviving bra
-        // ranks, early-exit (round-clipped) ket walk per task.
-        let per_rank: Vec<(Matrix, u64, u64)> = parallel_region(self.n_ranks, |rank| {
-            let mut g = Matrix::zeros(n, n);
-            let mut eng = EriEngine::new();
-            let mut block = vec![0.0; 6 * 6 * 6 * 6];
-            let mut computed = 0u64;
-            let mut stolen = 0u64;
-            for round in 0..n_rounds {
-                // Resident store surface this round (prefix mode: the
-                // rank's shard; ring mode: own block + visiting block;
-                // the dead rank's successor additionally re-owns the
-                // dead bra block and its round visitor, so replayed
-                // cells stay fetch-free).
-                let view = sharding.map(|sh| match fail {
-                    Some(f) if round >= f.round && rank == f.successor(sh.n_shards()) => {
-                        sh.round_view_reown(rank, round, f.rank)
-                    }
-                    _ => sh.round_view(rank, round),
-                });
-                while let Some((rij, from, _)) = dlb.claim_nonempty(ctx, rank, round) {
-                    // Two-key ket walk clipped to this round's block
-                    // (the full list in single-round modes): segment A
-                    // then the segment-B candidates; rejected
-                    // candidates skip on an integer compare (no bound
-                    // is evaluated per quartet). claim_nonempty already
-                    // dropped zero-work ring units — before the steal
-                    // accounting, so tasks_stolen counts executed work
-                    // identically in every engine.
-                    let (klo, khi) = ctx.ket_clip(from, round);
-                    let kw = walk.kets(rij).clipped(klo, khi);
-                    if from != rank {
-                        stolen += 1;
-                    }
-                    let bra = pairs.entry(rij);
-                    let (i, j) = (bra.i as usize, bra.j as usize);
-                    // Sharded: fetch through the round view. The bra is
-                    // fetched once per task (a stolen task pays one
-                    // remote get, not one per ket); non-resident kets
-                    // count per lookup below.
-                    let bra_view = view.map(|v| v.view_by_slot(bra.slot, i < j));
-                    for rkl in kw.iter() {
-                        let ket = pairs.entry(rkl);
-                        let (k, l) = (ket.i as usize, ket.j as usize);
-                        computed += 1;
-                        match (view, bra_view) {
-                            (Some(v), Some(bv)) => eng.shell_quartet_with_views(
-                                basis,
-                                i,
-                                j,
-                                k,
-                                l,
-                                bv,
-                                v.view_by_slot(ket.slot, k < l),
-                                &mut block,
-                            ),
-                            _ => eng.shell_quartet_slots(
-                                basis, ctx.store, i, j, k, l, bra.slot, ket.slot,
-                                &mut block,
-                            ),
+        // ranks, early-exit (round-clipped) ket walk per task, claimed
+        // quartets buffered into per-class batches and flushed through
+        // the batched evaluator (full buckets mid-task, residue at task
+        // end — batches never span tasks).
+        let per_rank: Vec<(Matrix, u64, u64, ClassBatcher)> =
+            parallel_region(self.n_ranks, |rank| {
+                let mut g = Matrix::zeros(n, n);
+                let mut eng = EriEngine::new();
+                let mut computed = 0u64;
+                let mut stolen = 0u64;
+                let mut batcher = ClassBatcher::new(ctx);
+                let mut sink = |a: usize, b: usize, v: f64| g.add(a, b, v);
+                for round in 0..n_rounds {
+                    // Resident store surface this round (prefix mode:
+                    // the rank's shard; ring mode: own block + visiting
+                    // block; the dead rank's successor additionally
+                    // re-owns the dead bra block and its round visitor,
+                    // so replayed cells stay fetch-free).
+                    let view = rounds.view(rank, round);
+                    while let Some((rij, from, _)) = dlb.claim_nonempty(ctx, rank, round)
+                    {
+                        // Two-key ket walk clipped to this round's block
+                        // (the full list in single-round modes): segment
+                        // A then the segment-B candidates; rejected
+                        // candidates skip on an integer compare (no
+                        // bound is evaluated per quartet).
+                        // claim_nonempty already dropped zero-work ring
+                        // units — before the steal accounting, so
+                        // tasks_stolen counts executed work identically
+                        // in every engine.
+                        let (klo, khi) = ctx.ket_clip(from, round);
+                        let kw = walk.kets(rij).clipped(klo, khi);
+                        if from != rank {
+                            stolen += 1;
                         }
-                        scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| {
-                            g.add(a, b, v)
-                        });
+                        for rkl in kw.iter() {
+                            computed += 1;
+                            batcher.push(ctx, &mut eng, view.as_ref(), rij, rkl, &mut sink);
+                        }
+                        batcher.flush_task(ctx, &mut eng, view.as_ref(), &mut sink);
                     }
+                    rounds.end_round(round);
                 }
-                if let Some(h) = &handoff {
-                    // Double-buffer flip: announce this rank's staged
-                    // block, then consume the peers' — the prefetched
-                    // block becomes round t+1's visitor.
-                    h.publish(round);
-                    h.swap(round);
-                } else if n_rounds > 1 {
-                    ring_barrier.wait();
-                }
-            }
-            (g, computed, stolen)
-        });
+                (g, computed, stolen, batcher)
+            });
 
         // ddi_gsumf: sum the rank replicas.
         let mut total = Matrix::zeros(n, n);
         let mut computed = 0;
         let mut stolen = 0;
-        for (g, c, st) in per_rank {
+        self.stats = BuildStats::default();
+        for (g, c, st, batcher) in per_rank {
             total.add_assign(&g);
             computed += c;
             stolen += st;
+            debug_assert_eq!(batcher.n_buffered(), 0, "tail must drain at task end");
+            batcher.merge_into(&mut self.stats);
         }
         fold_symmetric(&mut total);
+        let flushed = std::mem::take(&mut self.stats);
         self.stats = BuildStats::from_walk(computed, ctx, t0.elapsed().as_secs_f64());
+        self.stats.batches_flushed = flushed.batches_flushed;
+        self.stats.tail_quartets = flushed.tail_quartets;
+        self.stats.class_quartets = flushed.class_quartets;
         self.stats.shard = dlb.shard_stats(stolen);
         total
     }
@@ -173,7 +141,7 @@ impl FockBuilder for MpiOnlyFock {
     }
 
     fn last_stats(&self) -> BuildStats {
-        self.stats
+        self.stats.clone()
     }
 }
 
@@ -234,5 +202,14 @@ mod tests {
         assert_eq!(e1.stats.skipped_by_early_exit, e3.stats.skipped_by_early_exit);
         // The DLB hands out exactly the walk's task count.
         assert_eq!(e1.stats.quartets_computed, ctx.walk.n_visited());
+        // Batch accounting partitions the visited set regardless of
+        // how tasks landed on ranks.
+        for e in [&e1, &e3] {
+            assert_eq!(
+                e.stats.batches_flushed * crate::hf::DEFAULT_BATCH_SIZE as u64
+                    + e.stats.tail_quartets,
+                e.stats.quartets_computed
+            );
+        }
     }
 }

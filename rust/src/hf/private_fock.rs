@@ -13,9 +13,10 @@
 //!   space and tested each quartet, whereas the walk's segments *are*
 //!   the surviving set (modulo integer-compare-rejected segment-B
 //!   candidates) — same dynamic balance, no bound evaluations;
-//! * every thread accumulates into its own Fock replica —
-//!   `reduction(+:Fock)` — reduced thread-wise, then rank-wise
-//!   (`ddi_gsumf`).
+//! * every thread buffers its claimed quartets into a private
+//!   class-batch drain ([`super::classbatch::ClassBatcher`]) and
+//!   accumulates into its own Fock replica — `reduction(+:Fock)` —
+//!   reduced thread-wise, then rank-wise (`ddi_gsumf`).
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Barrier;
@@ -23,8 +24,10 @@ use std::sync::Barrier;
 use crate::integrals::EriEngine;
 use crate::linalg::Matrix;
 
+use super::classbatch::ClassBatcher;
 use super::dlb::WalkDlb;
-use super::scatter::{fold_symmetric, scatter_block};
+use super::rounds::RoundLoop;
+use super::scatter::fold_symmetric;
 use super::threadpool::parallel_region;
 use super::{BuildStats, FockBuilder, FockContext};
 
@@ -48,7 +51,7 @@ impl FockBuilder for PrivateFock {
         let t0 = std::time::Instant::now();
         let basis = ctx.basis;
         let n = basis.n_bf;
-        let (walk, pairs) = (&ctx.walk, ctx.pairs);
+        let walk = &ctx.walk;
         let sharding = ctx.sharding;
         if let Some(sh) = sharding {
             assert_eq!(
@@ -67,169 +70,144 @@ impl FockBuilder for PrivateFock {
         // systolic pass stays synchronized while the live ranks replay
         // the dead shard's cells.
         let dlb = WalkDlb::with_failure(walk, sharding, ctx.fail);
-        let fail = dlb.failure();
-        let n_rounds = dlb.n_rounds();
-        // Round boundary of the simulated systolic pass (one waiter per
-        // rank: the master thread).
-        let ring_barrier = Barrier::new(self.n_ranks);
-        // Overlapped ring: the masters run a producer/consumer swap
-        // instead — publish the drained round (outgoing block staged,
-        // next block prefetched), then consume the peers' publishes.
-        let handoff = sharding
-            .filter(|sh| sh.is_overlapped())
-            .and_then(|_| dlb.handoff(self.n_ranks));
+        // Round sequencing (reown views, rank-master barrier /
+        // overlapped handoff) lives in the shared RoundLoop.
+        let rounds = RoundLoop::new(ctx, &dlb, self.n_ranks);
+        let n_rounds = rounds.n_rounds();
 
-        let per_rank: Vec<(Matrix, u64, u64)> = parallel_region(self.n_ranks, |rank| {
-            let nt = self.n_threads;
-            let rij_cur = AtomicUsize::new(usize::MAX);
-            let from_cur = AtomicUsize::new(0);
-            let limit_cur = AtomicUsize::new(0);
-            let chunk = AtomicUsize::new(0);
-            let stolen = AtomicU64::new(0);
-            let barrier = Barrier::new(nt);
+        let per_rank: Vec<(Matrix, u64, u64, BuildStats)> =
+            parallel_region(self.n_ranks, |rank| {
+                let nt = self.n_threads;
+                let rij_cur = AtomicUsize::new(usize::MAX);
+                let from_cur = AtomicUsize::new(0);
+                let limit_cur = AtomicUsize::new(0);
+                let chunk = AtomicUsize::new(0);
+                let stolen = AtomicU64::new(0);
+                let barrier = Barrier::new(nt);
 
-            // !$omp parallel private(...) reduction(+:Fock)
-            let thread_g: Vec<(Matrix, u64)> = parallel_region(nt, |tid| {
-                let mut g = Matrix::zeros(n, n); // thread-private Fock
-                let mut eng = EriEngine::new();
-                let mut block = vec![0.0; 6 * 6 * 6 * 6];
-                let mut computed = 0u64;
-                for round in 0..n_rounds {
-                    // The dead rank's successor re-owns the dead bra
-                    // block and its round visitor, keeping replayed
-                    // cells fetch-free.
-                    let view = sharding.map(|sh| match fail {
-                        Some(f)
-                            if round >= f.round
-                                && rank == f.successor(sh.n_shards()) =>
-                        {
-                            sh.round_view_reown(rank, round, f.rank)
-                        }
-                        _ => sh.round_view(rank, round),
-                    });
-                    loop {
-                        // !$omp master: fetch the next bra task; barriers
-                        // on both sides. Single-round tasks always have
-                        // work by construction of the walk; zero-work
-                        // ring units (no surviving ket in this round's
-                        // block) are dropped inside claim_nonempty —
-                        // they cost neither a steal count nor a
-                        // broadcast + barrier round.
-                        if tid == 0 {
-                            match dlb.claim_nonempty(ctx, rank, round) {
-                                Some((rij, from, len)) => {
-                                    if from != rank {
-                                        stolen.fetch_add(1, Ordering::Relaxed);
+                // !$omp parallel private(...) reduction(+:Fock)
+                let thread_g: Vec<(Matrix, u64, ClassBatcher)> =
+                    parallel_region(nt, |tid| {
+                        let mut g = Matrix::zeros(n, n); // thread-private Fock
+                        let mut eng = EriEngine::new();
+                        let mut computed = 0u64;
+                        let mut batcher = ClassBatcher::new(ctx);
+                        let mut sink = |a: usize, b: usize, v: f64| g.add(a, b, v);
+                        for round in 0..n_rounds {
+                            // The dead rank's successor re-owns the dead
+                            // bra block and its round visitor, keeping
+                            // replayed cells fetch-free.
+                            let view = rounds.view(rank, round);
+                            loop {
+                                // !$omp master: fetch the next bra task;
+                                // barriers on both sides. Single-round
+                                // tasks always have work by construction
+                                // of the walk; zero-work ring units (no
+                                // surviving ket in this round's block)
+                                // are dropped inside claim_nonempty —
+                                // they cost neither a steal count nor a
+                                // broadcast + barrier round.
+                                if tid == 0 {
+                                    match dlb.claim_nonempty(ctx, rank, round) {
+                                        Some((rij, from, len)) => {
+                                            if from != rank {
+                                                stolen.fetch_add(1, Ordering::Relaxed);
+                                            }
+                                            rij_cur.store(rij, Ordering::SeqCst);
+                                            from_cur.store(from, Ordering::SeqCst);
+                                            limit_cur.store(len, Ordering::SeqCst);
+                                        }
+                                        None => rij_cur.store(usize::MAX, Ordering::SeqCst),
                                     }
-                                    rij_cur.store(rij, Ordering::SeqCst);
-                                    from_cur.store(from, Ordering::SeqCst);
-                                    limit_cur.store(len, Ordering::SeqCst);
+                                    chunk.store(0, Ordering::SeqCst);
                                 }
-                                None => rij_cur.store(usize::MAX, Ordering::SeqCst),
+                                barrier.wait();
+                                let rij = rij_cur.load(Ordering::SeqCst);
+                                if rij == usize::MAX {
+                                    break;
+                                }
+                                let limit = limit_cur.load(Ordering::SeqCst);
+                                // Each thread derives the task's
+                                // (round-clipped) two-key ket walk
+                                // locally (two binary searches); `limit`
+                                // is its iteration-ordinal count, shared
+                                // so every thread agrees on the bound.
+                                let (lo, hi) =
+                                    ctx.ket_clip(from_cur.load(Ordering::SeqCst), round);
+                                let kw = walk.kets(rij).clipped(lo, hi);
+                                debug_assert_eq!(kw.len(), limit);
+                                // !$omp do schedule(dynamic,1) over the
+                                // surviving ket segments — the early
+                                // exit is the loop bound; rejected
+                                // segment-B candidates skip on an
+                                // integer compare. Claimed quartets
+                                // buffer into the thread's class batches
+                                // (full buckets flush mid-task).
+                                loop {
+                                    let t = chunk.fetch_add(1, Ordering::Relaxed);
+                                    if t >= limit {
+                                        break;
+                                    }
+                                    let Some(rkl) = kw.ket(t) else { continue };
+                                    computed += 1;
+                                    batcher.push(
+                                        ctx,
+                                        &mut eng,
+                                        view.as_ref(),
+                                        rij,
+                                        rkl,
+                                        &mut sink,
+                                    );
+                                }
+                                // Task boundary: drain this thread's
+                                // residue before the implicit barrier at
+                                // !$omp end do — batches never span
+                                // tasks.
+                                batcher.flush_task(ctx, &mut eng, view.as_ref(), &mut sink);
+                                barrier.wait();
                             }
-                            chunk.store(0, Ordering::SeqCst);
-                        }
-                        barrier.wait();
-                        let rij = rij_cur.load(Ordering::SeqCst);
-                        if rij == usize::MAX {
-                            break;
-                        }
-                        let bra = pairs.entry(rij);
-                        let (i, j) = (bra.i as usize, bra.j as usize);
-                        let limit = limit_cur.load(Ordering::SeqCst);
-                        // Each thread derives the task's (round-clipped)
-                        // two-key ket walk locally (two binary
-                        // searches); `limit` is its iteration-ordinal
-                        // count, shared so every thread agrees on the
-                        // loop bound.
-                        let (lo, hi) = ctx.ket_clip(from_cur.load(Ordering::SeqCst), round);
-                        let kw = walk.kets(rij).clipped(lo, hi);
-                        debug_assert_eq!(kw.len(), limit);
-                        // Sharded: one bra fetch per thread per task (a
-                        // stolen task pays per-thread remote gets, not
-                        // one per ket); non-resident kets count per
-                        // lookup below.
-                        let bra_view = view.map(|v| v.view_by_slot(bra.slot, i < j));
-                        // !$omp do schedule(dynamic,1) over the
-                        // surviving ket segments — the early exit is the
-                        // loop bound; rejected segment-B candidates skip
-                        // on an integer compare.
-                        loop {
-                            let t = chunk.fetch_add(1, Ordering::Relaxed);
-                            if t >= limit {
-                                break;
+                            if rounds.handoff().is_some() || n_rounds > 1 {
+                                // Round boundary: the master runs the
+                                // double-buffer publish/swap (overlap)
+                                // or joins the cross-rank barrier;
+                                // teammates hold at the thread barrier
+                                // until the blocks have shifted.
+                                if tid == 0 {
+                                    rounds.end_round(round);
+                                }
+                                barrier.wait();
                             }
-                            let Some(rkl) = kw.ket(t) else { continue };
-                            let ket = pairs.entry(rkl);
-                            let (k, l) = (ket.i as usize, ket.j as usize);
-                            computed += 1;
-                            match (view, bra_view) {
-                                (Some(v), Some(bv)) => eng.shell_quartet_with_views(
-                                    basis,
-                                    i,
-                                    j,
-                                    k,
-                                    l,
-                                    bv,
-                                    v.view_by_slot(ket.slot, k < l),
-                                    &mut block,
-                                ),
-                                _ => eng.shell_quartet_slots(
-                                    basis, ctx.store, i, j, k, l, bra.slot, ket.slot,
-                                    &mut block,
-                                ),
-                            }
-                            scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| {
-                                g.add(a, b, v)
-                            });
                         }
-                        // Implicit barrier at !$omp end do.
-                        barrier.wait();
-                    }
-                    if let Some(h) = &handoff {
-                        // Double-buffer flip: the master announces the
-                        // drained round and consumes the peers' staged
-                        // blocks; teammates hold only at the thread
-                        // barrier — no rank-wide idle barrier.
-                        if tid == 0 {
-                            h.publish(round);
-                            h.swap(round);
-                        }
-                        barrier.wait();
-                    } else if n_rounds > 1 {
-                        // Systolic round boundary: the master joins the
-                        // cross-rank barrier; teammates hold at the
-                        // thread barrier until the blocks have shifted.
-                        if tid == 0 {
-                            ring_barrier.wait();
-                        }
-                        barrier.wait();
-                    }
-                }
-                (g, computed)
-            });
+                        (g, computed, batcher)
+                    });
 
-            // reduction(+:Fock) over threads.
-            let mut g = Matrix::zeros(n, n);
-            let mut computed = 0;
-            for (tg, c) in thread_g {
-                g.add_assign(&tg);
-                computed += c;
-            }
-            (g, computed, stolen.load(Ordering::Relaxed))
-        });
+                // reduction(+:Fock) over threads.
+                let mut g = Matrix::zeros(n, n);
+                let mut computed = 0;
+                let mut bstats = BuildStats::default();
+                for (tg, c, batcher) in thread_g {
+                    g.add_assign(&tg);
+                    computed += c;
+                    debug_assert_eq!(batcher.n_buffered(), 0, "tail must drain at task end");
+                    batcher.merge_into(&mut bstats);
+                }
+                (g, computed, stolen.load(Ordering::Relaxed), bstats)
+            });
 
         // ddi_gsumf over ranks.
         let mut total = Matrix::zeros(n, n);
         let mut computed = 0;
         let mut stolen = 0;
-        for (g, c, st) in per_rank {
+        let mut bstats = BuildStats::default();
+        for (g, c, st, bs) in per_rank {
             total.add_assign(&g);
             computed += c;
             stolen += st;
+            bstats.absorb_batches(&bs);
         }
         fold_symmetric(&mut total);
         self.stats = BuildStats::from_walk(computed, ctx, t0.elapsed().as_secs_f64());
+        self.stats.absorb_batches(&bstats);
         self.stats.shard = dlb.shard_stats(stolen);
         total
     }
@@ -239,7 +217,7 @@ impl FockBuilder for PrivateFock {
     }
 
     fn last_stats(&self) -> BuildStats {
-        self.stats
+        self.stats.clone()
     }
 }
 
@@ -300,5 +278,11 @@ mod tests {
         let mut eng = PrivateFock::new(2, 3);
         let _ = eng.build_2e(&ctx);
         assert_eq!(eng.stats.quartets_computed, serial.stats.quartets_computed);
+        // The batch/tail partition holds across the thread split too.
+        assert_eq!(
+            eng.stats.batches_flushed * crate::hf::DEFAULT_BATCH_SIZE as u64
+                + eng.stats.tail_quartets,
+            eng.stats.quartets_computed
+        );
     }
 }

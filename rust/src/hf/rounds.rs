@@ -1,0 +1,147 @@
+//! Shared ring round sequencing — the one copy of the per-round
+//! barrier / handoff / reown idiom every engine used to carry inline.
+//!
+//! A ring-exchange build runs `n_shards` systolic rounds. Each round,
+//! every rank computes through a [`RoundView`] (its own shard plus the
+//! visiting ket block — or the re-own view once an injected failure's
+//! successor adopts the dead bra block), then synchronizes: the
+//! overlapped ring publishes its drained round and spins on the
+//! producer/consumer [`RingHandoff`] swap; the plain ring waits on a
+//! barrier. The four host engines repeated this sequencing verbatim
+//! (modulo the serial replay's home-keyed reown, kept here as
+//! [`RoundLoop::replay_view`]); [`RoundLoop`] owns it once, so the
+//! batched drain is wired through one code path instead of four.
+//!
+//! Flat and prefix-sharded builds degrade cleanly: one round, `view`
+//! returns the single prefix-mode round view (or `None` with no
+//! sharding at all), and `end_round` does nothing.
+
+use std::sync::Barrier;
+
+use crate::integrals::{RoundView, StoreSharding};
+
+use super::dlb::{RingFailure, RingHandoff, WalkDlb};
+use super::FockContext;
+
+/// Per-build round sequencer, shared by reference across a build's
+/// rank threads (all methods take `&self`).
+pub struct RoundLoop<'a> {
+    sharding: Option<&'a StoreSharding<'a>>,
+    fail: Option<RingFailure>,
+    n_rounds: usize,
+    barrier: Barrier,
+    handoff: Option<RingHandoff>,
+}
+
+impl<'a> RoundLoop<'a> {
+    /// Sequencer for a build over `ctx` with `n_ranks` barrier /
+    /// handoff participants (one per rank master — hybrid engines call
+    /// [`RoundLoop::end_round`] from thread 0 only). The handoff is
+    /// constructed only for the overlapped ring — exactly the
+    /// `is_overlapped` gate the engines applied to [`WalkDlb::handoff`]
+    /// — and the failure is taken from the DLB's normalized copy
+    /// (`None` for non-ring disciplines).
+    pub fn new(ctx: &FockContext<'a>, dlb: &WalkDlb, n_ranks: usize) -> RoundLoop<'a> {
+        let sharding = ctx.sharding;
+        RoundLoop {
+            sharding,
+            fail: dlb.failure(),
+            n_rounds: dlb.n_rounds(),
+            barrier: Barrier::new(n_ranks),
+            handoff: sharding
+                .filter(|sh| sh.is_overlapped())
+                .and_then(|_| dlb.handoff(n_ranks)),
+        }
+    }
+
+    /// Sequencer for the serial replay: one participant, handoff built
+    /// directly from the sharding (the replay loops home shards, not a
+    /// DLB), failure taken pre-normalized from the context.
+    pub fn for_replay(ctx: &FockContext<'a>) -> RoundLoop<'a> {
+        let sharding = ctx.sharding;
+        let ring = sharding.filter(|sh| sh.is_ring());
+        RoundLoop {
+            sharding,
+            fail: ring.and(ctx.fail),
+            n_rounds: ring.map_or(1, |sh| sh.n_rounds()),
+            barrier: Barrier::new(1),
+            handoff: ring
+                .filter(|sh| sh.is_overlapped())
+                .map(|sh| RingHandoff::new(1, sh.n_rounds())),
+        }
+    }
+
+    /// Build rounds: `n_shards` under ring exchange, 1 otherwise.
+    pub fn n_rounds(&self) -> usize {
+        self.n_rounds
+    }
+
+    /// The overlapped ring's producer/consumer handoff, for engines
+    /// with extra end-of-round duties (the shared-Fock column flush
+    /// sits between this round's drain and the publish).
+    pub fn handoff(&self) -> Option<&RingHandoff> {
+        self.handoff.as_ref()
+    }
+
+    /// The injected failure (normalized), if this is a faulted ring.
+    pub fn failure(&self) -> Option<RingFailure> {
+        self.fail
+    }
+
+    /// The store view rank `rank` computes through in `round`: the
+    /// plain round view, or — from the fail round on, for the dead
+    /// rank's ring successor — the re-own view carrying the adopted
+    /// dead bra block and its round visitor. `None` without sharding
+    /// (replicated store).
+    pub fn view<'b>(&'b self, rank: usize, round: usize) -> Option<RoundView<'a, 'b>> {
+        self.sharding.map(|sh| match self.fail {
+            Some(f) if round >= f.round && rank == f.successor(sh.n_shards()) => {
+                sh.round_view_reown(rank, round, f.rank)
+            }
+            _ => sh.round_view(rank, round),
+        })
+    }
+
+    /// The serial replay's view for a task homed in shard `home`: the
+    /// reown match is *home*-keyed (the replay walks homes in order and
+    /// plays the dead home's cells through the successor's re-own
+    /// view), unlike the executor-keyed [`RoundLoop::view`].
+    pub fn replay_view<'b>(
+        &'b self,
+        home: usize,
+        round: usize,
+    ) -> Option<RoundView<'a, 'b>> {
+        self.sharding.map(|sh| match self.fail {
+            Some(f) if f.rank == home && round >= f.round => {
+                sh.round_view_reown(f.successor(sh.n_shards()), round, home)
+            }
+            _ => sh.round_view(home, round),
+        })
+    }
+
+    /// End-of-round sequencing for rank masters with no extra flush
+    /// duties: publish + swap under the overlapped handoff, a plain
+    /// barrier under the multi-round ring, nothing for single-round
+    /// builds. Engines with work to stage between drain and publish
+    /// (the shared-Fock column flush) pass it as `stage` via
+    /// [`RoundLoop::end_round_with`].
+    pub fn end_round(&self, round: usize) {
+        self.end_round_with(round, || {});
+    }
+
+    /// [`RoundLoop::end_round`] with a staging closure run *before* the
+    /// publish (or barrier) — the produce-while-waiting window of the
+    /// overlapped handoff.
+    pub fn end_round_with(&self, round: usize, stage: impl FnOnce()) {
+        if let Some(h) = &self.handoff {
+            stage();
+            h.publish(round);
+            h.swap(round);
+        } else if self.n_rounds > 1 {
+            stage();
+            self.barrier.wait();
+        } else {
+            stage();
+        }
+    }
+}

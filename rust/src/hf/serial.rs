@@ -4,6 +4,9 @@
 //! The loop is the sorted early-exit walk: bra tasks come from the
 //! context's [`crate::integrals::PairWalk`] and each ket range is the
 //! walk's precomputed loop bound — no quartet is tested individually.
+//! Quartets drain through the shared class-batched path
+//! ([`super::classbatch::ClassBatcher`]): per-class buckets flushed on
+//! fill, residue drained at each task boundary.
 //!
 //! Under a *ring-exchange* sharding the serial engine plays every
 //! virtual rank's rounds in order — each task's kets clipped to the
@@ -18,9 +21,9 @@ use crate::linalg::Matrix;
 
 use crate::integrals::EriEngine;
 
-use super::dlb::RingHandoff;
-use super::quartets::for_each_surviving;
-use super::scatter::{mirror, scatter_block};
+use super::classbatch::ClassBatcher;
+use super::rounds::RoundLoop;
+use super::scatter::mirror;
 use super::{BuildStats, FockBuilder, FockContext};
 
 /// Single-threaded direct-SCF Fock builder.
@@ -42,9 +45,9 @@ impl FockBuilder for SerialFock {
         let basis = ctx.basis;
         let n = basis.n_bf;
         let mut g = Matrix::zeros(n, n);
-        let mut block = vec![0.0; 6 * 6 * 6 * 6];
         let mut computed = 0u64;
-        let pairs = ctx.pairs;
+        let mut batcher = ClassBatcher::new(ctx);
+        let mut sink = |a: usize, b: usize, v: f64| g.add(a, b, v);
         match ctx.sharding.filter(|sh| sh.is_ring()) {
             Some(sh) => {
                 // Ring exchange: play the rounds. Every task executes
@@ -53,18 +56,14 @@ impl FockBuilder for SerialFock {
                 // visiting block — zero remote fetches by construction.
                 // Under an injected failure the dead rank's rounds are
                 // replayed by its ring successor through the re-own
-                // view — same loop positions, same ket clips, so the
-                // Fock matrix is bit-identical to the fault-free build
-                // (and still fetch-free: the re-own view carries the
-                // adopted bra block and the dead home's round visitor).
+                // view — same loop positions, same ket clips, same
+                // per-task batch flushes, so the Fock matrix is
+                // bit-identical to the fault-free build (and still
+                // fetch-free: the re-own view carries the adopted bra
+                // block and the dead home's round visitor).
                 let walk = &ctx.walk;
-                let fail = ctx.fail;
-                // Overlapped ring: one (serial) rank still runs the
-                // publish/swap round flip so the double-buffered round
-                // structure matches the parallel engines exactly.
-                let handoff =
-                    sh.is_overlapped().then(|| RingHandoff::new(1, sh.n_rounds()));
-                for round in 0..sh.n_rounds() {
+                let rounds = RoundLoop::for_replay(ctx);
+                for round in 0..rounds.n_rounds() {
                     for t in 0..walk.n_tasks() {
                         let rij = walk.task(t);
                         let home = sh.shard_of(rij);
@@ -73,62 +72,42 @@ impl FockBuilder for SerialFock {
                             // provably empty clip (ket rank ≤ bra rank).
                             continue;
                         }
-                        let view = match fail {
-                            Some(f) if f.rank == home && round >= f.round => {
-                                sh.round_view_reown(f.successor(sh.n_shards()), round, home)
-                            }
-                            _ => sh.round_view(home, round),
-                        };
+                        let view = rounds.replay_view(home, round);
                         let (klo, khi) = sh.ring_ket_range(home, round);
-                        let bra = pairs.entry(rij);
-                        let (i, j) = (bra.i as usize, bra.j as usize);
-                        let bra_view = view.view_by_slot(bra.slot, i < j);
                         for rkl in walk.kets(rij).clipped(klo, khi).iter() {
-                            let ket = pairs.entry(rkl);
-                            let (k, l) = (ket.i as usize, ket.j as usize);
                             computed += 1;
-                            self.eng.shell_quartet_with_views(
-                                basis,
-                                i,
-                                j,
-                                k,
-                                l,
-                                bra_view,
-                                view.view_by_slot(ket.slot, k < l),
-                                &mut block,
+                            batcher.push(
+                                ctx,
+                                &mut self.eng,
+                                view.as_ref(),
+                                rij,
+                                rkl,
+                                &mut sink,
                             );
-                            scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| {
-                                g.add(a, b, v)
-                            });
                         }
+                        batcher.flush_task(ctx, &mut self.eng, view.as_ref(), &mut sink);
                     }
-                    // Producer/consumer swap: publish this round's
-                    // drain (the staged next block flips in), then
-                    // consume — with one rank the swap is immediate.
-                    if let Some(h) = &handoff {
-                        h.publish(round);
-                        h.swap(round);
-                    }
+                    // Producer/consumer swap under overlap (publish this
+                    // round's drain; the staged next block flips in) —
+                    // with one rank the swap is immediate.
+                    rounds.end_round(round);
                 }
             }
             None => {
-                for_each_surviving(&ctx.walk, |rij, rkl| {
-                    let bra = pairs.entry(rij);
-                    let ket = pairs.entry(rkl);
-                    let (i, j) = (bra.i as usize, bra.j as usize);
-                    let (k, l) = (ket.i as usize, ket.j as usize);
-                    computed += 1;
-                    self.eng.shell_quartet_slots(
-                        basis, ctx.store, i, j, k, l, bra.slot, ket.slot, &mut block,
-                    );
-                    scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| {
-                        g.add(a, b, v)
-                    });
-                });
+                for t in 0..ctx.walk.n_tasks() {
+                    let rij = ctx.walk.task(t);
+                    for rkl in ctx.walk.kets(rij).iter() {
+                        computed += 1;
+                        batcher.push(ctx, &mut self.eng, None, rij, rkl, &mut sink);
+                    }
+                    batcher.flush_task(ctx, &mut self.eng, None, &mut sink);
+                }
             }
         }
         mirror(&mut g);
+        debug_assert_eq!(batcher.n_buffered(), 0, "tail must drain at task end");
         self.stats = BuildStats::from_walk(computed, ctx, t0.elapsed().as_secs_f64());
+        batcher.merge_into(&mut self.stats);
         g
     }
 
@@ -137,7 +116,7 @@ impl FockBuilder for SerialFock {
     }
 
     fn last_stats(&self) -> BuildStats {
-        self.stats
+        self.stats.clone()
     }
 }
 
@@ -209,6 +188,14 @@ mod tests {
                 }
             });
             assert_eq!(eng.stats.quartets_computed, expect);
+        }
+        // Batch accounting partitions the visited set.
+        for e in [&e1, &e2] {
+            assert_eq!(
+                e.stats.batches_flushed * crate::hf::DEFAULT_BATCH_SIZE as u64
+                    + e.stats.tail_quartets,
+                e.stats.quartets_computed
+            );
         }
     }
 }

@@ -10,7 +10,12 @@
 //! * OpenMP level: threads split the task's two-key ket segments
 //!   ([`PairWalk::kets`](crate::integrals::PairWalk::kets), ket rank ≤
 //!   bra rank) with `schedule(dynamic,1)` semantics — screening is the
-//!   loop bound, the Schwarz bound is never evaluated per quartet;
+//!   loop bound, the Schwarz bound is never evaluated per quartet.
+//!   Claimed quartets buffer into the thread's private class-batch
+//!   drain ([`super::classbatch::ClassBatcher`]) and flush through the
+//!   batched evaluator (full buckets mid-task, residue before the
+//!   task-end `F_J` flush — batches never span tasks, so the routing
+//!   context below is fixed for every site in a run);
 //! * race elimination: updates touching shell `i` go to the thread's
 //!   private `F_I` column buffer, updates touching shell `j` to `F_J`
 //!   (both `[N_BF × shellWidth] × nthreads`, cache-line padded —
@@ -31,8 +36,10 @@ use std::sync::Barrier;
 use crate::integrals::EriEngine;
 use crate::linalg::Matrix;
 
+use super::classbatch::ClassBatcher;
 use super::dlb::WalkDlb;
-use super::scatter::{fold_symmetric, scatter_block};
+use super::rounds::RoundLoop;
+use super::scatter::fold_symmetric;
 use super::threadpool::{parallel_region, ColumnBuffers, SharedMatrix};
 use super::{BuildStats, FockBuilder, FockContext};
 
@@ -85,94 +92,121 @@ impl FockBuilder for SharedFock {
         // handoff slots so the systolic pass stays synchronized while
         // the live ranks replay the dead shard's cells.
         let dlb = WalkDlb::with_failure(walk, sharding, ctx.fail);
-        let fail = dlb.failure();
-        let n_rounds = dlb.n_rounds();
-        // Round boundary of the simulated systolic pass (one waiter per
-        // rank: the master thread).
-        let ring_barrier = Barrier::new(self.n_ranks);
-        // Overlapped ring: the boundary is a producer/consumer swap and
-        // the round-final lazy F_I flush moves into it — the flush *is*
-        // the useful work the master does instead of idling in the
-        // rank-wide barrier.
-        let handoff = sharding
-            .filter(|sh| sh.is_overlapped())
-            .and_then(|_| dlb.handoff(self.n_ranks));
+        // Round sequencing (reown views, rank-master barrier /
+        // overlapped handoff) lives in the shared RoundLoop. Under
+        // overlap the round-final lazy F_I flush moves to the swap
+        // point — it is the useful work the rank does instead of idling
+        // in the rank-wide barrier — so the flush runs before
+        // `end_round`'s publish below.
+        let rounds = RoundLoop::new(ctx, &dlb, self.n_ranks);
+        let n_rounds = rounds.n_rounds();
 
-        let per_rank: Vec<(Matrix, u64, u64, u64)> = parallel_region(self.n_ranks, |rank| {
-            let nt = self.n_threads;
-            let shared = SharedMatrix::zeros(n, n);
-            // mxsize = ubound(Fock) * shellSize (Algorithm 3 line 1).
-            let f_i = ColumnBuffers::new(n, width, nt);
-            let f_j = ColumnBuffers::new(n, width, nt);
-            let rij_cur = AtomicUsize::new(0);
-            let from_cur = AtomicUsize::new(0);
-            let nkl_cur = AtomicUsize::new(0);
-            let kl_counter = AtomicUsize::new(0);
-            let i_old = AtomicUsize::new(usize::MAX);
-            let flush_count = AtomicUsize::new(0);
-            let stolen = AtomicU64::new(0);
-            let barrier = Barrier::new(nt);
+        let per_rank: Vec<(Matrix, u64, u64, u64, BuildStats)> =
+            parallel_region(self.n_ranks, |rank| {
+                let nt = self.n_threads;
+                let shared = SharedMatrix::zeros(n, n);
+                // mxsize = ubound(Fock) * shellSize (Algorithm 3 line 1).
+                let f_i = ColumnBuffers::new(n, width, nt);
+                let f_j = ColumnBuffers::new(n, width, nt);
+                let rij_cur = AtomicUsize::new(0);
+                let from_cur = AtomicUsize::new(0);
+                let nkl_cur = AtomicUsize::new(0);
+                let kl_counter = AtomicUsize::new(0);
+                let i_old = AtomicUsize::new(usize::MAX);
+                let flush_count = AtomicUsize::new(0);
+                let stolen = AtomicU64::new(0);
+                let barrier = Barrier::new(nt);
 
-            let counts: Vec<u64> = parallel_region(nt, |tid| {
-                let mut eng = EriEngine::new();
-                let mut block = vec![0.0; 6 * 6 * 6 * 6];
-                let mut computed = 0u64;
-                for round in 0..n_rounds {
-                    // The dead rank's successor re-owns the dead bra
-                    // block and its round visitor, keeping replayed
-                    // cells fetch-free.
-                    let view = sharding.map(|sh| match fail {
-                        Some(f)
-                            if round >= f.round
-                                && rank == f.successor(sh.n_shards()) =>
-                        {
-                            sh.round_view_reown(rank, round, f.rank)
-                        }
-                        _ => sh.round_view(rank, round),
-                    });
-                    loop {
-                        if tid == 0 {
-                            // The DLB hands out surviving-pair ranks:
-                            // the legacy per-task I/J prescreen
-                            // (Algorithm 3 line 12) — and the full
-                            // barrier round every dead ij task cost —
-                            // is gone, because the walk contains no
-                            // dead tasks to prescreen; zero-work ring
-                            // units (no surviving ket in this round's
-                            // block) are dropped inside claim_nonempty,
-                            // before any broadcast, so they cost no
-                            // barrier round either. Sharded runs drain
-                            // the rank's own shard first, then steal; a
-                            // stolen task's `i` may repeat an earlier
-                            // shell, which just re-arms the lazy F_I
-                            // flush (the buffers drain on every flush).
-                            match dlb.claim_nonempty(ctx, rank, round) {
-                                Some((rij, from, len)) => {
-                                    if from != rank {
-                                        stolen.fetch_add(1, Ordering::Relaxed);
+                let counts: Vec<(u64, ClassBatcher)> = parallel_region(nt, |tid| {
+                    let mut eng = EriEngine::new();
+                    let mut computed = 0u64;
+                    let mut batcher = ClassBatcher::new(ctx);
+                    for round in 0..n_rounds {
+                        // The dead rank's successor re-owns the dead bra
+                        // block and its round visitor, keeping replayed
+                        // cells fetch-free.
+                        let view = rounds.view(rank, round);
+                        loop {
+                            if tid == 0 {
+                                // The DLB hands out surviving-pair ranks:
+                                // the legacy per-task I/J prescreen
+                                // (Algorithm 3 line 12) — and the full
+                                // barrier round every dead ij task cost —
+                                // is gone, because the walk contains no
+                                // dead tasks to prescreen; zero-work ring
+                                // units (no surviving ket in this round's
+                                // block) are dropped inside claim_nonempty,
+                                // before any broadcast, so they cost no
+                                // barrier round either. Sharded runs drain
+                                // the rank's own shard first, then steal; a
+                                // stolen task's `i` may repeat an earlier
+                                // shell, which just re-arms the lazy F_I
+                                // flush (the buffers drain on every flush).
+                                match dlb.claim_nonempty(ctx, rank, round) {
+                                    Some((rij, from, len)) => {
+                                        if from != rank {
+                                            stolen.fetch_add(1, Ordering::Relaxed);
+                                        }
+                                        rij_cur.store(rij, Ordering::SeqCst);
+                                        from_cur.store(from, Ordering::SeqCst);
+                                        nkl_cur.store(len, Ordering::SeqCst);
                                     }
-                                    rij_cur.store(rij, Ordering::SeqCst);
-                                    from_cur.store(from, Ordering::SeqCst);
-                                    nkl_cur.store(len, Ordering::SeqCst);
+                                    None => rij_cur.store(usize::MAX, Ordering::SeqCst),
                                 }
-                                None => rij_cur.store(usize::MAX, Ordering::SeqCst),
+                                kl_counter.store(0, Ordering::SeqCst);
                             }
-                            kl_counter.store(0, Ordering::SeqCst);
-                        }
-                        barrier.wait();
-                        let rij = rij_cur.load(Ordering::SeqCst);
-                        if rij == usize::MAX {
-                            // Round-final F_I flush (Algorithm 3 line
-                            // 36; under the ring this fires at every
-                            // round boundary — the next round restarts
-                            // the (i, j)-grouped task order, so the
-                            // lazy flush must not carry a stale i
-                            // across the block shift). Overlapped runs
-                            // defer it to the swap point below: it is
-                            // the producer-side work that replaces the
-                            // barrier idle.
-                            if handoff.is_none() {
-                                let iold = i_old.load(Ordering::SeqCst);
+                            barrier.wait();
+                            let rij = rij_cur.load(Ordering::SeqCst);
+                            if rij == usize::MAX {
+                                // Round-final F_I flush (Algorithm 3 line
+                                // 36; under the ring this fires at every
+                                // round boundary — the next round restarts
+                                // the (i, j)-grouped task order, so the
+                                // lazy flush must not carry a stale i
+                                // across the block shift). Overlapped runs
+                                // defer it to the swap point below: it is
+                                // the producer-side work that replaces the
+                                // barrier idle.
+                                if rounds.handoff().is_none() {
+                                    let iold = i_old.load(Ordering::SeqCst);
+                                    if iold != usize::MAX {
+                                        let (r0, r1) = chunk_of(n, nt, tid);
+                                        let col0 = basis.shells[iold].bf_first;
+                                        unsafe { f_i.flush_rows(&shared, col0, r0, r1) };
+                                    }
+                                    barrier.wait();
+                                    if tid == 0 {
+                                        i_old.store(usize::MAX, Ordering::SeqCst);
+                                    }
+                                }
+                                break;
+                            }
+                            let bra = pairs.entry(rij);
+                            let (i, j) = (bra.i as usize, bra.j as usize);
+                            let n_kl = nkl_cur.load(Ordering::SeqCst);
+                            // Each thread derives the task's (round-clipped)
+                            // two-key ket walk locally; n_kl is its
+                            // iteration-ordinal count.
+                            let (lo, hi) = ctx.ket_clip(from_cur.load(Ordering::SeqCst), round);
+                            let kw = walk.kets(rij).clipped(lo, hi);
+                            debug_assert_eq!(kw.len(), n_kl);
+                            // Dead units are impossible here: flat/prefix
+                            // walks have no dead tasks by construction (the
+                            // prefix-max live test), and empty ring clips
+                            // were skipped at claim time.
+                            debug_assert!(n_kl > 0, "DLB handed out a dead ij unit");
+
+                            // Lazy F_I flush on i change (lines 14–17).
+                            // Tasks are (i, j)-grouped by the walk precisely
+                            // so `i` stays monotone here and this fires once
+                            // per distinct i, not once per task. NB the
+                            // buffer holds contributions of the *previous*
+                            // i, so the flush targets i_old's column block
+                            // (the paper's listing writes "Fock(:,i)" but
+                            // line 33 stores i_old for exactly this
+                            // purpose).
+                            let iold = i_old.load(Ordering::SeqCst);
+                            if iold != i {
                                 if iold != usize::MAX {
                                     let (r0, r1) = chunk_of(n, nt, tid);
                                     let col0 = basis.shells[iold].bf_first;
@@ -180,95 +214,25 @@ impl FockBuilder for SharedFock {
                                 }
                                 barrier.wait();
                                 if tid == 0 {
-                                    i_old.store(usize::MAX, Ordering::SeqCst);
+                                    i_old.store(i, Ordering::SeqCst);
+                                    flush_count.fetch_add(1, Ordering::Relaxed);
                                 }
+                                barrier.wait();
                             }
-                            break;
-                        }
-                        let bra = pairs.entry(rij);
-                        let (i, j) = (bra.i as usize, bra.j as usize);
-                        let n_kl = nkl_cur.load(Ordering::SeqCst);
-                        // Each thread derives the task's (round-clipped)
-                        // two-key ket walk locally; n_kl is its
-                        // iteration-ordinal count.
-                        let (lo, hi) = ctx.ket_clip(from_cur.load(Ordering::SeqCst), round);
-                        let kw = walk.kets(rij).clipped(lo, hi);
-                        debug_assert_eq!(kw.len(), n_kl);
-                        // Dead units are impossible here: flat/prefix
-                        // walks have no dead tasks by construction (the
-                        // prefix-max live test), and empty ring clips
-                        // were skipped at claim time.
-                        debug_assert!(n_kl > 0, "DLB handed out a dead ij unit");
 
-                        // Lazy F_I flush on i change (lines 14–17).
-                        // Tasks are (i, j)-grouped by the walk precisely
-                        // so `i` stays monotone here and this fires once
-                        // per distinct i, not once per task. NB the
-                        // buffer holds contributions of the *previous*
-                        // i, so the flush targets i_old's column block
-                        // (the paper's listing writes "Fock(:,i)" but
-                        // line 33 stores i_old for exactly this
-                        // purpose).
-                        let iold = i_old.load(Ordering::SeqCst);
-                        if iold != i {
-                            if iold != usize::MAX {
-                                let (r0, r1) = chunk_of(n, nt, tid);
-                                let col0 = basis.shells[iold].bf_first;
-                                unsafe { f_i.flush_rows(&shared, col0, r0, r1) };
-                            }
-                            barrier.wait();
-                            if tid == 0 {
-                                i_old.store(i, Ordering::SeqCst);
-                                flush_count.fetch_add(1, Ordering::Relaxed);
-                            }
-                            barrier.wait();
-                        }
+                            let i_range = basis.shell_bf_range(i);
+                            let j_range = basis.shell_bf_range(j);
+                            let (i0, j0) = (i_range.start, j_range.start);
 
-                        let i_range = basis.shell_bf_range(i);
-                        let j_range = basis.shell_bf_range(j);
-                        let (i0, j0) = (i_range.start, j_range.start);
-
-                        // Sharded: one bra fetch per thread per task (a
-                        // stolen task pays per-thread remote gets, not
-                        // one per ket); non-resident kets count per
-                        // lookup below.
-                        let bra_view = view.map(|v| v.view_by_slot(bra.slot, i < j));
-
-                        // !$omp do schedule(dynamic,1) over the
-                        // surviving ket segments — the early exit is the
-                        // loop bound; the Schwarz bound is never
-                        // evaluated per quartet (rejected segment-B
-                        // candidates skip on an integer compare).
-                        // Distinct ordinals map to distinct ket pairs,
-                        // so the kl-ownership race argument is
-                        // unchanged.
-                        loop {
-                            let t = kl_counter.fetch_add(1, Ordering::Relaxed);
-                            if t >= n_kl {
-                                break;
-                            }
-                            let Some(rkl) = kw.ket(t) else { continue };
-                            let ket = pairs.entry(rkl);
-                            let (k, l) = (ket.i as usize, ket.j as usize);
-                            computed += 1;
-                            match (view, bra_view) {
-                                (Some(v), Some(bv)) => eng.shell_quartet_with_views(
-                                    basis,
-                                    i,
-                                    j,
-                                    k,
-                                    l,
-                                    bv,
-                                    v.view_by_slot(ket.slot, k < l),
-                                    &mut block,
-                                ),
-                                _ => eng.shell_quartet_slots(
-                                    basis, ctx.store, i, j, k, l, bra.slot, ket.slot,
-                                    &mut block,
-                                ),
-                            }
-                            scatter_block(basis, (i, j, k, l), &block, ctx.d, &mut |a, b, v| {
-                                // Route by shell membership (lines 25–27).
+                            // Route by shell membership (lines 25–27). The
+                            // routing ranges are per-task state, and
+                            // batches never span tasks, so this sink is
+                            // valid for every deferred site it drains. A
+                            // stolen task's bra now resolves once per
+                            // flush run (cached inside the batched
+                            // evaluator), not once per task; non-resident
+                            // kets count per lookup as before.
+                            let mut sink = |a: usize, b: usize, v: f64| {
                                 if i_range.contains(&a) {
                                     unsafe { f_i.add(tid, b, a - i0, v) };
                                 } else if i_range.contains(&b) {
@@ -283,71 +247,101 @@ impl FockBuilder for SharedFock {
                                     // shared write.
                                     unsafe { shared.add(a, b, v) };
                                 }
-                            });
-                        }
-                        // Implicit barrier at !$omp end do, then F_J
-                        // flush (line 31) — every kl loop.
-                        barrier.wait();
-                        let (r0, r1) = chunk_of(n, nt, tid);
-                        unsafe { f_j.flush_rows(&shared, j0, r0, r1) };
-                        barrier.wait();
-                    }
-                    if let Some(h) = &handoff {
-                        // Swap point: the round-final lazy F_I flush
-                        // lands here (moved out of the drain branch),
-                        // overlapping with the peers' block staging;
-                        // only then does the master flip buffers.
-                        let iold = i_old.load(Ordering::SeqCst);
-                        if iold != usize::MAX {
-                            let (r0, r1) = chunk_of(n, nt, tid);
-                            let col0 = basis.shells[iold].bf_first;
-                            unsafe { f_i.flush_rows(&shared, col0, r0, r1) };
-                        }
-                        barrier.wait();
-                        if tid == 0 {
-                            i_old.store(usize::MAX, Ordering::SeqCst);
-                            h.publish(round);
-                            h.swap(round);
-                        }
-                        barrier.wait();
-                    } else if n_rounds > 1 {
-                        // Systolic round boundary: F_I was flushed and
-                        // re-armed by the drain branch above; the master
-                        // joins the cross-rank barrier while teammates
-                        // hold at the thread barrier until the ket
-                        // blocks have shifted.
-                        if tid == 0 {
-                            ring_barrier.wait();
-                        }
-                        barrier.wait();
-                    }
-                }
-                computed
-            });
+                            };
 
-            let computed: u64 = counts.iter().sum();
-            (
-                shared.into_matrix(),
-                computed,
-                flush_count.load(Ordering::SeqCst) as u64,
-                stolen.load(Ordering::Relaxed),
-            )
-        });
+                            // !$omp do schedule(dynamic,1) over the
+                            // surviving ket segments — the early exit is the
+                            // loop bound; the Schwarz bound is never
+                            // evaluated per quartet (rejected segment-B
+                            // candidates skip on an integer compare).
+                            // Distinct ordinals map to distinct ket pairs,
+                            // so the kl-ownership race argument is
+                            // unchanged.
+                            loop {
+                                let t = kl_counter.fetch_add(1, Ordering::Relaxed);
+                                if t >= n_kl {
+                                    break;
+                                }
+                                let Some(rkl) = kw.ket(t) else { continue };
+                                computed += 1;
+                                batcher.push(ctx, &mut eng, view.as_ref(), rij, rkl, &mut sink);
+                            }
+                            // Task boundary: drain this thread's batch
+                            // residue first, then the implicit barrier at
+                            // !$omp end do and the F_J flush (line 31) —
+                            // every kl loop.
+                            batcher.flush_task(ctx, &mut eng, view.as_ref(), &mut sink);
+                            barrier.wait();
+                            let (r0, r1) = chunk_of(n, nt, tid);
+                            unsafe { f_j.flush_rows(&shared, j0, r0, r1) };
+                            barrier.wait();
+                        }
+                        if rounds.handoff().is_some() {
+                            // Swap point: the round-final lazy F_I flush
+                            // lands here (moved out of the drain branch),
+                            // overlapping with the peers' block staging;
+                            // only then does the master publish and flip
+                            // buffers.
+                            let iold = i_old.load(Ordering::SeqCst);
+                            if iold != usize::MAX {
+                                let (r0, r1) = chunk_of(n, nt, tid);
+                                let col0 = basis.shells[iold].bf_first;
+                                unsafe { f_i.flush_rows(&shared, col0, r0, r1) };
+                            }
+                            barrier.wait();
+                            if tid == 0 {
+                                i_old.store(usize::MAX, Ordering::SeqCst);
+                                rounds.end_round(round);
+                            }
+                            barrier.wait();
+                        } else if n_rounds > 1 {
+                            // Systolic round boundary: F_I was flushed and
+                            // re-armed by the drain branch above; the master
+                            // joins the cross-rank barrier while teammates
+                            // hold at the thread barrier until the ket
+                            // blocks have shifted.
+                            if tid == 0 {
+                                rounds.end_round(round);
+                            }
+                            barrier.wait();
+                        }
+                    }
+                    (computed, batcher)
+                });
+
+                let mut computed = 0u64;
+                let mut bstats = BuildStats::default();
+                for (c, batcher) in counts {
+                    computed += c;
+                    debug_assert_eq!(batcher.n_buffered(), 0, "tail must drain at task end");
+                    batcher.merge_into(&mut bstats);
+                }
+                (
+                    shared.into_matrix(),
+                    computed,
+                    flush_count.load(Ordering::SeqCst) as u64,
+                    stolen.load(Ordering::Relaxed),
+                    bstats,
+                )
+            });
 
         // ddi_gsumf over ranks.
         let mut total = Matrix::zeros(n, n);
         let mut computed = 0;
         let mut flushes = 0;
         let mut stolen = 0;
-        for (g, c, fl, st) in per_rank {
+        let mut bstats = BuildStats::default();
+        for (g, c, fl, st, bs) in per_rank {
             total.add_assign(&g);
             computed += c;
             flushes += fl;
             stolen += st;
+            bstats.absorb_batches(&bs);
         }
         fold_symmetric(&mut total);
         self.fi_flushes = flushes;
         self.stats = BuildStats::from_walk(computed, ctx, t0.elapsed().as_secs_f64());
+        self.stats.absorb_batches(&bstats);
         self.stats.shard = dlb.shard_stats(stolen);
         total
     }
@@ -357,7 +351,7 @@ impl FockBuilder for SharedFock {
     }
 
     fn last_stats(&self) -> BuildStats {
-        self.stats
+        self.stats.clone()
     }
 }
 
@@ -437,5 +431,12 @@ mod tests {
         assert!(eng.fi_flushes <= nsh as u64);
         assert!(eng.fi_flushes < n_pairs);
         assert!(eng.fi_flushes > 0);
+        // Batch accounting partitions the visited set across the
+        // thread-private batchers.
+        assert_eq!(
+            eng.stats.batches_flushed * crate::hf::DEFAULT_BATCH_SIZE as u64
+                + eng.stats.tail_quartets,
+            eng.stats.quartets_computed
+        );
     }
 }

@@ -1,0 +1,192 @@
+//! Fixed-capacity per-class quartet batches — the walk→engine interface
+//! of the batched consumption path.
+//!
+//! The scalar path hands each surviving quartet to
+//! [`EriEngine::shell_quartet_slots`](super::eri::EriEngine::shell_quartet_slots)
+//! one at a time, so the engine re-resolves the bra pair and re-stages
+//! its scratch per quartet and nothing downstream ever sees two
+//! structurally identical quartets side by side. [`QuartetBatch`]
+//! buffers claimed [`PairWalk`](super::pairlist::PairWalk) /
+//! [`ClippedKetWalk`](super::pairlist::ClippedKetWalk) output into
+//! per-class buckets of store-slot quadruples instead: all quartets in
+//! one bucket share the `(kind_i, kind_j, kind_k, kind_l)` angular-
+//! momentum class stamped on the pair list at build time
+//! ([`SortedPairList::pair_class`]), so a full bucket is a batch of
+//! same-shape work — one scratch setup in
+//! [`EriEngine::shell_quartet_batch`](super::eri::EriEngine::shell_quartet_batch),
+//! and the uniform block dimensions the blocked J/K accelerator path
+//! and host-side SIMD both require.
+//!
+//! Quartet classes are the product space of the pair classes:
+//! `class(ij, kl) = pair_class(ij) · n_pair_classes + pair_class(kl)`
+//! (see [`quartet_class`]). The bucket count is therefore
+//! `n_pair_classes²` — at most 16² in this basis universe, typically a
+//! handful.
+
+use super::pairlist::SortedPairList;
+
+/// One buffered quartet: shell indices plus the two
+/// [`ShellPairStore`](super::shellpair::ShellPairStore) slots, exactly
+/// what the batched evaluator needs to replay the quartet later.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuartetSite {
+    pub i: u32,
+    pub j: u32,
+    pub k: u32,
+    pub l: u32,
+    pub bra_slot: u32,
+    pub ket_slot: u32,
+}
+
+/// Dense quartet-class id of a (bra rank, ket rank) pair — the bucket
+/// index in a [`QuartetBatch`] built over the same list.
+#[inline]
+pub fn quartet_class(pairs: &SortedPairList, rij: usize, rkl: usize) -> usize {
+    pairs.pair_class(rij) * pairs.n_pair_classes() + pairs.pair_class(rkl)
+}
+
+/// Fixed-capacity per-class buckets of [`QuartetSite`]s.
+///
+/// `push` reports when a bucket reaches capacity; the caller then
+/// drains it (`take_bucket`/`restore_bucket` — a `mem::take` pattern so
+/// the bucket's allocation is reused across flushes) and keeps filling.
+/// The batch never flushes on its own: flush policy (cap-full
+/// mid-task, full residue drain at task end) belongs to the engines'
+/// [`hf::classbatch`](crate::hf::classbatch) layer.
+#[derive(Debug)]
+pub struct QuartetBatch {
+    capacity: usize,
+    buckets: Vec<Vec<QuartetSite>>,
+}
+
+impl QuartetBatch {
+    /// A batch with `n_classes` buckets of `capacity` sites each.
+    /// `capacity` must be nonzero (a zero-capacity bucket could never
+    /// signal "full" sanely).
+    pub fn new(n_classes: usize, capacity: usize) -> QuartetBatch {
+        assert!(capacity > 0, "batch capacity must be nonzero");
+        QuartetBatch {
+            capacity,
+            buckets: (0..n_classes).map(|_| Vec::with_capacity(capacity)).collect(),
+        }
+    }
+
+    /// A batch sized for the quartet-class space of `pairs`
+    /// (`n_pair_classes²` buckets).
+    pub fn for_list(pairs: &SortedPairList, capacity: usize) -> QuartetBatch {
+        let m = pairs.n_pair_classes();
+        QuartetBatch::new(m * m, capacity)
+    }
+
+    #[inline]
+    pub fn n_classes(&self) -> usize {
+        self.buckets.len()
+    }
+
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Buffer one site into its class bucket. Returns `true` when the
+    /// bucket has just reached capacity — the caller must drain it
+    /// before the next same-class push.
+    #[inline]
+    pub fn push(&mut self, class: usize, site: QuartetSite) -> bool {
+        let b = &mut self.buckets[class];
+        debug_assert!(b.len() < self.capacity, "bucket {class} pushed past capacity");
+        b.push(site);
+        b.len() == self.capacity
+    }
+
+    /// Sites currently buffered in `class`.
+    #[inline]
+    pub fn bucket(&self, class: usize) -> &[QuartetSite] {
+        &self.buckets[class]
+    }
+
+    /// Take ownership of a bucket's sites for a flush (the bucket is
+    /// left empty but keeps no allocation — pair with
+    /// [`QuartetBatch::restore_bucket`] to give the allocation back).
+    #[inline]
+    pub fn take_bucket(&mut self, class: usize) -> Vec<QuartetSite> {
+        std::mem::take(&mut self.buckets[class])
+    }
+
+    /// Return a drained bucket's allocation after a flush.
+    #[inline]
+    pub fn restore_bucket(&mut self, class: usize, mut sites: Vec<QuartetSite>) {
+        sites.clear();
+        self.buckets[class] = sites;
+    }
+
+    /// Total sites buffered across all buckets.
+    pub fn len_total(&self) -> usize {
+        self.buckets.iter().map(|b| b.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.iter().all(|b| b.is_empty())
+    }
+
+    /// Heap footprint at full capacity — what one thread's batch buffer
+    /// costs the memory model, independent of current fill.
+    pub fn bytes(&self) -> usize {
+        std::mem::size_of::<QuartetBatch>()
+            + self.buckets.len()
+                * (std::mem::size_of::<Vec<QuartetSite>>()
+                    + self.capacity * std::mem::size_of::<QuartetSite>())
+    }
+
+    /// The memory-model formula behind [`QuartetBatch::bytes`], usable
+    /// without building a batch.
+    pub fn estimate_bytes(n_classes: usize, capacity: usize) -> usize {
+        std::mem::size_of::<QuartetBatch>()
+            + n_classes
+                * (std::mem::size_of::<Vec<QuartetSite>>()
+                    + capacity * std::mem::size_of::<QuartetSite>())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn site(n: u32) -> QuartetSite {
+        QuartetSite { i: n, j: n, k: n, l: n, bra_slot: n, ket_slot: n }
+    }
+
+    #[test]
+    fn push_signals_exactly_at_capacity() {
+        let mut b = QuartetBatch::new(3, 4);
+        for n in 0..3u32 {
+            assert!(!b.push(1, site(n)), "below capacity must not signal");
+        }
+        assert!(b.push(1, site(3)), "4th push hits capacity");
+        assert_eq!(b.bucket(1).len(), 4);
+        assert_eq!(b.bucket(0).len(), 0);
+        assert_eq!(b.len_total(), 4);
+    }
+
+    #[test]
+    fn take_and_restore_reuse_allocation() {
+        let mut b = QuartetBatch::new(2, 2);
+        b.push(0, site(7));
+        b.push(0, site(8));
+        let got = b.take_bucket(0);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0], site(7));
+        assert!(b.bucket(0).is_empty());
+        b.restore_bucket(0, got);
+        assert!(b.bucket(0).is_empty(), "restored bucket is cleared");
+        assert!(!b.push(0, site(9)), "capacity resets after restore");
+        assert!(b.push(0, site(10)));
+    }
+
+    #[test]
+    fn bytes_match_estimate() {
+        let b = QuartetBatch::new(5, 32);
+        assert_eq!(b.bytes(), QuartetBatch::estimate_bytes(5, 32));
+        assert!(b.bytes() > 5 * 32 * std::mem::size_of::<QuartetSite>());
+    }
+}

@@ -27,6 +27,7 @@
 use crate::basis::shell::{cart_powers, component_scale, Segment};
 use crate::basis::BasisSet;
 
+use super::batch::QuartetSite;
 use super::rtensor::{build_r_into, RScratch};
 use super::shellpair::{PairView, ResolvedPrim, ShellPairStore};
 
@@ -45,8 +46,15 @@ pub struct EriEngine {
     /// Reusable resolved-prim buffers (see `ResolvedPrim`).
     bra_scratch: Vec<ResolvedPrim>,
     ket_scratch: Vec<ResolvedPrim>,
+    /// Per-site output block of the batched path (max 6^4 for dddd).
+    batch_buf: Vec<f64>,
     /// Count of primitive quartets processed (profiling/calibration).
     pub prim_quartets: u64,
+    /// Count of bra-pair stride/coefficient resolutions. The scalar
+    /// path pays one per quartet; the batched path pays one per
+    /// distinct bra in a batch — the scratch-reuse win `bench_classes`
+    /// measures.
+    pub bra_resolves: u64,
 }
 
 impl Default for EriEngine {
@@ -63,7 +71,9 @@ impl EriEngine {
             hket: vec![0.0; 36 * 125],
             bra_scratch: Vec::new(),
             ket_scratch: Vec::new(),
+            batch_buf: vec![0.0; 6 * 6 * 6 * 6],
             prim_quartets: 0,
+            bra_resolves: 0,
         }
     }
 
@@ -134,6 +144,105 @@ impl EriEngine {
         ket: PairView,
         out: &mut [f64],
     ) {
+        // Resolve the views once per shell quartet into the engine's
+        // reusable index buffers (no allocation after warmup): the
+        // stride/coef-index resolution is hoisted out of the hot loops
+        // and shared by every segment combination and primitive pairing.
+        let mut bra_prims = std::mem::take(&mut self.bra_scratch);
+        let mut ket_prims = std::mem::take(&mut self.ket_scratch);
+        bra.resolve_into(&mut bra_prims);
+        self.bra_resolves += 1;
+        ket.resolve_into(&mut ket_prims);
+        self.quartet_core(
+            basis,
+            i,
+            j,
+            k,
+            l,
+            bra.data(),
+            &bra_prims,
+            ket.data(),
+            &ket_prims,
+            out,
+        );
+        self.bra_scratch = bra_prims;
+        self.ket_scratch = ket_prims;
+    }
+
+    /// Evaluate a same-class batch of quartets against one scratch
+    /// setup. `resolve` maps a store slot + swap flag to the pair view
+    /// (plain store, or a ring [`RoundView`](super::pairlist::RoundView)
+    /// — remote-fetch accounting is the caller's resolver's business).
+    /// Consecutive sites sharing a bra slot reuse its resolved
+    /// stride/coefficient scratch instead of re-deriving it per quartet
+    /// — the per-quartet reinit the scalar path pays (the engines'
+    /// fill-and-flush batches are single-bra by construction, so a
+    /// whole batch costs one bra resolution). `each(n, block)` receives
+    /// every site's ERI block in site order; the block buffer is
+    /// engine-owned and overwritten between calls.
+    pub fn shell_quartet_batch<'a>(
+        &mut self,
+        basis: &BasisSet,
+        resolve: impl Fn(u32, bool) -> PairView<'a>,
+        sites: &[QuartetSite],
+        mut each: impl FnMut(usize, &[f64]),
+    ) {
+        let mut bra_prims = std::mem::take(&mut self.bra_scratch);
+        let mut ket_prims = std::mem::take(&mut self.ket_scratch);
+        let mut block = std::mem::take(&mut self.batch_buf);
+        let mut cached: Option<(u32, bool)> = None;
+        let mut bra_data: &[f64] = &[];
+        for (n, site) in sites.iter().enumerate() {
+            let (i, j, k, l) =
+                (site.i as usize, site.j as usize, site.k as usize, site.l as usize);
+            let bkey = (site.bra_slot, i < j);
+            if cached != Some(bkey) {
+                let bv = resolve(site.bra_slot, i < j);
+                bv.resolve_into(&mut bra_prims);
+                self.bra_resolves += 1;
+                bra_data = bv.data();
+                cached = Some(bkey);
+            }
+            let ket = resolve(site.ket_slot, k < l);
+            ket.resolve_into(&mut ket_prims);
+            let nblk: usize = [i, j, k, l].iter().map(|&s| basis.shells[s].n_bf()).product();
+            self.quartet_core(
+                basis,
+                i,
+                j,
+                k,
+                l,
+                bra_data,
+                &bra_prims,
+                ket.data(),
+                &ket_prims,
+                &mut block,
+            );
+            each(n, &block[..nblk]);
+        }
+        self.bra_scratch = bra_prims;
+        self.ket_scratch = ket_prims;
+        self.batch_buf = block;
+    }
+
+    /// The quartet body shared by the scalar and batched entry points:
+    /// zero the block, run every segment combination through
+    /// [`EriEngine::segment_quartet`], scatter into `out`. Pair data
+    /// arrives pre-resolved — this function never touches the store.
+    #[allow(clippy::too_many_arguments)]
+    fn quartet_core(
+        &mut self,
+        basis: &BasisSet,
+        i: usize,
+        j: usize,
+        k: usize,
+        l: usize,
+        bra_data: &[f64],
+        bra_prims: &[ResolvedPrim],
+        ket_data: &[f64],
+        ket_prims: &[ResolvedPrim],
+        out: &mut [f64],
+    ) {
         let (ni, nj, nk, nl) = (
             basis.shells[i].n_bf(),
             basis.shells[j].n_bf(),
@@ -142,16 +251,6 @@ impl EriEngine {
         );
         debug_assert!(out.len() >= ni * nj * nk * nl);
         out[..ni * nj * nk * nl].fill(0.0);
-        // Resolve the views once per shell quartet into the engine's
-        // reusable index buffers (no allocation after warmup): the
-        // stride/coef-index resolution is hoisted out of the hot loops
-        // and shared by every segment combination and primitive pairing.
-        let mut bra_prims = std::mem::take(&mut self.bra_scratch);
-        let mut ket_prims = std::mem::take(&mut self.ket_scratch);
-        bra.resolve_into(&mut bra_prims);
-        ket.resolve_into(&mut ket_prims);
-        let bra_data = bra.data();
-        let ket_data = ket.data();
         let bfi = basis.shells[i].bf_first;
         let bfj = basis.shells[j].bf_first;
         let bfk = basis.shells[k].bf_first;
@@ -173,7 +272,7 @@ impl EriEngine {
                             &basis.segments[d],
                         );
                         self.segment_quartet(
-                            sa, sb, sc, sd, bra_data, &bra_prims, ket_data, &ket_prims,
+                            sa, sb, sc, sd, bra_data, bra_prims, ket_data, ket_prims,
                         );
                         // Scatter the segment block into the shell block.
                         let (na, nb, nc, nd) =
@@ -203,8 +302,6 @@ impl EriEngine {
                 }
             }
         }
-        self.bra_scratch = bra_prims;
-        self.ket_scratch = ket_prims;
     }
 
     /// ERI block over one pure-l segment quartet into `self.seg_buf`,
@@ -228,6 +325,10 @@ impl EriEngine {
         let mut hket = std::mem::take(&mut self.hket);
 
         let l_total = sa.l + sb.l + sc.l + sd.l;
+        // Hoisted out of the primitive loops; dividing it first keeps
+        // the evaluation order (and therefore the rounding) of the old
+        // inline expression bit-for-bit.
+        let pref0 = 2.0 * std::f64::consts::PI.powf(2.5);
         let pa = cart_powers(sa.l);
         let pb = cart_powers(sb.l);
         let pc = cart_powers(sc.l);
@@ -251,8 +352,7 @@ impl EriEngine {
                     pe.center[1] - qe.center[1],
                     pe.center[2] - qe.center[2],
                 ];
-                let pref =
-                    2.0 * std::f64::consts::PI.powf(2.5) / (p * q * (p + q).sqrt()) * cab * ccd;
+                let pref = pref0 / (p * q * (p + q).sqrt()) * cab * ccd;
                 if l_total == 0 {
                     // ssss fast path: (ab|cd) = pref·E000·E000·F0.
                     let r2 = rpq[0] * rpq[0] + rpq[1] * rpq[1] + rpq[2] * rpq[2];
@@ -522,5 +622,63 @@ mod tests {
         let mut eng = EriEngine::new();
         let v = eri_value(&b, &s, &mut eng, [0, 1, 0, 1]);
         assert!(v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn batched_blocks_match_scalar_bitwise() {
+        // The batched entry point runs the same quartet core against a
+        // once-per-bra scratch setup; every emitted block must equal
+        // the scalar path's bit-for-bit, and the batch must pay exactly
+        // one bra resolution for a single-bra site list (vs one per
+        // quartet on the scalar path).
+        use crate::integrals::batch::QuartetSite;
+        let m = molecules::water();
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let s = ShellPairStore::build(&b);
+        // Shell 1 is the O 2sp shell (mixed-l segments), a stress case.
+        let (i, j) = (2usize, 1usize);
+        let bra_slot = s.slot(i, j).unwrap();
+        let kets: Vec<(usize, usize)> = vec![(1, 0), (1, 1), (2, 0), (3, 2)];
+        let sites: Vec<QuartetSite> = kets
+            .iter()
+            .map(|&(k, l)| QuartetSite {
+                i: i as u32,
+                j: j as u32,
+                k: k as u32,
+                l: l as u32,
+                bra_slot,
+                ket_slot: s.slot(k, l).unwrap(),
+            })
+            .collect();
+        let mut scalar = EriEngine::new();
+        let mut want: Vec<Vec<f64>> = Vec::new();
+        for site in &sites {
+            let (k, l) = (site.k as usize, site.l as usize);
+            let n: usize =
+                [i, j, k, l].iter().map(|&sh| b.shells[sh].n_bf()).product();
+            let mut out = vec![0.0; n];
+            scalar.shell_quartet_slots(
+                &b, &s, i, j, k, l, site.bra_slot, site.ket_slot, &mut out,
+            );
+            want.push(out);
+        }
+        assert_eq!(scalar.bra_resolves, sites.len() as u64);
+        let mut batched = EriEngine::new();
+        let mut seen = 0usize;
+        batched.shell_quartet_batch(
+            &b,
+            |slot, swap| s.view_by_slot(slot, swap),
+            &sites,
+            |n, block| {
+                assert_eq!(block.len(), want[n].len());
+                for (a, w) in block.iter().zip(&want[n]) {
+                    assert_eq!(a, w, "site {n}: batched block diverged");
+                }
+                seen += 1;
+            },
+        );
+        assert_eq!(seen, sites.len());
+        assert_eq!(batched.bra_resolves, 1, "single-bra batch resolves bra once");
+        assert_eq!(batched.prim_quartets, scalar.prim_quartets);
     }
 }

@@ -9,6 +9,7 @@
 //! [`shellpair::ShellPairStore`] shared (read-only) by every engine
 //! thread.
 
+pub mod batch;
 pub mod boys;
 pub mod eri;
 pub mod hermite;
@@ -18,6 +19,7 @@ pub mod rtensor;
 pub mod schwarz;
 pub mod shellpair;
 
+pub use batch::{quartet_class, QuartetBatch, QuartetSite};
 pub use eri::EriEngine;
 pub use pairlist::{
     ClippedKetWalk, KetWalk, PairWalk, RoundView, ShardingReport, SortedPairList,

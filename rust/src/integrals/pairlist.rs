@@ -67,8 +67,22 @@
 //! segments partition each bra's two-key survivor set — every quartet
 //! is computed in exactly one round.
 
+use crate::basis::ShellKind;
+
 use super::schwarz::{PairDensityMax, SchwarzScreen};
 use super::shellpair::{PairView, ShellPairStore, StoreShard};
+
+/// Deterministic ordinal of a [`ShellKind`] — the key the dense
+/// pair-class ids are derived from (see [`SortedPairList::pair_class`]).
+#[inline]
+fn kind_ordinal(k: ShellKind) -> u8 {
+    match k {
+        ShellKind::S => 0,
+        ShellKind::P => 1,
+        ShellKind::D => 2,
+        ShellKind::Sp => 3,
+    }
+}
 
 /// One surviving shell pair: canonical indices (i ≥ j), its Schwarz
 /// bound, and its precomputed-table slot in the [`ShellPairStore`].
@@ -115,6 +129,17 @@ pub struct SortedPairList {
     /// All ranks sorted by (i, j) — the outer-traversal template the
     /// per-build [`PairWalk`] filters (see module docs).
     ij_order: Vec<u32>,
+    /// `class_of[rank]` — dense angular-momentum pair-class id of the
+    /// pair at `rank` (stamped at build time). Two pairs share a class
+    /// iff their canonical `(ShellKind, ShellKind)` tuples match, so a
+    /// same-class quartet batch has uniform block dimensions and
+    /// segment structure.
+    class_of: Vec<u8>,
+    /// Dense class id → canonical `(kind_i, kind_j)` of its pairs,
+    /// ordered by [`kind_ordinal`] — deterministic across builds.
+    class_kinds: Vec<(ShellKind, ShellKind)>,
+    /// Dense class id → listed-pair population.
+    class_counts: Vec<u64>,
 }
 
 impl SortedPairList {
@@ -155,7 +180,76 @@ impl SortedPairList {
             let e = &entries[r as usize];
             (e.i, e.j)
         });
-        SortedPairList { n_shells: n, tau: screen.tau, entries, qs, ij_order }
+        // Stamp each surviving pair with its angular-momentum class.
+        // Keys are (kind_i, kind_j) ordinal tuples of the canonical
+        // pair; dense ids are assigned in ascending key order over the
+        // classes actually present, so the id assignment (and every
+        // batch bucket downstream) is deterministic.
+        let keys: Vec<u8> = entries
+            .iter()
+            .map(|e| {
+                let ki = kind_ordinal(store.shell_kind(e.i as usize));
+                let kj = kind_ordinal(store.shell_kind(e.j as usize));
+                ki * 4 + kj
+            })
+            .collect();
+        let mut present: Vec<u8> = keys.clone();
+        present.sort_unstable();
+        present.dedup();
+        let class_of: Vec<u8> = keys
+            .iter()
+            .map(|k| present.binary_search(k).expect("key is present") as u8)
+            .collect();
+        let class_kinds: Vec<(ShellKind, ShellKind)> = present
+            .iter()
+            .map(|&key| {
+                let decode = |o: u8| match o {
+                    0 => ShellKind::S,
+                    1 => ShellKind::P,
+                    2 => ShellKind::D,
+                    _ => ShellKind::Sp,
+                };
+                (decode(key / 4), decode(key % 4))
+            })
+            .collect();
+        let mut class_counts = vec![0u64; class_kinds.len()];
+        for &c in &class_of {
+            class_counts[c as usize] += 1;
+        }
+        SortedPairList {
+            n_shells: n,
+            tau: screen.tau,
+            entries,
+            qs,
+            ij_order,
+            class_of,
+            class_kinds,
+            class_counts,
+        }
+    }
+
+    /// Number of distinct angular-momentum pair classes among the
+    /// listed pairs.
+    #[inline]
+    pub fn n_pair_classes(&self) -> usize {
+        self.class_kinds.len()
+    }
+
+    /// Dense pair-class id of the pair at `rank`.
+    #[inline]
+    pub fn pair_class(&self, rank: usize) -> usize {
+        self.class_of[rank] as usize
+    }
+
+    /// Canonical `(kind_i, kind_j)` of dense class `c`.
+    #[inline]
+    pub fn class_kinds(&self, c: usize) -> (ShellKind, ShellKind) {
+        self.class_kinds[c]
+    }
+
+    /// Listed-pair population per dense class id.
+    pub fn class_counts(&self) -> &[u64] {
+        &self.class_counts
     }
 
     /// Number of listed (surviving) pairs.
@@ -239,7 +333,10 @@ impl SortedPairList {
             + n_pairs
                 * (std::mem::size_of::<PairEntry>()
                     + std::mem::size_of::<f64>()
-                    + std::mem::size_of::<u32>())
+                    + std::mem::size_of::<u32>()
+                    // The per-pair class stamp (`class_of`). The dense
+                    // class tables are O(n_classes) ≤ 16 — negligible.
+                    + std::mem::size_of::<u8>())
     }
 
     /// Early-exit loop bound of bra rank `rij` at an explicit *scalar*

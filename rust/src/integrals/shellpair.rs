@@ -21,7 +21,7 @@
 //! served: a swapped view ([`PairView`]) transposes the E-table index
 //! strides instead of copying, using E_t^{ij}(a,A;b,B) = E_t^{ji}(b,B;a,A).
 
-use crate::basis::BasisSet;
+use crate::basis::{BasisSet, ShellKind};
 
 use super::hermite::build_e;
 use super::schwarz::pair_index;
@@ -331,6 +331,13 @@ pub struct ShellPairStore {
     tables: Vec<PairTables>,
     n_prim_pairs: usize,
     bytes: usize,
+    /// Per-shell angular-momentum kind, copied from the basis at build
+    /// time so downstream consumers (the pair-class stamping in
+    /// [`super::pairlist::SortedPairList`]) can classify pairs without
+    /// holding the basis. O(n_shells) metadata — deliberately excluded
+    /// from `bytes()`/`estimate_bytes()`, which count only the pair
+    /// tables the sharding machinery partitions.
+    shell_kinds: Vec<ShellKind>,
     /// Fingerprint of the basis this store was built from.
     fingerprint: u64,
 }
@@ -384,8 +391,15 @@ impl ShellPairStore {
             tables,
             n_prim_pairs,
             bytes,
+            shell_kinds: basis.shells.iter().map(|s| s.kind).collect(),
             fingerprint: basis_fingerprint(basis),
         }
+    }
+
+    /// Angular-momentum kind of shell `s` (recorded at build time).
+    #[inline]
+    pub fn shell_kind(&self, s: usize) -> ShellKind {
+        self.shell_kinds[s]
     }
 
     /// Tables for shell pair (a, b) in either order, or `None` if the

@@ -16,6 +16,7 @@ use khf::cluster::{
     Straggler,
 };
 use khf::coordinator::{mini_stats, report, stats_for_system};
+use khf::hf::hetero_fock::HeteroFock;
 use khf::hf::memmodel::{self, EngineKind};
 use khf::hf::mpi_only::MpiOnlyFock;
 use khf::hf::private_fock::PrivateFock;
@@ -55,10 +56,18 @@ fn print_help() {
          commands:\n\
            info                              paper system inventory\n\
            scf --mol <h2|h2o|ch4|c6h6> [--basis <sto-3g|6-31g|6-31g*>]\n\
-               [--engine serial|mpi|private|shared|xla]\n\
+               [--engine serial|mpi|private|shared|hetero|xla]\n\
                [--ranks N] [--threads N]     run RHF\n\
                [--no-incremental] [--rebuild-every N] [--tau T]\n\
                                              incremental (ΔD) Fock-build controls\n\
+               [--batch-size N]              per-class quartet batch capacity for\n\
+                                             the fill-and-flush drain (default 32;\n\
+                                             hetero's offload artifact is\n\
+                                             shape-specialized to it)\n\
+               [--populous-threshold N]      hetero split policy: classes whose\n\
+                                             dense quartet population reaches N\n\
+                                             offload as blocked batches, the rest\n\
+                                             and the ragged tail stay on the host\n\
                [--shard-store [N]]           shard the shell-pair store across the\n\
                                              virtual ranks (default N = --ranks;\n\
                                              per-shard bytes + DLB stats reported)\n\
@@ -154,7 +163,7 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
     } else {
         args.parse_or("shard-store", 0usize)?
     };
-    if shard_store > 0 && matches!(engine, "mpi" | "private" | "shared") {
+    if shard_store > 0 && matches!(engine, "mpi" | "private" | "shared" | "hetero") {
         anyhow::ensure!(
             shard_store == ranks,
             "--shard-store {shard_store} must equal --ranks {ranks} for the {engine} engine"
@@ -179,6 +188,8 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
         "--inject-fail requires --ring-exchange (only the systolic ring self-heals)"
     );
 
+    let batch_size: usize = args.parse_or("batch-size", khf::hf::DEFAULT_BATCH_SIZE)?;
+    anyhow::ensure!(batch_size > 0, "--batch-size must be positive");
     let driver = RhfDriver {
         incremental: !args.flag("no-incremental"),
         rebuild_every: args.parse_or("rebuild-every", 8)?,
@@ -187,6 +198,7 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
         ring_exchange,
         ring_overlap,
         inject_fail,
+        batch_size,
         ..RhfDriver::default()
     };
     let res = match engine {
@@ -194,6 +206,13 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
         "mpi" => driver.run(&mol, basis, &mut MpiOnlyFock::new(ranks))?,
         "private" => driver.run(&mol, basis, &mut PrivateFock::new(ranks, threads))?,
         "shared" => driver.run(&mol, basis, &mut SharedFock::new(ranks, threads))?,
+        "hetero" => {
+            let mut b = HeteroFock::new(ranks, threads);
+            if let Some(t) = args.get("populous-threshold") {
+                b = b.with_populous_threshold(t.parse()?);
+            }
+            driver.run(&mol, basis, &mut b)?
+        }
         "xla" => {
             let b = khf::basis::BasisSet::assemble(&mol, basis)?;
             // One store serves both the dense ERI tabulation and the SCF.
@@ -330,6 +349,26 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
             last.walk_candidates,
             last.quartets_computed,
         );
+        // Class-batch drain observability. The flushed/tail counters
+        // partition the computed set exactly (flushed·batch + tail =
+        // computed per build); accel counts the full batches the hetero
+        // engine ran on the PJRT blockjk artifact (0 = host fallback).
+        if first.batches_flushed + first.tail_quartets > 0 {
+            let classes_hit =
+                first.class_quartets.iter().filter(|&&c| c > 0).count();
+            println!(
+                "  class batches: {} flushed x {batch_size} + {} tail (first iter) -> \
+                 {} x {batch_size} + {} (final iter); {} accel batches; \
+                 {}/{} quartet classes populated",
+                first.batches_flushed,
+                first.tail_quartets,
+                last.batches_flushed,
+                last.tail_quartets,
+                first.accel_batches,
+                classes_hit,
+                first.class_quartets.len(),
+            );
+        }
     }
     Ok(())
 }

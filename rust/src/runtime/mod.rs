@@ -6,7 +6,7 @@
 pub mod fock_xla;
 pub mod pjrt;
 
-pub use fock_xla::XlaFockBuilder;
+pub use fock_xla::{BlockJk, XlaFockBuilder};
 pub use pjrt::Runtime;
 
 /// Artifact size grid: molecules are zero-padded up to the next size

@@ -73,6 +73,10 @@ pub struct RhfDriver {
     /// energy exactly. The spelling is normalized into range (`rank
     /// mod n`, `round` clamped to the last round).
     pub inject_fail: Option<(usize, usize)>,
+    /// Per-class quartet batch capacity for the engines' fill-and-flush
+    /// drain (and the heterogeneous engine's offload unit, whose PJRT
+    /// artifact is shape-specialized to this size).
+    pub batch_size: usize,
 }
 
 impl Default for RhfDriver {
@@ -88,6 +92,7 @@ impl Default for RhfDriver {
             ring_exchange: false,
             ring_overlap: false,
             inject_fail: None,
+            batch_size: crate::hf::DEFAULT_BATCH_SIZE,
         }
     }
 }
@@ -280,13 +285,15 @@ impl RhfDriver {
             let ctx = match &sharding {
                 Some(sh) => {
                     let ctx =
-                        FockContext::with_sharding(basis, &store, &screen, &pairs, bd, sh);
+                        FockContext::with_sharding(basis, &store, &screen, &pairs, bd, sh)
+                            .with_batch_size(self.batch_size);
                     match self.inject_fail {
                         Some((rank, round)) => ctx.inject_failure(rank, round),
                         None => ctx,
                     }
                 }
-                None => FockContext::new(basis, &store, &screen, &pairs, bd),
+                None => FockContext::new(basis, &store, &screen, &pairs, bd)
+                    .with_batch_size(self.batch_size),
             };
             let g_build = builder.build_2e(&ctx);
             drop(ctx);

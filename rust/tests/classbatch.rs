@@ -1,0 +1,132 @@
+//! Integration: the class-batch invariants the refactor rests on.
+//!
+//! 1. Bucketing is a partition — every surviving quartet of the walk
+//!    lands in exactly one class bucket (its `quartet_class`), nothing
+//!    is dropped or duplicated.
+//! 2. The flush accounting partitions the visited set exactly for
+//!    every engine: `batches_flushed · batch_size + tail_quartets ==
+//!    n_visited`, with the per-class histogram summing to the same
+//!    total.
+
+use khf::basis::{BasisName, BasisSet};
+use khf::chem::molecules;
+use khf::hf::hetero_fock::HeteroFock;
+use khf::hf::mpi_only::MpiOnlyFock;
+use khf::hf::private_fock::PrivateFock;
+use khf::hf::quartets::for_each_surviving;
+use khf::hf::serial::SerialFock;
+use khf::hf::shared_fock::SharedFock;
+use khf::hf::{FockBuilder, FockContext};
+use khf::integrals::{
+    quartet_class, QuartetBatch, QuartetSite, SchwarzScreen, ShellPairStore, SortedPairList,
+};
+use khf::linalg::Matrix;
+
+fn setup(
+    mol: &khf::chem::Molecule,
+) -> (BasisSet, ShellPairStore, SchwarzScreen, SortedPairList) {
+    let basis = BasisSet::assemble(mol, BasisName::Sto3g).unwrap();
+    let store = ShellPairStore::build(&basis);
+    let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+    let pairs = SortedPairList::build(&screen, &store);
+    (basis, store, screen, pairs)
+}
+
+#[test]
+fn every_surviving_quartet_lands_in_exactly_one_bucket() {
+    let mol = molecules::benzene();
+    let (basis, store, screen, pairs) = setup(&mol);
+    let d = Matrix::identity(basis.n_bf);
+    let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
+    let n_visited = ctx.walk.n_visited() as usize;
+    assert!(n_visited > 0);
+
+    // Capacity = the whole visited set, so nothing ever auto-flushes:
+    // the final bucket contents are exactly the partition.
+    let m = pairs.n_pair_classes();
+    let mut batch = QuartetBatch::new(m * m, n_visited);
+    let mut expected = vec![0usize; m * m];
+    for_each_surviving(&ctx.walk, |rij, rkl| {
+        let c = quartet_class(&pairs, rij, rkl);
+        // The dense id is composed from the two pair classes.
+        assert_eq!(c, pairs.pair_class(rij) * m + pairs.pair_class(rkl));
+        expected[c] += 1;
+        let bra = pairs.entry(rij);
+        let ket = pairs.entry(rkl);
+        let full = batch.push(
+            c,
+            QuartetSite {
+                i: bra.i,
+                j: bra.j,
+                k: ket.i,
+                l: ket.j,
+                bra_slot: bra.slot,
+                ket_slot: ket.slot,
+            },
+        );
+        assert!(!full, "capacity covers the whole set — no bucket may fill");
+    });
+
+    // Partition: per-class counts match the walk's histogram and the
+    // bucket total is the visited total — each quartet in exactly one
+    // bucket, none dropped.
+    assert_eq!(batch.len_total(), n_visited);
+    for (c, &want) in expected.iter().enumerate() {
+        assert_eq!(batch.bucket(c).len(), want, "class {c}");
+        // Same-class means same block shape: every site in the bucket
+        // shares the (bra, ket) shell-kind signature, which is what
+        // lets one scratch setup serve the whole bucket.
+        let sig = |s: &QuartetSite| {
+            (
+                basis.shells[s.i as usize].kind,
+                basis.shells[s.j as usize].kind,
+                basis.shells[s.k as usize].kind,
+                basis.shells[s.l as usize].kind,
+            )
+        };
+        if let Some(first) = batch.bucket(c).first() {
+            let want_sig = sig(first);
+            assert!(batch.bucket(c).iter().all(|s| sig(s) == want_sig), "class {c}");
+        }
+    }
+    // At least two classes must be populated on benzene (s and sp
+    // shells both survive) or the bucketing is degenerate.
+    assert!(expected.iter().filter(|&&e| e > 0).count() >= 2);
+}
+
+#[test]
+fn flush_accounting_partitions_n_visited_for_every_engine() {
+    let mol = molecules::water();
+    let (basis, store, screen, pairs) = setup(&mol);
+    let d = Matrix::identity(basis.n_bf);
+    // A small batch size so full-capacity flushes actually happen.
+    let batch_size = 4;
+    let ctx =
+        FockContext::new(&basis, &store, &screen, &pairs, &d).with_batch_size(batch_size);
+    let n_visited = ctx.walk.n_visited();
+
+    let mut engines: Vec<(&str, Box<dyn FockBuilder>)> = vec![
+        ("serial", Box::new(SerialFock::new())),
+        ("mpi", Box::new(MpiOnlyFock::new(2))),
+        ("private", Box::new(PrivateFock::new(2, 2))),
+        ("shared", Box::new(SharedFock::new(2, 2))),
+        ("hetero", Box::new(HeteroFock::new(2, 2))),
+        ("hetero-host", Box::new(HeteroFock::new(2, 2).with_populous_threshold(u64::MAX))),
+    ];
+    for (name, builder) in engines.iter_mut() {
+        let _ = builder.build_2e(&ctx);
+        let s = builder.last_stats();
+        assert_eq!(s.quartets_computed, n_visited, "{name}");
+        assert_eq!(
+            s.batches_flushed * batch_size as u64 + s.tail_quartets,
+            n_visited,
+            "{name}: flush accounting must partition the visited set"
+        );
+        assert!(s.batches_flushed > 0, "{name}: batch size {batch_size} must fill buckets");
+        assert_eq!(
+            s.class_quartets.iter().sum::<u64>(),
+            n_visited,
+            "{name}: class histogram must cover every computed quartet"
+        );
+    }
+}

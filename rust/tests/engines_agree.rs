@@ -1,12 +1,14 @@
-//! Integration: the paper's three parallel engines must produce
-//! *identical physics* to the serial reference through full SCF — the
-//! strongest end-to-end correctness statement (any race, routing error
-//! or missed flush shifts the energy). The incremental (ΔD) driver path
-//! is held to the same bar: every engine's incremental SCF must match
-//! the serial full-rebuild reference to 1e-8.
+//! Integration: the four parallel engines must produce *identical
+//! physics* to the serial reference through full SCF — the strongest
+//! end-to-end correctness statement (any race, routing error or missed
+//! flush shifts the energy). The incremental (ΔD) driver path is held
+//! to the same bar: every engine's incremental SCF must match the
+//! serial full-rebuild reference to 1e-8, in every store mode (flat /
+//! sharded / ring / ring-overlap).
 
 use khf::basis::{BasisName, BasisSet};
 use khf::chem::molecules;
+use khf::hf::hetero_fock::HeteroFock;
 use khf::hf::mpi_only::MpiOnlyFock;
 use khf::hf::private_fock::PrivateFock;
 use khf::hf::serial::SerialFock;
@@ -25,7 +27,10 @@ fn full_scf_energy_identical_across_engines() {
     let e_mpi = driver.run(&mol, BasisName::Sto3g, &mut MpiOnlyFock::new(3)).unwrap();
     let e_prf = driver.run(&mol, BasisName::Sto3g, &mut PrivateFock::new(2, 3)).unwrap();
     let e_shf = driver.run(&mol, BasisName::Sto3g, &mut SharedFock::new(2, 3)).unwrap();
-    for (name, e) in [("mpi", &e_mpi), ("private", &e_prf), ("shared", &e_shf)] {
+    let e_het = driver.run(&mol, BasisName::Sto3g, &mut HeteroFock::new(2, 3)).unwrap();
+    for (name, e) in
+        [("mpi", &e_mpi), ("private", &e_prf), ("shared", &e_shf), ("hetero", &e_het)]
+    {
         assert!(
             (e.energy - e_serial.energy).abs() < 1e-9,
             "{name}: {} vs serial {}",
@@ -55,6 +60,7 @@ fn incremental_scf_matches_serial_full_rebuild_all_engines() {
             ("mpi", Box::new(MpiOnlyFock::new(3))),
             ("private", Box::new(PrivateFock::new(2, 2))),
             ("shared", Box::new(SharedFock::new(2, 2))),
+            ("hetero", Box::new(HeteroFock::new(2, 2))),
         ];
         for (name, builder) in engines.iter_mut() {
             let r = incr_driver.run(&mol, BasisName::Sto3g, builder.as_mut()).unwrap();
@@ -66,6 +72,77 @@ fn incremental_scf_matches_serial_full_rebuild_all_engines() {
                 r.energy,
                 reference.energy
             );
+        }
+    }
+}
+
+#[test]
+fn five_engines_agree_across_store_modes() {
+    // The class-batched drain must not move the physics in ANY store
+    // mode: all five engines (2 ranks × 2 threads where applicable, so
+    // the sharded modes' rank == shard constraint holds) against the
+    // serial full-rebuild reference, in flat, bra-sharded, ring and
+    // overlapped-ring mode. Water runs the full 5×4 matrix; benzene
+    // pins the new hetero engine (and the serial baseline) in every
+    // mode — the acceptance criterion's 1e-8 energy bar.
+    let modes: [(&str, RhfDriver); 4] = [
+        ("flat", RhfDriver::default()),
+        ("sharded", RhfDriver { shard_store: 2, ..Default::default() }),
+        (
+            "ring",
+            RhfDriver { shard_store: 2, ring_exchange: true, ..Default::default() },
+        ),
+        (
+            "ring-overlap",
+            RhfDriver {
+                shard_store: 2,
+                ring_exchange: true,
+                ring_overlap: true,
+                ..Default::default()
+            },
+        ),
+    ];
+    for (mol, full_matrix) in [(molecules::water(), true), (molecules::benzene(), false)] {
+        let reference = RhfDriver { incremental: false, ..Default::default() }
+            .run(&mol, BasisName::Sto3g, &mut SerialFock::new())
+            .unwrap();
+        assert!(reference.converged, "{}: reference did not converge", mol.name);
+        for (mode, driver) in &modes {
+            let mut engines: Vec<(&str, Box<dyn FockBuilder>)> = if full_matrix {
+                vec![
+                    ("serial", Box::new(SerialFock::new())),
+                    ("mpi", Box::new(MpiOnlyFock::new(2))),
+                    ("private", Box::new(PrivateFock::new(2, 2))),
+                    ("shared", Box::new(SharedFock::new(2, 2))),
+                    ("hetero", Box::new(HeteroFock::new(2, 2))),
+                ]
+            } else {
+                vec![
+                    ("serial", Box::new(SerialFock::new())),
+                    ("hetero", Box::new(HeteroFock::new(2, 2))),
+                ]
+            };
+            for (name, builder) in engines.iter_mut() {
+                let r = driver.run(&mol, BasisName::Sto3g, builder.as_mut()).unwrap();
+                assert!(r.converged, "{}/{mode}/{name}: did not converge", mol.name);
+                assert!(
+                    (r.energy - reference.energy).abs() < 1e-8,
+                    "{}/{mode}/{name}: {} vs serial full rebuild {}",
+                    mol.name,
+                    r.energy,
+                    reference.energy
+                );
+                // The flush accounting must partition every build's
+                // visited set, in every mode.
+                for (k, s) in r.build_stats.iter().enumerate() {
+                    assert_eq!(
+                        s.batches_flushed * driver.batch_size as u64 + s.tail_quartets,
+                        s.quartets_computed,
+                        "{}/{mode}/{name} build {k}: flush accounting broken",
+                        mol.name
+                    );
+                }
+            }
         }
     }
 }
