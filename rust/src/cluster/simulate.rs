@@ -76,6 +76,14 @@ pub struct Machine {
     /// ([`overlapped_ring_pass`](super::costmodel::overlapped_ring_pass))
     /// instead of the serial `(n_ranks − 1)·comm` charge.
     pub ring_overlap: bool,
+    /// LinK-style significance lists: the memory gate charges the
+    /// per-bra ket lists (offsets + one u32 per surviving quartet,
+    /// [`SigLists::estimate_bytes_for`](crate::integrals::SigLists::estimate_bytes_for))
+    /// alongside the pair list, and the scheduler orders tasks by
+    /// their NRI weight — longest remaining-integral list first (LPT
+    /// discipline, HONPAS) — in the non-ring paths. Ring schedules are
+    /// never reordered: a ring task's round is positional.
+    pub link_lists: bool,
 }
 
 impl Machine {
@@ -94,6 +102,7 @@ impl Machine {
             shard_store: false,
             ring_exchange: false,
             ring_overlap: false,
+            link_lists: false,
         }
     }
 
@@ -226,12 +235,21 @@ fn thread_slow(m: &Machine, cost: &CostModel, bytes_per_node: f64, shared_traffi
 /// Schedule one duration stream: closed-form list schedule, or the
 /// discrete-event core when DES options are present.
 fn schedule_tasks(
-    durations: Vec<f64>,
+    mut durations: Vec<f64>,
     ranks: usize,
     per_task: f64,
     opts: Option<&DesOptions>,
     ring: Option<RingSpec>,
+    lpt: bool,
 ) -> (f64, Vec<f64>, Option<DesOutcome>) {
+    // NRI/LPT discipline under significance lists: issue the heaviest
+    // tasks first (the per-task cost is the simulator's NRI proxy —
+    // both count the surviving ket work). Non-ring paths only: a ring
+    // task's (shard, round) residency is positional in the stream, so
+    // reordering there would ship blocks to the wrong rounds.
+    if lpt && ring.is_none() {
+        durations.sort_by(|a, b| b.total_cmp(a));
+    }
     match opts {
         None => {
             let (mk, busy) = list_schedule(durations.into_iter(), ranks, per_task);
@@ -299,9 +317,20 @@ fn simulate_inner(
     // per-rank-count partition.
     let overlap = m.ring_overlap;
     let ring = m.ring_exchange || overlap;
-    let pairlist_bytes = crate::integrals::SortedPairList::estimate_bytes_for(
+    let mut pairlist_bytes = crate::integrals::SortedPairList::estimate_bytes_for(
         stats.pairs.len(),
     ) as f64;
+    if m.link_lists {
+        // Significance lists ride with the pair list in every store
+        // mode: CSR offsets over the surviving bras plus one u32 per
+        // listed quartet. The survivor count is an upper bound on the
+        // list entries (lists ⊆ the two-key set), so the gate charges
+        // a sound ceiling.
+        pairlist_bytes += crate::integrals::SigLists::estimate_bytes_for(
+            stats.pairs.len(),
+            stats.total_quartets,
+        ) as f64;
+    }
     let shard_order = (m.shard_store || ring).then(|| stats.shard_order());
     let store_per_node = |nodes: usize, ranks_per_node: usize| -> f64 {
         match &shard_order {
@@ -437,7 +466,14 @@ fn simulate_inner(
                 (w + screen_cost) * ns * slow
             });
             let (mk, busy, out) =
-                schedule_tasks(durations.collect(), ranks, m.net.dlb_rtt, opts.as_ref(), ring_spec);
+                schedule_tasks(
+                durations.collect(),
+                ranks,
+                m.net.dlb_rtt,
+                opts.as_ref(),
+                ring_spec,
+                m.link_lists,
+            );
             rank_busy = busy;
             des_out = out;
             bd.compute = stats.total_cost_ns * ns * slow / ranks as f64;
@@ -469,7 +505,14 @@ fn simulate_inner(
                     + (i + 1) as f64 * (i + 1) as f64 * m.sync.chunk_claim / t
             });
             let (mk, busy, out) =
-                schedule_tasks(durations.collect(), ranks, m.net.dlb_rtt, opts.as_ref(), ring_spec);
+                schedule_tasks(
+                durations.collect(),
+                ranks,
+                m.net.dlb_rtt,
+                opts.as_ref(),
+                ring_spec,
+                m.link_lists,
+            );
             rank_busy = busy;
             des_out = out;
             bd.compute = stats.total_cost_ns * ns * slow / (ranks as f64 * t);
@@ -513,7 +556,14 @@ fn simulate_inner(
                     + (p.ordinal + 1) as f64 * m.sync.chunk_claim / t
             });
             let (mk, busy, out) =
-                schedule_tasks(durations.collect(), ranks, m.net.dlb_rtt, opts.as_ref(), ring_spec);
+                schedule_tasks(
+                durations.collect(),
+                ranks,
+                m.net.dlb_rtt,
+                opts.as_ref(),
+                ring_spec,
+                m.link_lists,
+            );
             rank_busy = busy;
             des_out = out;
             // Prescreened pairs cost one DLB pull each, spread evenly.
@@ -860,6 +910,49 @@ mod tests {
             heavy.fock_seconds,
             det.fock_seconds
         );
+    }
+
+    #[test]
+    fn link_lists_charge_bytes_and_lpt_keeps_des_exact() {
+        let stats = small_stats();
+        let cost = CostModel::fallback_631gd();
+        let plain_m = Machine::theta_hybrid(8);
+        let mut linked_m = plain_m.clone();
+        linked_m.link_lists = true;
+        let plain = simulate(EngineKind::SharedFock, &stats, &plain_m, &cost);
+        let linked = simulate(EngineKind::SharedFock, &stats, &linked_m, &cost);
+        // The lists are charged against the node memory gate...
+        assert!(
+            linked.store_bytes_per_node > plain.store_bytes_per_node,
+            "lists must cost bytes: {} !> {}",
+            linked.store_bytes_per_node,
+            plain.store_bytes_per_node
+        );
+        assert!(linked.feasible);
+        // ...and LPT reordering moves no work, only its placement.
+        assert_eq!(linked.breakdown.compute, plain.breakdown.compute);
+        // The event core replays the same (sorted) stream bit-for-bit.
+        let event = simulate_des(
+            EngineKind::SharedFock,
+            &stats,
+            &linked_m,
+            &cost,
+            DesOptions::default(),
+        );
+        assert!(
+            (linked.fock_seconds - event.fock_seconds).abs()
+                <= 1e-12 * linked.fock_seconds.max(1e-30),
+            "closed {} vs DES {}",
+            linked.fock_seconds,
+            event.fock_seconds
+        );
+        // Ring machines never reorder (round residency is positional):
+        // the linked ring run must still schedule and stay feasible.
+        let mut ringed = linked_m.clone();
+        ringed.ring_exchange = true;
+        let r = simulate(EngineKind::SharedFock, &stats, &ringed, &cost);
+        assert!(r.feasible);
+        assert!(r.breakdown.ring_pass_seconds > 0.0);
     }
 
     #[test]

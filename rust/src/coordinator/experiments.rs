@@ -186,6 +186,19 @@ pub fn mini_stats(atoms_per_layer: usize, cost: &CostModel) -> anyhow::Result<Sy
     Ok(build_stats("mini", &basis, &screen, cost))
 }
 
+/// Workload statistics for an arbitrary molecule — the `sheet:N` /
+/// `bilayer:N` graphene scaling series and any other ad-hoc geometry.
+/// Real Schwarz bounds, built on the fly like [`mini_stats`] (no disk
+/// cache: the label is caller-chosen and cannot key one safely).
+pub fn stats_for_molecule(
+    mol: &crate::chem::Molecule,
+    cost: &CostModel,
+) -> anyhow::Result<SystemStats> {
+    let basis = BasisSet::assemble(mol, BasisName::SixThirtyOneGd)?;
+    let screen = SchwarzScreen::build(&basis, SchwarzScreen::DEFAULT_TAU);
+    Ok(build_stats(&mol.name, &basis, &screen, cost))
+}
+
 /// Statistics for every paper system (0.5–5.0 nm). Heavy: use from
 /// benches, not tests.
 pub fn paper_stats(cost: &CostModel) -> anyhow::Result<Vec<SystemStats>> {

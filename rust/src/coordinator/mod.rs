@@ -6,4 +6,4 @@ pub mod experiments;
 pub mod report;
 
 pub use bench_json::BenchJson;
-pub use experiments::{mini_stats, paper_stats, stats_for_system};
+pub use experiments::{mini_stats, paper_stats, stats_for_molecule, stats_for_system};

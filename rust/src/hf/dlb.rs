@@ -25,6 +25,7 @@
 //!   a different clipped ket block), with stealing confined to the
 //!   current round so the systolic pass stays synchronized.
 
+use std::borrow::Cow;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use crate::integrals::{PairWalk, StoreSharding};
@@ -401,11 +402,28 @@ impl RingHandoff {
 #[derive(Debug)]
 pub enum WalkDlb<'a> {
     /// Replicated store: one global counter over the walk's task list.
-    Flat { tasks: &'a [u32], counter: DlbCounter },
+    /// Borrowed straight from the walk in two-key mode; an owned,
+    /// NRI-sorted copy in list-backed mode (see [`WalkDlb::with_failure`]).
+    Flat { tasks: Cow<'a, [u32]>, counter: DlbCounter },
     /// Bra-sharded store (node-shared ket prefix): work stealing.
     Sharded(ShardedDlb),
     /// Ring exchange: (bra task, round) units, steal-within-round.
     Ring(RingDlb),
+}
+
+/// Order `tasks` for hand-out. Two-key walks keep the walk's
+/// (i, j)-grouped order — uniform segment bounds make it balanced
+/// enough, and the shared-Fock lazy `F_I` flush frequency rides on the
+/// grouping. **List-backed** walks re-sort descending by NRI (each
+/// bra's significant-list length, [`PairWalk::nri`]) — the HONPAS
+/// longest-processing-time discipline: per-shell lists are wildly
+/// skewed on sparse systems, and handing the heavy bras out first keeps
+/// the counter's tail from serializing on one giant task. The sort is
+/// stable, so equal-NRI bras keep their (i, j) grouping.
+fn order_tasks(walk: &PairWalk, tasks: &mut [u32]) {
+    if walk.is_list_backed() {
+        tasks.sort_by_key(|&r| std::cmp::Reverse(walk.nri(r as usize)));
+    }
 }
 
 impl<'a> WalkDlb<'a> {
@@ -418,6 +436,13 @@ impl<'a> WalkDlb<'a> {
 
     /// Like [`WalkDlb::new`] with an injected rank failure for the ring
     /// discipline (ignored — there is no ring to heal — otherwise).
+    ///
+    /// List-backed walks get NRI-weighted task keys: every discipline's
+    /// hand-out lists are sorted heaviest-first (see [`order_tasks`]).
+    /// Reordering is safe in every mode — flat and sharded claims carry
+    /// no per-task state beyond the rank, and a ring task's ket clip
+    /// depends only on its *home shard* and the round, never on its
+    /// position in the shard's list.
     pub fn with_failure(
         walk: &'a PairWalk<'a>,
         sharding: Option<&StoreSharding>,
@@ -425,10 +450,24 @@ impl<'a> WalkDlb<'a> {
     ) -> WalkDlb<'a> {
         match sharding {
             Some(sh) if sh.is_ring() => {
-                WalkDlb::Ring(RingDlb::with_failure(sh.partition_tasks(walk), fail))
+                let mut tasks = sh.partition_tasks(walk);
+                tasks.iter_mut().for_each(|t| order_tasks(walk, t));
+                WalkDlb::Ring(RingDlb::with_failure(tasks, fail))
             }
-            Some(sh) => WalkDlb::Sharded(ShardedDlb::new(sh.partition_tasks(walk))),
-            None => WalkDlb::Flat { tasks: walk.task_list(), counter: DlbCounter::new() },
+            Some(sh) => {
+                let mut tasks = sh.partition_tasks(walk);
+                tasks.iter_mut().for_each(|t| order_tasks(walk, t));
+                WalkDlb::Sharded(ShardedDlb::new(tasks))
+            }
+            None if walk.is_list_backed() => {
+                let mut tasks = walk.task_list().to_vec();
+                order_tasks(walk, &mut tasks);
+                WalkDlb::Flat { tasks: Cow::Owned(tasks), counter: DlbCounter::new() }
+            }
+            None => WalkDlb::Flat {
+                tasks: Cow::Borrowed(walk.task_list()),
+                counter: DlbCounter::new(),
+            },
         }
     }
 
@@ -746,7 +785,8 @@ mod tests {
     #[test]
     fn walkdlb_handoff_is_ring_only() {
         let tasks: Vec<u32> = vec![1, 2];
-        let flat = WalkDlb::Flat { tasks: &tasks, counter: DlbCounter::new() };
+        let flat =
+            WalkDlb::Flat { tasks: Cow::Borrowed(&tasks[..]), counter: DlbCounter::new() };
         assert!(flat.handoff(2).is_none());
         assert!(!flat.round_drained(0));
         let _ = flat.claim(0, 0);
@@ -760,7 +800,8 @@ mod tests {
     #[test]
     fn walkdlb_flat_reports_no_shards() {
         let tasks: Vec<u32> = vec![3, 1, 4];
-        let dlb = WalkDlb::Flat { tasks: &tasks, counter: DlbCounter::new() };
+        let dlb =
+            WalkDlb::Flat { tasks: Cow::Borrowed(&tasks[..]), counter: DlbCounter::new() };
         assert_eq!(dlb.n_rounds(), 1);
         assert_eq!(dlb.claim(0, 0), Some((3, 0)));
         assert_eq!(dlb.claim(2, 0), Some((1, 2)), "flat home = claimer");

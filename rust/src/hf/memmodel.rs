@@ -95,7 +95,12 @@ pub fn store_bytes_per_node(store_bytes: f64, ranks_per_node: usize) -> f64 {
 /// process, so both replicate `ranks_per_node` times; the list is a few
 /// tens of bytes per surviving pair (entries + q array + traversal
 /// template) against the store's kilobytes of Hermite tables, so it
-/// rides along essentially for free.
+/// rides along essentially for free. When LinK significance lists are
+/// on, their CSR footprint
+/// ([`SigLists::estimate_bytes_for`](crate::integrals::SigLists::estimate_bytes_for)
+/// — offsets over the bras plus one u32 per listed quartet) is folded
+/// into `pairlist_bytes` by the caller; it replicates and shards
+/// exactly as the pair list does in every mode below.
 pub fn shared_scf_bytes_per_node(
     store_bytes: f64,
     pairlist_bytes: f64,

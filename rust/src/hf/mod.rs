@@ -171,6 +171,20 @@ impl<'a> FockContext<'a> {
         self
     }
 
+    /// Swap the two-key walk for the **list-backed** walk
+    /// ([`SortedPairList::weighted_linked`]): per-shell significant-ket
+    /// lists under the unfactorized bound `Q_ij·Q_kl·quartet_weight > τ`,
+    /// rebuilt for this build's density (ΔD in incremental SCF — the
+    /// lists shrink with the delta exactly like the `Q·w` re-rank).
+    /// Composes with every store mode: the lists are subsets of the
+    /// two-key segments, so sharded-prefix residency and ring-clip
+    /// partitioning hold unchanged, and the engines' claim loop needs no
+    /// changes at all (`--link-lists` on the CLI).
+    pub fn with_link_lists(mut self) -> FockContext<'a> {
+        self.walk = self.pairs.weighted_linked(&self.dmax);
+        self
+    }
+
     /// Like [`FockContext::new`] with a sharded store: the parallel
     /// engines will claim bra tasks shard-locally (work-stealing once a
     /// shard drains) and fetch tables through the shard views.

@@ -22,8 +22,8 @@ pub mod shellpair;
 pub use batch::{quartet_class, QuartetBatch, QuartetSite};
 pub use eri::EriEngine;
 pub use pairlist::{
-    ClippedKetWalk, KetWalk, PairWalk, RoundView, ShardingReport, SortedPairList,
-    StoreSharding,
+    ClippedKetWalk, KetWalk, PairWalk, RoundView, ShardingReport, SigListStats, SigLists,
+    SortedPairList, StoreSharding,
 };
 pub use schwarz::{PairDensityMax, SchwarzScreen};
 pub use shellpair::{ShellPairStore, StoreShard};

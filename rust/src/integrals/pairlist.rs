@@ -420,6 +420,182 @@ impl SortedPairList {
             s_order,
             s_sorted,
             tasks,
+            sig: None,
+        }
+    }
+
+    /// Build a **list-backed** walk (LinK-style per-shell significance
+    /// lists): the two-key walk of [`SortedPairList::weighted`],
+    /// tightened per bra to the kets surviving the *unfactorized*
+    /// Häser–Ahlrichs bound
+    ///
+    /// ```text
+    ///   keep rkl ⟺ Q_ij · Q_kl · quartet_weight(i,j,k,l) > τ
+    /// ```
+    ///
+    /// ([`PairDensityMax::quartet_weight`] — the element/row maxima the
+    /// per-quartet weighted screen uses, not the factorized per-pair
+    /// keys). Because `quartet_weight ≤ max(w_ij, w_kl)` (pinned by
+    /// `pair_weight_factorizes_quartet_weight`), every list is a subset
+    /// of the bra's two-key segment pair, so all prefix/ring residency
+    /// invariants of [`StoreSharding`] carry over unchanged; and because
+    /// `|(ij|kl)| ≤ Q_ij·Q_kl`, the lists still contain every true
+    /// Häser–Ahlrichs survivor — no physics can be lost.
+    ///
+    /// Cost: one bound evaluation per *two-key* survivor at list-build
+    /// time (rebuilt with the density, same cadence as the `Q·w`
+    /// re-rank). The factorized walk exists precisely to avoid
+    /// per-quartet tests in the engines' inner loops; here the test runs
+    /// once per build in one tight pass, and every engine then iterates
+    /// the surviving lists with zero per-quartet screening — on sparse
+    /// systems the elided fraction grows with system size (the
+    /// factorization gap), which is what bends exchange toward O(N).
+    /// `bench_sparsity` measures the trade on a graphene series.
+    pub fn weighted_linked(&self, dmax: &PairDensityMax) -> PairWalk<'_> {
+        let mut walk = self.weighted(dmax);
+        let m = self.entries.len();
+        let tau = self.tau;
+        let mut live = vec![false; m];
+        for &r in &walk.tasks {
+            live[r as usize] = true;
+        }
+        let mut offsets = Vec::with_capacity(m + 1);
+        offsets.push(0u32);
+        let mut kets: Vec<u32> = Vec::new();
+        let mut two_key_visited = 0u64;
+        for r in 0..m {
+            if live[r] {
+                let e = &self.entries[r];
+                let (i, j) = (e.i as usize, e.j as usize);
+                let start = kets.len();
+                for rkl in walk.kets(r).iter() {
+                    two_key_visited += 1;
+                    let ek = &self.entries[rkl];
+                    let w4 = dmax.quartet_weight(i, j, ek.i as usize, ek.j as usize);
+                    if e.q * ek.q * w4 > tau {
+                        kets.push(rkl as u32);
+                    }
+                }
+                // Ascending ket rank per list: store slots are visited
+                // in Q-rank order, which keeps the lookup locality of
+                // the segment-A prefix walks.
+                kets[start..].sort_unstable();
+            }
+            offsets.push(kets.len() as u32);
+        }
+        // A bra whose whole two-key ket set died under the quartet
+        // weight is a dead task now — drop it (preserving the (i, j)
+        // grouping the shared-Fock lazy flush depends on) so the no-
+        // dead-tasks DLB invariant holds for the list-backed walk too.
+        walk.tasks.retain(|&r| {
+            let r = r as usize;
+            offsets[r + 1] > offsets[r]
+        });
+        walk.sig = Some(SigLists { offsets, kets, two_key_visited });
+        walk
+    }
+}
+
+/// LinK-style per-shell significant-ket lists: for every live bra rank,
+/// the ket ranks whose unfactorized bound
+/// `Q_ij·Q_kl·quartet_weight > τ` survives, flattened into one
+/// offsets-plus-values pair (CSR layout). Built per Fock build by
+/// [`SortedPairList::weighted_linked`]; consumed by [`PairWalk::kets`],
+/// which swaps the two binary-searched segments for the bra's list
+/// slice. A list's length is the bra's **NRI** (number of remaining
+/// integrals, per the HONPAS distribution papers) — the DLB's
+/// task-weight key when balancing skewed lists.
+#[derive(Debug, Clone)]
+pub struct SigLists {
+    /// `offsets[rank]..offsets[rank+1]` indexes [`SigLists::list`]'s
+    /// slice in `kets` (length `n_pairs + 1`; empty for dead ranks).
+    offsets: Vec<u32>,
+    /// All lists' ket ranks, concatenated in static-rank order;
+    /// ascending within each list.
+    kets: Vec<u32>,
+    /// Quartets the underlying two-key walk would have visited — the
+    /// baseline the elision is measured against.
+    two_key_visited: u64,
+}
+
+/// Run-level summary of a build's [`SigLists`] for `ScfResult` / the
+/// CLI "sig lists:" line.
+#[derive(Debug, Clone, Copy)]
+pub struct SigListStats {
+    /// Heap footprint of the lists (offsets + flattened kets).
+    pub bytes: usize,
+    /// Σ list lengths = quartets the list-backed walk visits.
+    pub listed: u64,
+    /// Quartets the two-key walk would have visited.
+    pub two_key_visited: u64,
+    /// `two_key_visited − listed` — quartets the unfactorized bound
+    /// elides that the factorized bound could not.
+    pub elided: u64,
+    /// Mean list length over live (non-empty) bras.
+    pub mean_len: f64,
+    /// Longest list (the NRI skew the DLB's weighted keys flatten).
+    pub max_len: usize,
+}
+
+impl SigLists {
+    /// The significant-ket list of static bra rank `rank` (ascending
+    /// ket ranks; empty for dead bras).
+    #[inline]
+    pub fn list(&self, rank: usize) -> &[u32] {
+        &self.kets[self.offsets[rank] as usize..self.offsets[rank + 1] as usize]
+    }
+
+    /// Σ list lengths — the list-backed walk's visited-quartet count.
+    pub fn n_listed(&self) -> u64 {
+        self.kets.len() as u64
+    }
+
+    /// Quartets the two-key walk would have visited for this density.
+    pub fn two_key_visited(&self) -> u64 {
+        self.two_key_visited
+    }
+
+    /// Quartets elided versus the two-key walk.
+    pub fn elided(&self) -> u64 {
+        self.two_key_visited - self.kets.len() as u64
+    }
+
+    /// Heap footprint in bytes (memory-model accounting).
+    pub fn bytes(&self) -> usize {
+        Self::estimate_bytes_for(self.offsets.len().saturating_sub(1), self.kets.len() as u64)
+    }
+
+    /// Footprint of lists over `n_pairs` bras holding `n_entries` ket
+    /// ranks total — the same formula [`SigLists::bytes`] reports, for
+    /// the memory model and simulator, which predict without building.
+    pub fn estimate_bytes_for(n_pairs: usize, n_entries: u64) -> usize {
+        std::mem::size_of::<SigLists>()
+            + (n_pairs + 1) * std::mem::size_of::<u32>()
+            + n_entries as usize * std::mem::size_of::<u32>()
+    }
+
+    /// Summary statistics for reports.
+    pub fn stats(&self) -> SigListStats {
+        let mut max_len = 0usize;
+        let mut nonempty = 0u64;
+        for w in self.offsets.windows(2) {
+            let len = (w[1] - w[0]) as usize;
+            max_len = max_len.max(len);
+            if len > 0 {
+                nonempty += 1;
+            }
+        }
+        SigListStats {
+            bytes: self.bytes(),
+            listed: self.n_listed(),
+            two_key_visited: self.two_key_visited,
+            elided: self.elided(),
+            mean_len: if nonempty > 0 {
+                self.kets.len() as f64 / nonempty as f64
+            } else {
+                0.0
+            },
+            max_len,
         }
     }
 }
@@ -451,6 +627,12 @@ pub struct PairWalk<'a> {
     /// out. Every task has at least one surviving ket (prefix-max
     /// test), so dead bra tasks are impossible by construction.
     tasks: Vec<u32>,
+    /// LinK-style per-shell significant-ket lists (PR 9): when present,
+    /// the walk is *list-backed* — each bra task iterates its compact
+    /// list of ket ranks surviving the **unfactorized** bound
+    /// `Q_ij·Q_kl·quartet_weight(i,j,k,l) > τ` instead of the two
+    /// binary-searched segments. See [`SortedPairList::weighted_linked`].
+    sig: Option<SigLists>,
 }
 
 /// One bra task's surviving-ket iteration space: segment A (a prefix of
@@ -639,8 +821,22 @@ impl<'a> PairWalk<'a> {
     /// The surviving-ket iteration space of bra rank `rij`: two binary
     /// searches (one per key), O(log P). Cheap enough that every worker
     /// thread derives it locally from the claimed rank.
+    ///
+    /// List-backed walks ([`SortedPairList::weighted_linked`]) reuse the
+    /// same iteration contract with degenerate segments: `a_len = 0`,
+    /// `a_full = 0`, and the bra's significant-ket list as the "B"
+    /// candidate order. Every candidate has rank ≤ `rij` (the lists are
+    /// two-key subsets), so every ordinal maps to `Some` — and
+    /// [`KetWalk::clipped`]'s `[lo, hi)` rank filter partitions the
+    /// lists across ring rounds exactly as it does the segments, which
+    /// is why flat/sharded/ring/ring-overlap engines run the list-backed
+    /// walk unchanged.
     #[inline]
     pub fn kets(&self, rij: usize) -> KetWalk<'_> {
+        if let Some(sig) = &self.sig {
+            let l = sig.list(rij);
+            return KetWalk { a_len: 0, a_full: 0, b_len: l.len(), rij, s_order: l };
+        }
         let tau = self.list.tau;
         let sb = self.s[rij];
         let qb = self.list.qs[rij];
@@ -681,9 +877,34 @@ impl<'a> PairWalk<'a> {
     /// plus rejected segment-B candidates. The gap to
     /// [`PairWalk::n_visited`] is the (integer-compare-only) overhead
     /// the two-key exactness costs; `BuildStats.walk_candidates`
-    /// reports it per build.
+    /// reports it per build. List-backed walks have no rejected
+    /// candidates (every list entry is a visit), so the gap is zero.
     pub fn n_candidates(&self) -> u64 {
         self.tasks.iter().map(|&r| self.kets(r as usize).len() as u64).sum()
+    }
+
+    /// Is this walk backed by per-shell significance lists?
+    #[inline]
+    pub fn is_list_backed(&self) -> bool {
+        self.sig.is_some()
+    }
+
+    /// The build's significance lists, when list-backed.
+    pub fn sig(&self) -> Option<&SigLists> {
+        self.sig.as_ref()
+    }
+
+    /// NRI task-weight key of static bra rank `rank` (HONPAS): the
+    /// number of remaining integrals the bra will actually compute.
+    /// List-backed walks report the exact list length; two-key walks
+    /// report the candidate count (an O(log P) upper bound — the DLB
+    /// only sorts by NRI in list-backed mode, where skew is real).
+    #[inline]
+    pub fn nri(&self, rank: usize) -> u64 {
+        match &self.sig {
+            Some(sig) => sig.list(rank).len() as u64,
+            None => self.kets(rank).len() as u64,
+        }
     }
 }
 
@@ -1508,6 +1729,136 @@ mod tests {
         assert_eq!(walk.n_visited(), visited);
         assert!(visited <= list.n_list_quartets());
         assert!(walk.n_candidates() >= walk.n_visited());
+    }
+
+    #[test]
+    fn linked_lists_match_unfactorized_oracle() {
+        // Brute force over every canonical rank pair: the list-backed
+        // walk visits (ra, rb) ⟺ the *unfactorized* bound
+        // Q_a·Q_b·quartet_weight > τ survives — exactly. That set is a
+        // subset of the two-key set (quartet_weight ≤ max(w_a, w_b))
+        // and, since |(ab|cd)| ≤ Q_a·Q_b, a superset of the true
+        // Häser–Ahlrichs survivors.
+        let (basis, store, screen) = setup(&molecules::benzene(), 1e-9);
+        let list = SortedPairList::build(&screen, &store);
+        let d = random_density(basis.n_bf, 41);
+        let dmax = PairDensityMax::build(&basis, &d);
+        let two_key = list.weighted(&dmax);
+        let linked = list.weighted_linked(&dmax);
+        assert!(linked.is_list_backed());
+        assert!(!two_key.is_list_backed());
+        let sig = linked.sig().expect("list-backed walk has lists");
+        let mut visited_sets: Vec<Vec<usize>> = vec![Vec::new(); list.len()];
+        for t in 0..linked.n_tasks() {
+            let rij = linked.task(t);
+            visited_sets[rij] = linked.kets(rij).iter().collect();
+            assert!(!visited_sets[rij].is_empty(), "dead task rank {rij}");
+        }
+        let mut n_linked = 0u64;
+        for ra in 0..list.len() {
+            let (i, j) = list.pair(ra);
+            // Oracle in the list builder's own expression form (q·q·w4
+            // against τ) so boundary quartets can't flip on rounding.
+            let expect: Vec<usize> = (0..=ra)
+                .filter(|&rb| {
+                    let (k, l) = list.pair(rb);
+                    list.q(ra) * list.q(rb) * dmax.quartet_weight(i, j, k, l)
+                        > list.tau()
+                })
+                .collect();
+            assert_eq!(visited_sets[ra], expect, "bra rank {ra}");
+            n_linked += expect.len() as u64;
+            // Subset of the two-key walk, rank pair by rank pair.
+            for &rb in &expect {
+                assert!(
+                    two_key.visits(ra, rb),
+                    "({ra},{rb}) listed but outside the two-key set"
+                );
+            }
+            // NRI key is the exact list length.
+            assert_eq!(linked.nri(ra), expect.len() as u64);
+            assert_eq!(sig.list(ra).len(), expect.len());
+        }
+        // Counter identities: every list entry is a visit (no rejected
+        // candidates), the lists sum to the visited count, and the
+        // elision gap versus the two-key walk is exact.
+        assert_eq!(linked.n_visited(), n_linked);
+        assert_eq!(linked.n_candidates(), n_linked);
+        assert_eq!(sig.n_listed(), n_linked);
+        assert_eq!(sig.two_key_visited(), two_key.n_visited());
+        assert_eq!(sig.elided(), two_key.n_visited() - n_linked);
+        assert!(n_linked <= two_key.n_visited());
+        let st = sig.stats();
+        assert_eq!(st.listed, n_linked);
+        assert_eq!(st.elided, sig.elided());
+        assert!(st.bytes > 0 && st.max_len as u64 <= n_linked);
+        // A random density has structure the factorization smears:
+        // the unfactorized bound must actually elide something here.
+        assert!(sig.elided() > 0, "no elision — oracle test is vacuous");
+    }
+
+    #[test]
+    fn linked_clips_partition_the_lists() {
+        // Ring-mode contract for the list-backed walk: disjoint rank
+        // ranges covering the list space partition each bra's
+        // significant kets, and clipping to the full range reproduces
+        // the unclipped walk.
+        let (basis, store, screen) = setup(&molecules::benzene(), 1e-9);
+        let list = SortedPairList::build(&screen, &store);
+        let d = random_density(basis.n_bf, 53);
+        let dmax = PairDensityMax::build(&basis, &d);
+        let linked = list.weighted_linked(&dmax);
+        let m = list.len();
+        let bounds = [0, m / 4, m / 2, 3 * m / 4, m];
+        for t in 0..linked.n_tasks() {
+            let rij = linked.task(t);
+            let full: Vec<usize> = linked.kets(rij).iter().collect();
+            let whole: Vec<usize> = linked.kets(rij).clipped(0, m).iter().collect();
+            assert_eq!(full, whole, "full-range clip must be the identity");
+            let mut merged: Vec<usize> = Vec::new();
+            for w in bounds.windows(2) {
+                merged.extend(linked.kets(rij).clipped(w[0], w[1]).iter());
+            }
+            merged.sort_unstable();
+            let mut sorted = full.clone();
+            sorted.sort_unstable();
+            assert_eq!(merged, sorted, "rij={rij}: clips do not partition");
+        }
+    }
+
+    #[test]
+    fn linked_lists_keep_true_ha_survivors() {
+        // Superset-of-physics check with real integrals: any quartet
+        // whose *actual* bound |(ab|cd)|·quartet_weight clears τ must be
+        // in the lists (Schwarz: |(ab|cd)| ≤ Q_ab·Q_cd).
+        let (basis, store, screen) = setup(&molecules::water(), 1e-9);
+        let list = SortedPairList::build(&screen, &store);
+        let d = random_density(basis.n_bf, 67);
+        let dmax = PairDensityMax::build(&basis, &d);
+        let linked = list.weighted_linked(&dmax);
+        let mut eng = crate::integrals::EriEngine::new();
+        let mut buf = vec![0.0; 6 * 6 * 6 * 6];
+        let mut checked = 0u64;
+        for ra in 0..list.len() {
+            let (i, j) = list.pair(ra);
+            let in_list: std::collections::HashSet<usize> =
+                linked.kets(ra).iter().collect();
+            for rb in 0..=ra {
+                let (k, l) = list.pair(rb);
+                eng.shell_quartet(&basis, &store, i, j, k, l, &mut buf);
+                let sz: usize =
+                    [i, j, k, l].iter().map(|&x| basis.shells[x].n_bf()).product();
+                let mx = buf[..sz].iter().map(|v| v.abs()).fold(0.0, f64::max);
+                if mx * dmax.quartet_weight(i, j, k, l) > list.tau() {
+                    assert!(
+                        in_list.contains(&rb),
+                        "true HA survivor ({i}{j}|{k}{l}) missing from the lists"
+                    );
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 0, "no true survivors — superset test is vacuous");
     }
 
     #[test]

@@ -184,6 +184,65 @@ impl SchwarzScreen {
         }
         kept as f64 / total as f64
     }
+
+    /// Fraction of canonical quartets surviving the **density-weighted**
+    /// two-key bound `Q_ij·Q_kl·max(w_ij, w_kl) > τ` — the set the
+    /// engines actually walk for a given density.
+    ///
+    /// The Q-only [`SchwarzScreen::survival_fraction`] overstates the
+    /// surviving work under ΔD builds (weights shrink every iteration,
+    /// the static bound never does), so reports that print it after the
+    /// first iteration were quoting work that was never walked. Counted
+    /// with the same two-segment structure as the two-key
+    /// [`PairWalk`](super::pairlist::PairWalk): per q-rank, a
+    /// binary-searched segment-A prefix (the bra's key carries) plus a
+    /// scan of the `Q·w` re-rank prefix (the ket's key carries, integer
+    /// rank filter) — O(P log P + survivors), never O(P²).
+    pub fn survival_fraction_weighted(&self, dmax: &PairDensityMax) -> f64 {
+        let n = self.n_shells;
+        let p = self.q.len();
+        if p == 0 {
+            return 0.0;
+        }
+        // (q, w) keys over every canonical pair, q-descending with an
+        // index tie-break (deterministic, like the pair list).
+        let mut keys: Vec<(f64, f64)> = Vec::with_capacity(p);
+        for i in 0..n {
+            for j in 0..=i {
+                let q = self.q[pair_index(i, j)];
+                keys.push((q, dmax.pair_weight(i, j)));
+            }
+        }
+        keys.sort_by(|a, b| b.0.partial_cmp(&a.0).expect("Schwarz bounds are finite"));
+        let qs: Vec<f64> = keys.iter().map(|k| k.0).collect();
+        let s: Vec<f64> = keys.iter().map(|k| k.0 * k.1).collect();
+        let mut s_order: Vec<u32> = (0..p as u32).collect();
+        s_order.sort_by(|&a, &b| {
+            s[b as usize]
+                .partial_cmp(&s[a as usize])
+                .expect("pair keys are finite")
+                .then_with(|| a.cmp(&b))
+        });
+        let total = (p as u64) * (p as u64 + 1) / 2;
+        let mut kept = 0u64;
+        for r in 0..p {
+            // Segment A: kets carried by the bra's key.
+            let a_full = qs.partition_point(|&qkl| s[r] * qkl > self.tau);
+            kept += a_full.min(r + 1) as u64;
+            // Segment B: kets carrying their own key, minus A overlap
+            // and the triangular excess (integer compares only).
+            for &rank in &s_order {
+                let rank = rank as usize;
+                if qs[r] * s[rank] <= self.tau {
+                    break;
+                }
+                if rank >= a_full && rank <= r {
+                    kept += 1;
+                }
+            }
+        }
+        kept as f64 / total as f64
+    }
 }
 
 /// Max |(ab|ab)| over the (i,j) diagonal of a freshly computed
@@ -456,6 +515,58 @@ mod tests {
                 "({i}{j}|{k}{l}): HA weight above the two-key bound"
             );
         });
+    }
+
+    #[test]
+    fn weighted_survival_fraction_matches_brute_force() {
+        // The O(P log P + survivors) two-segment count must equal the
+        // brute-force count of the factorized two-key survivor set, and
+        // sit at or below the Q-only fraction (w ≤ ~|D| ≤ 1 here).
+        let m = molecules::water();
+        let b = BasisSet::assemble(&m, BasisName::Sto3g).unwrap();
+        let s = SchwarzScreen::build(&b, 1e-9);
+        let n = b.n_bf;
+        let mut d = Matrix::zeros(n, n);
+        let mut rng = crate::util::prng::Rng::new(13);
+        for i in 0..n {
+            for j in 0..=i {
+                let x = rng.range(-0.4, 0.4);
+                d.set(i, j, x);
+                d.set(j, i, x);
+            }
+        }
+        let dm = PairDensityMax::build(&b, &d);
+        let ns = b.n_shells();
+        // Brute force over unordered pairs of canonical pairs, in the
+        // same q-descending rank order the fast count uses.
+        let mut keys: Vec<(f64, f64)> = Vec::new();
+        for i in 0..ns {
+            for j in 0..=i {
+                keys.push((s.q(i, j), dm.pair_weight(i, j)));
+            }
+        }
+        keys.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let p = keys.len();
+        let mut kept = 0u64;
+        for a in 0..p {
+            for b2 in 0..=a {
+                let (qa, wa) = keys[a];
+                let (qb, wb) = keys[b2];
+                // Oracle in the count's own expression form (s·q with
+                // s = q·w) so boundary quartets can't flip on rounding.
+                if (qa * wa) * qb > s.tau || qa * (qb * wb) > s.tau {
+                    kept += 1;
+                }
+            }
+        }
+        let total = (p as u64) * (p as u64 + 1) / 2;
+        let want = kept as f64 / total as f64;
+        let got = s.survival_fraction_weighted(&dm);
+        assert!((got - want).abs() < 1e-12, "got {got}, want {want}");
+        assert!(
+            got <= s.survival_fraction() + 1e-12,
+            "weighted fraction above the Q-only fraction"
+        );
     }
 
     #[test]

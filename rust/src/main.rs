@@ -15,7 +15,7 @@ use khf::cluster::{
     calibrate, simulate, simulate_des, CostModel, DesOptions, FailRank, Machine, SimResult,
     Straggler,
 };
-use khf::coordinator::{mini_stats, report, stats_for_system};
+use khf::coordinator::{mini_stats, report, stats_for_molecule, stats_for_system};
 use khf::hf::hetero_fock::HeteroFock;
 use khf::hf::memmodel::{self, EngineKind};
 use khf::hf::mpi_only::MpiOnlyFock;
@@ -56,10 +56,18 @@ fn print_help() {
          commands:\n\
            info                              paper system inventory\n\
            scf --mol <h2|h2o|ch4|c6h6> [--basis <sto-3g|6-31g|6-31g*>]\n\
+               [--system sheet:N|bilayer:N]  arbitrary graphene patch instead of\n\
+                                             --mol (N carbons; bilayer: per layer)\n\
                [--engine serial|mpi|private|shared|hetero|xla]\n\
                [--ranks N] [--threads N]     run RHF\n\
                [--no-incremental] [--rebuild-every N] [--tau T]\n\
                                              incremental (ΔD) Fock-build controls\n\
+               [--link-lists]                LinK-style per-shell significance\n\
+                                             lists: walk, per bra pair, the exact\n\
+                                             kets surviving the unfactorized\n\
+                                             Q·Q·w bound (rebuilt with the\n\
+                                             density; composes with every store\n\
+                                             mode; list stats reported)\n\
                [--batch-size N]              per-class quartet batch capacity for\n\
                                              the fill-and-flush drain (default 32;\n\
                                              hetero's offload artifact is\n\
@@ -88,8 +96,11 @@ fn print_help() {
                                              re-owns the dead block and replays\n\
                                              its cells; energy matches fault-free\n\
            footprint                         Table 2 memory footprints\n\
-           simulate --system <mini|0.5|1.0|1.5|2.0|5.0> [--nodes 4,16,...]\n\
+           simulate --system <mini|0.5|1.0|1.5|2.0|5.0|sheet:N|bilayer:N>\n\
+               [--nodes 4,16,...]\n\
                [--shard-store]               gate memory on the sharded store\n\
+               [--link-lists]                charge significance-list bytes and\n\
+                                             schedule by NRI (longest list first)\n\
                [--ring-exchange]             gate on ring sharding (+ ring traffic\n\
                                              in the simulated Fock time)\n\
                [--ring-overlap]              overlapped ring: hide the pass under\n\
@@ -146,10 +157,36 @@ fn cmd_info() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse a `sheet:N` / `bilayer:N` spec into a graphene patch (N
+/// carbons total for a monolayer sheet, N per layer for the AB
+/// bilayer). Shared by `scf` and `simulate` so the same spelling
+/// names the same geometry in both.
+fn sheet_molecule(spec: &str) -> Option<khf::chem::Molecule> {
+    let (kind, n) = spec.split_once(':')?;
+    let n: usize = n.trim().parse().ok()?;
+    if n == 0 {
+        return None;
+    }
+    match kind.trim() {
+        "sheet" => Some(khf::chem::graphene::monolayer(n, &format!("sheet:{n}"))),
+        "bilayer" => Some(khf::chem::graphene::bilayer(n, &format!("bilayer:{n}"))),
+        _ => None,
+    }
+}
+
 fn cmd_scf(args: &Args) -> anyhow::Result<()> {
-    let mol_name = args.get_or("mol", "h2o");
-    let mol = molecules::by_name(mol_name)
-        .ok_or_else(|| anyhow::anyhow!("unknown molecule {mol_name:?}"))?;
+    // `--system sheet:N|bilayer:N` builds an arbitrary graphene patch
+    // (the scaling-series workload); `--mol` picks a named molecule.
+    let mol = match args.get("system") {
+        Some(spec) => sheet_molecule(spec).ok_or_else(|| {
+            anyhow::anyhow!("--system expects sheet:N or bilayer:N, got {spec:?}")
+        })?,
+        None => {
+            let mol_name = args.get_or("mol", "h2o");
+            molecules::by_name(mol_name)
+                .ok_or_else(|| anyhow::anyhow!("unknown molecule {mol_name:?}"))?
+        }
+    };
     let basis = BasisName::parse(args.get_or("basis", "sto-3g"))
         .ok_or_else(|| anyhow::anyhow!("unknown basis"))?;
     let ranks = args.parse_or("ranks", 2usize)?;
@@ -190,6 +227,10 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
 
     let batch_size: usize = args.parse_or("batch-size", khf::hf::DEFAULT_BATCH_SIZE)?;
     anyhow::ensure!(batch_size > 0, "--batch-size must be positive");
+    // `--link-lists` composes with every store mode: the lists are a
+    // subset of the two-key visited set, so flat, sharded, ring and
+    // overlapped-ring residency invariants all carry over unchanged.
+    let link_lists = args.flag("link-lists");
     let driver = RhfDriver {
         incremental: !args.flag("no-incremental"),
         rebuild_every: args.parse_or("rebuild-every", 8)?,
@@ -199,6 +240,7 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
         ring_overlap,
         inject_fail,
         batch_size,
+        link_lists,
         ..RhfDriver::default()
     };
     let res = match engine {
@@ -349,6 +391,30 @@ fn cmd_scf(args: &Args) -> anyhow::Result<()> {
             last.walk_candidates,
             last.quartets_computed,
         );
+        // Significance-list observability: per-build list footprint and
+        // shape, and the quartets the unfactorized Q·Q·w bound elided
+        // relative to the two-key stream the lists were filtered from.
+        if let Some((sf, sl)) = res.sig_stats.first().zip(res.sig_stats.last()) {
+            println!(
+                "  sig lists: {} ({:.1} mean / {} max kets per bra), \
+                 {} of {} two-key quartets elided (first iter) -> \
+                 {} of {} (final iter)",
+                human_bytes(sf.bytes as f64),
+                sf.mean_len,
+                sf.max_len,
+                sf.elided,
+                sf.two_key_visited,
+                sl.elided,
+                sl.two_key_visited,
+            );
+        }
+        // Quartet survival under the Q-only bound vs the density-
+        // weighted bound actually walked (core-guess density).
+        println!(
+            "  quartet survival: {:.2}% Q-only, {:.2}% density-weighted",
+            100.0 * res.survival_q,
+            100.0 * res.survival_weighted,
+        );
         // Class-batch drain observability. The flushed/tail counters
         // partition the computed set exactly (flushed·batch + tail =
         // computed per build); accel counts the full batches the hetero
@@ -458,9 +524,15 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let sys_name = args.get_or("system", "2.0");
     let stats = if sys_name == "mini" {
         mini_stats(6, &cost)?
+    } else if let Some(mol) = sheet_molecule(sys_name) {
+        // Arbitrary graphene patches (sheet:N / bilayer:N) go through
+        // the same on-the-fly path as `mini` — real Schwarz bounds, no
+        // disk cache.
+        stats_for_molecule(&mol, &cost)?
     } else {
-        let sys = PaperSystem::parse(sys_name)
-            .ok_or_else(|| anyhow::anyhow!("unknown system (use mini|0.5|1.0|1.5|2.0|5.0)"))?;
+        let sys = PaperSystem::parse(sys_name).ok_or_else(|| {
+            anyhow::anyhow!("unknown system (use mini|0.5|1.0|1.5|2.0|5.0|sheet:N|bilayer:N)")
+        })?;
         stats_for_system(sys, &cost)?
     };
     let nodes: Vec<usize> = args
@@ -487,6 +559,10 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let shard_store = ring_exchange
         || args.flag("shard-store")
         || args.parse_or("shard-store", 0usize)? > 0;
+    // `--link-lists`: charge the per-node significance-list bytes and
+    // schedule tasks by their NRI weight (longest list first) in the
+    // non-ring paths.
+    let link_lists = args.flag("link-lists");
 
     let mut header = vec![
         "nodes".to_string(),
@@ -505,6 +581,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             m.shard_store = shard_store;
             m.ring_exchange = ring_exchange;
             m.ring_overlap = ring_overlap;
+            m.link_lists = link_lists;
             m
         };
         let run = |engine: EngineKind, m: Machine| -> SimResult {
@@ -554,7 +631,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         }
     }
     println!(
-        "{} — simulated Fock time (15 SCF iterations{}{}):",
+        "{} — simulated Fock time (15 SCF iterations{}{}{}):",
         stats.label,
         if ring_overlap {
             ", overlapped ring store"
@@ -565,6 +642,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         } else {
             ""
         },
+        if link_lists { ", significance lists" } else { "" },
         if use_des {
             format!(", event core: straggler={} seed={seed}", straggler.label())
         } else {

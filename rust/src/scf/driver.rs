@@ -21,7 +21,8 @@ use crate::chem::Molecule;
 use crate::hf::{BuildStats, FockBuilder, FockContext};
 use crate::integrals::oneint::{core_hamiltonian, overlap_matrix};
 use crate::integrals::{
-    SchwarzScreen, ShardingReport, ShellPairStore, SortedPairList, StoreSharding,
+    PairDensityMax, SchwarzScreen, ShardingReport, ShellPairStore, SigListStats,
+    SortedPairList, StoreSharding,
 };
 use crate::linalg::{eigen, Matrix};
 
@@ -77,6 +78,15 @@ pub struct RhfDriver {
     /// drain (and the heterogeneous engine's offload unit, whose PJRT
     /// artifact is shape-specialized to this size).
     pub batch_size: usize,
+    /// LinK-style per-shell significance lists: materialize, for every
+    /// surviving bra pair, the compact list of ket ranks whose
+    /// *unfactorized* bound Q_ij·Q_kl·w(ij,kl) survives τ, and walk the
+    /// lists instead of the two-key candidate stream. The lists are
+    /// rebuilt with the density every build (same cadence as the Q·w
+    /// re-rank), are a provable subset of the two-key visited set —
+    /// so every sharding/ring residency invariant carries over — and
+    /// feed NRI-weighted task ordering into the dynamic load balancer.
+    pub link_lists: bool,
 }
 
 impl Default for RhfDriver {
@@ -93,6 +103,7 @@ impl Default for RhfDriver {
             ring_overlap: false,
             inject_fail: None,
             batch_size: crate::hf::DEFAULT_BATCH_SIZE,
+            link_lists: false,
         }
     }
 }
@@ -126,6 +137,18 @@ pub struct ScfResult {
     /// mode) or the per-build ring traffic (`ring_exchange`), and the
     /// remote fetches work-stealing paid over the whole run.
     pub sharding: Option<ShardingReport>,
+    /// Per-build significance-list statistics when `link_lists` was on
+    /// (one entry per Fock build, same order as `build_stats`): list
+    /// bytes, mean/max list length, and quartets elided relative to
+    /// the two-key walk the lists were filtered from.
+    pub sig_stats: Vec<SigListStats>,
+    /// Fraction of canonical shell pairs surviving the Q-only Schwarz
+    /// screen (τ on Q_ij·Q_kl).
+    pub survival_q: f64,
+    /// Fraction surviving the density-weighted screen (τ on
+    /// Q_ij·Q_kl·max(w_ij,w_kl)) at the core-guess density — the bound
+    /// the engines actually walk.
+    pub survival_weighted: f64,
 }
 
 impl RhfDriver {
@@ -208,6 +231,13 @@ impl RhfDriver {
 
         // Core guess.
         let mut d = self.new_density(&h, &x, n_occ).1;
+        // Screening-survival diagnostics: the Q-only fraction is
+        // density-independent; the weighted fraction is evaluated at
+        // the core-guess density — the bound the first (full) build
+        // actually walks.
+        let survival_q = screen.survival_fraction();
+        let survival_weighted =
+            screen.survival_fraction_weighted(&PairDensityMax::build(basis, &d));
         // Sharded store: partition the Q-sorted bra ranks across the
         // virtual ranks once per SCF. In prefix mode each shard's
         // resident ket prefix is sized at the core-guess build's
@@ -235,6 +265,7 @@ impl RhfDriver {
         let mut diis = Diis::new(8);
         let mut history = Vec::new();
         let mut build_stats: Vec<BuildStats> = Vec::new();
+        let mut sig_stats: Vec<SigListStats> = Vec::new();
         let mut fock_seconds = 0.0;
         let mut last = (0.0, f64::INFINITY);
         let mut fock = h.clone();
@@ -295,6 +326,13 @@ impl RhfDriver {
                 None => FockContext::new(basis, &store, &screen, &pairs, bd)
                     .with_batch_size(self.batch_size),
             };
+            // Significance lists re-filter the two-key walk just built
+            // (full-D or ΔD weights alike), so they inherit the build's
+            // density weighting at the same rebuild cadence for free.
+            let ctx = if self.link_lists { ctx.with_link_lists() } else { ctx };
+            if let Some(sig) = ctx.walk.sig() {
+                sig_stats.push(sig.stats());
+            }
             let g_build = builder.build_2e(&ctx);
             drop(ctx);
             if full_rebuild {
@@ -363,6 +401,9 @@ impl RhfDriver {
             pairs_listed: pairs.len(),
             pairlist_bytes: pairs.bytes(),
             sharding: sharding.as_ref().map(|sh| sh.report()),
+            sig_stats,
+            survival_q,
+            survival_weighted,
         })
     }
 
@@ -694,6 +735,86 @@ mod tests {
         assert_eq!(rep.staged_bytes, rep.ring_traffic_bytes);
         assert!(rep.ring_traffic_bytes < 3 * ovl.store_bytes as u64);
         assert_eq!(rep.remote_fetches, 0, "overlapped ring work must stay resident");
+    }
+
+    #[test]
+    fn link_lists_match_two_key_and_partition_counters() {
+        // Every quartet the lists elide is bounded by Q·Q·w ≤ τ, so the
+        // list-backed run must land on the two-key energy far inside
+        // the convergence tolerance, while the per-build stats pin the
+        // exact accounting: listed + elided = two-key visited, and the
+        // engine's computed + early-exit skips = listed.
+        let mol = molecules::water();
+        let mut b1 = SerialFock::new();
+        let plain = RhfDriver::default().run(&mol, BasisName::Sto3g, &mut b1).unwrap();
+        let mut b2 = SerialFock::new();
+        let linked = RhfDriver { link_lists: true, ..Default::default() }
+            .run(&mol, BasisName::Sto3g, &mut b2)
+            .unwrap();
+        assert!(linked.converged);
+        assert!(
+            (linked.energy - plain.energy).abs() < 1e-9,
+            "{} vs {}",
+            linked.energy,
+            plain.energy
+        );
+        assert!(plain.sig_stats.is_empty(), "lists off by default");
+        assert_eq!(linked.sig_stats.len(), linked.iterations);
+        for (s, b) in linked.sig_stats.iter().zip(&linked.build_stats) {
+            assert!(s.listed <= s.two_key_visited);
+            assert_eq!(s.listed + s.elided, s.two_key_visited);
+            assert!(s.bytes > 0);
+            assert!(s.max_len as f64 >= s.mean_len);
+            // The engine walks the lists and nothing else: every list
+            // entry is a visit (no rejected candidates), computed work
+            // stays inside the lists, and the canonical partition
+            // computed + screened + skipped still spans the same
+            // quartet space as the two-key run.
+            assert_eq!(b.walk_candidates, s.listed);
+            assert!(b.quartets_computed <= s.listed);
+            assert_eq!(
+                b.quartets_computed + b.skipped_by_early_exit + b.quartets_screened,
+                plain.build_stats[0].quartets_computed
+                    + plain.build_stats[0].skipped_by_early_exit
+                    + plain.build_stats[0].quartets_screened,
+            );
+        }
+        // Both survival diagnostics land in the result on every run.
+        for r in [&plain, &linked] {
+            assert!(r.survival_q > 0.0 && r.survival_q <= 1.0);
+            assert!(r.survival_weighted > 0.0 && r.survival_weighted <= 1.0);
+        }
+    }
+
+    #[test]
+    fn link_lists_compose_with_ring_store() {
+        // List-backed walks are a subset of the two-key set, so ring
+        // residency and the round-partition clip hold unchanged; the
+        // serial replay over a ring sharding must match the plain
+        // energy with zero remote fetches.
+        let mol = molecules::water();
+        let mut b1 = SerialFock::new();
+        let plain = RhfDriver::default().run(&mol, BasisName::Sto3g, &mut b1).unwrap();
+        let mut b2 = SerialFock::new();
+        let ring = RhfDriver {
+            shard_store: 4,
+            ring_exchange: true,
+            link_lists: true,
+            rebuild_every: 1,
+            ..Default::default()
+        }
+        .run(&mol, BasisName::Sto3g, &mut b2)
+        .unwrap();
+        assert!(ring.converged);
+        assert!(
+            (ring.energy - plain.energy).abs() < 1e-9,
+            "{} vs {}",
+            ring.energy,
+            plain.energy
+        );
+        assert_eq!(ring.sig_stats.len(), ring.iterations);
+        let rep = ring.sharding.as_ref().expect("ring report missing");
+        assert_eq!(rep.remote_fetches, 0, "list-backed ring work must stay resident");
     }
 
     #[test]

@@ -14,7 +14,7 @@ use khf::hf::private_fock::PrivateFock;
 use khf::hf::serial::SerialFock;
 use khf::hf::shared_fock::SharedFock;
 use khf::hf::{FockBuilder, FockContext};
-use khf::integrals::{SchwarzScreen, ShellPairStore, SortedPairList};
+use khf::integrals::{SchwarzScreen, ShellPairStore, SortedPairList, StoreSharding};
 use khf::linalg::Matrix;
 use khf::scf::RhfDriver;
 use khf::util::prng::Rng;
@@ -145,6 +145,169 @@ fn five_engines_agree_across_store_modes() {
             }
         }
     }
+}
+
+#[test]
+fn link_lists_five_engines_agree_across_store_modes() {
+    // The LinK significance lists must not move the physics in ANY
+    // store mode: the same 5×4 matrix as above with `link_lists` on,
+    // against the serial full-rebuild *two-key* reference — the lists
+    // are rebuilt with the density every build, so agreement here
+    // covers both the full-D and ΔD list filters. Water runs the full
+    // matrix; benzene pins serial + hetero per mode. Every build's
+    // list accounting must also partition exactly: listed + elided =
+    // two-key visited, and the engine enumerates the lists and nothing
+    // else (candidates == listed).
+    let modes: [(&str, RhfDriver); 4] = [
+        ("flat", RhfDriver { link_lists: true, ..Default::default() }),
+        (
+            "sharded",
+            RhfDriver { link_lists: true, shard_store: 2, ..Default::default() },
+        ),
+        (
+            "ring",
+            RhfDriver {
+                link_lists: true,
+                shard_store: 2,
+                ring_exchange: true,
+                ..Default::default()
+            },
+        ),
+        (
+            "ring-overlap",
+            RhfDriver {
+                link_lists: true,
+                shard_store: 2,
+                ring_exchange: true,
+                ring_overlap: true,
+                ..Default::default()
+            },
+        ),
+    ];
+    for (mol, full_matrix) in [(molecules::water(), true), (molecules::benzene(), false)] {
+        let reference = RhfDriver { incremental: false, ..Default::default() }
+            .run(&mol, BasisName::Sto3g, &mut SerialFock::new())
+            .unwrap();
+        assert!(reference.converged, "{}: reference did not converge", mol.name);
+        for (mode, driver) in &modes {
+            let mut engines: Vec<(&str, Box<dyn FockBuilder>)> = if full_matrix {
+                vec![
+                    ("serial", Box::new(SerialFock::new())),
+                    ("mpi", Box::new(MpiOnlyFock::new(2))),
+                    ("private", Box::new(PrivateFock::new(2, 2))),
+                    ("shared", Box::new(SharedFock::new(2, 2))),
+                    ("hetero", Box::new(HeteroFock::new(2, 2))),
+                ]
+            } else {
+                vec![
+                    ("serial", Box::new(SerialFock::new())),
+                    ("hetero", Box::new(HeteroFock::new(2, 2))),
+                ]
+            };
+            for (name, builder) in engines.iter_mut() {
+                let r = driver.run(&mol, BasisName::Sto3g, builder.as_mut()).unwrap();
+                assert!(r.converged, "{}/{mode}/{name}: did not converge", mol.name);
+                assert!(
+                    (r.energy - reference.energy).abs() < 1e-8,
+                    "{}/{mode}/{name}: {} vs serial full rebuild {}",
+                    mol.name,
+                    r.energy,
+                    reference.energy
+                );
+                assert_eq!(
+                    r.sig_stats.len(),
+                    r.iterations,
+                    "{}/{mode}/{name}: one list build per iteration",
+                    mol.name
+                );
+                for (k, (s, b)) in r.sig_stats.iter().zip(&r.build_stats).enumerate() {
+                    assert_eq!(
+                        s.listed + s.elided,
+                        s.two_key_visited,
+                        "{}/{mode}/{name} build {k}: list partition broken",
+                        mol.name
+                    );
+                    assert_eq!(
+                        b.walk_candidates,
+                        s.listed,
+                        "{}/{mode}/{name} build {k}: engine left the lists",
+                        mol.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn link_lists_engines_exact_on_graphene_patch() {
+    // A ~30-atom graphene patch (90 shells — two orders more pairs
+    // than water) stresses the list CSR at real sparsity. One build
+    // per engine from a shared random density: all five engines on the
+    // SAME list-backed context must agree to addition-reordering noise
+    // (1e-11 — they enumerate the identical visited set), the lists
+    // must elide real work, and the elision must not move the Fock
+    // matrix beyond screening noise against the two-key build.
+    let mol = khf::chem::graphene::monolayer(30, "c30");
+    let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+    let store = ShellPairStore::build(&basis);
+    let screen = SchwarzScreen::build_with_store(&basis, &store, 1e-8);
+    let pairs = SortedPairList::build(&screen, &store);
+    let mut rng = Rng::new(31);
+    let n = basis.n_bf;
+    let mut d = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let x = rng.range(-0.3, 0.3);
+            d.set(i, j, x);
+            d.set(j, i, x);
+        }
+    }
+    let ctx_two = FockContext::new(&basis, &store, &screen, &pairs, &d);
+    let f_two = SerialFock::new().build_2e(&ctx_two);
+    let two_key_visited = ctx_two.walk.n_visited();
+    drop(ctx_two);
+
+    let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d).with_link_lists();
+    let sig = ctx.walk.sig().expect("list-backed context");
+    assert!(sig.elided() > 0, "lists must elide work at this sparsity");
+    assert_eq!(sig.two_key_visited(), two_key_visited);
+    assert_eq!(ctx.walk.n_visited() + sig.elided(), two_key_visited);
+    let f_link = SerialFock::new().build_2e(&ctx);
+    // Every elided quartet is bounded by Q·Q·w ≤ τ, so the element-wise
+    // drift stays screening-sized — far below any physical scale, and
+    // a routing bug (a *live* quartet dropped) would show up at ~1e-2
+    // for this density.
+    assert!(
+        f_link.max_abs_diff(&f_two) < 1e-6,
+        "elision moved the Fock matrix: {}",
+        f_link.max_abs_diff(&f_two)
+    );
+    for (name, f) in [
+        ("mpi", MpiOnlyFock::new(2).build_2e(&ctx)),
+        ("private", PrivateFock::new(2, 2).build_2e(&ctx)),
+        ("shared", SharedFock::new(2, 2).build_2e(&ctx)),
+        ("hetero", HeteroFock::new(2, 2).build_2e(&ctx)),
+    ] {
+        assert!(
+            f.max_abs_diff(&f_link) < 1e-11,
+            "{name}: {} off the serial list-backed build",
+            f.max_abs_diff(&f_link)
+        );
+    }
+    drop(ctx);
+
+    // Ring store over the same lists: the round clip partitions each
+    // list, every entry still computes exactly once.
+    let sh = StoreSharding::build_ring(&pairs, &store, 2);
+    let ctx_ring = FockContext::with_sharding(&basis, &store, &screen, &pairs, &d, &sh)
+        .with_link_lists();
+    let f_ring = SharedFock::new(2, 2).build_2e(&ctx_ring);
+    assert!(
+        f_ring.max_abs_diff(&f_link) < 1e-11,
+        "ring: {} off the flat list-backed build",
+        f_ring.max_abs_diff(&f_link)
+    );
 }
 
 #[test]
