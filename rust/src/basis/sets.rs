@@ -9,8 +9,9 @@ use crate::chem::Element;
 
 use super::shell::ShellKind;
 
-/// Supported basis sets.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Supported basis sets. `Hash` because the service's store cache keys
+/// on (geometry fingerprint, basis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum BasisName {
     Sto3g,
     SixThirtyOneG,

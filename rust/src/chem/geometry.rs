@@ -62,6 +62,30 @@ impl Molecule {
         Ok(ne / 2)
     }
 
+    /// FNV-1a fingerprint of the geometry: element identities, exact
+    /// position bit patterns (bohr), and the net charge. Two molecules
+    /// share a fingerprint iff their atom lists are bitwise identical
+    /// in order — any perturbed coordinate (even 1 ulp) changes it.
+    /// The SCF service keys its shell-pair-store cache on
+    /// (fingerprint, basis); the name is deliberately excluded so a
+    /// relabeled resubmission of the same geometry still hits.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        mix(self.atoms.len() as u64);
+        for a in &self.atoms {
+            mix(a.element.charge() as u64);
+            for c in a.pos {
+                mix(c.to_bits());
+            }
+        }
+        mix(self.charge as u64);
+        h
+    }
+
     /// Nuclear repulsion energy Σ Za Zb / Rab (hartree).
     pub fn nuclear_repulsion(&self) -> f64 {
         let mut e = 0.0;

@@ -1,0 +1,295 @@
+//! Job-stream discrete-event scheduler: whole SCF *jobs* over the
+//! virtual cluster's nodes.
+//!
+//! The [`des`](super::des) core simulates one Fock build at task
+//! granularity; the multi-tenant service needs the layer above it — a
+//! stream of jobs, each with an arrival time, a service time (taken
+//! from the per-job DES run), and a per-node memory footprint (from
+//! `hf::memmodel`). This module is that layer: a binary-heap event loop
+//! over job arrivals and completions, LPT dispatch (longest estimated
+//! service first among the ready jobs), first-fit packing by bytes over
+//! the nodes, and per-node occupancy tracking whose peaks the
+//! service-level tests audit against the admission gate.
+//!
+//! Everything is deterministic: events at equal times are ordered
+//! completion-before-arrival then by sequence number, f64 keys are
+//! compared via `to_bits` (service times are nonnegative finite), and
+//! no wall clock is consulted — the same job list always produces the
+//! same schedule, which is what makes `khf replay` byte-reproducible.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// One job as the scheduler sees it: opaque id, arrival time (s),
+/// service time (s), and per-node resident bytes while running.
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    pub id: usize,
+    pub arrival: f64,
+    pub service: f64,
+    pub bytes: f64,
+}
+
+/// Where and when a job actually ran.
+#[derive(Debug, Clone)]
+pub struct JobPlacement {
+    pub id: usize,
+    pub node: usize,
+    pub start: f64,
+    pub finish: f64,
+    pub bytes: f64,
+}
+
+/// The complete schedule: placements in start order (ties by id),
+/// up-front rejections (job bytes exceed one node's capacity — no
+/// amount of waiting admits it), the makespan, per-node peak occupancy
+/// in bytes, per-node job counts, and the number of events processed.
+#[derive(Debug, Clone, Default)]
+pub struct JobSchedule {
+    pub placements: Vec<JobPlacement>,
+    pub rejected: Vec<usize>,
+    pub makespan: f64,
+    pub peak_bytes: Vec<f64>,
+    pub node_jobs: Vec<usize>,
+    pub n_events: usize,
+}
+
+/// Total-ordering key for a nonnegative finite f64 (service times and
+/// clock values here are exactly that).
+fn bits(t: f64) -> u64 {
+    t.to_bits()
+}
+
+/// Event kinds, ordered so that at equal times completions free memory
+/// *before* the arrival at the same instant tries to pack.
+const EV_FINISH: u8 = 0;
+const EV_ARRIVE: u8 = 1;
+
+type Event = Reverse<(u64, u8, usize, usize)>; // (time bits, kind, seq, payload)
+
+/// Schedule `jobs` over `nodes` nodes of `node_bytes` capacity each.
+///
+/// Dispatch policy: among ready jobs (arrived, not yet placed), pick
+/// the one with the longest service time (LPT; ties by lower id) and
+/// place it on the first node whose current occupancy leaves room for
+/// its bytes (first-fit). LPT is *head-of-line blocking*: if the
+/// longest ready job fits nowhere, the dispatcher waits for a
+/// completion rather than letting shorter jobs leapfrog it — simple,
+/// deterministic, and starvation-free.
+pub fn schedule_jobs(jobs: &[JobRequest], nodes: usize, node_bytes: f64) -> JobSchedule {
+    assert!(nodes > 0, "need at least one node");
+    let mut out = JobSchedule {
+        peak_bytes: vec![0.0; nodes],
+        node_jobs: vec![0; nodes],
+        ..JobSchedule::default()
+    };
+    let mut events: BinaryHeap<Event> = BinaryHeap::new();
+    let mut seq = 0usize;
+    // Payload: arrival events carry an index into `jobs`; finish events
+    // carry an index into `running`.
+    let mut admitted: Vec<&JobRequest> = Vec::new();
+    for job in jobs {
+        assert!(
+            job.service.is_finite() && job.service >= 0.0 && job.arrival.is_finite(),
+            "job {} has non-finite timing",
+            job.id
+        );
+        if job.bytes > node_bytes {
+            out.rejected.push(job.id);
+            continue;
+        }
+        events.push(Reverse((bits(job.arrival), EV_ARRIVE, seq, admitted.len())));
+        seq += 1;
+        admitted.push(job);
+    }
+    out.rejected.sort_unstable();
+
+    // Ready queue: max-heap on (service bits, Reverse(id)) = LPT with
+    // id as the deterministic tiebreak.
+    let mut ready: BinaryHeap<(u64, Reverse<usize>, usize)> = BinaryHeap::new();
+    let mut occupancy = vec![0.0f64; nodes];
+    let mut running: Vec<(usize, usize)> = Vec::new(); // (admitted idx, node)
+
+    while let Some(&Reverse((tbits, _, _, _))) = events.peek() {
+        // Process *every* event at this instant before dispatching:
+        // completions free their bytes first (EV_FINISH < EV_ARRIVE in
+        // the heap order), and simultaneous arrivals all land in the
+        // ready queue so LPT genuinely picks the longest among them.
+        while let Some(&Reverse((t, kind, _, payload))) = events.peek() {
+            if t != tbits {
+                break;
+            }
+            events.pop();
+            out.n_events += 1;
+            if kind == EV_FINISH {
+                let (idx, node) = running[payload];
+                occupancy[node] -= admitted[idx].bytes;
+                // Guard against f64 drift pulling occupancy below zero.
+                if occupancy[node] < 0.0 {
+                    occupancy[node] = 0.0;
+                }
+            } else {
+                let job = admitted[payload];
+                ready.push((bits(job.service), Reverse(job.id), payload));
+            }
+        }
+        let now = f64::from_bits(tbits);
+        // Drain the ready queue head-of-line: place the longest ready
+        // job wherever it first fits; stop at the first that fits
+        // nowhere (it waits for the next completion).
+        while let Some(&(_, _, idx)) = ready.peek() {
+            let job = admitted[idx];
+            let Some(node) = (0..nodes).find(|&n| occupancy[n] + job.bytes <= node_bytes)
+            else {
+                break;
+            };
+            ready.pop();
+            occupancy[node] += job.bytes;
+            if occupancy[node] > out.peak_bytes[node] {
+                out.peak_bytes[node] = occupancy[node];
+            }
+            out.node_jobs[node] += 1;
+            let finish = now + job.service;
+            out.placements.push(JobPlacement {
+                id: job.id,
+                node,
+                start: now,
+                finish,
+                bytes: job.bytes,
+            });
+            if finish > out.makespan {
+                out.makespan = finish;
+            }
+            events.push(Reverse((bits(finish), EV_FINISH, seq, running.len())));
+            seq += 1;
+            running.push((idx, node));
+        }
+    }
+    out.placements
+        .sort_by(|a, b| (bits(a.start), a.id).cmp(&(bits(b.start), b.id)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: usize, arrival: f64, service: f64, bytes: f64) -> JobRequest {
+        JobRequest { id, arrival, service, bytes }
+    }
+
+    #[test]
+    fn empty_stream_is_well_defined() {
+        let s = schedule_jobs(&[], 4, 1e9);
+        assert!(s.placements.is_empty());
+        assert!(s.rejected.is_empty());
+        assert_eq!(s.makespan, 0.0);
+        assert_eq!(s.peak_bytes, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn single_job_runs_at_arrival() {
+        let s = schedule_jobs(&[job(7, 2.0, 3.0, 100.0)], 2, 1e3);
+        assert_eq!(s.placements.len(), 1);
+        let p = &s.placements[0];
+        assert_eq!((p.id, p.node), (7, 0));
+        assert_eq!(p.start, 2.0);
+        assert_eq!(p.finish, 5.0);
+        assert_eq!(s.makespan, 5.0);
+        assert_eq!(s.node_jobs, vec![1, 0]);
+        assert_eq!(s.peak_bytes, vec![100.0, 0.0]);
+    }
+
+    #[test]
+    fn oversized_job_is_rejected_up_front() {
+        let s = schedule_jobs(&[job(0, 0.0, 1.0, 2e3), job(1, 0.0, 1.0, 100.0)], 1, 1e3);
+        assert_eq!(s.rejected, vec![0]);
+        assert_eq!(s.placements.len(), 1);
+        assert_eq!(s.placements[0].id, 1);
+    }
+
+    #[test]
+    fn lpt_orders_simultaneous_arrivals() {
+        // Three jobs arrive together on one roomy node: the longest
+        // must start first (all start at t=0, but placement order —
+        // and thus the deterministic trace — is LPT).
+        let s = schedule_jobs(
+            &[job(0, 0.0, 1.0, 10.0), job(1, 0.0, 5.0, 10.0), job(2, 0.0, 3.0, 10.0)],
+            1,
+            100.0,
+        );
+        // All co-resident; peak is the sum.
+        assert_eq!(s.peak_bytes, vec![30.0]);
+        assert_eq!(s.makespan, 5.0);
+        // Start-order sort ties at t=0 by id, so inspect node_jobs via
+        // the placements' finish times instead: id 1 finishes last.
+        let by_id: Vec<f64> = {
+            let mut v = vec![0.0; 3];
+            for p in &s.placements {
+                v[p.id] = p.finish;
+            }
+            v
+        };
+        assert_eq!(by_id, vec![1.0, 5.0, 3.0]);
+    }
+
+    #[test]
+    fn memory_contention_serializes_and_head_of_line_blocks() {
+        // Node fits one job at a time; the long job (id 1) is placed
+        // first under LPT, the others wait for completions. The short
+        // job 0 must NOT leapfrog job 2 while 2 is blocked.
+        let jobs =
+            [job(0, 0.0, 1.0, 600.0), job(1, 0.0, 5.0, 600.0), job(2, 0.0, 3.0, 600.0)];
+        let s = schedule_jobs(&jobs, 1, 1000.0);
+        assert_eq!(s.placements.len(), 3);
+        let order: Vec<usize> = s.placements.iter().map(|p| p.id).collect();
+        assert_eq!(order, vec![1, 2, 0], "LPT then head-of-line");
+        assert_eq!(s.placements[0].start, 0.0);
+        assert_eq!(s.placements[1].start, 5.0);
+        assert_eq!(s.placements[2].start, 8.0);
+        assert_eq!(s.makespan, 9.0);
+        // Peak never exceeded the capacity.
+        assert!(s.peak_bytes[0] <= 1000.0);
+    }
+
+    #[test]
+    fn first_fit_spills_to_second_node() {
+        let jobs = [job(0, 0.0, 4.0, 700.0), job(1, 0.0, 4.0, 700.0)];
+        let s = schedule_jobs(&jobs, 2, 1000.0);
+        let nodes: Vec<usize> = s.placements.iter().map(|p| p.node).collect();
+        assert_eq!(nodes, vec![0, 1]);
+        assert_eq!(s.node_jobs, vec![1, 1]);
+    }
+
+    #[test]
+    fn completion_frees_memory_before_same_instant_arrival() {
+        // Job 0 finishes exactly when job 1 arrives; the freed bytes
+        // must be visible to job 1's packing at that instant.
+        let jobs = [job(0, 0.0, 2.0, 800.0), job(1, 2.0, 1.0, 800.0)];
+        let s = schedule_jobs(&jobs, 1, 1000.0);
+        assert_eq!(s.placements[1].start, 2.0, "no spurious wait");
+        assert_eq!(s.peak_bytes, vec![800.0]);
+    }
+
+    #[test]
+    fn schedule_is_deterministic() {
+        let jobs: Vec<JobRequest> = (0..40)
+            .map(|i| {
+                job(i, (i % 7) as f64 * 0.5, 1.0 + (i % 5) as f64, 100.0 + (i % 3) as f64 * 300.0)
+            })
+            .collect();
+        let a = schedule_jobs(&jobs, 3, 1000.0);
+        let b = schedule_jobs(&jobs, 3, 1000.0);
+        assert_eq!(a.placements.len(), b.placements.len());
+        for (x, y) in a.placements.iter().zip(&b.placements) {
+            assert_eq!((x.id, x.node), (y.id, y.node));
+            assert_eq!(x.start.to_bits(), y.start.to_bits());
+            assert_eq!(x.finish.to_bits(), y.finish.to_bits());
+        }
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        // And the gate holds throughout (peaks are audited, not trusted).
+        for &p in &a.peak_bytes {
+            assert!(p <= 1000.0);
+        }
+    }
+}

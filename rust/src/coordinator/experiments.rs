@@ -194,9 +194,35 @@ pub fn stats_for_molecule(
     mol: &crate::chem::Molecule,
     cost: &CostModel,
 ) -> anyhow::Result<SystemStats> {
-    let basis = BasisSet::assemble(mol, BasisName::SixThirtyOneGd)?;
+    stats_for_molecule_basis(mol, BasisName::SixThirtyOneGd, cost)
+}
+
+/// [`stats_for_molecule`] with a caller-chosen basis — the multi-tenant
+/// service's jobs mix bases, so the hardwired 6-31G(d) above is just
+/// the paper-series default.
+pub fn stats_for_molecule_basis(
+    mol: &crate::chem::Molecule,
+    basis_name: BasisName,
+    cost: &CostModel,
+) -> anyhow::Result<SystemStats> {
+    let basis = BasisSet::assemble(mol, basis_name)?;
     let screen = SchwarzScreen::build(&basis, SchwarzScreen::DEFAULT_TAU);
     Ok(build_stats(&mol.name, &basis, &screen, cost))
+}
+
+/// Workload statistics over an already-built shell-pair store — the
+/// service's cached-profile path: the store is fetched once per
+/// (geometry, basis) from the [`StoreCache`](crate::scf::StoreCache)
+/// and both the Schwarz bounds and the task stats derive from it, so a
+/// cache hit skips the Hermite table build *and* reuses it here.
+pub fn stats_with_store(
+    label: &str,
+    basis: &BasisSet,
+    store: &crate::integrals::ShellPairStore,
+    cost: &CostModel,
+) -> SystemStats {
+    let screen = SchwarzScreen::build_with_store(basis, store, SchwarzScreen::DEFAULT_TAU);
+    build_stats(label, basis, &screen, cost)
 }
 
 /// Statistics for every paper system (0.5–5.0 nm). Heavy: use from

@@ -1,9 +1,18 @@
 //! Coordinator: job configuration, the experiment registry mapping the
-//! paper's tables/figures to runnable jobs, and report printers.
+//! paper's tables/figures to runnable jobs, report printers, and the
+//! multi-tenant SCF service ([`service`]).
 
 pub mod bench_json;
 pub mod experiments;
 pub mod report;
+pub mod service;
 
 pub use bench_json::BenchJson;
-pub use experiments::{mini_stats, paper_stats, stats_for_molecule, stats_for_system};
+pub use experiments::{
+    mini_stats, paper_stats, stats_for_molecule, stats_for_molecule_basis, stats_for_system,
+    stats_with_store,
+};
+pub use service::{
+    molecule_by_spec, parse_job_file, percentile, run_service, JobSpec, ServiceConfig,
+    ServicePlacement, ServiceReport, WorkloadSpec,
+};

@@ -1,0 +1,802 @@
+//! Multi-tenant SCF service: a job-stream coordinator over the virtual
+//! cluster.
+//!
+//! The paper's memory work (200x footprint reduction) means one node
+//! holds *many* small-to-medium SCF jobs at once — the "millions of
+//! users" north star is throughput over a job stream, not one big
+//! molecule. This module is that coordinator:
+//!
+//! * **Job stream** — [`JobSpec`]s read from a job file
+//!   ([`parse_job_file`]) or generated from a seeded [`WorkloadSpec`]
+//!   (mixed molecules, bases, engines and store layouts).
+//! * **Profile cache** — `ShellPairStore` + `SortedPairList` + workload
+//!   stats cached across jobs keyed by (geometry fingerprint, basis)
+//!   via [`StoreCache`]: repeat submissions are the common case in a
+//!   service, and a hit skips the Hermite table build, the Schwarz
+//!   bounds and the cost-model pass.
+//! * **Admission gate** — per-job per-node bytes from
+//!   [`memmodel::exact_bytes_for_layout`] (engine working set + the
+//!   job's store layout); a job whose footprint exceeds one node's
+//!   capacity is rejected up front, everything else queues.
+//! * **Packing** — [`schedule_jobs`](crate::cluster::schedule_jobs):
+//!   LPT dispatch by estimated cost, first-fit by bytes over the nodes,
+//!   per-node occupancy tracked so tests can audit the gate from the
+//!   trace instead of trusting it.
+//! * **Service times** — every job runs on the `cluster::des` event
+//!   core ([`simulate_des`]) with the per-engine cost model, a per-job
+//!   seed derived from the stream seed, and the straggler/fault options
+//!   (faults only reach ring-layout jobs — only the ring self-heals).
+//!   With [`ServiceConfig::live`], small closed-shell jobs additionally
+//!   run through the real threaded engines against the cached store.
+//!
+//! Everything is deterministic: no wall clock, no HashMap iteration
+//! order in any output, per-job seeds are pure functions of (stream
+//! seed, job id) — `khf replay --seed S` twice is byte-identical.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::basis::{BasisName, BasisSet};
+use crate::chem::{molecules, Molecule};
+use crate::cluster::workload::build_stats;
+use crate::cluster::{
+    schedule_jobs, simulate_des, CostModel, DesOptions, FailRank, JobRequest, Machine,
+    Straggler, SystemStats,
+};
+use crate::hf::memmodel::{self, EngineKind, StoreLayout};
+use crate::hf::mpi_only::MpiOnlyFock;
+use crate::hf::private_fock::PrivateFock;
+use crate::hf::shared_fock::SharedFock;
+use crate::integrals::{SchwarzScreen, ShellPairStore, SortedPairList};
+use crate::scf::{RhfDriver, StoreCache};
+use crate::util::{human_bytes, prng::Rng};
+
+use super::bench_json::BenchJson;
+use super::report;
+
+/// One job as submitted: what to run, with what, how.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub id: usize,
+    /// Molecule spec: a named molecule (`h2o`, `c6h6`, ...) or a
+    /// graphene patch (`sheet:N` / `bilayer:N`).
+    pub mol_spec: String,
+    pub basis: BasisName,
+    pub engine: EngineKind,
+    pub layout: StoreLayout,
+    /// SCF iterations to charge (service time = per-iteration Fock
+    /// seconds x iterations).
+    pub iterations: usize,
+}
+
+impl JobSpec {
+    /// Compact display label: `h2o/STO-3G`.
+    pub fn system_label(&self) -> String {
+        format!("{}/{}", self.mol_spec, self.basis.label())
+    }
+}
+
+/// Resolve a molecule spec: named molecules via
+/// [`molecules::by_name`], `sheet:N` / `bilayer:N` graphene patches (N
+/// carbons; bilayer: per layer) — one spelling shared by the service,
+/// `khf scf` and `khf simulate`.
+pub fn molecule_by_spec(spec: &str) -> Option<Molecule> {
+    if let Some((kind, n)) = spec.split_once(':') {
+        let n: usize = n.trim().parse().ok()?;
+        if n == 0 {
+            return None;
+        }
+        return match kind.trim() {
+            "sheet" => Some(crate::chem::graphene::monolayer(n, spec)),
+            "bilayer" => Some(crate::chem::graphene::bilayer(n, spec)),
+            _ => None,
+        };
+    }
+    molecules::by_name(spec)
+}
+
+/// Parse an engine spelling (`mpi`, `private`, `shared`).
+pub fn parse_engine(s: &str) -> Option<EngineKind> {
+    match s {
+        "mpi" | "mpi-only" => Some(EngineKind::MpiOnly),
+        "private" => Some(EngineKind::PrivateFock),
+        "shared" => Some(EngineKind::SharedFock),
+        _ => None,
+    }
+}
+
+/// Seeded mixed-workload generator. The pools pair every molecule only
+/// with bases that carry its elements (6-31G has H/C only), and the
+/// pool is small by design: ~10 distinct (geometry, basis) profiles
+/// under 50+ jobs make repeat submission — the service's common case —
+/// a certainty.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub n_jobs: usize,
+    pub seed: u64,
+}
+
+/// (molecule spec, basis) pool for generated workloads.
+const POOL: &[(&str, BasisName)] = &[
+    ("h2", BasisName::Sto3g),
+    ("h2", BasisName::SixThirtyOneG),
+    ("h2o", BasisName::Sto3g),
+    ("ch4", BasisName::Sto3g),
+    ("ch4", BasisName::SixThirtyOneG),
+    ("c6h6", BasisName::Sto3g),
+    ("c6h6", BasisName::SixThirtyOneG),
+    ("sheet:6", BasisName::Sto3g),
+    ("sheet:10", BasisName::Sto3g),
+    ("bilayer:6", BasisName::Sto3g),
+];
+
+impl WorkloadSpec {
+    /// Generate the job stream. Pure function of the spec: the same
+    /// (n_jobs, seed) always yields the same jobs.
+    pub fn generate(&self) -> Vec<JobSpec> {
+        let mut rng = Rng::new(self.seed);
+        (0..self.n_jobs)
+            .map(|id| {
+                let (mol_spec, basis) = POOL[rng.below(POOL.len())];
+                let engine = EngineKind::ALL[rng.below(EngineKind::ALL.len())];
+                let layout = StoreLayout::ALL[rng.below(StoreLayout::ALL.len())];
+                let iterations = 5 + rng.below(11);
+                JobSpec { id, mol_spec: mol_spec.to_string(), basis, engine, layout, iterations }
+            })
+            .collect()
+    }
+}
+
+/// Parse a job file: one job per line, `<mol> <basis> <engine> <layout>
+/// [iterations]`, `#` comments and blank lines skipped. Example:
+///
+/// ```text
+/// # mol    basis   engine  layout       iters
+/// h2o      sto-3g  shared  replicated   12
+/// c6h6     6-31g   mpi     ring
+/// sheet:6  sto-3g  private sharded      8
+/// ```
+pub fn parse_job_file(text: &str, default_iterations: usize) -> anyhow::Result<Vec<JobSpec>> {
+    let mut jobs = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let err = |what: &str| anyhow::anyhow!("job file line {}: {what}: {raw:?}", lineno + 1);
+        let mol_spec = parts.next().ok_or_else(|| err("missing molecule"))?.to_string();
+        anyhow::ensure!(
+            molecule_by_spec(&mol_spec).is_some(),
+            "job file line {}: unknown molecule {mol_spec:?}",
+            lineno + 1
+        );
+        let basis = parts
+            .next()
+            .and_then(BasisName::parse)
+            .ok_or_else(|| err("bad basis"))?;
+        let engine = parts
+            .next()
+            .and_then(parse_engine)
+            .ok_or_else(|| err("bad engine (mpi|private|shared)"))?;
+        let layout = parts
+            .next()
+            .and_then(StoreLayout::parse)
+            .ok_or_else(|| err("bad layout (replicated|sharded|ring|ring-overlap)"))?;
+        let iterations = match parts.next() {
+            Some(s) => s
+                .parse()
+                .map_err(|e| err(&format!("bad iteration count ({e})")))?,
+            None => default_iterations,
+        };
+        jobs.push(JobSpec { id: jobs.len(), mol_spec, basis, engine, layout, iterations });
+    }
+    Ok(jobs)
+}
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Virtual cluster size (nodes).
+    pub nodes: usize,
+    /// Per-node byte capacity for the admission gate / packer.
+    pub node_bytes: f64,
+    /// Seconds between successive job arrivals (0 = one batch).
+    pub arrival_gap: f64,
+    /// Iterations for job-file lines that omit the count.
+    pub default_iterations: usize,
+    /// Event-core straggler distribution applied to every job's DES run.
+    pub straggler: Straggler,
+    /// Rank failure injected into ring-layout jobs (only the systolic
+    /// ring self-heals; non-ring jobs ignore it).
+    pub fail: Option<FailRank>,
+    /// Stream seed: workload generation and every per-job DES seed
+    /// derive from it.
+    pub seed: u64,
+    /// Additionally run small closed-shell jobs through the real
+    /// threaded engines against the cached store.
+    pub live: bool,
+    /// Basis-function ceiling for the live path.
+    pub live_max_bf: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> ServiceConfig {
+        ServiceConfig {
+            nodes: 4,
+            node_bytes: memmodel::NODE_BYTES,
+            arrival_gap: 0.0,
+            default_iterations: 15,
+            straggler: Straggler::Deterministic,
+            fail: None,
+            seed: 0,
+            live: false,
+            live_max_bf: 60,
+        }
+    }
+}
+
+/// Everything the profile cache holds per (geometry, basis): the
+/// SCF-lifetime structures every job of that system shares.
+struct JobProfile {
+    mol: Molecule,
+    basis: BasisSet,
+    n_bf: usize,
+    max_shell_bf: usize,
+    store: Arc<ShellPairStore>,
+    /// Q-sorted pair list — cached alongside the store (same key, same
+    /// lifetime); its measured bytes feed every layout's memory gate.
+    pairs: Arc<SortedPairList>,
+    stats: Arc<SystemStats>,
+    /// One replicated store copy (the gate's `store_bytes` figure).
+    store_bytes: f64,
+    pairlist_bytes: f64,
+}
+
+/// One job's final placement as reported (and audited by tests).
+#[derive(Debug, Clone)]
+pub struct ServicePlacement {
+    pub id: usize,
+    pub system: String,
+    pub engine: EngineKind,
+    pub layout: StoreLayout,
+    pub node: usize,
+    pub start: f64,
+    pub finish: f64,
+    /// Admission-gated per-node bytes while resident.
+    pub bytes: f64,
+    pub cache_hit: bool,
+}
+
+/// The service-level report. [`render`](Self::render) is the
+/// byte-comparable text form (`khf replay` determinism is `diff` over
+/// it); [`bench_json`](Self::bench_json) is the `BENCH_service.json`
+/// emitter.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceReport {
+    pub submitted: usize,
+    pub admitted: usize,
+    /// Job ids the gate rejected up front (footprint > one node).
+    pub rejected: Vec<usize>,
+    pub makespan: f64,
+    /// Admitted jobs per second of makespan (0 for an empty stream).
+    pub throughput: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub mean_latency: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_entries: usize,
+    pub cache_bytes: usize,
+    pub nodes: usize,
+    pub node_bytes: f64,
+    pub placements: Vec<ServicePlacement>,
+    pub node_peak_bytes: Vec<f64>,
+    pub node_jobs: Vec<usize>,
+    pub live_lines: Vec<String>,
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample. Well-defined
+/// on every stream the service produces: an empty sample returns 0.0
+/// (the zero-admitted-jobs report), a single sample is its own p50,
+/// p95 and p99 (rank = ceil(p/100·1) = 1), and p = 100 is the maximum.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let n = sorted.len();
+    let rank = ((p / 100.0) * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
+impl ServiceReport {
+    /// Render the full deterministic report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "multi-tenant SCF service: {} submitted, {} admitted, {} rejected \
+             on {} nodes x {}\n",
+            self.submitted,
+            self.admitted,
+            self.rejected.len(),
+            self.nodes,
+            human_bytes(self.node_bytes),
+        ));
+        if !self.rejected.is_empty() {
+            let ids: Vec<String> = self.rejected.iter().map(|id| id.to_string()).collect();
+            out.push_str(&format!(
+                "  rejected by the admission gate (footprint > node): job(s) {}\n",
+                ids.join(", ")
+            ));
+        }
+        let mut rows = vec![vec![
+            "job".to_string(),
+            "system".to_string(),
+            "engine".to_string(),
+            "store".to_string(),
+            "node".to_string(),
+            "start".to_string(),
+            "finish".to_string(),
+            "bytes/node".to_string(),
+            "cache".to_string(),
+        ]];
+        for p in &self.placements {
+            rows.push(vec![
+                p.id.to_string(),
+                p.system.clone(),
+                p.engine.label().to_string(),
+                p.layout.label().to_string(),
+                p.node.to_string(),
+                report::secs(p.start),
+                report::secs(p.finish),
+                human_bytes(p.bytes),
+                if p.cache_hit { "hit" } else { "miss" }.to_string(),
+            ]);
+        }
+        out.push_str(&report::table(&rows));
+        out.push_str(&format!(
+            "cache: {} hits / {} misses over {} profiles (hit rate {:.1}%, {} cached)\n",
+            self.cache_hits,
+            self.cache_misses,
+            self.cache_entries,
+            100.0 * self.hit_rate(),
+            human_bytes(self.cache_bytes as f64),
+        ));
+        out.push_str(&format!(
+            "throughput: {} jobs in {} = {:.4} jobs/s\n",
+            self.admitted,
+            report::secs(self.makespan),
+            self.throughput,
+        ));
+        out.push_str(&format!(
+            "latency: p50 {} / p95 {} / p99 {} (mean {})\n",
+            report::secs(self.p50),
+            report::secs(self.p95),
+            report::secs(self.p99),
+            report::secs(self.mean_latency),
+        ));
+        let peaks: Vec<String> =
+            self.node_peak_bytes.iter().map(|&b| human_bytes(b)).collect();
+        let counts: Vec<String> = self.node_jobs.iter().map(|n| n.to_string()).collect();
+        out.push_str(&format!(
+            "node peaks: [{}] of {}; jobs per node: [{}]\n",
+            peaks.join(", "),
+            human_bytes(self.node_bytes),
+            counts.join(", "),
+        ));
+        for line in &self.live_lines {
+            out.push_str(line);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Cache hit fraction of all profile lookups (0.0 when untouched).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// `BENCH_service.json` rows.
+    pub fn bench_json(&self) -> BenchJson {
+        let mut b = BenchJson::new("service");
+        b.row("stream", "jobs_submitted", self.submitted as f64);
+        b.row("stream", "jobs_admitted", self.admitted as f64);
+        b.row("stream", "jobs_rejected", self.rejected.len() as f64);
+        b.row("stream", "makespan_s", self.makespan);
+        b.row("stream", "throughput_jobs_per_s", self.throughput);
+        b.row("latency", "p50_s", self.p50);
+        b.row("latency", "p95_s", self.p95);
+        b.row("latency", "p99_s", self.p99);
+        b.row("latency", "mean_s", self.mean_latency);
+        b.row("cache", "hits", self.cache_hits as f64);
+        b.row("cache", "misses", self.cache_misses as f64);
+        b.row("cache", "hit_rate", self.hit_rate());
+        b.row("cache", "entries", self.cache_entries as f64);
+        b.row("cache", "bytes", self.cache_bytes as f64);
+        for (i, (&peak, &jobs)) in
+            self.node_peak_bytes.iter().zip(&self.node_jobs).enumerate()
+        {
+            let config = format!("node{i}");
+            b.row(&config, "peak_bytes", peak);
+            b.row(&config, "jobs", jobs as f64);
+        }
+        b
+    }
+}
+
+/// The single-node machine a job's layout + engine imply: MPI-only runs
+/// 256 single-thread ranks, the hybrids 4 ranks x 64 threads (the
+/// paper's configurations), with the store flags set from the layout.
+fn machine_for(engine: EngineKind, layout: StoreLayout) -> Machine {
+    let mut m = match engine {
+        EngineKind::MpiOnly => Machine::theta_mpi(1),
+        _ => Machine::theta_hybrid(1),
+    };
+    m.shard_store = layout != StoreLayout::Replicated;
+    m.ring_exchange = matches!(layout, StoreLayout::Ring | StoreLayout::RingOverlap);
+    m.ring_overlap = layout == StoreLayout::RingOverlap;
+    m
+}
+
+/// Admission-gate bytes for one job on one node: engine working set
+/// plus the layout-dispatched store/list accounting at the machine's
+/// nominal rank count.
+fn admission_bytes(profile: &JobProfile, engine: EngineKind, layout: StoreLayout) -> f64 {
+    let m = machine_for(engine, layout);
+    let model = profile.stats.shard_model(m.ranks());
+    memmodel::exact_bytes_for_layout(
+        engine,
+        profile.n_bf,
+        profile.max_shell_bf,
+        m.ranks_per_node,
+        m.threads_per_rank,
+        layout,
+        profile.store_bytes,
+        model.max_shard_bytes,
+        model.prefix_bytes,
+        profile.pairlist_bytes,
+    )
+}
+
+/// Per-job DES seed: a pure mix of the stream seed and the job id, so
+/// job k's straggler draws are identical across replays no matter how
+/// the stream around it changes.
+fn job_seed(stream_seed: u64, id: usize) -> u64 {
+    (stream_seed ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15))
+        .wrapping_add(0x632BE59BD9B4E019)
+}
+
+/// Run the service over a job stream and report. Deterministic: equal
+/// (jobs, config, cost model) inputs produce byte-identical
+/// [`ServiceReport::render`] output.
+pub fn run_service(
+    jobs: &[JobSpec],
+    cfg: &ServiceConfig,
+    cost: &CostModel,
+) -> anyhow::Result<ServiceReport> {
+    anyhow::ensure!(cfg.nodes > 0, "service needs at least one node");
+    let mut stores = StoreCache::new();
+    let mut profiles: HashMap<(u64, BasisName), Arc<JobProfile>> = HashMap::new();
+    let mut hits = 0u64;
+    let mut misses = 0u64;
+
+    // Profile every job (cached), derive its gate bytes and DES-backed
+    // service time.
+    let mut requests = Vec::with_capacity(jobs.len());
+    let mut job_profiles = Vec::with_capacity(jobs.len());
+    let mut job_hits = Vec::with_capacity(jobs.len());
+    for (i, spec) in jobs.iter().enumerate() {
+        let mol = molecule_by_spec(&spec.mol_spec)
+            .ok_or_else(|| anyhow::anyhow!("job {}: unknown molecule {:?}", spec.id, spec.mol_spec))?;
+        let key = (mol.fingerprint(), spec.basis);
+        let (profile, hit) = match profiles.get(&key) {
+            Some(p) => (Arc::clone(p), true),
+            None => {
+                let basis = BasisSet::assemble(&mol, spec.basis)?;
+                // The store goes through the scf-layer StoreCache so the
+                // service and any live SCF share one construction path
+                // (and its `matches` validation).
+                let (store, _) = stores.get_or_build(&mol, &basis, spec.basis);
+                let screen =
+                    SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+                let pairs = Arc::new(SortedPairList::build(&screen, &store));
+                let stats = Arc::new(build_stats(&mol.name, &basis, &screen, cost));
+                let profile = Arc::new(JobProfile {
+                    n_bf: basis.n_bf,
+                    max_shell_bf: basis.shells.iter().map(|s| s.kind.n_bf()).max().unwrap_or(1),
+                    store_bytes: stats.store_bytes_total,
+                    pairlist_bytes: pairs.bytes() as f64,
+                    mol,
+                    basis,
+                    store,
+                    pairs,
+                    stats,
+                });
+                profiles.insert(key, Arc::clone(&profile));
+                (profile, false)
+            }
+        };
+        if hit {
+            hits += 1;
+        } else {
+            misses += 1;
+        }
+        let bytes = admission_bytes(&profile, spec.engine, spec.layout);
+        let machine = machine_for(spec.engine, spec.layout);
+        let ring = machine.ring_exchange;
+        let sim = simulate_des(
+            spec.engine,
+            &profile.stats,
+            &machine,
+            cost,
+            DesOptions {
+                straggler: cfg.straggler,
+                seed: job_seed(cfg.seed, spec.id),
+                fail: if ring { cfg.fail } else { None },
+            },
+        );
+        requests.push(JobRequest {
+            id: i,
+            arrival: i as f64 * cfg.arrival_gap,
+            service: sim.fock_seconds * spec.iterations.max(1) as f64,
+            bytes,
+        });
+        job_profiles.push(profile);
+        job_hits.push(hit);
+    }
+
+    // Pack the stream onto the nodes.
+    let schedule = schedule_jobs(&requests, cfg.nodes, cfg.node_bytes);
+
+    let mut report = ServiceReport {
+        submitted: jobs.len(),
+        admitted: schedule.placements.len(),
+        rejected: schedule.rejected.iter().map(|&i| jobs[i].id).collect(),
+        makespan: schedule.makespan,
+        cache_hits: hits,
+        cache_misses: misses,
+        cache_entries: profiles.len(),
+        cache_bytes: stores.cached_bytes()
+            + {
+                // Pair lists cached alongside the stores: sum over jobs'
+                // *distinct* profiles in job order (not map order) so
+                // the figure is iteration-order independent.
+                let mut seen = std::collections::HashSet::new();
+                let mut bytes = 0usize;
+                for (spec, p) in jobs.iter().zip(&job_profiles) {
+                    if seen.insert((p.mol.fingerprint(), spec.basis)) {
+                        bytes += p.pairs.bytes();
+                    }
+                }
+                bytes
+            },
+        nodes: cfg.nodes,
+        node_bytes: cfg.node_bytes,
+        node_peak_bytes: schedule.peak_bytes.clone(),
+        node_jobs: schedule.node_jobs.clone(),
+        ..ServiceReport::default()
+    };
+    report.throughput = if schedule.makespan > 0.0 {
+        schedule.placements.len() as f64 / schedule.makespan
+    } else {
+        0.0
+    };
+    let mut latencies: Vec<f64> = schedule
+        .placements
+        .iter()
+        .map(|p| p.finish - requests[p.id].arrival)
+        .collect();
+    report.mean_latency = if latencies.is_empty() {
+        0.0
+    } else {
+        latencies.iter().sum::<f64>() / latencies.len() as f64
+    };
+    latencies.sort_by(|a, b| a.total_cmp(b));
+    report.p50 = percentile(&latencies, 50.0);
+    report.p95 = percentile(&latencies, 95.0);
+    report.p99 = percentile(&latencies, 99.0);
+    report.placements = schedule
+        .placements
+        .iter()
+        .map(|p| {
+            let spec = &jobs[p.id];
+            ServicePlacement {
+                id: spec.id,
+                system: spec.system_label(),
+                engine: spec.engine,
+                layout: spec.layout,
+                node: p.node,
+                start: p.start,
+                finish: p.finish,
+                bytes: p.bytes,
+                cache_hit: job_hits[p.id],
+            }
+        })
+        .collect();
+
+    // Live path: run small closed-shell jobs through the real threaded
+    // engines, reusing the cached store (flat residency — the live
+    // engines' sharded modes are exercised by `khf scf`, not here).
+    if cfg.live {
+        for p in &schedule.placements {
+            let spec = &jobs[p.id];
+            let profile = &job_profiles[p.id];
+            if profile.mol.n_electrons() % 2 != 0 || profile.n_bf > cfg.live_max_bf {
+                continue;
+            }
+            let driver = RhfDriver::default();
+            let store = Arc::clone(&profile.store);
+            let res = match spec.engine {
+                EngineKind::MpiOnly => driver.run_with_store(
+                    &profile.mol,
+                    &profile.basis,
+                    store,
+                    &mut MpiOnlyFock::new(2),
+                )?,
+                EngineKind::PrivateFock => driver.run_with_store(
+                    &profile.mol,
+                    &profile.basis,
+                    store,
+                    &mut PrivateFock::new(2, 2),
+                )?,
+                EngineKind::SharedFock => driver.run_with_store(
+                    &profile.mol,
+                    &profile.basis,
+                    store,
+                    &mut SharedFock::new(2, 2),
+                )?,
+            };
+            report.live_lines.push(format!(
+                "live: job {} {} [{}] E = {:.6} Ha ({} iterations, converged={}, store {})",
+                spec.id,
+                spec.system_label(),
+                spec.engine.label(),
+                res.energy,
+                res.iterations,
+                res.converged,
+                if job_hits[p.id] { "cached" } else { "built" },
+            ));
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_empty_and_single_sample() {
+        // The satellite fix: empty and one-job streams must be
+        // well-defined, not NaN/panic.
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[], 99.0), 0.0);
+        let one = [3.25];
+        assert_eq!(percentile(&one, 50.0), 3.25);
+        assert_eq!(percentile(&one, 95.0), 3.25);
+        assert_eq!(percentile(&one, 99.0), 3.25);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        // ceil(0.5·4) = 2 → v[1]; ceil(0.95·4) = 4 → v[3].
+        assert_eq!(percentile(&v, 50.0), 2.0);
+        assert_eq!(percentile(&v, 95.0), 4.0);
+        assert_eq!(percentile(&v, 100.0), 4.0);
+        assert_eq!(percentile(&v, 25.0), 1.0);
+        // Monotone in p.
+        for w in [25.0, 50.0, 75.0, 95.0, 99.0].windows(2) {
+            assert!(percentile(&v, w[0]) <= percentile(&v, w[1]));
+        }
+    }
+
+    #[test]
+    fn workload_generation_is_deterministic_and_mixed() {
+        let spec = WorkloadSpec { n_jobs: 60, seed: 42 };
+        let a = spec.generate();
+        let b = spec.generate();
+        assert_eq!(a.len(), 60);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.mol_spec, y.mol_spec);
+            assert_eq!(x.basis, y.basis);
+            assert_eq!(x.engine, y.engine);
+            assert_eq!(x.layout, y.layout);
+            assert_eq!(x.iterations, y.iterations);
+        }
+        // 60 draws over a 10-entry pool: repeats are certain, which is
+        // what guarantees cache hits downstream.
+        let mut keys: Vec<(String, &'static str)> =
+            a.iter().map(|j| (j.mol_spec.clone(), j.basis.label())).collect();
+        keys.sort();
+        keys.dedup();
+        assert!(keys.len() < 60, "pool must repeat");
+        assert!(keys.len() > 3, "pool must mix");
+        // A different seed changes the stream.
+        let c = WorkloadSpec { n_jobs: 60, seed: 43 }.generate();
+        assert!(a.iter().zip(&c).any(|(x, y)| x.mol_spec != y.mol_spec
+            || x.engine != y.engine
+            || x.layout != y.layout));
+    }
+
+    #[test]
+    fn job_file_roundtrip_and_errors() {
+        let text = "# comment\n\
+                    h2o sto-3g shared replicated 12\n\
+                    c6h6 6-31g mpi ring\n\
+                    \n\
+                    sheet:6 sto-3g private sharded 8  # trailing comment\n";
+        let jobs = parse_job_file(text, 15).unwrap();
+        assert_eq!(jobs.len(), 3);
+        assert_eq!(jobs[0].iterations, 12);
+        assert_eq!(jobs[1].iterations, 15, "default iterations");
+        assert_eq!(jobs[1].layout, StoreLayout::Ring);
+        assert_eq!(jobs[2].mol_spec, "sheet:6");
+        assert_eq!(jobs[2].engine, EngineKind::PrivateFock);
+        assert!(parse_job_file("nosuchmol sto-3g mpi ring\n", 15).is_err());
+        assert!(parse_job_file("h2o sto-3g warp ring\n", 15).is_err());
+        assert!(parse_job_file("h2o sto-3g mpi diagonal\n", 15).is_err());
+        assert!(parse_job_file("h2o nope mpi ring\n", 15).is_err());
+    }
+
+    #[test]
+    fn molecule_specs_resolve() {
+        assert!(molecule_by_spec("h2o").is_some());
+        assert!(molecule_by_spec("sheet:6").is_some());
+        assert!(molecule_by_spec("bilayer:6").is_some());
+        assert!(molecule_by_spec("sheet:0").is_none());
+        assert!(molecule_by_spec("torus:6").is_none());
+        assert!(molecule_by_spec("nope").is_none());
+    }
+
+    #[test]
+    fn empty_stream_report_is_well_defined() {
+        let cost = CostModel::fallback_631gd();
+        let r = run_service(&[], &ServiceConfig::default(), &cost).unwrap();
+        assert_eq!(r.submitted, 0);
+        assert_eq!(r.admitted, 0);
+        assert_eq!(r.throughput, 0.0);
+        assert_eq!((r.p50, r.p95, r.p99), (0.0, 0.0, 0.0));
+        assert!(r.mean_latency == 0.0 && r.makespan == 0.0);
+        assert_eq!(r.hit_rate(), 0.0);
+        // Renders and serializes without NaN.
+        let text = r.render();
+        assert!(text.contains("throughput"));
+        assert!(!text.contains("NaN"));
+        assert!(!r.bench_json().to_json().contains("NaN"));
+    }
+
+    #[test]
+    fn single_job_stream_percentiles_are_the_job() {
+        let cost = CostModel::fallback_631gd();
+        let jobs = vec![JobSpec {
+            id: 0,
+            mol_spec: "h2".to_string(),
+            basis: BasisName::Sto3g,
+            engine: EngineKind::SharedFock,
+            layout: StoreLayout::Replicated,
+            iterations: 10,
+        }];
+        let r = run_service(&jobs, &ServiceConfig::default(), &cost).unwrap();
+        assert_eq!(r.admitted, 1);
+        assert!(r.p50 > 0.0);
+        assert_eq!(r.p50.to_bits(), r.p99.to_bits(), "one sample is every percentile");
+        assert_eq!(r.p50.to_bits(), r.mean_latency.to_bits());
+        assert!(r.throughput > 0.0);
+        assert_eq!(r.cache_misses, 1);
+        assert_eq!(r.cache_hits, 0);
+    }
+
+    #[test]
+    fn job_seed_is_stable_and_id_sensitive() {
+        assert_eq!(job_seed(7, 3), job_seed(7, 3));
+        assert_ne!(job_seed(7, 3), job_seed(7, 4));
+        assert_ne!(job_seed(7, 3), job_seed(8, 3));
+    }
+}

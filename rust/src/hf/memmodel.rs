@@ -245,6 +245,109 @@ pub fn exact_bytes_with_overlapped_ring_store(
         + ring_overlap_scf_bytes_per_node(shard_bytes, pairlist_bytes, ranks_per_node)
 }
 
+/// The four SCF-lifetime store residency modes, as one nameable axis.
+///
+/// Everything above models them as four separate accounting functions
+/// (replicated / sharded+prefix / ring / overlapped ring); the
+/// multi-tenant service needs to pick one **per job** from a parsed
+/// spec, so this enum gives the axis a first-class name and
+/// [`scf_bytes_per_node_for_layout`] dispatches to the exact same
+/// functions — no fifth accounting path to drift.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StoreLayout {
+    /// One full store per rank ([`shared_scf_bytes_per_node`]).
+    Replicated,
+    /// Private bra shards + node-shared ket-prefix window
+    /// ([`sharded_scf_bytes_per_node`], `--shard-store`).
+    Sharded,
+    /// Systolic ring, two resident blocks per rank
+    /// ([`ring_scf_bytes_per_node`], `--shard-store --ring-exchange`).
+    Ring,
+    /// Double-buffered ring, three resident blocks per rank
+    /// ([`ring_overlap_scf_bytes_per_node`], `--ring-overlap`).
+    RingOverlap,
+}
+
+impl StoreLayout {
+    pub const ALL: [StoreLayout; 4] =
+        [StoreLayout::Replicated, StoreLayout::Sharded, StoreLayout::Ring, StoreLayout::RingOverlap];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            StoreLayout::Replicated => "replicated",
+            StoreLayout::Sharded => "sharded",
+            StoreLayout::Ring => "ring",
+            StoreLayout::RingOverlap => "ring-overlap",
+        }
+    }
+
+    /// Parse the CLI/job-file spelling (the `label` strings, plus the
+    /// flag-style aliases used by `khf scf`).
+    pub fn parse(s: &str) -> Option<StoreLayout> {
+        match s {
+            "replicated" | "flat" => Some(StoreLayout::Replicated),
+            "sharded" | "shard" => Some(StoreLayout::Sharded),
+            "ring" => Some(StoreLayout::Ring),
+            "ring-overlap" | "overlap" => Some(StoreLayout::RingOverlap),
+            _ => None,
+        }
+    }
+}
+
+/// Store + pair-list bytes per node for a given [`StoreLayout`] —
+/// pure dispatch to the four mode-specific accounting functions.
+/// `store_bytes` is one full store copy; `shard_bytes`/`prefix_bytes`
+/// are the max-shard and prefix-window figures (ignored by layouts
+/// that don't use them).
+pub fn scf_bytes_per_node_for_layout(
+    layout: StoreLayout,
+    store_bytes: f64,
+    shard_bytes: f64,
+    prefix_bytes: f64,
+    pairlist_bytes: f64,
+    ranks_per_node: usize,
+) -> f64 {
+    match layout {
+        StoreLayout::Replicated => {
+            shared_scf_bytes_per_node(store_bytes, pairlist_bytes, ranks_per_node)
+        }
+        StoreLayout::Sharded => {
+            sharded_scf_bytes_per_node(shard_bytes, prefix_bytes, pairlist_bytes, ranks_per_node)
+        }
+        StoreLayout::Ring => ring_scf_bytes_per_node(shard_bytes, pairlist_bytes, ranks_per_node),
+        StoreLayout::RingOverlap => {
+            ring_overlap_scf_bytes_per_node(shard_bytes, pairlist_bytes, ranks_per_node)
+        }
+    }
+}
+
+/// [`exact_bytes`] plus the layout-dispatched store accounting — the
+/// admission gate's one-call figure for "this job, this engine, this
+/// store mode, on one node".
+#[allow(clippy::too_many_arguments)]
+pub fn exact_bytes_for_layout(
+    engine: EngineKind,
+    n_bf: usize,
+    max_shell_bf: usize,
+    ranks_per_node: usize,
+    threads_per_rank: usize,
+    layout: StoreLayout,
+    store_bytes: f64,
+    shard_bytes: f64,
+    prefix_bytes: f64,
+    pairlist_bytes: f64,
+) -> f64 {
+    exact_bytes(engine, n_bf, max_shell_bf, ranks_per_node, threads_per_rank)
+        + scf_bytes_per_node_for_layout(
+            layout,
+            store_bytes,
+            shard_bytes,
+            prefix_bytes,
+            pairlist_bytes,
+            ranks_per_node,
+        )
+}
+
 /// Class-batch drain buffer bytes **per worker thread**.
 ///
 /// Since the class-batched refactor every engine thread owns one
@@ -653,5 +756,52 @@ mod tests {
             feasible(sharded, true),
             "sharded store must fit MCDRAM ({sharded} B)"
         );
+    }
+
+    #[test]
+    fn layout_dispatch_matches_mode_functions() {
+        // The enum is a name for the existing axis, not a fifth
+        // accounting path: every layout must reproduce its
+        // mode-specific function exactly, for both the store-only and
+        // the combined exact figure.
+        let (sb, shard, prefix, pl, r) = (50e6, 1.2e6, 14e6, 2e6, 4usize);
+        let cases = [
+            (StoreLayout::Replicated, shared_scf_bytes_per_node(sb, pl, r)),
+            (StoreLayout::Sharded, sharded_scf_bytes_per_node(shard, prefix, pl, r)),
+            (StoreLayout::Ring, ring_scf_bytes_per_node(shard, pl, r)),
+            (StoreLayout::RingOverlap, ring_overlap_scf_bytes_per_node(shard, pl, r)),
+        ];
+        for (layout, want) in cases {
+            let got = scf_bytes_per_node_for_layout(layout, sb, shard, prefix, pl, r);
+            assert_eq!(got, want, "{}", layout.label());
+            let exact = exact_bytes_for_layout(
+                EngineKind::SharedFock,
+                180,
+                15,
+                r,
+                64,
+                layout,
+                sb,
+                shard,
+                prefix,
+                pl,
+            );
+            assert_eq!(
+                exact,
+                exact_bytes(EngineKind::SharedFock, 180, 15, r, 64) + want,
+                "{}",
+                layout.label()
+            );
+        }
+    }
+
+    #[test]
+    fn layout_parse_roundtrip() {
+        for layout in StoreLayout::ALL {
+            assert_eq!(StoreLayout::parse(layout.label()), Some(layout));
+        }
+        assert_eq!(StoreLayout::parse("flat"), Some(StoreLayout::Replicated));
+        assert_eq!(StoreLayout::parse("overlap"), Some(StoreLayout::RingOverlap));
+        assert_eq!(StoreLayout::parse("bogus"), None);
     }
 }

@@ -478,6 +478,44 @@ impl ShellPairStore {
             + t.data.len() * std::mem::size_of::<f64>()
     }
 
+    /// FNV-1a digest over the complete stored content — the canonical
+    /// pair index, every primitive pair's scalars, and every Hermite
+    /// table word, all hashed by f64 bit pattern. Two stores built from
+    /// identical (geometry, basis) inputs are bit-identical and share
+    /// this digest; any perturbed coordinate, exponent or contraction
+    /// changes it. The multi-tenant service's store cache uses it as
+    /// the "bit-identical bytes" witness on cache hits.
+    pub fn content_digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        mix(self.n_shells as u64);
+        for &slot in &self.idx {
+            mix(slot as u64);
+        }
+        for t in &self.tables {
+            mix(t.la as u64);
+            mix(t.lb as u64);
+            mix(t.prims.len() as u64);
+            for p in &t.prims {
+                mix(p.e000.to_bits());
+                mix(p.p.to_bits());
+                for c in p.center {
+                    mix(c.to_bits());
+                }
+                mix(p.ia as u64);
+                mix(p.ib as u64);
+            }
+            for &w in &t.data {
+                mix(w.to_bits());
+            }
+        }
+        mix(self.fingerprint);
+        h
+    }
+
     /// Count the distance-surviving canonical pairs without building
     /// any tables — an upper bound on the built store's
     /// `n_pairs_stored` (pairs can additionally lose all primitives to

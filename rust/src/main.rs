@@ -5,6 +5,8 @@
 //!   scf --mol h2o [--engine X]   run RHF on a built-in molecule
 //!   footprint                    paper Table 2 memory footprints
 //!   simulate --system 2.0 ...    simulated scaling run (Table 3 / Fig 6)
+//!   serve --job-file jobs.txt    multi-tenant SCF service over a job file
+//!   replay --jobs 50 --seed 7    seeded service replay (byte-reproducible)
 //!   calibrate [--out path]       measure + save the quartet cost model
 //!   artifacts-check              verify the XLA artifacts load + run
 
@@ -15,7 +17,10 @@ use khf::cluster::{
     calibrate, simulate, simulate_des, CostModel, DesOptions, FailRank, Machine, SimResult,
     Straggler,
 };
-use khf::coordinator::{mini_stats, report, stats_for_molecule, stats_for_system};
+use khf::coordinator::{
+    mini_stats, parse_job_file, report, run_service, stats_for_molecule, stats_for_system,
+    ServiceConfig, WorkloadSpec,
+};
 use khf::hf::hetero_fock::HeteroFock;
 use khf::hf::memmodel::{self, EngineKind};
 use khf::hf::mpi_only::MpiOnlyFock;
@@ -36,6 +41,8 @@ fn main() {
         "scf" => cmd_scf(&args),
         "footprint" => cmd_footprint(),
         "simulate" => cmd_simulate(&args),
+        "serve" => cmd_service(&args, true),
+        "replay" => cmd_service(&args, false),
         "calibrate" => cmd_calibrate(&args),
         "artifacts-check" => cmd_artifacts_check(),
         _ => {
@@ -112,6 +119,27 @@ fn print_help() {
                                              ring); prints replayed cells, the\n\
                                              recovery charge and the event digest\n\
                                              (same seed => identical output)\n\
+           serve --job-file <path>           multi-tenant SCF service: admit the\n\
+                                             job stream (one `mol basis engine\n\
+                                             layout [iters]` per line), gate on\n\
+                                             per-node memory, pack onto the\n\
+                                             virtual cluster, report throughput +\n\
+                                             latency percentiles + cache stats and\n\
+                                             write BENCH_service.json\n\
+           replay --jobs N --seed S          same service over a seeded generated\n\
+                                             workload; identical seeds produce\n\
+                                             byte-identical reports\n\
+             common service options:\n\
+               [--nodes M] [--node-gb X]     cluster size / per-node byte gate\n\
+               [--arrival-gap G]             seconds between arrivals (0 = batch)\n\
+               [--iterations N]              default SCF iterations per job\n\
+               [--straggler off|uniform|heavy] [--fail-rank [R@T]]\n\
+                                             event-core options, forwarded to\n\
+                                             every job's DES run (faults reach\n\
+                                             ring-layout jobs only)\n\
+               [--live [--live-max-bf N]]    also run small closed-shell jobs\n\
+                                             through the real threaded engines\n\
+                                             against the cached store\n\
            calibrate [--out artifacts/calibration.toml] [--budget N]\n\
            artifacts-check                   verify XLA artifacts"
     );
@@ -661,6 +689,48 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         "memory-infeasible configurations: {}",
         infeasible.join(", ")
     );
+    Ok(())
+}
+
+/// `khf serve --job-file F` / `khf replay --jobs N --seed S`: the
+/// multi-tenant SCF service. Both paths share every option; they differ
+/// only in where the job stream comes from (a file vs the seeded
+/// workload generator). No wall clock is consulted anywhere, so replay
+/// output is byte-identical across runs with equal inputs — CI diffs it.
+fn cmd_service(args: &Args, from_file: bool) -> anyhow::Result<()> {
+    let cost = CostModel::load_or_fallback("artifacts/calibration.toml");
+    let mut cfg = ServiceConfig {
+        nodes: args.parse_or("nodes", 4usize)?,
+        arrival_gap: args.parse_or("arrival-gap", 0.0f64)?,
+        default_iterations: args.parse_or("iterations", 15usize)?,
+        straggler: Straggler::parse(args.get_or("straggler", "off"))?,
+        fail: fail_spec(args, "fail-rank", (2, 1))?
+            .map(|(rank, round)| FailRank { rank, round }),
+        seed: args.parse_or("seed", 0u64)?,
+        live: args.flag("live"),
+        ..ServiceConfig::default()
+    };
+    cfg.live_max_bf = args.parse_or("live-max-bf", cfg.live_max_bf)?;
+    anyhow::ensure!(cfg.nodes > 0, "--nodes must be positive");
+    anyhow::ensure!(cfg.arrival_gap >= 0.0, "--arrival-gap must be nonnegative");
+    if let Some(gb) = args.get("node-gb") {
+        let gb: f64 = gb.parse()?;
+        anyhow::ensure!(gb > 0.0, "--node-gb must be positive");
+        cfg.node_bytes = gb * 1e9;
+    }
+    let jobs = if from_file {
+        let path = args
+            .get("job-file")
+            .ok_or_else(|| anyhow::anyhow!("khf serve needs --job-file <path>"))?;
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        parse_job_file(&text, cfg.default_iterations)?
+    } else {
+        WorkloadSpec { n_jobs: args.parse_or("jobs", 50usize)?, seed: cfg.seed }.generate()
+    };
+    let summary = run_service(&jobs, &cfg, &cost)?;
+    print!("{}", summary.render());
+    summary.bench_json().write();
     Ok(())
 }
 

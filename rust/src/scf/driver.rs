@@ -27,6 +27,7 @@ use crate::integrals::{
 use crate::linalg::{eigen, Matrix};
 
 use super::diis::Diis;
+use super::store_cache::StoreCache;
 use super::{density_from_coeffs, electronic_energy};
 
 /// SCF configuration + entry point.
@@ -173,6 +174,26 @@ impl RhfDriver {
     ) -> anyhow::Result<ScfResult> {
         let store = Arc::new(ShellPairStore::build(basis));
         self.run_with_store(mol, basis, store, builder)
+    }
+
+    /// Run RHF through a cross-job [`StoreCache`]: the shell-pair store
+    /// is fetched (or built and inserted) under the
+    /// (geometry fingerprint, basis) key, then the SCF proceeds exactly
+    /// as [`run_with_store`](Self::run_with_store). Returns the result
+    /// plus whether the store came from the cache — the multi-tenant
+    /// service's live path threads one cache through its whole job
+    /// stream this way.
+    pub fn run_cached(
+        &self,
+        mol: &Molecule,
+        basis_name: BasisName,
+        cache: &mut StoreCache,
+        builder: &mut dyn FockBuilder,
+    ) -> anyhow::Result<(ScfResult, bool)> {
+        let basis = BasisSet::assemble(mol, basis_name)?;
+        let (store, hit) = cache.get_or_build(mol, &basis, basis_name);
+        let result = self.run_with_store(mol, &basis, store, builder)?;
+        Ok((result, hit))
     }
 
     /// Run RHF reusing an existing shell-pair store (e.g. one already

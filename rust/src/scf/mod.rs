@@ -7,8 +7,10 @@
 
 pub mod diis;
 pub mod driver;
+pub mod store_cache;
 
 pub use driver::{RhfDriver, ScfResult};
+pub use store_cache::StoreCache;
 
 use crate::linalg::Matrix;
 

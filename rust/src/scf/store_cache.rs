@@ -1,0 +1,185 @@
+//! Cross-job shell-pair store cache.
+//!
+//! In a multi-tenant service the common case is *repeat submission*:
+//! the same molecule in the same basis arrives again and again, and the
+//! most expensive SCF-lifetime structure — the [`ShellPairStore`]'s
+//! Hermite pair tables — depends only on (geometry, basis). This cache
+//! keys built stores on exactly that pair:
+//! ([`Molecule::fingerprint`](crate::chem::Molecule::fingerprint),
+//! [`BasisName`]), so an identical resubmission reuses the `Arc`'d
+//! tables bit for bit while any perturbed coordinate or basis change
+//! misses and rebuilds.
+//!
+//! Safety net: a hit is additionally validated against the assembled
+//! basis via [`ShellPairStore::matches`] (the store's own
+//! geometry/exponent fingerprint). A molecule-fingerprint collision —
+//! astronomically unlikely, but cheap to rule out — therefore rebuilds
+//! instead of serving finite, plausible, wrong integrals.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::basis::{BasisName, BasisSet};
+use crate::chem::Molecule;
+use crate::integrals::ShellPairStore;
+
+/// Cache key: (geometry fingerprint, basis). The basis is part of the
+/// key because the same geometry in a different basis has entirely
+/// different pair tables.
+pub type StoreKey = (u64, BasisName);
+
+/// (Geometry, basis)-keyed cache of built [`ShellPairStore`]s with
+/// hit/miss accounting. Entries are `Arc`-shared: a hit hands back the
+/// *same* tables every engine thread of the previous job read, which is
+/// both the memory win (one copy across co-resident jobs of the same
+/// system) and the determinism win (bit-identical store bytes by
+/// construction, witnessed by [`ShellPairStore::content_digest`]).
+#[derive(Debug, Default)]
+pub struct StoreCache {
+    entries: HashMap<StoreKey, Arc<ShellPairStore>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl StoreCache {
+    pub fn new() -> StoreCache {
+        StoreCache::default()
+    }
+
+    /// The cache key for `mol` in `basis_name`.
+    pub fn key(mol: &Molecule, basis_name: BasisName) -> StoreKey {
+        (mol.fingerprint(), basis_name)
+    }
+
+    /// Fetch the store for (mol, basis), building and inserting it on a
+    /// miss. Returns the store and whether this was a hit. The caller
+    /// provides the assembled basis (it needs one anyway for the SCF);
+    /// a cached entry that fails [`ShellPairStore::matches`] against it
+    /// is treated as a miss and replaced.
+    pub fn get_or_build(
+        &mut self,
+        mol: &Molecule,
+        basis: &BasisSet,
+        basis_name: BasisName,
+    ) -> (Arc<ShellPairStore>, bool) {
+        let key = StoreCache::key(mol, basis_name);
+        if let Some(store) = self.entries.get(&key) {
+            if store.matches(basis) {
+                self.hits += 1;
+                return (Arc::clone(store), true);
+            }
+        }
+        self.misses += 1;
+        let store = Arc::new(ShellPairStore::build(basis));
+        self.entries.insert(key, Arc::clone(&store));
+        (store, false)
+    }
+
+    /// Lookup without building (no counter update) — used by audits.
+    pub fn peek(&self, mol: &Molecule, basis_name: BasisName) -> Option<Arc<ShellPairStore>> {
+        self.entries.get(&StoreCache::key(mol, basis_name)).map(Arc::clone)
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Hit fraction of all lookups (0.0 for an untouched cache).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total heap bytes of all cached stores (one copy each — that is
+    /// the point).
+    pub fn cached_bytes(&self) -> usize {
+        self.entries.values().map(|s| s.bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chem::molecules;
+
+    #[test]
+    fn hit_on_identical_resubmission_miss_on_perturbation() {
+        let mol = molecules::water();
+        let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+        let mut cache = StoreCache::new();
+        let (a, hit_a) = cache.get_or_build(&mol, &basis, BasisName::Sto3g);
+        assert!(!hit_a);
+        let (b, hit_b) = cache.get_or_build(&mol, &basis, BasisName::Sto3g);
+        assert!(hit_b);
+        assert!(Arc::ptr_eq(&a, &b), "hit must reuse the same tables");
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.len(), 1);
+
+        // One coordinate nudged by 1e-9 bohr: different fingerprint,
+        // different key, miss.
+        let mut moved = mol.clone();
+        moved.atoms[0].pos[2] += 1e-9;
+        let basis_m = BasisSet::assemble(&moved, BasisName::Sto3g).unwrap();
+        let (c, hit_c) = cache.get_or_build(&moved, &basis_m, BasisName::Sto3g);
+        assert!(!hit_c);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.len(), 2);
+
+        // Same geometry, different basis: miss.
+        let basis_631 = BasisSet::assemble(&mol, BasisName::SixThirtyOneG).unwrap();
+        let (_, hit_d) = cache.get_or_build(&mol, &basis_631, BasisName::SixThirtyOneG);
+        assert!(!hit_d);
+        assert_eq!(cache.len(), 3);
+        assert!(cache.cached_bytes() > 0);
+    }
+
+    #[test]
+    fn name_is_not_part_of_the_key() {
+        let mut a = molecules::water();
+        let mut b = molecules::water();
+        a.name = "job-1".into();
+        b.name = "job-2".into();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let basis = BasisSet::assemble(&a, BasisName::Sto3g).unwrap();
+        let mut cache = StoreCache::new();
+        cache.get_or_build(&a, &basis, BasisName::Sto3g);
+        let (_, hit) = cache.get_or_build(&b, &basis, BasisName::Sto3g);
+        assert!(hit, "relabeled identical geometry must hit");
+    }
+
+    #[test]
+    fn stale_entry_failing_matches_is_rebuilt() {
+        // Force a key collision by hand: insert water's store under
+        // methane's key. The basis validation must reject it and
+        // rebuild rather than serve the wrong tables.
+        let water = molecules::water();
+        let methane = molecules::methane();
+        let wb = BasisSet::assemble(&water, BasisName::Sto3g).unwrap();
+        let mb = BasisSet::assemble(&methane, BasisName::Sto3g).unwrap();
+        let mut cache = StoreCache::new();
+        let (wstore, _) = cache.get_or_build(&water, &wb, BasisName::Sto3g);
+        cache
+            .entries
+            .insert(StoreCache::key(&methane, BasisName::Sto3g), Arc::clone(&wstore));
+        let (mstore, hit) = cache.get_or_build(&methane, &mb, BasisName::Sto3g);
+        assert!(!hit, "mismatched entry must not be served");
+        assert!(mstore.matches(&mb));
+    }
+}

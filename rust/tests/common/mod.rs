@@ -1,0 +1,57 @@
+//! Shared integration-test fixtures.
+//!
+//! Every end-to-end suite needs the same substrate: a named molecule's
+//! STO-3G basis/store/screen triple, a seeded symmetric pseudo-density,
+//! and the serial full-rebuild SCF reference that parallel engines,
+//! store modes and fault paths are all measured against. One copy lives
+//! here; each test binary pulls in `mod common;` and uses what it
+//! needs (hence the dead-code allow — no single binary uses it all).
+
+#![allow(dead_code)]
+
+use khf::basis::{BasisName, BasisSet};
+use khf::chem::Molecule;
+use khf::hf::serial::SerialFock;
+use khf::integrals::{SchwarzScreen, ShellPairStore};
+use khf::linalg::Matrix;
+use khf::scf::{RhfDriver, ScfResult};
+use khf::util::prng::Rng;
+
+/// STO-3G basis + Hermite pair store + Schwarz screen at the default
+/// threshold — the triple every build-level test starts from.
+pub fn setup(mol: &Molecule) -> (BasisSet, ShellPairStore, SchwarzScreen) {
+    let basis = BasisSet::assemble(mol, BasisName::Sto3g).unwrap();
+    let store = ShellPairStore::build(&basis);
+    let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+    (basis, store, screen)
+}
+
+/// Seeded symmetric pseudo-density with entries in `(lo, hi)`.
+pub fn random_density_in(n: usize, seed: u64, lo: f64, hi: f64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let mut d = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let x = rng.range(lo, hi);
+            d.set(i, j, x);
+            d.set(j, i, x);
+        }
+    }
+    d
+}
+
+/// Seeded symmetric pseudo-density in the suites' historical ±0.4 range.
+pub fn random_density(n: usize, seed: u64) -> Matrix {
+    random_density_in(n, seed, -0.4, 0.4)
+}
+
+/// Serial full-rebuild STO-3G SCF — the reference physics every
+/// engine/mode combination must land on. Panics if it does not
+/// converge (a broken reference would vacuously pass everything).
+pub fn serial_reference(mol: &Molecule) -> ScfResult {
+    let r = RhfDriver { incremental: false, ..Default::default() }
+        .run(mol, BasisName::Sto3g, &mut SerialFock::new())
+        .unwrap();
+    assert!(r.converged, "{}: serial reference did not converge", mol.name);
+    r
+}

@@ -17,7 +17,9 @@ use khf::hf::{FockBuilder, FockContext};
 use khf::integrals::{SchwarzScreen, ShellPairStore, SortedPairList, StoreSharding};
 use khf::linalg::Matrix;
 use khf::scf::RhfDriver;
-use khf::util::prng::Rng;
+
+mod common;
+use common::{random_density_in, serial_reference, setup};
 
 #[test]
 fn full_scf_energy_identical_across_engines() {
@@ -47,11 +49,7 @@ fn incremental_scf_matches_serial_full_rebuild_all_engines() {
     // reference, on water and benzene: energies within 1e-8, and the
     // incremental runs must actually converge.
     for mol in [molecules::water(), molecules::benzene()] {
-        let full_driver = RhfDriver { incremental: false, ..Default::default() };
-        let reference = full_driver
-            .run(&mol, BasisName::Sto3g, &mut SerialFock::new())
-            .unwrap();
-        assert!(reference.converged, "{}: reference did not converge", mol.name);
+        let reference = serial_reference(&mol);
 
         let incr_driver = RhfDriver::default();
         assert!(incr_driver.incremental, "incremental must be the default");
@@ -103,10 +101,7 @@ fn five_engines_agree_across_store_modes() {
         ),
     ];
     for (mol, full_matrix) in [(molecules::water(), true), (molecules::benzene(), false)] {
-        let reference = RhfDriver { incremental: false, ..Default::default() }
-            .run(&mol, BasisName::Sto3g, &mut SerialFock::new())
-            .unwrap();
-        assert!(reference.converged, "{}: reference did not converge", mol.name);
+        let reference = serial_reference(&mol);
         for (mode, driver) in &modes {
             let mut engines: Vec<(&str, Box<dyn FockBuilder>)> = if full_matrix {
                 vec![
@@ -185,10 +180,7 @@ fn link_lists_five_engines_agree_across_store_modes() {
         ),
     ];
     for (mol, full_matrix) in [(molecules::water(), true), (molecules::benzene(), false)] {
-        let reference = RhfDriver { incremental: false, ..Default::default() }
-            .run(&mol, BasisName::Sto3g, &mut SerialFock::new())
-            .unwrap();
-        assert!(reference.converged, "{}: reference did not converge", mol.name);
+        let reference = serial_reference(&mol);
         for (mode, driver) in &modes {
             let mut engines: Vec<(&str, Box<dyn FockBuilder>)> = if full_matrix {
                 vec![
@@ -253,16 +245,7 @@ fn link_lists_engines_exact_on_graphene_patch() {
     let store = ShellPairStore::build(&basis);
     let screen = SchwarzScreen::build_with_store(&basis, &store, 1e-8);
     let pairs = SortedPairList::build(&screen, &store);
-    let mut rng = Rng::new(31);
-    let n = basis.n_bf;
-    let mut d = Matrix::zeros(n, n);
-    for i in 0..n {
-        for j in 0..=i {
-            let x = rng.range(-0.3, 0.3);
-            d.set(i, j, x);
-            d.set(j, i, x);
-        }
-    }
+    let d = random_density_in(basis.n_bf, 31, -0.3, 0.3);
     let ctx_two = FockContext::new(&basis, &store, &screen, &pairs, &d);
     let f_two = SerialFock::new().build_2e(&ctx_two);
     let two_key_visited = ctx_two.walk.n_visited();
@@ -375,16 +358,7 @@ fn fock_matrices_bitwise_close_on_d_shell_system() {
     let store = ShellPairStore::build(&basis);
     let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
     let pairs = SortedPairList::build(&screen, &store);
-    let mut rng = Rng::new(2024);
-    let n = basis.n_bf;
-    let mut d = Matrix::zeros(n, n);
-    for i in 0..n {
-        for j in 0..=i {
-            let x = rng.range(-0.3, 0.3);
-            d.set(i, j, x);
-            d.set(j, i, x);
-        }
-    }
+    let d = random_density_in(basis.n_bf, 2024, -0.3, 0.3);
     let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
     let want = SerialFock::new().build_2e(&ctx);
     for threads in [2, 3, 7] {
@@ -402,9 +376,7 @@ fn repeated_builds_are_deterministic() {
     // DLB ordering varies between runs, but the sum must not (addition
     // reordering stays below 1e-12 for this magnitude).
     let mol = molecules::methane();
-    let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
-    let store = ShellPairStore::build(&basis);
-    let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+    let (basis, store, screen) = setup(&mol);
     let pairs = SortedPairList::build(&screen, &store);
     let d = Matrix::identity(basis.n_bf);
     let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);
@@ -417,9 +389,7 @@ fn repeated_builds_are_deterministic() {
 #[test]
 fn stats_consistent_across_engines() {
     let mol = molecules::water();
-    let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
-    let store = ShellPairStore::build(&basis);
-    let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
+    let (basis, store, screen) = setup(&mol);
     let pairs = SortedPairList::build(&screen, &store);
     let d = Matrix::identity(basis.n_bf);
     let ctx = FockContext::new(&basis, &store, &screen, &pairs, &d);

@@ -7,7 +7,7 @@
 //! counters must keep partitioning the canonical quartet space, with
 //! the replayed units reported on the shard stats.
 
-use khf::basis::{BasisName, BasisSet};
+use khf::basis::BasisName;
 use khf::chem::molecules;
 use khf::hf::mpi_only::MpiOnlyFock;
 use khf::hf::private_fock::PrivateFock;
@@ -15,30 +15,11 @@ use khf::hf::quartets::n_canonical;
 use khf::hf::serial::SerialFock;
 use khf::hf::shared_fock::SharedFock;
 use khf::hf::{FockBuilder, FockContext};
-use khf::integrals::{SchwarzScreen, ShellPairStore, SortedPairList, StoreSharding};
-use khf::linalg::Matrix;
+use khf::integrals::{SortedPairList, StoreSharding};
 use khf::scf::RhfDriver;
-use khf::util::prng::Rng;
 
-fn setup(mol: &khf::chem::Molecule) -> (BasisSet, ShellPairStore, SchwarzScreen) {
-    let basis = BasisSet::assemble(mol, BasisName::Sto3g).unwrap();
-    let store = ShellPairStore::build(&basis);
-    let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
-    (basis, store, screen)
-}
-
-fn random_density(n: usize, seed: u64) -> Matrix {
-    let mut rng = Rng::new(seed);
-    let mut d = Matrix::zeros(n, n);
-    for i in 0..n {
-        for j in 0..=i {
-            let x = rng.range(-0.4, 0.4);
-            d.set(i, j, x);
-            d.set(j, i, x);
-        }
-    }
-    d
-}
+mod common;
+use common::{random_density, serial_reference, setup};
 
 #[test]
 fn injected_fault_serial_fock_is_bit_identical_and_fetch_free() {
@@ -148,10 +129,7 @@ fn injected_fault_scf_reproduces_fault_free_energy() {
     // converged energy must match the fault-free serial reference to
     // 1e-8, with replayed units reported by the parallel engines.
     for mol in [molecules::water(), molecules::benzene()] {
-        let reference = RhfDriver { incremental: false, ..Default::default() }
-            .run(&mol, BasisName::Sto3g, &mut SerialFock::new())
-            .unwrap();
-        assert!(reference.converged, "{}: reference did not converge", mol.name);
+        let reference = serial_reference(&mol);
 
         let driver = RhfDriver {
             shard_store: 4,

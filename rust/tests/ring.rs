@@ -6,7 +6,7 @@
 //! one round); and un-stolen ring work must never fetch remotely, at
 //! any density weight.
 
-use khf::basis::{BasisName, BasisSet};
+use khf::basis::BasisName;
 use khf::chem::molecules;
 use khf::hf::mpi_only::MpiOnlyFock;
 use khf::hf::private_fock::PrivateFock;
@@ -14,30 +14,12 @@ use khf::hf::quartets::n_canonical;
 use khf::hf::serial::SerialFock;
 use khf::hf::shared_fock::SharedFock;
 use khf::hf::{FockBuilder, FockContext};
-use khf::integrals::{SchwarzScreen, ShellPairStore, SortedPairList, StoreSharding};
+use khf::integrals::{SortedPairList, StoreSharding};
 use khf::linalg::Matrix;
 use khf::scf::RhfDriver;
-use khf::util::prng::Rng;
 
-fn setup(mol: &khf::chem::Molecule) -> (BasisSet, ShellPairStore, SchwarzScreen) {
-    let basis = BasisSet::assemble(mol, BasisName::Sto3g).unwrap();
-    let store = ShellPairStore::build(&basis);
-    let screen = SchwarzScreen::build_with_store(&basis, &store, SchwarzScreen::DEFAULT_TAU);
-    (basis, store, screen)
-}
-
-fn random_density(n: usize, seed: u64) -> Matrix {
-    let mut rng = Rng::new(seed);
-    let mut d = Matrix::zeros(n, n);
-    for i in 0..n {
-        for j in 0..=i {
-            let x = rng.range(-0.4, 0.4);
-            d.set(i, j, x);
-            d.set(j, i, x);
-        }
-    }
-    d
-}
+mod common;
+use common::{random_density, serial_reference, setup};
 
 #[test]
 fn ring_engines_reproduce_serial_scf_energy() {
@@ -45,10 +27,7 @@ fn ring_engines_reproduce_serial_scf_energy() {
     // engine's full SCF lands on the serial full-rebuild energy to
     // 1e-8, on water and benzene.
     for mol in [molecules::water(), molecules::benzene()] {
-        let reference = RhfDriver { incremental: false, ..Default::default() }
-            .run(&mol, BasisName::Sto3g, &mut SerialFock::new())
-            .unwrap();
-        assert!(reference.converged, "{}: reference did not converge", mol.name);
+        let reference = serial_reference(&mol);
 
         let driver =
             RhfDriver { shard_store: 4, ring_exchange: true, ..Default::default() };
@@ -86,10 +65,7 @@ fn overlapped_ring_engines_reproduce_serial_scf_energy() {
     // the overlap counters (all n(n-1)/2 triangular-dead deliveries
     // elided, positive staged traffic).
     for mol in [molecules::water(), molecules::benzene()] {
-        let reference = RhfDriver { incremental: false, ..Default::default() }
-            .run(&mol, BasisName::Sto3g, &mut SerialFock::new())
-            .unwrap();
-        assert!(reference.converged, "{}: reference did not converge", mol.name);
+        let reference = serial_reference(&mol);
 
         let driver = RhfDriver {
             shard_store: 4,

@@ -1,0 +1,175 @@
+//! Cross-job store cache, end to end: the property the multi-tenant
+//! service leans on is that a (geometry, basis) resubmission reuses the
+//! *same* Hermite pair tables bit for bit, while any physical change —
+//! a perturbed coordinate, a different basis — misses and rebuilds.
+//! The oracle is [`ShellPairStore::content_digest`] (an order-fixed
+//! FNV-1a walk over every table byte) compared against an independent
+//! cold rebuild, plus the SCF energy through the cached store against
+//! the cold-build energy.
+
+use std::sync::Arc;
+
+use khf::basis::{BasisName, BasisSet};
+use khf::chem::molecules;
+use khf::hf::serial::SerialFock;
+use khf::hf::shared_fock::SharedFock;
+use khf::integrals::ShellPairStore;
+use khf::scf::{RhfDriver, StoreCache};
+
+mod common;
+use common::setup;
+
+#[test]
+fn resubmission_hits_and_store_bytes_are_bit_identical() {
+    // Submit water twice through the cache, then rebuild the store from
+    // scratch with no cache at all. The hit must hand back the same Arc
+    // (one copy in memory), and its content digest must equal the
+    // independent rebuild's — the store bytes are a pure function of
+    // (geometry, basis), so the cache cannot have perturbed them.
+    let mol = molecules::water();
+    let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+    let mut cache = StoreCache::new();
+
+    let (cold, hit_cold) = cache.get_or_build(&mol, &basis, BasisName::Sto3g);
+    let (warm, hit_warm) = cache.get_or_build(&mol, &basis, BasisName::Sto3g);
+    assert!(!hit_cold, "first submission must build");
+    assert!(hit_warm, "identical resubmission must hit");
+    assert!(Arc::ptr_eq(&cold, &warm), "hit must be the same tables, not a copy");
+
+    let fresh = ShellPairStore::build(&basis);
+    assert_eq!(
+        warm.content_digest(),
+        fresh.content_digest(),
+        "cached store must be bit-identical to a cold rebuild"
+    );
+    assert_eq!(warm.bytes(), fresh.bytes());
+    assert_eq!(cache.hits(), 1);
+    assert_eq!(cache.misses(), 1);
+}
+
+#[test]
+fn any_perturbed_coordinate_misses() {
+    // Nudge each atom's each coordinate by 1e-7 bohr in turn: every
+    // variant is a distinct key (exact position bits are in the
+    // fingerprint), so every one must miss and build its own store.
+    let mol = molecules::water();
+    let basis = BasisSet::assemble(&mol, BasisName::Sto3g).unwrap();
+    let mut cache = StoreCache::new();
+    let (base, _) = cache.get_or_build(&mol, &basis, BasisName::Sto3g);
+
+    let mut variants = 0;
+    for a in 0..mol.atoms.len() {
+        for k in 0..3 {
+            let mut moved = mol.clone();
+            moved.atoms[a].pos[k] += 1e-7;
+            let mb = BasisSet::assemble(&moved, BasisName::Sto3g).unwrap();
+            let (store, hit) = cache.get_or_build(&moved, &mb, BasisName::Sto3g);
+            assert!(!hit, "atom {a} axis {k}: perturbed geometry must miss");
+            assert!(!Arc::ptr_eq(&base, &store), "atom {a} axis {k}");
+            variants += 1;
+        }
+    }
+    assert_eq!(cache.len(), 1 + variants, "each perturbation is its own entry");
+    assert_eq!(cache.misses(), 1 + variants as u64);
+    assert_eq!(cache.hits(), 0);
+}
+
+#[test]
+fn basis_change_misses_and_digests_differ() {
+    // Same methane geometry in STO-3G vs 6-31G vs 6-31G(d): three
+    // distinct keys, three distinct stores — and their digests must all
+    // differ (different exponent tables, not just different keys).
+    let mol = molecules::methane();
+    let mut cache = StoreCache::new();
+    let mut digests = Vec::new();
+    for name in [BasisName::Sto3g, BasisName::SixThirtyOneG, BasisName::SixThirtyOneGd] {
+        let basis = BasisSet::assemble(&mol, name).unwrap();
+        let (store, hit) = cache.get_or_build(&mol, &basis, name);
+        assert!(!hit, "{}: first build in this basis must miss", name.label());
+        digests.push(store.content_digest());
+    }
+    assert_eq!(cache.len(), 3);
+    digests.sort_unstable();
+    digests.dedup();
+    assert_eq!(digests.len(), 3, "per-basis stores must have distinct contents");
+}
+
+#[test]
+fn cached_store_scf_energy_equals_cold_build() {
+    // The physics oracle: a full SCF through the cached store must land
+    // on the cold-build energy to 1e-12 (same tables, same deterministic
+    // serial summation — in fact bit-identical, which we also assert).
+    // Covered on water and benzene, serial engine; methane repeats the
+    // check through a threaded engine where only the 1e-12 bar applies
+    // (DLB reordering noise).
+    let mut cache = StoreCache::new();
+    for mol in [molecules::water(), molecules::benzene()] {
+        let driver = RhfDriver::default();
+        let (cold, hit_cold) = driver
+            .run_cached(&mol, BasisName::Sto3g, &mut cache, &mut SerialFock::new())
+            .unwrap();
+        let (warm, hit_warm) = driver
+            .run_cached(&mol, BasisName::Sto3g, &mut cache, &mut SerialFock::new())
+            .unwrap();
+        assert!(!hit_cold, "{}: cold run must build", mol.name);
+        assert!(hit_warm, "{}: warm run must hit", mol.name);
+        assert!(cold.converged && warm.converged, "{}", mol.name);
+        assert!(
+            (warm.energy - cold.energy).abs() < 1e-12,
+            "{}: cached {} vs cold {}",
+            mol.name,
+            warm.energy,
+            cold.energy
+        );
+        assert_eq!(
+            warm.energy.to_bits(),
+            cold.energy.to_bits(),
+            "{}: serial SCF through the same tables must be bit-identical",
+            mol.name
+        );
+        assert_eq!(warm.store_bytes, cold.store_bytes, "{}", mol.name);
+    }
+
+    let mol = molecules::methane();
+    let driver = RhfDriver::default();
+    let (cold, _) = driver
+        .run_cached(&mol, BasisName::Sto3g, &mut cache, &mut SharedFock::new(2, 3))
+        .unwrap();
+    let (warm, hit) = driver
+        .run_cached(&mol, BasisName::Sto3g, &mut cache, &mut SharedFock::new(2, 3))
+        .unwrap();
+    assert!(hit, "methane resubmission must hit");
+    assert!(
+        (warm.energy - cold.energy).abs() < 1e-12,
+        "methane threaded: cached {} vs cold {}",
+        warm.energy,
+        cold.energy
+    );
+}
+
+#[test]
+fn cached_run_matches_uncached_run_exactly() {
+    // run_cached must be run() with a different store provenance and
+    // nothing else: against the plain uncached driver path the serial
+    // energies agree bitwise, cold and warm alike.
+    let mol = molecules::benzene();
+    let (_, store, _) = setup(&mol);
+    let plain = RhfDriver::default()
+        .run(&mol, BasisName::Sto3g, &mut SerialFock::new())
+        .unwrap();
+    let mut cache = StoreCache::new();
+    for pass in 0..2 {
+        let (r, _) = RhfDriver::default()
+            .run_cached(&mol, BasisName::Sto3g, &mut cache, &mut SerialFock::new())
+            .unwrap();
+        assert_eq!(
+            r.energy.to_bits(),
+            plain.energy.to_bits(),
+            "pass {pass}: cache provenance moved the energy"
+        );
+        assert_eq!(r.iterations, plain.iterations, "pass {pass}");
+    }
+    // And the store the cache built is the store run() built.
+    let cached = cache.peek(&mol, BasisName::Sto3g).expect("entry must exist");
+    assert_eq!(cached.content_digest(), store.content_digest());
+}
